@@ -1,0 +1,62 @@
+//! Sweep a Table-2 layer across sparsity levels and algorithms — the
+//! single-layer view behind Figures 1/2.
+//!
+//! ```bash
+//! cargo run --release --example layer_sweep -- --layer vgg3_2
+//! cargo run --release --example layer_sweep -- --layer resnet4_3 --csv
+//! ```
+
+use sparsetrain::bench::experiments::{speedup_over_direct, SPARSITY_GRID};
+use sparsetrain::kernels::{onebyone, winograd, Component};
+use sparsetrain::nets::table2::layer_by_name;
+use sparsetrain::sim::{Algorithm, Machine};
+use sparsetrain::util::cli::Args;
+use sparsetrain::util::table::Table;
+
+fn main() {
+    let args = Args::from_env(&["layer"], &["csv"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let layer = args.get_or("layer", "vgg3_2");
+    let nl = layer_by_name(layer).unwrap_or_else(|| {
+        eprintln!("unknown layer '{layer}'; see Table 2 names (e.g. vgg3_2, resnet4_2)");
+        std::process::exit(2);
+    });
+    let m = Machine::skylake_x();
+    println!(
+        "layer {layer}: C={} K={} H=W={} R=S={} stride={}  (batch {})",
+        nl.cfg.c, nl.cfg.k, nl.cfg.h, nl.cfg.r, nl.cfg.stride_o, nl.cfg.n
+    );
+
+    let mut tab = Table::new(&format!("modeled speedup over direct — {layer}")).header(&[
+        "comp", "0%", "10%", "20%", "30%", "40%", "50%", "60%", "70%", "80%", "90%", "im2col",
+        "win/1x1",
+    ]);
+    for comp in Component::ALL {
+        let mut cells = vec![comp.name().to_string()];
+        for &s in &SPARSITY_GRID {
+            cells.push(format!(
+                "{:.2}",
+                speedup_over_direct(&m, Algorithm::SparseTrain, &nl.cfg, comp, s)
+            ));
+        }
+        cells.push(format!(
+            "{:.2}",
+            speedup_over_direct(&m, Algorithm::Im2col, &nl.cfg, comp, 0.0)
+        ));
+        cells.push(if winograd::applicable(&nl.cfg) {
+            format!("{:.2}", speedup_over_direct(&m, Algorithm::Winograd, &nl.cfg, comp, 0.0))
+        } else if onebyone::applicable(&nl.cfg) {
+            format!("{:.2}", speedup_over_direct(&m, Algorithm::OneByOne, &nl.cfg, comp, 0.0))
+        } else {
+            "-".into()
+        });
+        tab.row_strings(cells);
+    }
+    if args.flag("csv") {
+        print!("{}", tab.to_csv());
+    } else {
+        tab.print();
+    }
+}

@@ -1,0 +1,67 @@
+//! End-to-end projection (Figure 4 / Table 6) with per-network detail:
+//! which algorithm the `combined` policy picks per layer and component.
+//!
+//! ```bash
+//! cargo run --release --example projection
+//! cargo run --release --example projection -- --network ResNet-50 --detail
+//! ```
+
+use sparsetrain::bench::experiments::{fig4_table6, layer_sparsities};
+use sparsetrain::coordinator::selector::{AlgoPolicy, Selector};
+use sparsetrain::kernels::Component;
+use sparsetrain::nets::zoo::{NetSpec, Network};
+use sparsetrain::sim::Machine;
+use sparsetrain::util::cli::Args;
+use sparsetrain::util::table::Table;
+
+fn main() {
+    let args = Args::from_env(&["network", "epochs"], &["detail"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let epochs = args.get_usize("epochs", 100).unwrap();
+    let m = Machine::skylake_x();
+
+    let (_proj, fig, tab) = fig4_table6(&m, epochs);
+    fig.print();
+    tab.print();
+
+    if args.flag("detail") {
+        let name = args.get_or("network", "VGG16");
+        let net = Network::ALL
+            .into_iter()
+            .find(|n| n.name().eq_ignore_ascii_case(name))
+            .unwrap_or_else(|| {
+                eprintln!("unknown network '{name}'");
+                std::process::exit(2);
+            });
+        let spec = NetSpec::build(net);
+        let sparsities = layer_sparsities(&spec, epochs);
+        let sel = Selector::new(m);
+        let mut t = Table::new(&format!("combined policy per layer — {}", net.name()))
+            .header(&["layer", "shape", "s(in)", "s(grad)", "FWD", "BWI", "BWW"]);
+        for (l, sp) in spec.layers.iter().zip(&sparsities) {
+            let pick = |comp: Component| {
+                let (s, ok) = match comp {
+                    Component::Fwd => (sp.input, !l.is_first && sp.input > 0.0),
+                    Component::Bwi => (sp.grad.unwrap_or(0.0), sp.grad.is_some()),
+                    Component::Bww => {
+                        let b = sp.grad.map_or(sp.input, |g| g.max(sp.input));
+                        (b, !l.is_first && b > 0.0)
+                    }
+                };
+                sel.select(AlgoPolicy::Combined, &l.cfg, comp, s, ok).name().to_string()
+            };
+            t.row_strings(vec![
+                l.name.clone(),
+                format!("{}x{} {}x{}/{}", l.cfg.c, l.cfg.k, l.cfg.r, l.cfg.s, l.cfg.stride_o),
+                format!("{:.2}", sp.input),
+                sp.grad.map(|g| format!("{g:.2}")).unwrap_or_else(|| "BN".into()),
+                pick(Component::Fwd),
+                pick(Component::Bwi),
+                pick(Component::Bww),
+            ]);
+        }
+        t.print();
+    }
+}

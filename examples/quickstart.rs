@@ -1,0 +1,66 @@
+//! Quickstart: run SparseTrain on one convolution layer and compare it
+//! against the dense `direct` baseline — functionally (same numerics) and
+//! in performance (host wallclock + modeled Skylake-X cycles).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sparsetrain::bench::{bench, black_box, BenchConfig};
+use sparsetrain::kernels::{direct, sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use sparsetrain::sim::{estimate_layer_iid, Algorithm, Machine};
+use sparsetrain::kernels::Component;
+use sparsetrain::tensor::{allclose, ActTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+
+fn main() {
+    // A ReLU-sparse conv layer: 64→64 channels, 32×32, 3×3, 60 % sparsity.
+    let cfg = ConvConfig::square(1, 64, 64, 32, 3, 1);
+    let sparsity = 0.6;
+    let mut rng = Xorshift::new(1);
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, sparsity);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+
+    // 1. Functional equivalence: SparseTrain computes the same convolution.
+    let mut y_direct = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut y_sparse = y_direct.clone();
+    let mut st_d = KernelStats::new();
+    let mut st_s = KernelStats::new();
+    direct::fwd(&cfg, &d, &g, &mut y_direct, &mut st_d);
+    sparse_fwd::fwd(&cfg, &d, &g, &mut y_sparse, SkipMode::MaskLoop, &mut st_s);
+    assert!(allclose(y_direct.data(), y_sparse.data(), 1e-5, 1e-6));
+    println!("functional: SparseTrain == direct  ✓");
+    println!(
+        "work skipped: {:.1}% of vector FMAs ({} of {})",
+        100.0 * st_s.skip_fraction(),
+        st_s.fma_vec_skipped,
+        st_s.fma_total()
+    );
+
+    // 2. Host wallclock.
+    let cfgb = BenchConfig::default();
+    let td = bench("direct", &cfgb, || {
+        y_direct.fill_zero();
+        let mut st = KernelStats::new();
+        direct::fwd(&cfg, &d, &g, &mut y_direct, &mut st);
+        black_box(&y_direct);
+    });
+    let ts = bench("sparse", &cfgb, || {
+        y_sparse.fill_zero();
+        let mut st = KernelStats::new();
+        sparse_fwd::fwd(&cfg, &d, &g, &mut y_sparse, SkipMode::MaskLoop, &mut st);
+        black_box(&y_sparse);
+    });
+    println!("host: direct {}  sparse {}  speedup {:.2}x",
+        sparsetrain::util::table::fmt_duration_ns(td.ns()),
+        sparsetrain::util::table::fmt_duration_ns(ts.ns()),
+        td.ns() / ts.ns());
+
+    // 3. Modeled Skylake-X (the paper's platform) at the same sparsity.
+    let m = Machine::skylake_x();
+    let dm = estimate_layer_iid(&m, Algorithm::Direct, Component::Fwd, &cfg, 0.0).wall;
+    let sm = estimate_layer_iid(&m, Algorithm::SparseTrain, Component::Fwd, &cfg, sparsity).wall;
+    println!("model (Skylake-X): speedup {:.2}x", dm / sm);
+}

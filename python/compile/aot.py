@@ -1,0 +1,70 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the Rust runtime.
+
+HLO text (NOT `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Python runs ONLY here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower every artifact; returns {name: hlo_text}."""
+    fns = {
+        "train_step": model.train_step_tuple,
+        "predict": model.predict,
+        "kernel_fwd": model.kernel_fwd,
+    }
+    args = model.example_args()
+    out = {}
+    for name, fn in fns.items():
+        lowered = jax.jit(fn).lower(*args[name])
+        out[name] = to_hlo_text(lowered)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file target (writes train_step)")
+    ns = ap.parse_args()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    texts = lower_all()
+    manifest_lines = []
+    for name, text in texts.items():
+        path = os.path.join(ns.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest_lines.append(f"{name}\t{len(text)}\t{digest}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(ns.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    if ns.out:
+        with open(ns.out, "w") as f:
+            f.write(texts["train_step"])
+        print(f"wrote {ns.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+`conv_fwd_ref` is the production reference (lax.conv); `conv_fwd_loops` is a
+deliberately naive loop-nest oracle used to validate the reference itself on
+tiny shapes.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv_fwd_ref(x, w, stride=1, padding=1):
+    """NCHW correlation: x [N,C,H,W], w [K,C,S,R] -> [N,K,H',W']."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv_bwi_ref(dy, w, x_shape, stride=1, padding=1):
+    """Gradient w.r.t. the input of `conv_fwd_ref`."""
+    n, c, h, w_dim = x_shape
+    k, _, s, r = w.shape
+    # transposed convolution: dilate dy by stride, correlate with mirrored,
+    # channel-transposed filters
+    wt = jnp.transpose(w[:, :, ::-1, ::-1], (1, 0, 2, 3))  # [C,K,S,R]
+    return lax.conv_general_dilated(
+        dy,
+        wt,
+        window_strides=(1, 1),
+        padding=((s - 1 - padding, s - 1 - padding), (r - 1 - padding, r - 1 - padding)),
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[:, :, :h, :w_dim]
+
+
+def conv_bww_ref(x, dy, w_shape, stride=1, padding=1):
+    """Gradient w.r.t. the weights of `conv_fwd_ref`."""
+    k, c, s, r = w_shape
+    # dG[k,c,s,r] = sum_{i,y',x'} X[i,c,y'*P+s-p, x'*O+r-p] * dY[i,k,y',x']
+    out = lax.conv_general_dilated(
+        jnp.transpose(x, (1, 0, 2, 3)),  # C as batch
+        jnp.transpose(dy, (1, 0, 2, 3)),  # K as out-channels, N contracted
+        window_strides=(1, 1),
+        padding=((padding, padding), (padding, padding)),
+        rhs_dilation=(stride, stride),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [C, K, S, R]
+    return jnp.transpose(out, (1, 0, 2, 3))[:, :, :s, :r]
+
+
+def conv_fwd_loops(x, w, stride=1, padding=1):
+    """Naive loop-nest oracle (tiny shapes only)."""
+    import numpy as np
+
+    x = np.asarray(x)
+    w = np.asarray(w)
+    n, c, h, wd = x.shape
+    k, _, s, r = w.shape
+    oh = (h + 2 * padding - s) // stride + 1
+    ow = (wd + 2 * padding - r) // stride + 1
+    y = np.zeros((n, k, oh, ow), dtype=np.float32)
+    for i in range(n):
+        for ko in range(k):
+            for oy in range(oh):
+                for ox in range(ow):
+                    acc = 0.0
+                    for ci in range(c):
+                        for si in range(s):
+                            iy = oy * stride + si - padding
+                            if iy < 0 or iy >= h:
+                                continue
+                            for ri in range(r):
+                                ix = ox * stride + ri - padding
+                                if ix < 0 or ix >= wd:
+                                    continue
+                                acc += x[i, ci, iy, ix] * w[ko, ci, si, ri]
+                    y[i, ko, oy, ox] = acc
+    return jnp.asarray(y)

@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: block-sparse direct convolution.
+
+TPU adaptation of SparseTrain's insight (DESIGN.md §3 "Hardware
+adaptation"): AVX-512 checks one broadcast element and skips T = R·Q/V
+register-resident FMAs; a TPU has no scalar branch inside the systolic
+pipeline, so the check unit is lifted to an *input-channel block* staged in
+VMEM and the skip unit is the whole MXU contraction of that block against
+its filter slice, guarded by `pl.when`.
+
+The grid walks input-channel blocks; each step:
+  1. stages `x` block [N, BC, H+2p, W+2p] in VMEM (BlockSpec),
+  2. one vector compare + reduce (`jnp.any(block != 0)`) — the analogue of
+     vcmpps+popcnt,
+  3. `pl.when(nonzero)`: R·S shifted einsum contractions over the block —
+     the analogue of the T skippable FMAs,
+  4. accumulates into the output block (resident across grid steps).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls; real-TPU numbers are estimated in DESIGN.md §Perf from the
+VMEM footprint and MXU occupancy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Input-channel block size (the zero-check granularity). 16 matches the
+# Rust layer's V and keeps the VMEM block well under budget for the model's
+# shapes; `vmem_footprint_bytes` documents the budget arithmetic.
+DEFAULT_BLOCK_C = 16
+
+
+def _kernel(x_ref, w_ref, o_ref, *, s, r, pad, out_h, out_w):
+    """One grid step: contract one input-channel block, skip if all-zero."""
+    cb = pl.program_id(0)
+
+    @pl.when(cb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    block = x_ref[...]  # [N, BC, H+2p, W+2p] in VMEM
+
+    # Vectorized zero check on the whole staged block (vcmpps analogue).
+    @pl.when(jnp.any(block != 0.0))
+    def _contract():
+        acc = o_ref[...]
+        for si in range(s):
+            for ri in range(r):
+                patch = block[:, :, si : si + out_h, ri : ri + out_w]
+                tap = w_ref[:, :, si, ri]  # [K, BC]
+                # MXU contraction over the channel block.
+                acc = acc + jnp.einsum(
+                    "nchw,kc->nkhw", patch, tap, preferred_element_type=jnp.float32
+                )
+        o_ref[...] = acc
+
+
+def conv_fwd_pallas(x, w, *, block_c=DEFAULT_BLOCK_C, padding=1):
+    """Block-sparse Pallas forward conv (unit stride), NCHW/OIHW.
+
+    x: [N, C, H, W] float32 (ReLU output: zeros mark skippable blocks)
+    w: [K, C, S, R] float32
+    returns [N, K, H', W'] with H' = H + 2·padding − S + 1.
+    """
+    n, c, h, wd = x.shape
+    k, cw, s, r = w.shape
+    assert c == cw, f"channel mismatch {c} != {cw}"
+    assert c % block_c == 0, f"C={c} not a multiple of block_c={block_c}"
+    out_h = h + 2 * padding - s + 1
+    out_w = wd + 2 * padding - r + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+
+    kern = functools.partial(_kernel, s=s, r=r, pad=padding, out_h=out_h, out_w=out_w)
+    return pl.pallas_call(
+        kern,
+        grid=(c // block_c,),
+        in_specs=[
+            pl.BlockSpec(
+                (n, block_c, h + 2 * padding, wd + 2 * padding), lambda cb: (0, cb, 0, 0)
+            ),
+            pl.BlockSpec((k, block_c, s, r), lambda cb: (0, cb, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, k, out_h, out_w), lambda cb: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k, out_h, out_w), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def conv2d(x, w, padding=1):
+    """Differentiable conv: Pallas block-sparse kernel forward, analytic
+    (lax.conv) backward — the L2 model builds on this."""
+    return conv_fwd_pallas(x, w, padding=padding)
+
+
+def _conv2d_fwd(x, w, padding):
+    return conv2d(x, w, padding), (x, w)
+
+
+def _conv2d_bwd(padding, res, dy):
+    x, w = res
+    dx = ref.conv_bwi_ref(dy, w, x.shape, stride=1, padding=padding)
+    dw = ref.conv_bww_ref(x, dy, w.shape, stride=1, padding=padding)
+    return (dx, dw)
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def vmem_footprint_bytes(n, c, h, w, k, s, r, block_c=DEFAULT_BLOCK_C, padding=1):
+    """VMEM bytes staged per grid step (the TPU 'register budget' check):
+    input block + filter slice + output block, f32."""
+    hp, wp = h + 2 * padding, w + 2 * padding
+    out_h, out_w = h + 2 * padding - s + 1, w + 2 * padding - r + 1
+    x_block = n * block_c * hp * wp * 4
+    w_block = k * block_c * s * r * 4
+    o_block = n * k * out_h * out_w * 4
+    return x_block + w_block + o_block
+
+
+def block_skip_fraction(x, block_c=DEFAULT_BLOCK_C):
+    """Fraction of channel blocks that are entirely zero — the MXU work the
+    kernel actually skips (TPU-granularity analogue of Table 4's skipped-FMA
+    fraction)."""
+    n, c, h, w = x.shape
+    blocks = x.reshape(n, c // block_c, block_c, h, w)
+    zero = jnp.all(blocks == 0.0, axis=(0, 2, 3, 4))
+    return float(jnp.mean(zero.astype(jnp.float32)))

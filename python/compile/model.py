@@ -1,0 +1,119 @@
+"""Layer-2 JAX model: a small ReLU CNN whose conv hot-spots are the Pallas
+block-sparse kernel (`kernels.sparse_conv.conv2d`).
+
+Geometry must match `rust/src/runtime/artifacts.rs::geometry`:
+  input  [N=16, C=16, 16, 16] float32, labels [16] int32, 8 classes
+  conv1: 16→32 3×3 pad 1 (Pallas fwd) + ReLU
+  conv2: 32→32 3×3 pad 1 (Pallas fwd) + ReLU
+  global average pool → FC → softmax cross-entropy
+The train step does one SGD update and also returns the measured ReLU
+output sparsities — the dynamic-sparsity signal the Rust coordinator logs
+(Fig-3-style trace from a real run).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sparse_conv import conv2d
+
+# Geometry (keep in sync with rust/src/runtime/artifacts.rs).
+N = 16
+C_IN = 16
+HW = 16
+C1 = 32
+C2 = 32
+CLASSES = 8
+LR = 0.2
+
+
+def init_params(key):
+    """He-uniform init, matching the Rust trainer's host-side init."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    b1 = (2.0 / (C_IN * 9)) ** 0.5
+    b2 = (2.0 / (C1 * 9)) ** 0.5
+    b3 = (1.0 / C2) ** 0.5
+    return {
+        "w1": jax.random.uniform(k1, (C1, C_IN, 3, 3), jnp.float32, -b1, b1),
+        "w2": jax.random.uniform(k2, (C2, C1, 3, 3), jnp.float32, -b2, b2),
+        "wfc": jax.random.uniform(k3, (CLASSES, C2), jnp.float32, -b3, b3),
+        "bfc": jnp.zeros((CLASSES,), jnp.float32),
+    }
+
+
+def forward(w1, w2, wfc, bfc, x):
+    """Returns (logits, relu1_sparsity, relu2_sparsity)."""
+    a1 = jnp.maximum(conv2d(x, w1, 1), 0.0)
+    s1 = jnp.mean((a1 == 0.0).astype(jnp.float32))
+    a2 = jnp.maximum(conv2d(a1, w2, 1), 0.0)
+    s2 = jnp.mean((a2 == 0.0).astype(jnp.float32))
+    pooled = jnp.mean(a2, axis=(2, 3))  # [N, C2]
+    logits = pooled @ wfc.T + bfc
+    return logits, s1, s2
+
+
+def loss_fn(w1, w2, wfc, bfc, x, labels):
+    logits, s1, s2 = forward(w1, w2, wfc, bfc, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    return nll, (s1, s2)
+
+
+def train_step(w1, w2, wfc, bfc, x, labels):
+    """One SGD step. Returns (w1', w2', wfc', bfc', loss, s1, s2) — the
+    7-output contract the Rust trainer expects."""
+    (loss, (s1, s2)), grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3), has_aux=True)(
+        w1, w2, wfc, bfc, x, labels
+    )
+    g1, g2, gfc, gb = grads
+    return (
+        w1 - LR * g1,
+        w2 - LR * g2,
+        wfc - LR * gfc,
+        bfc - LR * gb,
+        loss,
+        s1,
+        s2,
+    )
+
+
+def predict(w1, w2, wfc, bfc, x):
+    """Returns (logits,)."""
+    logits, _, _ = forward(w1, w2, wfc, bfc, x)
+    return (logits,)
+
+
+def kernel_fwd(x, w):
+    """Single Pallas conv layer — the L1 kernel exposed as its own artifact
+    for Rust-side kernel validation."""
+    return (conv2d(x, w, 1),)
+
+
+def example_args():
+    """Example (shape-only) arguments for AOT lowering."""
+    f32 = jnp.float32
+    return {
+        "train_step": (
+            jax.ShapeDtypeStruct((C1, C_IN, 3, 3), f32),
+            jax.ShapeDtypeStruct((C2, C1, 3, 3), f32),
+            jax.ShapeDtypeStruct((CLASSES, C2), f32),
+            jax.ShapeDtypeStruct((CLASSES,), f32),
+            jax.ShapeDtypeStruct((N, C_IN, HW, HW), f32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ),
+        "predict": (
+            jax.ShapeDtypeStruct((C1, C_IN, 3, 3), f32),
+            jax.ShapeDtypeStruct((C2, C1, 3, 3), f32),
+            jax.ShapeDtypeStruct((CLASSES, C2), f32),
+            jax.ShapeDtypeStruct((CLASSES,), f32),
+            jax.ShapeDtypeStruct((N, C_IN, HW, HW), f32),
+        ),
+        "kernel_fwd": (
+            jax.ShapeDtypeStruct((N, C_IN, HW, HW), f32),
+            jax.ShapeDtypeStruct((C1, C_IN, 3, 3), f32),
+        ),
+    }
+
+
+def train_step_tuple(*args):
+    """Tuple-returning wrapper (AOT lowers with return_tuple=True)."""
+    return tuple(train_step(*args))

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make the build-time `compile` package importable when pytest runs from
+# the repo root (`pytest python/tests/`).
+sys.path.insert(0, os.path.dirname(__file__))

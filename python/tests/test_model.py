@@ -1,0 +1,82 @@
+"""L2 model tests: shapes, gradient sanity, short-horizon learning, and the
+7-output train-step contract the Rust trainer depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def make_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((model.N, model.C_IN, model.HW, model.HW)).astype(np.float32)
+    labels = rng.integers(0, model.CLASSES, size=(model.N,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(labels)
+
+
+def test_forward_shapes_and_sparsity_range():
+    p = model.init_params(jax.random.PRNGKey(0))
+    x, _ = make_batch()
+    logits, s1, s2 = model.forward(p["w1"], p["w2"], p["wfc"], p["bfc"], x)
+    assert logits.shape == (model.N, model.CLASSES)
+    assert 0.0 <= float(s1) <= 1.0
+    assert 0.0 <= float(s2) <= 1.0
+    # ReLU over roughly zero-centered preactivations → sparsity near 0.5
+    assert 0.15 <= float(s1) <= 0.85
+
+
+def test_train_step_contract_seven_outputs():
+    p = model.init_params(jax.random.PRNGKey(1))
+    x, labels = make_batch(1)
+    outs = model.train_step(p["w1"], p["w2"], p["wfc"], p["bfc"], x, labels)
+    assert len(outs) == 7
+    w1n, w2n, wfcn, bfcn, loss, s1, s2 = outs
+    assert w1n.shape == p["w1"].shape
+    assert w2n.shape == p["w2"].shape
+    assert wfcn.shape == p["wfc"].shape
+    assert bfcn.shape == p["bfc"].shape
+    assert loss.shape == ()
+    assert float(loss) > 0.0
+    # parameters must actually move
+    assert float(jnp.abs(w1n - p["w1"]).max()) > 0.0
+
+
+def test_loss_decreases_over_a_few_steps():
+    p = model.init_params(jax.random.PRNGKey(2))
+    params = (p["w1"], p["w2"], p["wfc"], p["bfc"])
+    x, labels = make_batch(2)
+    step = jax.jit(model.train_step)
+    losses = []
+    for _ in range(60):
+        *params, loss, _, _ = step(*params, x, labels)
+        params = tuple(params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_gradients_match_finite_difference():
+    p = model.init_params(jax.random.PRNGKey(3))
+    x, labels = make_batch(3)
+
+    def scalar_loss(wfc):
+        loss, _ = model.loss_fn(p["w1"], p["w2"], wfc, p["bfc"], x, labels)
+        return loss
+
+    g = jax.grad(scalar_loss)(p["wfc"])
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        i = rng.integers(0, model.CLASSES)
+        j = rng.integers(0, model.C2)
+        e = jnp.zeros_like(p["wfc"]).at[i, j].set(eps)
+        fd = (scalar_loss(p["wfc"] + e) - scalar_loss(p["wfc"] - e)) / (2 * eps)
+        assert abs(float(fd) - float(g[i, j])) < 5e-3
+
+
+def test_predict_matches_forward():
+    p = model.init_params(jax.random.PRNGKey(4))
+    x, _ = make_batch(4)
+    (logits,) = model.predict(p["w1"], p["w2"], p["wfc"], p["bfc"], x)
+    ref_logits, _, _ = model.forward(p["w1"], p["w2"], p["wfc"], p["bfc"], x)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits))

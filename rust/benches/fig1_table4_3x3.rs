@@ -1,0 +1,71 @@
+//! Regenerates **Figure 1** and **Table 4**: speedup over `direct` on the
+//! paper's 3×3 layers for FWD/BWI/BWW at 0–90 % sparsity, plus the
+//! `im2col` and `winograd` baselines.
+//!
+//! Two modes:
+//! * **model** — the analytical Skylake-X estimates over the full Table 2
+//!   configurations at batch 16 (the paper's setup);
+//! * **host** — real wallclock of the functional Rust kernels on a
+//!   scaled-down 3×3 layer, verifying the *shape* (crossover, monotone
+//!   speedup) on this machine.
+
+use sparsetrain::bench::experiments::{fig1_table4, SPARSITY_GRID};
+use sparsetrain::bench::{black_box, BenchGroup};
+use sparsetrain::kernels::{direct, sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use sparsetrain::sim::Machine;
+use sparsetrain::tensor::{ActTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::table::Table;
+
+fn host_mode() {
+    // Scaled 3×3 layer: N=1, C=K=64, 32×32 (full batch-16 layers would
+    // take minutes per iteration in the functional kernels).
+    let cfg = ConvConfig::square(1, 64, 64, 32, 3, 1);
+    let mut rng = Xorshift::new(2024);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+
+    let mut group = BenchGroup::new("host: 3x3 C=K=64 32x32 N=1 (scaled)");
+    group.start();
+
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut d_dense = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d_dense.fill_relu_sparse(&mut rng, 0.0);
+    group.bench("direct (dense baseline)", || {
+        y.fill_zero();
+        let mut st = KernelStats::new();
+        direct::fwd(&cfg, &d_dense, &g, &mut y, &mut st);
+        black_box(&y);
+    });
+
+    let mut tab = Table::new("host-measured FWD speedup vs direct")
+        .header(&["sparsity", "speedup", "skip frac"]);
+    let base = group.ns_of("direct (dense baseline)").unwrap();
+    for s in [0.0, 0.2, 0.4, 0.6, 0.8, 0.9] {
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, s);
+        let mut skip = 0.0;
+        let r = group.bench(&format!("sparse fwd s={s:.1}"), || {
+            y.fill_zero();
+            let mut st = KernelStats::new();
+            sparse_fwd::fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop, &mut st);
+            skip = st.skip_fraction();
+            black_box(&y);
+        });
+        tab.row_strings(vec![
+            format!("{:.0}%", s * 100.0),
+            format!("{:.2}", base / r.ns()),
+            format!("{skip:.2}"),
+        ]);
+    }
+    tab.print();
+}
+
+fn main() {
+    let m = Machine::skylake_x();
+    println!("sparsity grid: {SPARSITY_GRID:?}");
+    let (_rows, fig, tab) = fig1_table4(&m);
+    fig.print();
+    tab.print();
+    host_mode();
+}

@@ -1,0 +1,85 @@
+//! Regenerates **Figure 2** and **Table 5**: speedup over `direct` on the
+//! paper's 1×1 layers, vs `im2col` and the specialized `1x1` kernel.
+//! Model mode over the full Table 2 1×1 configurations + host-mode
+//! wallclock on a scaled layer (including the BWW asymmetry of §5.2).
+
+use sparsetrain::bench::experiments::fig2_table5;
+use sparsetrain::bench::{black_box, BenchGroup};
+use sparsetrain::kernels::{direct, onebyone, sparse_bww, sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use sparsetrain::sim::Machine;
+use sparsetrain::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::table::Table;
+
+fn host_mode() {
+    let cfg = ConvConfig::square(16, 64, 64, 16, 1, 1);
+    let mut rng = Xorshift::new(7);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, 1, 1);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+    let mut group = BenchGroup::new("host: 1x1 C=K=64 16x16 N=16 (scaled)");
+    group.start();
+
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut d0 = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d0.fill_relu_sparse(&mut rng, 0.0);
+    group.bench("direct FWD (dense)", || {
+        y.fill_zero();
+        let mut st = KernelStats::new();
+        direct::fwd(&cfg, &d0, &g, &mut y, &mut st);
+        black_box(&y);
+    });
+    group.bench("1x1 kernel FWD (dense)", || {
+        y.fill_zero();
+        let mut st = KernelStats::new();
+        onebyone::fwd(&cfg, &d0, &g, &mut y, &mut st);
+        black_box(&y);
+    });
+
+    let base = group.ns_of("direct FWD (dense)").unwrap();
+    let mut tab = Table::new("host-measured 1x1 speedups vs direct")
+        .header(&["sparsity", "FWD", "BWW"]);
+    let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    dy.fill_uniform(&mut rng, -1.0, 1.0);
+    // dense-direct BWW baseline
+    let mut dg = FilterTensor::zeros(cfg.k, cfg.c, 1, 1);
+    let d0t = BatchTiledTensor::from_act(&d0);
+    group.bench("direct BWW (dense)", || {
+        dg.fill_zero();
+        let mut st = KernelStats::new();
+        direct::bww(&cfg, &d0t, &dy, &mut dg, &mut st);
+        black_box(&dg);
+    });
+    let base_bww = group.ns_of("direct BWW (dense)").unwrap();
+    for s in [0.0, 0.4, 0.8] {
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, s);
+        let dt = BatchTiledTensor::from_act(&d);
+        let rf = group.bench(&format!("sparse FWD s={s:.1}"), || {
+            y.fill_zero();
+            let mut st = KernelStats::new();
+            sparse_fwd::fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop, &mut st);
+            black_box(&y);
+        });
+        let fwd_speedup = base / rf.ns();
+        let rb = group.bench(&format!("sparse BWW s={s:.1}"), || {
+            dg.fill_zero();
+            let mut st = KernelStats::new();
+            sparse_bww::bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop, &mut st);
+            black_box(&dg);
+        });
+        tab.row_strings(vec![
+            format!("{:.0}%", s * 100.0),
+            format!("{fwd_speedup:.2}"),
+            format!("{:.2}", base_bww / rb.ns()),
+        ]);
+    }
+    tab.print();
+}
+
+fn main() {
+    let m = Machine::skylake_x();
+    let (_rows, fig, tab) = fig2_table5(&m);
+    fig.print();
+    tab.print();
+    host_mode();
+}

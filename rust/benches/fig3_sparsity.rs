@@ -1,0 +1,61 @@
+//! Regenerates **Figure 3**: ReLU-output sparsity over 100-epoch training
+//! of ResNet-34 / ResNet-50 / Fixup ResNet-50 (trajectory model — see
+//! DESIGN.md §2 substitution 3; the measured counterpart comes from
+//! `examples/end_to_end_train.rs`).
+//!
+//! The paper's observations, asserted here and visualized as a sampled
+//! matrix: starts ≈50 %, rises rapidly then slowly decays, later layers
+//! sparser, and a periodic residual-shortcut dip (strongest in ResNet-34
+//! and Fixup ResNet-50).
+
+use sparsetrain::bench::experiments::fig3;
+use sparsetrain::util::stats::mean;
+use sparsetrain::util::table::Table;
+
+fn main() {
+    let epochs = 100;
+    for (net, matrix) in fig3(epochs) {
+        let layers = matrix.len();
+        let mut tab = Table::new(&format!(
+            "Figure 3 ({}): sparsity by layer (rows sampled) and epoch",
+            net.name()
+        ))
+        .header(&["layer", "e0", "e5", "e15", "e40", "e99", "mean"]);
+        let sample_layers: Vec<usize> =
+            [0, layers / 4, layers / 2, 3 * layers / 4, layers - 1].to_vec();
+        for l in sample_layers {
+            let row = &matrix[l];
+            tab.row_strings(vec![
+                format!("{l}"),
+                format!("{:.2}", row[0]),
+                format!("{:.2}", row[5]),
+                format!("{:.2}", row[15]),
+                format!("{:.2}", row[40]),
+                format!("{:.2}", row[99]),
+                format!("{:.2}", mean(row)),
+            ]);
+        }
+        tab.print();
+
+        // paper's qualitative claims, asserted
+        let first_mean = mean(&matrix[1]);
+        let last_mean = mean(&matrix[layers - 1]);
+        assert!(
+            last_mean > first_mean,
+            "{}: later layers must be sparser ({first_mean:.2} vs {last_mean:.2})",
+            net.name()
+        );
+        let l = layers / 2;
+        assert!((matrix[l][0] - 0.5).abs() < 0.25, "{}: start ≈ 50%", net.name());
+        let peak: f64 = (0..epochs).map(|e| matrix[l][e]).fold(0.0, f64::max);
+        assert!(matrix[l][epochs - 1] <= peak, "{}: late decay", net.name());
+        println!(
+            "  {}: mid-layer epoch-0 {:.2} → peak {:.2} → final {:.2}\n",
+            net.name(),
+            matrix[l][0],
+            peak,
+            matrix[l][epochs - 1]
+        );
+    }
+    println!("fig3 OK (trajectory assertions hold)");
+}

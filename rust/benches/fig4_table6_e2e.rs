@@ -1,0 +1,44 @@
+//! Regenerates **Figure 4** and **Table 6**: end-to-end projected conv
+//! execution time during training for VGG16 / ResNet-34 / ResNet-50 /
+//! Fixup ResNet-50, normalized to `direct`, under the SparseTrain,
+//! win/1x1 and combined policies (profiled-sparsity trajectories, 100
+//! epochs).
+
+use sparsetrain::bench::experiments::{dynamic_vs_static, fig4_table6};
+use sparsetrain::coordinator::selector::AlgoPolicy;
+use sparsetrain::nets::zoo::Network;
+use sparsetrain::sim::Machine;
+
+fn main() {
+    let m = Machine::skylake_x();
+    let (projections, fig, tab) = fig4_table6(&m, 100);
+    fig.print();
+    tab.print();
+
+    // §5.3 extension: dynamic per-epoch algorithm selection vs the static
+    // combined policy (FWD, all non-initial layers).
+    println!("\n== dynamic vs static combined (FWD, 100 epochs) ==");
+    for net in Network::ALL {
+        let (_, _, gain) = dynamic_vs_static(&m, net, 100);
+        println!("  {:<16} dynamic/static speedup: {gain:.3}x", net.name());
+    }
+
+    // paper-shape assertions (E8)
+    for p in &projections {
+        let st = p.speedup_excl_first(AlgoPolicy::SparseTrainOnly);
+        let comb = p.speedup_excl_first(AlgoPolicy::Combined);
+        assert!(st > 1.0, "{}: SparseTrain must win ({st:.2})", p.network.name());
+        assert!(
+            comb >= st * 0.98,
+            "{}: combined must be at least SparseTrain ({comb:.2} vs {st:.2})",
+            p.network.name()
+        );
+    }
+    let vgg = projections
+        .iter()
+        .find(|p| p.network.name() == "VGG16")
+        .unwrap()
+        .speedup_excl_first(AlgoPolicy::SparseTrainOnly);
+    assert!(vgg > 1.8, "VGG16 should gain the most: {vgg:.2}");
+    println!("fig4/table6 OK (projection assertions hold)");
+}

@@ -1,0 +1,80 @@
+//! Regenerates **Table 3** (optimal Q / T / pipelining per filter width at
+//! K = 256, V = 16) and runs the §6 ablations as host benchmarks:
+//! * Q tiling: Table-3 optimum vs naïve Q = K;
+//! * zero-check style: mask loop (Alg. 3) vs per-lane branches (Alg. 2)
+//!   vs dense (no checks).
+
+use sparsetrain::bench::{black_box, BenchGroup};
+use sparsetrain::kernels::regalloc::{plan_bww, plan_fwd, unroll_factor, REG_BUDGET};
+use sparsetrain::kernels::{sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use sparsetrain::sim::branch::mispredicts_per_check;
+use sparsetrain::tensor::{ActTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::table::Table;
+
+fn table3() {
+    let mut tab = Table::new("Table 3: optimal setup for K=256, V=16")
+        .header(&["R", "Q", "T", "pipelined", "#registers", "unroll"]);
+    for r in [1usize, 3, 5] {
+        let p = plan_fwd(256, r);
+        tab.row_strings(vec![
+            r.to_string(),
+            p.q.to_string(),
+            p.t.to_string(),
+            if p.pipelined { "Y" } else { "N" }.to_string(),
+            p.registers.to_string(),
+            unroll_factor(&p, r).to_string(),
+        ]);
+        assert!(p.registers <= REG_BUDGET);
+    }
+    tab.print();
+    // paper's exact values
+    assert_eq!(plan_fwd(256, 1).q, 128);
+    assert_eq!(plan_fwd(256, 3).q, 128);
+    assert_eq!(plan_fwd(256, 5).q, 64);
+    let b = plan_bww(256, 3);
+    println!("BWW plan (K=256, R=3): Q={} T={} (register-resident)\n", b.q, b.t);
+}
+
+fn skip_mode_ablation() {
+    let cfg = ConvConfig::square(1, 64, 64, 32, 3, 1);
+    let mut rng = Xorshift::new(99);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, 3, 3);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+
+    let mut group = BenchGroup::new("ablation: zero-check style (host, s=0.5)");
+    group.start();
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, 0.5);
+    let mut mispredict_table =
+        Table::new("modeled mispredicts/check at s=0.5").header(&["mode", "mispredicts"]);
+    for (name, mode) in [
+        ("dense (no skip)", SkipMode::Dense),
+        ("per-lane branch (Alg 2)", SkipMode::PerLaneBranch),
+        ("mask loop (Alg 3)", SkipMode::MaskLoop),
+    ] {
+        let mut hist = vec![0u64; 17];
+        group.bench(name, || {
+            y.fill_zero();
+            let mut st = KernelStats::new();
+            sparse_fwd::fwd(&cfg, &d, &g, &mut y, mode, &mut st);
+            hist = st.popcount_hist.clone();
+            black_box(&y);
+        });
+        mispredict_table.row_strings(vec![
+            name.to_string(),
+            format!("{:.2}", mispredicts_per_check(&hist, mode)),
+        ]);
+    }
+    mispredict_table.print();
+    let lane = group.ns_of("per-lane branch (Alg 2)").unwrap();
+    let mask = group.ns_of("mask loop (Alg 3)").unwrap();
+    println!("host: mask loop vs per-lane branch: {:.2}x\n", lane / mask);
+}
+
+fn main() {
+    table3();
+    skip_mode_ablation();
+    println!("table3 OK");
+}

@@ -1,0 +1,428 @@
+//! Experiment generators: one function per paper table/figure, shared by
+//! `rust/benches/*`, `examples/*` and the CLI. Each returns structured rows
+//! plus a rendered [`Table`], so benches can both print and assert on them.
+
+use crate::coordinator::selector::{AlgoPolicy, Selector};
+use crate::kernels::{winograd, Component, ConvConfig};
+use crate::nets::table2::{layers_1x1, layers_3x3, NamedLayer};
+use crate::nets::zoo::{NetSpec, Network};
+use crate::sim::{estimate_layer_iid, Algorithm, Machine};
+use crate::sparsity::TrajectoryModel;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+
+/// Sparsity grid of the paper's Tables 4/5.
+pub const SPARSITY_GRID: [f64; 10] = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Speedup of `alg` over modeled `direct` for one (layer, component,
+/// sparsity) cell.
+pub fn speedup_over_direct(
+    m: &Machine,
+    alg: Algorithm,
+    cfg: &ConvConfig,
+    comp: Component,
+    sparsity: f64,
+) -> f64 {
+    let direct = estimate_layer_iid(m, Algorithm::Direct, comp, cfg, 0.0).wall;
+    let t = estimate_layer_iid(m, alg, comp, cfg, sparsity).wall;
+    direct / t
+}
+
+/// One row of Figure 1/2: per-layer speedups across the sparsity grid plus
+/// baseline algorithm columns.
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    pub layer: String,
+    pub comp: Component,
+    /// SparseTrain speedup at each grid sparsity.
+    pub sparse_speedups: Vec<f64>,
+    /// im2col speedup (sparsity-independent).
+    pub im2col: f64,
+    /// winograd (3×3 s1) or 1x1 kernel speedup; None when inapplicable.
+    pub alt: Option<f64>,
+}
+
+/// Figure 1 (per-layer) + Table 4 (geo-mean) over the 3×3 layers.
+pub fn fig1_table4(m: &Machine) -> (Vec<LayerRow>, Table, Table) {
+    per_layer_experiment(m, layers_3x3(), "3x3")
+}
+
+/// Figure 2 (per-layer) + Table 5 (geo-mean) over the 1×1 layers.
+pub fn fig2_table5(m: &Machine) -> (Vec<LayerRow>, Table, Table) {
+    per_layer_experiment(m, layers_1x1(), "1x1")
+}
+
+fn per_layer_experiment(
+    m: &Machine,
+    layers: Vec<NamedLayer>,
+    kind: &str,
+) -> (Vec<LayerRow>, Table, Table) {
+    let mut rows = Vec::new();
+    for nl in &layers {
+        for comp in Component::ALL {
+            let sparse_speedups: Vec<f64> = SPARSITY_GRID
+                .iter()
+                .map(|&s| speedup_over_direct(m, Algorithm::SparseTrain, &nl.cfg, comp, s))
+                .collect();
+            let im2col = speedup_over_direct(m, Algorithm::Im2col, &nl.cfg, comp, 0.0);
+            let alt = if winograd::applicable(&nl.cfg) {
+                Some(speedup_over_direct(m, Algorithm::Winograd, &nl.cfg, comp, 0.0))
+            } else if crate::kernels::onebyone::applicable(&nl.cfg) {
+                Some(speedup_over_direct(m, Algorithm::OneByOne, &nl.cfg, comp, 0.0))
+            } else {
+                None
+            };
+            rows.push(LayerRow {
+                layer: nl.name.to_string(),
+                comp,
+                sparse_speedups,
+                im2col,
+                alt,
+            });
+        }
+    }
+
+    // Figure table: per layer, speedup at 20/40/60/80 % (the figure's grid).
+    let alt_name = if kind == "3x3" { "winograd" } else { "1x1" };
+    let mut fig = Table::new(&format!(
+        "Figure {}: speedup over direct, {} layers (modeled Skylake-X)",
+        if kind == "3x3" { "1" } else { "2" },
+        kind
+    ))
+    .header(&["layer", "comp", "20%", "40%", "60%", "80%", "im2col", alt_name]);
+    for r in &rows {
+        fig.row_strings(vec![
+            r.layer.clone(),
+            r.comp.name().to_string(),
+            format!("{:.2}", r.sparse_speedups[2]),
+            format!("{:.2}", r.sparse_speedups[4]),
+            format!("{:.2}", r.sparse_speedups[6]),
+            format!("{:.2}", r.sparse_speedups[8]),
+            format!("{:.2}", r.im2col),
+            r.alt.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+
+    // Table 4/5: geo-mean per component across layers.
+    let mut tab = Table::new(&format!(
+        "Table {}: geo-mean speedup at each sparsity, {} layers",
+        if kind == "3x3" { "4" } else { "5" },
+        kind
+    ))
+    .header(&[
+        "comp", "0%", "10%", "20%", "30%", "40%", "50%", "60%", "70%", "80%", "90%", "im2c.",
+        alt_name,
+    ]);
+    for comp in Component::ALL {
+        let comp_rows: Vec<&LayerRow> = rows.iter().filter(|r| r.comp == comp).collect();
+        let mut cells = vec![comp.name().to_string()];
+        for si in 0..SPARSITY_GRID.len() {
+            let g = geomean(&comp_rows.iter().map(|r| r.sparse_speedups[si]).collect::<Vec<_>>());
+            cells.push(format!("{g:.2}"));
+        }
+        cells.push(format!(
+            "{:.2}",
+            geomean(&comp_rows.iter().map(|r| r.im2col).collect::<Vec<_>>())
+        ));
+        let alts: Vec<f64> = comp_rows.iter().filter_map(|r| r.alt).collect();
+        cells.push(if alts.is_empty() { "-".into() } else { format!("{:.2}", geomean(&alts)) });
+        tab.row_strings(cells);
+    }
+    (rows, fig, tab)
+}
+
+/// Figure 3: sparsity trajectories — returns `[layer][epoch]` per network.
+pub fn fig3(epochs: usize) -> Vec<(Network, Vec<Vec<f64>>)> {
+    [Network::ResNet34, Network::ResNet50, Network::FixupResNet50]
+        .into_iter()
+        .map(|net| {
+            let spec = NetSpec::build(net);
+            let relu_layers = spec.non_initial().count();
+            let model = TrajectoryModel::new(net.trajectory(), relu_layers, epochs);
+            (net, model.matrix())
+        })
+        .collect()
+}
+
+/// Per-layer mean operand sparsities used in the projection.
+pub struct LayerSparsity {
+    /// Input (ReLU of previous layer) — FWD and BWW-checked-on-D.
+    pub input: f64,
+    /// ∂L/∂Y (own ReLU, surviving only without BN) — BWI, BWW alternative.
+    pub grad: Option<f64>,
+}
+
+/// Mean per-layer sparsities for a network over a training run.
+pub fn layer_sparsities(spec: &NetSpec, epochs: usize) -> Vec<LayerSparsity> {
+    let mut params = spec.network.trajectory();
+    let dip = params.shortcut_dip;
+    params.shortcut_dip = 0.0; // applied from the layer flags instead
+    params.block_period = 0;
+    let n_layers = spec.layers.len();
+    let model = TrajectoryModel::new(params, n_layers.max(2), epochs);
+    spec.layers
+        .iter()
+        .enumerate()
+        .map(|(idx, l)| {
+            // own ReLU output sparsity
+            let own = (model.mean_sparsity(idx) - if l.after_shortcut { dip } else { 0.0 })
+                .clamp(0.05, 0.97);
+            // input sparsity = previous layer's ReLU output (0 for first)
+            let input = if l.is_first || idx == 0 {
+                0.0
+            } else {
+                let prev = &spec.layers[idx - 1];
+                (model.mean_sparsity(idx - 1)
+                    - if prev.after_shortcut { dip } else { 0.0 })
+                .clamp(0.05, 0.97)
+            };
+            let grad = (!l.has_bn).then_some(own);
+            LayerSparsity { input, grad }
+        })
+        .collect()
+}
+
+/// One network's projection: per-policy, per-component modeled cycles.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub network: Network,
+    /// policy → (first-layer, fwd, bwi, bww) total cycles.
+    pub by_policy: Vec<(AlgoPolicy, [f64; 4])>,
+}
+
+impl Projection {
+    fn total(parts: &[f64; 4]) -> f64 {
+        parts.iter().sum()
+    }
+
+    /// Speedup vs the direct policy, incl. the first layer.
+    pub fn speedup_incl_first(&self, policy: AlgoPolicy) -> f64 {
+        let direct = self.cycles(AlgoPolicy::DirectOnly);
+        Self::total(&direct) / Self::total(&self.cycles(policy))
+    }
+
+    /// Speedup vs direct, excluding the first layer (paper's second block).
+    pub fn speedup_excl_first(&self, policy: AlgoPolicy) -> f64 {
+        let d = self.cycles(AlgoPolicy::DirectOnly);
+        let p = self.cycles(policy);
+        (d[1] + d[2] + d[3]) / (p[1] + p[2] + p[3])
+    }
+
+    pub fn cycles(&self, policy: AlgoPolicy) -> [f64; 4] {
+        self.by_policy
+            .iter()
+            .find(|(p, _)| *p == policy)
+            .map(|(_, c)| *c)
+            .expect("policy present")
+    }
+}
+
+/// Figure 4 + Table 6: end-to-end conv-layer projection for all networks.
+pub fn fig4_table6(m: &Machine, epochs: usize) -> (Vec<Projection>, Table, Table) {
+    let sel = Selector::new(*m);
+    let policies = [
+        AlgoPolicy::DirectOnly,
+        AlgoPolicy::SparseTrainOnly,
+        AlgoPolicy::WinOr1x1,
+        AlgoPolicy::Combined,
+    ];
+    let mut projections = Vec::new();
+    for net in Network::ALL {
+        let spec = NetSpec::build(net);
+        let sparsities = layer_sparsities(&spec, epochs);
+        let mut by_policy = Vec::new();
+        for policy in policies {
+            let mut parts = [0.0f64; 4];
+            for (l, sp) in spec.layers.iter().zip(&sparsities) {
+                for comp in Component::ALL {
+                    // which operand carries sparsity for this component?
+                    let (sparsity, applicable) = match comp {
+                        Component::Fwd => (sp.input, !l.is_first && sp.input > 0.0),
+                        Component::Bwi => match sp.grad {
+                            Some(g) => (g, true),
+                            None => (0.0, false), // BN wiped it → direct
+                        },
+                        Component::Bww => {
+                            // check the sparser operand (§5.3)
+                            let best = sp.grad.map_or(sp.input, |g| g.max(sp.input));
+                            (best, !l.is_first && best > 0.0)
+                        }
+                    };
+                    let alg = sel.select(policy, &l.cfg, comp, sparsity, applicable);
+                    let cycles = estimate_layer_iid(m, alg, comp, &l.cfg, sparsity).wall;
+                    if l.is_first {
+                        parts[0] += cycles;
+                    } else {
+                        parts[1 + comp as usize] += cycles;
+                    }
+                }
+            }
+            by_policy.push((policy, parts));
+        }
+        projections.push(Projection { network: net, by_policy });
+    }
+
+    // Figure 4: stacked breakdown normalized to direct.
+    let mut fig = Table::new("Figure 4: conv-layer time breakdown, normalized to direct")
+        .header(&["network", "policy", "first", "FWD", "BWI", "BWW", "total"]);
+    for p in &projections {
+        let direct_total = Projection::total(&p.cycles(AlgoPolicy::DirectOnly));
+        for (policy, parts) in &p.by_policy {
+            fig.row_strings(vec![
+                p.network.name().to_string(),
+                policy.name().to_string(),
+                format!("{:.3}", parts[0] / direct_total),
+                format!("{:.3}", parts[1] / direct_total),
+                format!("{:.3}", parts[2] / direct_total),
+                format!("{:.3}", parts[3] / direct_total),
+                format!("{:.3}", Projection::total(parts) / direct_total),
+            ]);
+        }
+    }
+
+    // Table 6: projected speedups incl./excl. first layer.
+    let mut tab = Table::new("Table 6: projected speedup on all conv layers").header(&[
+        "network",
+        "ST incl1",
+        "win/1x1 incl1",
+        "comb incl1",
+        "ST excl1",
+        "win/1x1 excl1",
+        "comb excl1",
+    ]);
+    for p in &projections {
+        tab.row_strings(vec![
+            p.network.name().to_string(),
+            format!("{:.2}", p.speedup_incl_first(AlgoPolicy::SparseTrainOnly)),
+            format!("{:.2}", p.speedup_incl_first(AlgoPolicy::WinOr1x1)),
+            format!("{:.2}", p.speedup_incl_first(AlgoPolicy::Combined)),
+            format!("{:.2}", p.speedup_excl_first(AlgoPolicy::SparseTrainOnly)),
+            format!("{:.2}", p.speedup_excl_first(AlgoPolicy::WinOr1x1)),
+            format!("{:.2}", p.speedup_excl_first(AlgoPolicy::Combined)),
+        ]);
+    }
+    (projections, fig, tab)
+}
+
+/// §5.3 extension ("future work" in the paper): *dynamic* per-epoch
+/// algorithm selection. The static `combined` policy picks once from the
+/// training-average sparsity; the dynamic policy re-selects each epoch
+/// from that epoch's sparsity — profitable early in training when
+/// sparsity is still near 50 % and Winograd wins, and late when
+/// SparseTrain dominates.
+///
+/// Returns (static-combined cycles, dynamic cycles, dynamic/static gain)
+/// summed over FWD of all non-initial layers across the training run.
+pub fn dynamic_vs_static(m: &Machine, net: Network, epochs: usize) -> (f64, f64, f64) {
+    let sel = Selector::new(*m);
+    let spec = NetSpec::build(net);
+    let mut params = net.trajectory();
+    let dip = params.shortcut_dip;
+    params.shortcut_dip = 0.0;
+    params.block_period = 0;
+    let model = TrajectoryModel::new(params, spec.layers.len().max(2), epochs);
+
+    let mut static_total = 0.0;
+    let mut dynamic_total = 0.0;
+    for (idx, l) in spec.layers.iter().enumerate() {
+        if l.is_first || idx == 0 {
+            continue;
+        }
+        let prev = &spec.layers[idx - 1];
+        let s_at = |e: usize| {
+            (model.sparsity(idx - 1, e) - if prev.after_shortcut { dip } else { 0.0 })
+                .clamp(0.05, 0.97)
+        };
+        // static: one algorithm from the mean sparsity, used all epochs
+        let s_mean = (0..epochs).map(s_at).sum::<f64>() / epochs as f64;
+        let alg_static = sel.select(AlgoPolicy::Combined, &l.cfg, Component::Fwd, s_mean, true);
+        for e in 0..epochs {
+            let s = s_at(e);
+            static_total += estimate_layer_iid(m, alg_static, Component::Fwd, &l.cfg, s).wall;
+            // dynamic: re-select at this epoch's sparsity
+            let alg_dyn = sel.select(AlgoPolicy::Combined, &l.cfg, Component::Fwd, s, true);
+            dynamic_total += estimate_layer_iid(m, alg_dyn, Component::Fwd, &l.cfg, s).wall;
+        }
+    }
+    (static_total, dynamic_total, static_total / dynamic_total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Machine {
+        Machine::skylake_x()
+    }
+
+    #[test]
+    fn table4_shape_holds() {
+        let (rows, _fig, tab) = fig1_table4(&m());
+        assert!(!rows.is_empty());
+        assert!(!tab.is_empty());
+        // E9: dense overhead ≤ ~10 %, monotone growth, >2x at 90 %
+        for comp in Component::ALL {
+            let comp_rows: Vec<&LayerRow> = rows.iter().filter(|r| r.comp == comp).collect();
+            let g0 = geomean(&comp_rows.iter().map(|r| r.sparse_speedups[0]).collect::<Vec<_>>());
+            let g9 = geomean(&comp_rows.iter().map(|r| r.sparse_speedups[9]).collect::<Vec<_>>());
+            assert!(g0 > 0.80 && g0 <= 1.0, "{comp:?} 0% geomean={g0}");
+            assert!(g9 > 1.8, "{comp:?} 90% geomean={g9}");
+        }
+    }
+
+    #[test]
+    fn crossover_between_10_and_30_percent() {
+        // E9: the paper's crossover is 10–20 %; allow one grid step slack.
+        let (rows, _, _) = fig1_table4(&m());
+        for comp in Component::ALL {
+            let comp_rows: Vec<&LayerRow> = rows.iter().filter(|r| r.comp == comp).collect();
+            let g = |si: usize| {
+                geomean(&comp_rows.iter().map(|r| r.sparse_speedups[si]).collect::<Vec<_>>())
+            };
+            assert!(g(3) > 1.0, "{comp:?}: no crossover by 30%: {}", g(3));
+        }
+    }
+
+    #[test]
+    fn fig3_trajectories_have_expected_shape() {
+        let trajs = fig3(100);
+        assert_eq!(trajs.len(), 3);
+        for (net, m) in &trajs {
+            assert!(!m.is_empty(), "{net:?}");
+            assert_eq!(m[0].len(), 100);
+        }
+    }
+
+    #[test]
+    fn dynamic_selection_never_loses_and_sometimes_wins() {
+        // Per-epoch re-selection can only improve on the single static
+        // choice (it has strictly more information), and on ResNet-34
+        // (strong early/late sparsity swing) it should show real gain.
+        for net in [Network::Vgg16, Network::ResNet34] {
+            let (stat, dynamic, gain) = dynamic_vs_static(&m(), net, 60);
+            assert!(dynamic <= stat * 1.0001, "{net:?}: dynamic worse: {gain}");
+            assert!(gain >= 1.0, "{net:?}: gain {gain}");
+        }
+        let (_, _, gain34) = dynamic_vs_static(&m(), Network::ResNet34, 60);
+        assert!(gain34 > 1.0, "resnet34 dynamic gain {gain34}");
+    }
+
+    #[test]
+    fn table6_orderings_match_paper() {
+        let (projections, _, tab) = fig4_table6(&m(), 100);
+        assert!(!tab.is_empty());
+        let get = |net: Network| projections.iter().find(|p| p.network == net).unwrap();
+        // VGG16 benefits most (no BN, high sparsity, all 3×3)
+        let vgg = get(Network::Vgg16).speedup_excl_first(AlgoPolicy::SparseTrainOnly);
+        let r50 = get(Network::ResNet50).speedup_excl_first(AlgoPolicy::SparseTrainOnly);
+        let fix = get(Network::FixupResNet50).speedup_excl_first(AlgoPolicy::SparseTrainOnly);
+        assert!(vgg > fix && fix > r50, "ordering: vgg={vgg:.2} fixup={fix:.2} r50={r50:.2}");
+        // all speedups > 1 and combined ≥ SparseTrain-only
+        for p in &projections {
+            let st = p.speedup_incl_first(AlgoPolicy::SparseTrainOnly);
+            let comb = p.speedup_incl_first(AlgoPolicy::Combined);
+            assert!(st > 1.0, "{}: {st}", p.network.name());
+            assert!(comb >= st * 0.98, "{}: comb={comb} st={st}", p.network.name());
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Hand-rolled benchmark harness (offline substitute for `criterion`).
+//!
+//! Used by every target in `rust/benches/`. Provides warmup, adaptive
+//! iteration counts, outlier-trimmed summaries, and a `black_box` to defeat
+//! dead-code elimination.
+
+pub mod experiments;
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Harness configuration. Defaults target ~quick but stable measurements;
+/// override with env `SPARSETRAIN_BENCH_FAST=1` for smoke runs.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Minimum wall time spent in warmup.
+    pub warmup: Duration,
+    /// Minimum wall time spent measuring.
+    pub measure: Duration,
+    /// Minimum number of measured samples.
+    pub min_samples: usize,
+    /// Maximum number of measured samples.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if std::env::var("SPARSETRAIN_BENCH_FAST").is_ok() {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                min_samples: 3,
+                max_samples: 20,
+            }
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(150),
+                measure: Duration::from_millis(600),
+                min_samples: 7,
+                max_samples: 200,
+            }
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration wall time in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_ns)
+    }
+
+    /// Outlier-trimmed central estimate (median).
+    pub fn ns(&self) -> f64 {
+        self.summary().median
+    }
+
+    pub fn report_line(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{:<44} {:>12}  (±{:>10}, n={})",
+            self.name,
+            crate::util::table::fmt_duration_ns(s.median),
+            crate::util::table::fmt_duration_ns(s.stddev),
+            s.n
+        )
+    }
+}
+
+/// Measure `f`, which performs ONE unit of work per call.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup: run until warmup duration elapsed (at least once).
+    let t0 = Instant::now();
+    let mut warm_iters: u64 = 0;
+    loop {
+        f();
+        warm_iters += 1;
+        if t0.elapsed() >= cfg.warmup {
+            break;
+        }
+    }
+    // Estimate per-iter time to choose inner batch size so each sample is
+    // at least ~200 µs (amortizes timer overhead) unless calls are long.
+    let per_iter = t0.elapsed().as_nanos() as f64 / warm_iters as f64;
+    let batch = ((200_000.0 / per_iter.max(1.0)).ceil() as u64).max(1);
+
+    let mut samples = Vec::new();
+    let t1 = Instant::now();
+    while (samples.len() < cfg.min_samples)
+        || (t1.elapsed() < cfg.measure && samples.len() < cfg.max_samples)
+    {
+        let s = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    BenchResult { name: name.to_string(), samples_ns: samples }
+}
+
+/// A named group of benchmarks that prints a criterion-like report.
+pub struct BenchGroup {
+    title: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(title: &str) -> BenchGroup {
+        BenchGroup { title: title.to_string(), cfg: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(title: &str, cfg: BenchConfig) -> BenchGroup {
+        BenchGroup { title: title.to_string(), cfg, results: Vec::new() }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let r = bench(name, &self.cfg, f);
+        println!("  {}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn start(&self) {
+        println!("\n### {} ###", self.title);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Median time of a previously-run benchmark by name.
+    pub fn ns_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_samples: 3,
+            max_samples: 10,
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench("noop-ish", &fast_cfg(), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.ns() > 0.0);
+        assert!(r.samples_ns.len() >= 3);
+    }
+
+    #[test]
+    fn longer_work_measures_longer() {
+        let cfg = fast_cfg();
+        let short = bench("short", &cfg, || {
+            black_box((0..100u64).map(|x| x * x).sum::<u64>());
+        });
+        let long = bench("long", &cfg, || {
+            black_box((0..20_000u64).map(|x| x * x).sum::<u64>());
+        });
+        assert!(
+            long.ns() > short.ns() * 5.0,
+            "long={} short={}",
+            long.ns(),
+            short.ns()
+        );
+    }
+
+    #[test]
+    fn group_collects_results() {
+        let mut g = BenchGroup::with_config("t", fast_cfg());
+        g.bench("a", || {
+            black_box(1 + 1);
+        });
+        assert!(g.ns_of("a").is_some());
+        assert!(g.ns_of("b").is_none());
+    }
+}

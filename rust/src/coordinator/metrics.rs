@@ -1,0 +1,101 @@
+//! A small metrics registry (counters, gauges, per-step series) for the
+//! trainer and the examples — the observability layer a deployed
+//! coordinator would export.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    series: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    pub fn push(&self, name: &str, v: f64) {
+        self.series.lock().unwrap().entry(name.to_string()).or_default().push(v);
+    }
+
+    pub fn series(&self, name: &str) -> Vec<f64> {
+        self.series.lock().unwrap().get(name).cloned().unwrap_or_default()
+    }
+
+    /// Render all metrics as a text report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge   {k} = {v:.6}\n"));
+        }
+        for (k, v) in self.series.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "series  {k}: n={} last={:.6} mean={:.6}\n",
+                v.len(),
+                v.last().copied().unwrap_or(0.0),
+                crate::util::stats::mean(v)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = MetricsRegistry::new();
+        m.inc("steps", 1);
+        m.inc("steps", 2);
+        assert_eq!(m.counter("steps"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        m.set_gauge("lr", 0.1);
+        assert_eq!(m.gauge("lr"), Some(0.1));
+    }
+
+    #[test]
+    fn series_accumulates() {
+        let m = MetricsRegistry::new();
+        m.push("loss", 2.0);
+        m.push("loss", 1.0);
+        assert_eq!(m.series("loss"), vec![2.0, 1.0]);
+        assert!(m.report().contains("series  loss"));
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = std::sync::Arc::new(MetricsRegistry::new());
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        for _ in 0..100 {
+            let m = m.clone();
+            pool.submit(move || m.inc("x", 1));
+        }
+        pool.wait_idle();
+        assert_eq!(m.counter("x"), 100);
+    }
+}

@@ -1,0 +1,14 @@
+//! The L3 coordinator: schedules the paper's output-parallel row-sweep
+//! tasks across worker threads, selects the best convolution algorithm per
+//! layer (static `combined` policy and the dynamic, profiler-driven variant
+//! §5.3 suggests), and drives the PJRT training loop.
+
+pub mod metrics;
+pub mod scheduler;
+pub mod selector;
+pub mod trainer;
+
+pub use metrics::MetricsRegistry;
+pub use scheduler::Scheduler;
+pub use selector::{AlgoPolicy, Selector};
+pub use trainer::{TrainReport, Trainer, TrainerConfig};

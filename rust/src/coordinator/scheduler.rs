@@ -1,0 +1,180 @@
+//! Output-parallel row-sweep scheduler (§3.2.2).
+//!
+//! SparseTrain parallelizes at output-row × K-tile granularity: the FWD
+//! task grid is `(i, oy, qb)` with `N·H'·K/Q` independent tasks (vs just
+//! `N` for the naïve input-parallel version, which would need atomic output
+//! updates). Tasks write disjoint output rows, so workers need no locks on
+//! the data — only on the shared task cursor.
+
+use crate::kernels::regalloc::plan_fwd;
+use crate::kernels::{sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use crate::tensor::{ActTensor, FilterTensor};
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A parallel executor for SparseTrain kernels.
+pub struct Scheduler {
+    pool: ThreadPool,
+}
+
+/// Execution report: merged kernel stats + load-balance info.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub stats: KernelStats,
+    /// Tasks executed per worker chunk (for balance assertions).
+    pub tasks_per_chunk: Vec<usize>,
+    pub total_tasks: usize,
+}
+
+impl Scheduler {
+    pub fn new(threads: usize) -> Scheduler {
+        Scheduler { pool: ThreadPool::new(threads) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Number of parallel FWD tasks for a config (§3.2.2: `N·H'·K/Q`).
+    pub fn fwd_task_count(cfg: &ConvConfig) -> usize {
+        let plan = plan_fwd(cfg.k, cfg.r);
+        cfg.n * cfg.out_h() * (cfg.k / plan.q)
+    }
+
+    /// Run SparseTrain FWD with output parallelism. Tasks are `(i, oy, qb)`
+    /// triples; each writes a disjoint slice of `y`.
+    pub fn run_fwd(
+        &self,
+        cfg: &ConvConfig,
+        d: &ActTensor,
+        g: &FilterTensor,
+        y: &mut ActTensor,
+        mode: SkipMode,
+    ) -> RunReport {
+        let plan = plan_fwd(cfg.k, cfg.r);
+        let kq_count = cfg.k / plan.q;
+        let oh = cfg.out_h();
+        let total = Self::fwd_task_count(cfg);
+        let chunks = (self.pool.threads() * 4).min(total.max(1));
+
+        // Workers accumulate into per-chunk outputs merged at the end.
+        // Because tasks write disjoint rows, we share `y` through a raw
+        // pointer wrapper; disjointness is guaranteed by the task grid.
+        struct YPtr(*mut ActTensor);
+        unsafe impl Send for YPtr {}
+        unsafe impl Sync for YPtr {}
+        let yptr = YPtr(y as *mut ActTensor);
+
+        let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
+        let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+
+        self.pool.for_chunks(total, chunks, |ci, start, end| {
+            let mut local = KernelStats::new();
+            for t in start..end {
+                let i = t / (oh * kq_count);
+                let rem = t % (oh * kq_count);
+                let oy = rem / kq_count;
+                let qb = rem % kq_count;
+                // SAFETY: (i, oy, qb) ranges over distinct output rows ×
+                // K-tiles; fwd_task only writes y rows (i, qb·Q/V+j, oy).
+                let y_mut: &mut ActTensor = unsafe { &mut *{ &yptr }.0 };
+                sparse_fwd::fwd_task(cfg, d, g, y_mut, i, oy, qb, mode, &mut local);
+                tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
+            }
+            merged.lock().unwrap().merge(&local);
+        });
+
+        RunReport {
+            stats: merged.into_inner().unwrap(),
+            tasks_per_chunk: tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            total_tasks: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::reference;
+    use crate::tensor::allclose;
+    use crate::util::prng::Xorshift;
+    use crate::util::proptest::{check, Config as PropConfig, UsizeIn};
+
+    fn setup(cfg: &ConvConfig, sparsity: f64) -> (ActTensor, FilterTensor) {
+        let mut rng = Xorshift::new(1234);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, sparsity);
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+        (d, g)
+    }
+
+    #[test]
+    fn parallel_matches_reference() {
+        let cfg = ConvConfig::square(2, 32, 64, 8, 3, 1);
+        let (d, g) = setup(&cfg, 0.5);
+        let sched = Scheduler::new(4);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let report = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+        let yref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+        assert!(allclose(&y.to_nchw(), &yref, 1e-4, 1e-5));
+        assert_eq!(report.total_tasks, Scheduler::fwd_task_count(&cfg));
+        assert_eq!(report.tasks_per_chunk.iter().sum::<usize>(), report.total_tasks);
+    }
+
+    #[test]
+    fn parallel_stats_match_serial() {
+        let cfg = ConvConfig::square(2, 32, 64, 8, 3, 1);
+        let (d, g) = setup(&cfg, 0.4);
+        let sched = Scheduler::new(3);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let report = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+        let mut y2 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut serial = KernelStats::new();
+        crate::kernels::sparse_fwd::fwd(&cfg, &d, &g, &mut y2, SkipMode::MaskLoop, &mut serial);
+        assert_eq!(report.stats.fma_vec, serial.fma_vec);
+        assert_eq!(report.stats.zero_checks, serial.zero_checks);
+        assert_eq!(y.data(), y2.data());
+    }
+
+    #[test]
+    fn task_count_formula() {
+        // N·H'·K/Q (§3.2.2)
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let plan = plan_fwd(256, 3);
+        assert_eq!(Scheduler::fwd_task_count(&cfg), 16 * 56 * (256 / plan.q));
+    }
+
+    #[test]
+    fn property_parallel_equals_serial_over_random_shapes() {
+        // Property: for random (hw, threads), parallel == serial output.
+        let gen = UsizeIn { lo: 0, hi: 6 };
+        check(PropConfig { cases: 8, seed: 77, max_shrink_steps: 16 }, &gen, |&case| {
+            let hw = 4 + case; // 4..=10
+            let threads = 1 + case % 4;
+            let cfg = ConvConfig::square(1, 16, 32, hw, 3, 1);
+            let (d, g) = setup(&cfg, 0.5);
+            let sched = Scheduler::new(threads);
+            let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+            let yref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+            if allclose(&y.to_nchw(), &yref, 1e-4, 1e-5) {
+                Ok(())
+            } else {
+                Err(format!("mismatch at hw={hw} threads={threads}"))
+            }
+        });
+    }
+
+    #[test]
+    fn load_balance_reasonable() {
+        let cfg = ConvConfig::square(2, 32, 64, 16, 3, 1);
+        let (d, g) = setup(&cfg, 0.5);
+        let sched = Scheduler::new(4);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let report = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+        let nonempty = report.tasks_per_chunk.iter().filter(|&&t| t > 0).count();
+        assert!(nonempty > 1, "work not spread: {:?}", report.tasks_per_chunk);
+    }
+}

@@ -1,0 +1,200 @@
+//! Per-layer algorithm selection — the `combined` policy of §5.3 and the
+//! dynamic variant the paper sketches ("profile the sparsity of each layer
+//! at intervals during training and then dynamically select the best
+//! implementation").
+
+use crate::kernels::{winograd, onebyone, Component, ConvConfig};
+use crate::sim::{Algorithm, Machine};
+use crate::sparsity::SparsityProfiler;
+use crate::tensor::ActTensor;
+use crate::util::prng::Xorshift;
+
+/// Selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoPolicy {
+    /// Always the dense baseline.
+    DirectOnly,
+    /// Always SparseTrain (paper's "SparseTrain" bars; falls back to
+    /// `direct` for BWI under BatchNorm, handled by the projector).
+    SparseTrainOnly,
+    /// Winograd where applicable, else the 1×1 kernel, else direct
+    /// (paper's "win/1x1" bars).
+    WinOr1x1,
+    /// Per layer, the fastest of all applicable algorithms at the layer's
+    /// (average) sparsity (paper's "combined" bars).
+    Combined,
+}
+
+impl AlgoPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoPolicy::DirectOnly => "direct",
+            AlgoPolicy::SparseTrainOnly => "SparseTrain",
+            AlgoPolicy::WinOr1x1 => "win/1x1",
+            AlgoPolicy::Combined => "combined",
+        }
+    }
+}
+
+/// The selector: evaluates candidate algorithms on the cost model.
+pub struct Selector {
+    pub machine: Machine,
+    /// Seed for synthesizing pattern tensors at a given sparsity.
+    pub seed: u64,
+}
+
+impl Selector {
+    pub fn new(machine: Machine) -> Selector {
+        Selector { machine, seed: 0xA11CE }
+    }
+
+    /// Candidate algorithms applicable to a layer/component.
+    pub fn candidates(cfg: &ConvConfig, sparse_applicable: bool) -> Vec<Algorithm> {
+        let mut v = vec![Algorithm::Direct];
+        if winograd::applicable(cfg) {
+            v.push(Algorithm::Winograd);
+        }
+        if onebyone::applicable(cfg) {
+            v.push(Algorithm::OneByOne);
+        }
+        v.push(Algorithm::Im2col);
+        if sparse_applicable {
+            v.push(Algorithm::SparseTrain);
+        }
+        v
+    }
+
+    /// Synthesize an i.i.d. pattern tensor at `sparsity` shaped like the
+    /// checked operand of (cfg, comp).
+    pub fn pattern_for(&self, cfg: &ConvConfig, comp: Component, sparsity: f64) -> ActTensor {
+        let mut rng = Xorshift::new(self.seed);
+        let mut t = match comp {
+            Component::Fwd | Component::Bww => ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w),
+            Component::Bwi => ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w()),
+        };
+        t.fill_relu_sparse(&mut rng, sparsity);
+        t
+    }
+
+    /// Estimated wall cycles of `alg` on (cfg, comp) at the given operand
+    /// sparsity (i.i.d. closed form — see [`crate::sim::estimate_layer_iid`]).
+    pub fn cost(&self, alg: Algorithm, cfg: &ConvConfig, comp: Component, sparsity: f64) -> f64 {
+        crate::sim::estimate_layer_iid(&self.machine, alg, comp, cfg, sparsity).wall
+    }
+
+    /// Pick per policy. `sparse_applicable` is false when the checked
+    /// operand carries no ReLU sparsity (first layer, or BWI after BN).
+    pub fn select(
+        &self,
+        policy: AlgoPolicy,
+        cfg: &ConvConfig,
+        comp: Component,
+        sparsity: f64,
+        sparse_applicable: bool,
+    ) -> Algorithm {
+        match policy {
+            AlgoPolicy::DirectOnly => Algorithm::Direct,
+            AlgoPolicy::SparseTrainOnly => {
+                if sparse_applicable {
+                    Algorithm::SparseTrain
+                } else {
+                    Algorithm::Direct
+                }
+            }
+            AlgoPolicy::WinOr1x1 => {
+                if winograd::applicable(cfg) {
+                    Algorithm::Winograd
+                } else if onebyone::applicable(cfg) {
+                    Algorithm::OneByOne
+                } else {
+                    Algorithm::Direct
+                }
+            }
+            AlgoPolicy::Combined => {
+                let mut best = (Algorithm::Direct, f64::INFINITY);
+                for alg in Self::candidates(cfg, sparse_applicable) {
+                    let c = self.cost(alg, cfg, comp, sparsity);
+                    if c < best.1 {
+                        best = (alg, c);
+                    }
+                }
+                best.0
+            }
+        }
+    }
+
+    /// Dynamic selection from live profiler data (recent-window sparsity),
+    /// falling back to 0.5 (the ReLU prior) with no observations.
+    pub fn select_dynamic(
+        &self,
+        cfg: &ConvConfig,
+        comp: Component,
+        layer: &str,
+        profiler: &SparsityProfiler,
+        sparse_applicable: bool,
+    ) -> Algorithm {
+        let s = profiler.recent_mean(layer, 16).unwrap_or(0.5);
+        self.select(AlgoPolicy::Combined, cfg, comp, s, sparse_applicable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel() -> Selector {
+        Selector::new(Machine::skylake_x())
+    }
+
+    #[test]
+    fn combined_picks_sparse_at_high_sparsity_3x3() {
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let alg = sel().select(AlgoPolicy::Combined, &cfg, Component::Fwd, 0.9, true);
+        assert_eq!(alg, Algorithm::SparseTrain);
+    }
+
+    #[test]
+    fn combined_prefers_winograd_at_low_sparsity_3x3() {
+        // §5.1: it takes 50–60 % sparsity for SparseTrain to pass Winograd.
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let alg = sel().select(AlgoPolicy::Combined, &cfg, Component::Fwd, 0.1, true);
+        assert_eq!(alg, Algorithm::Winograd);
+    }
+
+    #[test]
+    fn winograd_never_selected_for_strided_or_1x1() {
+        let strided = ConvConfig::square(16, 128, 128, 56, 3, 2);
+        assert!(!Selector::candidates(&strided, true).contains(&Algorithm::Winograd));
+        let one = ConvConfig::square(16, 256, 256, 28, 1, 1);
+        assert!(!Selector::candidates(&one, true).contains(&Algorithm::Winograd));
+        assert!(Selector::candidates(&one, true).contains(&Algorithm::OneByOne));
+    }
+
+    #[test]
+    fn sparse_inapplicable_falls_back_to_direct() {
+        let cfg = ConvConfig::square(16, 64, 64, 56, 3, 1);
+        let alg = sel().select(AlgoPolicy::SparseTrainOnly, &cfg, Component::Bwi, 0.9, false);
+        assert_eq!(alg, Algorithm::Direct);
+    }
+
+    #[test]
+    fn dynamic_uses_profiled_sparsity() {
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let s = sel();
+        let mut prof = SparsityProfiler::new();
+        for _ in 0..20 {
+            prof.observe_value("l", 0.92);
+        }
+        let alg = s.select_dynamic(&cfg, Component::Fwd, "l", &prof, true);
+        assert_eq!(alg, Algorithm::SparseTrain);
+        // unknown layer → prior 0.5 → winograd or sparse, but never im2col
+        let alg2 = s.select_dynamic(&cfg, Component::Fwd, "unknown", &prof, true);
+        assert_ne!(alg2, Algorithm::Im2col);
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(AlgoPolicy::Combined.name(), "combined");
+        assert_eq!(AlgoPolicy::WinOr1x1.name(), "win/1x1");
+    }
+}

@@ -1,0 +1,183 @@
+//! The PJRT-driven training loop: Rust owns the loop, the data, the
+//! metrics, and the parameter state; the compiled JAX/Pallas train-step
+//! artifact does the numerics. Python never runs here.
+
+use crate::coordinator::metrics::MetricsRegistry;
+use crate::kernels::layers::synthetic_batch;
+use crate::runtime::artifacts::{geometry, ArtifactSet, TRAIN_STEP};
+use crate::runtime::pjrt::{literal_f32, literal_i32, Runtime};
+use crate::sparsity::SparsityProfiler;
+use crate::util::prng::Xorshift;
+use anyhow::{Context, Result};
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig { steps: 200, seed: 7, log_every: 25 }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f64>,
+    pub steps_per_sec: f64,
+    /// Per-layer measured ReLU sparsity series (layer → per-step values).
+    pub profiler: SparsityProfiler,
+}
+
+impl TrainReport {
+    /// Loss must drop from its initial plateau for the run to count as
+    /// "learning" (the E2E acceptance criterion).
+    pub fn learned(&self) -> bool {
+        if self.losses.len() < 20 {
+            return false;
+        }
+        let head = crate::util::stats::mean(&self.losses[..10]);
+        let tail = crate::util::stats::mean(&self.losses[self.losses.len() - 10..]);
+        tail < head * 0.8
+    }
+}
+
+/// Trainer over the AOT train-step artifact.
+pub struct Trainer {
+    runtime: Runtime,
+    cfg: TrainerConfig,
+    pub metrics: MetricsRegistry,
+}
+
+impl Trainer {
+    pub fn new(artifacts: &ArtifactSet, cfg: TrainerConfig) -> Result<Trainer> {
+        anyhow::ensure!(
+            artifacts.complete(),
+            "artifacts missing: {:?}; run `make artifacts` first",
+            artifacts.missing()
+        );
+        let runtime = Runtime::cpu(&artifacts.dir)?;
+        Ok(Trainer { runtime, cfg, metrics: MetricsRegistry::new() })
+    }
+
+    /// He-style uniform init for a conv weight [k][c][s][r].
+    fn init_conv(rng: &mut Xorshift, k: usize, c: usize, s: usize, r: usize) -> Vec<f32> {
+        let fan_in = (c * s * r) as f32;
+        let bound = (2.0 / fan_in).sqrt();
+        (0..k * c * s * r).map(|_| rng.range_f32(-bound, bound)).collect()
+    }
+
+    /// Run the training loop.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        use geometry::*;
+        let mut rng = Xorshift::new(self.cfg.seed);
+
+        // Parameter state, host-side. Shapes match python/compile/model.py.
+        let mut w1 = Self::init_conv(&mut rng, C1, C_IN, 3, 3);
+        let mut w2 = Self::init_conv(&mut rng, C2, C1, 3, 3);
+        let fan = C2 as f32;
+        let mut wfc: Vec<f32> =
+            (0..CLASSES * C2).map(|_| rng.range_f32(-(1.0 / fan).sqrt(), (1.0 / fan).sqrt())).collect();
+        let mut bfc = vec![0.0f32; CLASSES];
+
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut profiler = SparsityProfiler::new();
+        let t0 = std::time::Instant::now();
+
+        // compile once
+        self.runtime.load(TRAIN_STEP)?;
+
+        for step in 0..self.cfg.steps {
+            let (x, labels) = synthetic_batch(&mut rng, N, C_IN, HW, CLASSES);
+            let x_lit = literal_f32(&x.to_nchw(), &[N as i64, C_IN as i64, HW as i64, HW as i64])?;
+            let y_lit =
+                literal_i32(&labels.iter().map(|&l| l as i32).collect::<Vec<_>>(), &[N as i64])?;
+
+            let inputs = vec![
+                literal_f32(&w1, &[C1 as i64, C_IN as i64, 3, 3])?,
+                literal_f32(&w2, &[C2 as i64, C1 as i64, 3, 3])?,
+                literal_f32(&wfc, &[CLASSES as i64, C2 as i64])?,
+                literal_f32(&bfc, &[CLASSES as i64])?,
+                x_lit,
+                y_lit,
+            ];
+            let exe = self.runtime.load(TRAIN_STEP)?;
+            let outs = exe.run(&inputs).context("train step")?;
+            anyhow::ensure!(outs.len() == 7, "train_step must return 7 outputs, got {}", outs.len());
+
+            w1 = outs[0].to_vec::<f32>()?;
+            w2 = outs[1].to_vec::<f32>()?;
+            wfc = outs[2].to_vec::<f32>()?;
+            bfc = outs[3].to_vec::<f32>()?;
+            let loss = outs[4].to_vec::<f32>()?[0] as f64;
+            let s1 = outs[5].to_vec::<f32>()?[0] as f64;
+            let s2 = outs[6].to_vec::<f32>()?[0] as f64;
+
+            losses.push(loss);
+            profiler.observe_value("conv1_relu", s1.clamp(0.0, 1.0));
+            profiler.observe_value("conv2_relu", s2.clamp(0.0, 1.0));
+            self.metrics.push("loss", loss);
+            self.metrics.inc("steps", 1);
+            self.metrics.set_gauge("sparsity/conv1", s1);
+            self.metrics.set_gauge("sparsity/conv2", s2);
+
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                println!(
+                    "step {step:>5}  loss {loss:>8.4}  relu sparsity: conv1 {s1:.3} conv2 {s2:.3}"
+                );
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            losses,
+            steps_per_sec: self.cfg.steps as f64 / dt.max(1e-9),
+            profiler,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_learned_criterion() {
+        let falling: Vec<f64> = (0..100).map(|i| 2.0 - 1.5 * (i as f64 / 99.0)).collect();
+        let flat = vec![2.0; 100];
+        let mk = |losses: Vec<f64>| TrainReport {
+            losses,
+            steps_per_sec: 1.0,
+            profiler: SparsityProfiler::new(),
+        };
+        assert!(mk(falling).learned());
+        assert!(!mk(flat).learned());
+        assert!(!mk(vec![1.0; 5]).learned());
+    }
+
+    #[test]
+    fn trainer_requires_artifacts() {
+        let missing = ArtifactSet::new("/definitely/not/here");
+        let err = Trainer::new(&missing, TrainerConfig::default()).err().unwrap();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    /// Full loop — only when artifacts exist (integration covered in
+    /// rust/tests/ and the end_to_end_train example).
+    #[test]
+    fn short_training_run_if_artifacts_present() {
+        let arts = ArtifactSet::default_location();
+        if !arts.complete() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut t =
+            Trainer::new(&arts, TrainerConfig { steps: 5, seed: 1, log_every: 0 }).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.losses.len(), 5);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+    }
+}

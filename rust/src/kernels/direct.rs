@@ -1,0 +1,477 @@
+//! Dense direct convolution — the `direct` baseline (MKL-DNN-style).
+//!
+//! Same loop order, tiling and data layout as the SparseTrain kernels
+//! (input-row sweeps, Q-tiled output channels, filter-vector FMA operands)
+//! but with **no** zero checking and **no** skipping: every lane of every
+//! input vector is processed unconditionally. The paper's `direct` baseline
+//! is a highly tuned dense kernel with the same blocking strategy
+//! (Georganas et al. [11]); sharing the structure makes the 0 %-sparsity
+//! comparison isolate exactly the cost of the sparsity machinery.
+
+use super::regalloc::{plan_bww, plan_fwd};
+use super::{ConvConfig, KernelStats};
+use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use crate::V;
+
+/// Precomputed sweep geometry: for each input column `x`, the list of
+/// (filter tap r, output column x') pairs it touches. Shared by the dense
+/// and sparse kernels so they perform identical index math.
+pub(crate) struct SweepGeom {
+    /// For each x: (r, x') pairs (length ≤ R).
+    pub taps: Vec<Vec<(usize, usize)>>,
+}
+
+impl SweepGeom {
+    /// Geometry of a forward row sweep: input column x feeds output x'
+    /// where `x'·O + r - pad_w = x`.
+    pub fn fwd(cfg: &ConvConfig) -> SweepGeom {
+        let ow = cfg.out_w();
+        let taps = (0..cfg.w)
+            .map(|x| {
+                (0..cfg.r)
+                    .filter_map(|r| {
+                        let t = x as isize + cfg.pad_w as isize - r as isize;
+                        if t < 0 || t % cfg.stride_o as isize != 0 {
+                            return None;
+                        }
+                        let xo = (t / cfg.stride_o as isize) as usize;
+                        (xo < ow).then_some((r, xo))
+                    })
+                    .collect()
+            })
+            .collect();
+        SweepGeom { taps }
+    }
+
+    /// Total (x, tap) pairs in a full row sweep.
+    pub fn total_taps(&self) -> usize {
+        self.taps.iter().map(Vec::len).sum()
+    }
+}
+
+/// Dense direct forward convolution over the tiled layouts.
+///
+/// `y` must be zero-initialized (the kernel accumulates into it).
+pub fn fwd(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    y: &mut ActTensor,
+    stats: &mut KernelStats,
+) {
+    cfg.validate().expect("invalid conv config");
+    debug_assert_eq!((d.n, d.c, d.h, d.w), (cfg.n, cfg.c, cfg.h, cfg.w));
+    debug_assert_eq!((g.k, g.c, g.s, g.r), (cfg.k, cfg.c, cfg.s, cfg.r));
+    debug_assert_eq!((y.n, y.c, y.h, y.w), (cfg.n, cfg.k, cfg.out_h(), cfg.out_w()));
+
+    let plan = plan_fwd(cfg.k, cfg.r);
+    let qv = plan.q / V; // k-vectors per Q tile
+    let geom = SweepGeom::fwd(cfg);
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    let cb_count = cfg.c / V;
+    let kq_count = cfg.k / plan.q;
+
+    // Task structure mirrors the SparseTrain kernel (same blocking per
+    // Georganas et al. [11]): per (i, oy, qb) the output row stays in a
+    // stack accumulator across the (s, cb) sweeps.
+    let mut acc = vec![0.0f32; ow * qv * V];
+    for i in 0..cfg.n {
+        for oy in 0..oh {
+            for qb in 0..kq_count {
+                for j in 0..qv {
+                    let kb = qb * qv + j;
+                    acc[j * ow * V..(j + 1) * ow * V].copy_from_slice(y.row(i, kb, oy));
+                }
+                for s in 0..cfg.s {
+                    let iy =
+                        oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+                    if iy < 0 || iy >= cfg.h as isize {
+                        continue;
+                    }
+                    let iy = iy as usize;
+                    for cb in 0..cb_count {
+                        sweep_row_dense(cfg, d, g, &mut acc, i, iy, s, qb, qv, cb, ow, &geom);
+                        account_sweep_dense(cfg, stats, &geom, qv, ow);
+                    }
+                }
+                for j in 0..qv {
+                    let kb = qb * qv + j;
+                    y.row_mut(i, kb, oy).copy_from_slice(&acc[j * ow * V..(j + 1) * ow * V]);
+                }
+            }
+        }
+    }
+    // Per-task output-row traffic (register-resident within a task).
+    stats.loads_out += (cfg.n * oh * kq_count * ow * qv) as u64;
+    stats.stores_out += (cfg.n * oh * kq_count * ow * qv) as u64;
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.r * plan.q * V * 4) as u64);
+}
+
+/// One dense row sweep: all V lanes of every input vector processed,
+/// scattered into the row accumulator.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn sweep_row_dense(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    acc: &mut [f32],
+    i: usize,
+    iy: usize,
+    s: usize,
+    qb: usize,
+    qv: usize,
+    cb: usize,
+    ow: usize,
+    geom: &SweepGeom,
+) {
+    for x in 0..cfg.w {
+        let dvec = d.vec(i, cb, iy, x);
+        let taps = &geom.taps[x];
+        if taps.is_empty() {
+            continue;
+        }
+        for cv in 0..V {
+            let dval = dvec[cv];
+            for j in 0..qv {
+                let kb = qb * qv + j;
+                let base = j * ow * V;
+                for &(r, xo) in taps {
+                    let gvec = g.vec(kb, cb, s, r, cv);
+                    let a = &mut acc[base + xo * V..base + xo * V + V];
+                    for l in 0..V {
+                        a[l] += dval * gvec[l];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense sweep accounting: all FMAs issued, no checks. Output-row
+/// load/store is charged per *task* (i, oy, qb) — like SparseTrain, the
+/// tuned dense kernel keeps the output row register-resident across the
+/// (s, cb) accumulation (Georganas et al. [11]).
+fn account_sweep_dense(cfg: &ConvConfig, stats: &mut KernelStats, geom: &SweepGeom, qv: usize, ow: usize) {
+    let _ = (qv, ow);
+    let taps = geom.total_taps() as u64;
+    stats.fma_vec += taps * (V as u64) * qv as u64;
+    stats.loads_in += cfg.w as u64;
+    stats.sweeps += 1;
+}
+
+/// Dense direct backward-by-input: convolves ∂L/∂Y with transposed filters.
+/// Implemented via the forward kernel over the BWI-equivalent configuration
+/// for stride 1; for strided layers uses a scatter formulation.
+pub fn bwi(
+    cfg: &ConvConfig,
+    dy: &ActTensor,
+    g: &FilterTensor,
+    dd: &mut ActTensor,
+    stats: &mut KernelStats,
+) {
+    cfg.validate().expect("invalid conv config");
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    debug_assert_eq!((dy.n, dy.c, dy.h, dy.w), (cfg.n, cfg.k, oh, ow));
+    debug_assert_eq!((dd.n, dd.c, dd.h, dd.w), (cfg.n, cfg.c, cfg.h, cfg.w));
+
+    // Scatter formulation mirroring the sparse BWI loop structure, dense.
+    let plan = plan_fwd(cfg.c, cfg.r); // accumulators are C-vectors in BWI
+    let qv = plan.q / V;
+    let cq_count = cfg.c / plan.q;
+    let kb_count = cfg.k / V;
+
+    for i in 0..cfg.n {
+        for oy in 0..oh {
+            for s in 0..cfg.s {
+                let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+                if iy < 0 || iy >= cfg.h as isize {
+                    continue;
+                }
+                let iy = iy as usize;
+                for qb in 0..cq_count {
+                    for kb in 0..kb_count {
+                        for j in 0..qv {
+                            let cb = qb * qv + j;
+                            let ddoff = dd.vec_offset(i, cb, iy, 0);
+                            for ox in 0..ow {
+                                let dyvec = dy.vec(i, kb, oy, ox);
+                                for kv in 0..V {
+                                    let gval = dyvec[kv];
+                                    for r in 0..cfg.r {
+                                        let ix = ox as isize * cfg.stride_o as isize + r as isize
+                                            - cfg.pad_w as isize;
+                                        if ix < 0 || ix >= cfg.w as isize {
+                                            continue;
+                                        }
+                                        // dD[i, cb-vec, iy, ix] += dY[i,k,oy,ox] * G[k, cb-vec, s, r]
+                                        let gvec =
+                                            g_vec_for_bwi(g, kb * V + kv, cb, s, r);
+                                        let ddrow = &mut dd.data_mut()
+                                            [ddoff + ix as usize * V..ddoff + ix as usize * V + V];
+                                        for l in 0..V {
+                                            ddrow[l] += gval * gvec[l];
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Accounting (dense): every (i, oy, s-valid, ox, kv) issues R·C/V FMAs.
+    let valid_rows: usize = (0..oh)
+        .map(|oy| {
+            (0..cfg.s)
+                .filter(|&s| {
+                    let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+                    iy >= 0 && iy < cfg.h as isize
+                })
+                .count()
+        })
+        .sum();
+    let sweeps = (cfg.n * valid_rows * cq_count * kb_count) as u64;
+    stats.sweeps += sweeps;
+    stats.loads_in += sweeps * ow as u64;
+    // interior approximation for taps (exact per-element count is data-free
+    // but boundary-clipped; totals only drive the model, keep exact):
+    let mut taps_total = 0u64;
+    for ox in 0..ow {
+        for r in 0..cfg.r {
+            let ix = ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize;
+            if ix >= 0 && ix < cfg.w as isize {
+                taps_total += 1;
+            }
+        }
+    }
+    stats.fma_vec += sweeps * taps_total * V as u64 * qv as u64;
+    // Per-task (i, y, qb) accumulator-row traffic.
+    stats.loads_out += (cfg.n * cfg.h * cq_count * cfg.w * qv) as u64;
+    stats.stores_out += (cfg.n * cfg.h * cq_count * cfg.w * qv) as u64;
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.r * plan.q * V * 4) as u64);
+}
+
+/// Dense BWW inner lane (same code shape as the sparse kernel's lane body
+/// so the host baseline compiles to comparable SIMD).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn bww_dense_lane(
+    dy: &ActTensor,
+    acc: &mut [f32],
+    dval: f32,
+    i: usize,
+    qb: usize,
+    qv: usize,
+    oy: usize,
+    taps: &[(usize, usize)],
+) {
+    for &(r, ox) in taps {
+        for j in 0..qv {
+            let kb = qb * qv + j;
+            let dyvec = dy.vec(i, kb, oy, ox);
+            let a = &mut acc[(r * qv + j) * V..(r * qv + j) * V + V];
+            for l in 0..V {
+                a[l] += dval * dyvec[l];
+            }
+        }
+    }
+}
+
+/// Filter C-vector for BWI: G[k, cb·V .. cb·V+V, s, r] gathered from the
+/// K-vector layout. The paper stores a transposed copy of G for BWI; we
+/// reindex on the fly for functional clarity (host-perf BWI uses the
+/// pre-transposed tensor via [`FilterTensor::transpose_for_bwi`]).
+#[inline(always)]
+fn g_vec_for_bwi<'a>(g: &'a FilterTensor, k: usize, cb: usize, s: usize, r: usize) -> [f32; V] {
+    let mut out = [0.0f32; V];
+    for (l, o) in out.iter_mut().enumerate() {
+        *o = g.get(k, cb * V + l, s, r);
+    }
+    out
+}
+
+/// Dense direct backward-by-weights.
+pub fn bww(
+    cfg: &ConvConfig,
+    d: &BatchTiledTensor,
+    dy: &ActTensor,
+    dg: &mut FilterTensor,
+    stats: &mut KernelStats,
+) {
+    cfg.validate().expect("invalid conv config");
+    assert!(cfg.n % V == 0, "BWW requires batch size multiple of V (§5.4)");
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    debug_assert_eq!((d.n, d.c, d.h, d.w), (cfg.n, cfg.c, cfg.h, cfg.w));
+    debug_assert_eq!((dy.n, dy.c, dy.h, dy.w), (cfg.n, cfg.k, oh, ow));
+    debug_assert_eq!((dg.k, dg.c, dg.s, dg.r), (cfg.k, cfg.c, cfg.s, cfg.r));
+
+    let plan = plan_bww(cfg.k, cfg.r);
+    let qv = plan.q / V;
+    let kq_count = cfg.k / plan.q;
+
+    // Loop order per Algorithm 5 (dense): i-tile, y (output row), s, q, c;
+    // row sweep over input columns; accumulators dG[r][q-tile] resident.
+    let taps = super::sparse_bww::bww_col_taps(cfg);
+    let mut acc = vec![0.0f32; cfg.r * qv * V];
+    for nb in 0..cfg.n / V {
+        for oy in 0..oh {
+            for s in 0..cfg.s {
+                let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+                if iy < 0 || iy >= cfg.h as isize {
+                    continue;
+                }
+                let iy = iy as usize;
+                for qb in 0..kq_count {
+                    for c in 0..cfg.c {
+                        acc.iter_mut().for_each(|a| *a = 0.0);
+                        for ix in 0..cfg.w {
+                            let tap = &taps[ix];
+                            if tap.is_empty() {
+                                continue;
+                            }
+                            let dvec = d.vec(nb, c, iy, ix);
+                            for nv in 0..V {
+                                bww_dense_lane(
+                                    dy,
+                                    &mut acc,
+                                    dvec[nv],
+                                    nb * V + nv,
+                                    qb,
+                                    qv,
+                                    oy,
+                                    tap,
+                                );
+                            }
+                        }
+                        // Fold the sweep accumulators into dG.
+                        for r in 0..cfg.r {
+                            for j in 0..qv {
+                                let kb = qb * qv + j;
+                                let a = &acc[(r * qv + j) * V..(r * qv + j) * V + V];
+                                let gv = dg.vec_mut(kb, c / V, s, r, c % V);
+                                for l in 0..V {
+                                    gv[l] += a[l];
+                                }
+                            }
+                        }
+                        stats.sweeps += 1;
+                        stats.loads_out += (cfg.r * qv) as u64;
+                        stats.stores_out += (cfg.r * qv) as u64;
+                    }
+                }
+            }
+        }
+    }
+    // FMA / load accounting (dense): per sweep, every valid (ox, r) tap
+    // issues V lanes × qv vector FMAs, with the dY operand from memory.
+    let taps_total: u64 = taps.iter().map(|t| t.len() as u64).sum();
+    stats.fma_vec += stats.sweeps * taps_total * (V as u64) * qv as u64;
+    stats.loads_in += stats.sweeps * taps_total;
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.r * plan.q * V * 4) as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::tensor::allclose;
+    use crate::util::prng::Xorshift;
+
+    fn setup(cfg: &ConvConfig, seed: u64) -> (ActTensor, FilterTensor) {
+        let mut rng = Xorshift::new(seed);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_uniform(&mut rng, -1.0, 1.0);
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+        (d, g)
+    }
+
+    #[test]
+    fn fwd_matches_reference_3x3() {
+        for stride in [1, 2] {
+            let cfg = ConvConfig::square(2, 32, 32, 8, 3, stride);
+            let (d, g) = setup(&cfg, 11);
+            let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            let mut st = KernelStats::new();
+            fwd(&cfg, &d, &g, &mut y, &mut st);
+            let yref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+            assert!(
+                allclose(&y.to_nchw(), &yref, 1e-4, 1e-5),
+                "stride={stride} mismatch"
+            );
+            assert!(st.fma_vec > 0);
+            assert_eq!(st.fma_vec_skipped, 0);
+        }
+    }
+
+    #[test]
+    fn fwd_matches_reference_1x1() {
+        let cfg = ConvConfig::square(2, 64, 32, 7, 1, 1);
+        let (d, g) = setup(&cfg, 13);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut y, &mut st);
+        let yref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+        assert!(allclose(&y.to_nchw(), &yref, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn bwi_matches_reference() {
+        for stride in [1, 2] {
+            let cfg = ConvConfig::square(2, 32, 16, 8, 3, stride);
+            let mut rng = Xorshift::new(17);
+            let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            dy.fill_uniform(&mut rng, -1.0, 1.0);
+            let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            g.fill_uniform(&mut rng, -0.5, 0.5);
+            let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let mut st = KernelStats::new();
+            bwi(&cfg, &dy, &g, &mut dd, &mut st);
+            let ddref = reference::conv_bwi(&cfg, &dy.to_nchw(), &g.to_kcsr());
+            assert!(
+                allclose(&dd.to_nchw(), &ddref, 1e-4, 1e-5),
+                "stride={stride} mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn bww_matches_reference() {
+        for stride in [1, 2] {
+            let cfg = ConvConfig::square(16, 32, 32, 6, 3, stride);
+            let mut rng = Xorshift::new(19);
+            let mut dsrc = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            dsrc.fill_uniform(&mut rng, -1.0, 1.0);
+            let d = BatchTiledTensor::from_act(&dsrc);
+            let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            dy.fill_uniform(&mut rng, -1.0, 1.0);
+            let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            let mut st = KernelStats::new();
+            bww(&cfg, &d, &dy, &mut dg, &mut st);
+            let dgref = reference::conv_bww(&cfg, &dsrc.to_nchw(), &dy.to_nchw());
+            assert!(
+                allclose(&dg.to_kcsr(), &dgref, 1e-3, 1e-4),
+                "stride={stride} mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn fwd_fma_count_matches_formula_when_unpadded() {
+        // With no padding and unit stride, every tap is valid:
+        // fma_vec == N·(K/V)·H'·W'·C·S·R
+        let mut cfg = ConvConfig::square(1, 16, 32, 6, 3, 1);
+        cfg.pad_h = 0;
+        cfg.pad_w = 0;
+        let (d, g) = setup(&cfg, 23);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut y, &mut st);
+        assert_eq!(st.fma_vec, cfg.fwd_vec_fmas());
+    }
+}

@@ -1,0 +1,312 @@
+//! Non-convolution layer substrates needed to run whole networks:
+//! ReLU (the sparsity source), BatchNorm (the sparsity destroyer — §2.3),
+//! pooling, fully-connected, and softmax cross-entropy loss.
+
+use crate::tensor::ActTensor;
+use crate::util::prng::Xorshift;
+
+/// ReLU forward in place; returns the induced sparsity of the output.
+pub fn relu_fwd(x: &mut ActTensor) -> f64 {
+    let mut zeros = 0usize;
+    for v in x.data_mut().iter_mut() {
+        if *v <= 0.0 {
+            *v = 0.0;
+            zeros += 1;
+        }
+    }
+    zeros as f64 / x.len() as f64
+}
+
+/// ReLU backward: `dX = dY ⊙ [Y > 0]` given the *forward output* `y`
+/// (equivalent to gating on the pre-activation sign; f'(0) = 0 per the
+/// paper's footnote). The gradient inherits y's zero pattern — the dynamic
+/// sparsity BWI exploits.
+pub fn relu_bwd(y: &ActTensor, dy: &mut ActTensor) {
+    assert_eq!(y.len(), dy.len());
+    for (g, &o) in dy.data_mut().iter_mut().zip(y.data()) {
+        if o <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Per-channel BatchNorm statistics.
+#[derive(Debug, Clone)]
+pub struct BnParams {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+impl BnParams {
+    pub fn identity(c: usize) -> BnParams {
+        BnParams { gamma: vec![1.0; c], beta: vec![0.0; c] }
+    }
+}
+
+/// BatchNorm forward (training mode: batch statistics). Returns per-channel
+/// (mean, inv_std) for the backward pass.
+pub fn batchnorm_fwd(x: &mut ActTensor, p: &BnParams, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let c = x.c;
+    let per = (x.n * x.h * x.w) as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for i in 0..x.n {
+        for ch in 0..c {
+            for y in 0..x.h {
+                for xx in 0..x.w {
+                    mean[ch] += x.get(i, ch, y, xx);
+                }
+            }
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= per;
+    }
+    for i in 0..x.n {
+        for ch in 0..c {
+            for y in 0..x.h {
+                for xx in 0..x.w {
+                    let d = x.get(i, ch, y, xx) - mean[ch];
+                    var[ch] += d * d;
+                }
+            }
+        }
+    }
+    let inv_std: Vec<f32> = var.iter().map(|v| 1.0 / (v / per + eps).sqrt()).collect();
+    for i in 0..x.n {
+        for ch in 0..c {
+            for y in 0..x.h {
+                for xx in 0..x.w {
+                    let v = (x.get(i, ch, y, xx) - mean[ch]) * inv_std[ch] * p.gamma[ch]
+                        + p.beta[ch];
+                    x.set(i, ch, y, xx, v);
+                }
+            }
+        }
+    }
+    (mean, inv_std)
+}
+
+/// 2×2 max pooling with stride 2.
+pub fn maxpool2_fwd(x: &ActTensor) -> ActTensor {
+    let (oh, ow) = (x.h / 2, x.w / 2);
+    let mut y = ActTensor::zeros(x.n, x.c, oh, ow);
+    for i in 0..x.n {
+        for c in 0..x.c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(x.get(i, c, oy * 2 + dy, ox * 2 + dx));
+                        }
+                    }
+                    y.set(i, c, oy, ox, m);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Global average pooling → `[N][C]`.
+pub fn global_avgpool(x: &ActTensor) -> Vec<Vec<f32>> {
+    let per = (x.h * x.w) as f32;
+    (0..x.n)
+        .map(|i| {
+            (0..x.c)
+                .map(|c| {
+                    let mut s = 0.0;
+                    for y in 0..x.h {
+                        for xx in 0..x.w {
+                            s += x.get(i, c, y, xx);
+                        }
+                    }
+                    s / per
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Fully-connected forward: `logits[i][o] = Σ_f x[i][f]·w[o][f] + b[o]`.
+pub fn fc_fwd(x: &[Vec<f32>], w: &[Vec<f32>], b: &[f32]) -> Vec<Vec<f32>> {
+    x.iter()
+        .map(|xi| {
+            w.iter()
+                .zip(b)
+                .map(|(wo, bo)| xi.iter().zip(wo).map(|(a, b)| a * b).sum::<f32>() + bo)
+                .collect()
+        })
+        .collect()
+}
+
+/// Softmax cross-entropy: returns (mean loss, dLogits).
+pub fn softmax_xent(logits: &[Vec<f32>], labels: &[usize]) -> (f32, Vec<Vec<f32>>) {
+    let n = logits.len() as f32;
+    let mut loss = 0.0f32;
+    let mut grads = Vec::with_capacity(logits.len());
+    for (row, &lab) in logits.iter().zip(labels) {
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|e| e / z).collect();
+        loss += -(probs[lab].max(1e-12)).ln();
+        let g: Vec<f32> = probs
+            .iter()
+            .enumerate()
+            .map(|(j, p)| (p - if j == lab { 1.0 } else { 0.0 }) / n)
+            .collect();
+        grads.push(g);
+    }
+    (loss / n, grads)
+}
+
+/// Synthetic labeled batch generator (CIFAR-like) used by examples/tests.
+///
+/// The class signal is a per-class *channel signature* (deterministic ±
+/// pattern over channels) so it survives the model's global average
+/// pooling; spatial structure + noise make the convs do real work.
+pub fn synthetic_batch(
+    rng: &mut Xorshift,
+    n: usize,
+    c: usize,
+    hw: usize,
+    classes: usize,
+) -> (ActTensor, Vec<usize>) {
+    let mut x = ActTensor::zeros(n, c, hw, hw);
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(classes)).collect();
+    // deterministic per-class channel signatures
+    let signatures: Vec<Vec<f32>> = (0..classes)
+        .map(|lab| {
+            let mut crng = Xorshift::new(0x516E ^ (lab as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            (0..c).map(|_| if crng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect()
+        })
+        .collect();
+    for (i, &lab) in labels.iter().enumerate() {
+        let sig = &signatures[lab];
+        for ch in 0..c {
+            for y in 0..hw {
+                for xx in 0..hw {
+                    // spatial texture (checker ripple) + class signature + noise
+                    let tex = (((y + xx) % 4) as f32 / 4.0) - 0.375;
+                    x.set(
+                        i,
+                        ch,
+                        y,
+                        xx,
+                        0.8 * sig[ch] + 0.4 * tex + 0.3 * (rng.next_f32() - 0.5),
+                    );
+                }
+            }
+        }
+    }
+    (x, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xorshift;
+
+    #[test]
+    fn relu_zeroes_negatives_and_reports_sparsity() {
+        let mut rng = Xorshift::new(3);
+        let mut x = ActTensor::zeros(2, 16, 4, 4);
+        x.fill_uniform(&mut rng, -1.0, 1.0);
+        let s = relu_fwd(&mut x);
+        assert!(x.data().iter().all(|&v| v >= 0.0));
+        assert!((s - 0.5).abs() < 0.1, "sparsity={s}");
+        assert!((x.sparsity() - s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relu_bwd_gates_gradient_with_output_pattern() {
+        let mut rng = Xorshift::new(5);
+        let mut x = ActTensor::zeros(1, 16, 4, 4);
+        x.fill_uniform(&mut rng, -1.0, 1.0);
+        relu_fwd(&mut x);
+        let mut dy = ActTensor::zeros(1, 16, 4, 4);
+        dy.fill_uniform(&mut rng, -1.0, 1.0);
+        relu_bwd(&x, &mut dy);
+        for (g, o) in dy.data().iter().zip(x.data()) {
+            if *o == 0.0 {
+                assert_eq!(*g, 0.0);
+            }
+        }
+        // gradient sparsity >= activation sparsity
+        assert!(dy.sparsity() >= x.sparsity() - 1e-9);
+    }
+
+    #[test]
+    fn batchnorm_normalizes() {
+        let mut rng = Xorshift::new(7);
+        let mut x = ActTensor::zeros(4, 16, 6, 6);
+        x.fill_uniform(&mut rng, 2.0, 6.0);
+        batchnorm_fwd(&mut x, &BnParams::identity(16), 1e-5);
+        // per-channel mean ~0, var ~1
+        let per = (4 * 6 * 6) as f32;
+        for c in 0..16 {
+            let mut m = 0.0;
+            for i in 0..4 {
+                for y in 0..6 {
+                    for xx in 0..6 {
+                        m += x.get(i, c, y, xx);
+                    }
+                }
+            }
+            m /= per;
+            assert!(m.abs() < 1e-4, "c={c} mean={m}");
+        }
+    }
+
+    #[test]
+    fn batchnorm_destroys_relu_sparsity_structure() {
+        // After BN, previous zeros are shifted — the paper's §2.3 point.
+        let mut rng = Xorshift::new(9);
+        let mut x = ActTensor::zeros(4, 16, 6, 6);
+        x.fill_relu_sparse(&mut rng, 0.6);
+        let before = x.sparsity();
+        batchnorm_fwd(&mut x, &BnParams::identity(16), 1e-5);
+        assert!(before > 0.5);
+        assert!(x.sparsity() < 0.01, "BN should wipe exact zeros");
+    }
+
+    #[test]
+    fn maxpool_shapes_and_values() {
+        let mut x = ActTensor::zeros(1, 16, 4, 4);
+        x.set(0, 0, 1, 1, 9.0);
+        let y = maxpool2_fwd(&x);
+        assert_eq!((y.h, y.w), (2, 2));
+        assert_eq!(y.get(0, 0, 0, 0), 9.0);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero() {
+        let logits = vec![vec![1.0, 2.0, 0.5], vec![0.1, 0.1, 0.1]];
+        let (loss, g) = softmax_xent(&logits, &[1, 0]);
+        assert!(loss > 0.0);
+        for row in &g {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fc_identity() {
+        let x = vec![vec![1.0, 2.0]];
+        let w = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let b = vec![0.5, -0.5];
+        let out = fc_fwd(&x, &w, &b);
+        assert_eq!(out, vec![vec![1.5, 1.5]]);
+    }
+
+    #[test]
+    fn synthetic_batch_learnable_structure() {
+        let mut rng = Xorshift::new(11);
+        let (x, labels) = synthetic_batch(&mut rng, 8, 16, 16, 4);
+        assert_eq!(labels.len(), 8);
+        assert!(labels.iter().all(|&l| l < 4));
+        assert_eq!((x.n, x.c, x.h, x.w), (8, 16, 16, 16));
+    }
+}

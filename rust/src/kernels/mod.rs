@@ -1,0 +1,291 @@
+//! Convolution kernels: the paper's SparseTrain scheme plus every baseline
+//! it is compared against.
+//!
+//! Every kernel is *functional* (computes real numerics over the tiled
+//! tensor layouts, unit-tested against the scalar reference in
+//! [`reference`]) and *accounted*: it fills a [`KernelStats`] with the
+//! micro-op counts (vector FMAs issued/skipped, vector loads/stores per
+//! working set, zero-check mask statistics, integer overhead ops) that the
+//! Skylake-X model in [`crate::sim`] turns into cycle estimates.
+//!
+//! | module | paper name | role |
+//! |---|---|---|
+//! | [`direct`] | `direct` (MKL-DNN) | dense baseline, all three components |
+//! | [`sparse_fwd`] | SparseTrain FWD (Alg. 2+3) | sparse forward |
+//! | [`sparse_bwi`] | SparseTrain BWI (§3.3) | sparse backward-by-input |
+//! | [`sparse_bww`] | SparseTrain BWW (Alg. 5) | sparse backward-by-weights |
+//! | [`im2col`] | `im2col` | lowering + GEMM baseline |
+//! | [`winograd`] | `winograd` | F(2×2, 3×3) baseline (3×3, stride 1) |
+//! | [`onebyone`] | `1x1` | specialized reduction kernel for 1×1 layers |
+//! | [`regalloc`] | Table 3 | Q/T/pipelining register-budget selection |
+//! | [`layers`] | — | ReLU / BatchNorm / pooling / FC / loss substrates |
+//! | [`reference`] | — | scalar 7-loop oracle for tests |
+
+pub mod direct;
+pub mod im2col;
+pub mod layers;
+pub mod onebyone;
+pub mod reference;
+pub mod regalloc;
+pub mod sparse_bwi;
+pub mod sparse_bww;
+pub mod sparse_fwd;
+pub mod stats_model;
+pub mod winograd;
+
+use crate::V;
+
+/// A convolution layer configuration (Table 1 symbols).
+///
+/// `h`/`w` are the *input* spatial dims; `s`/`r` the filter dims;
+/// `stride_p`/`stride_o` the vertical/horizontal strides; `pad_h`/`pad_w`
+/// the (symmetric) zero padding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvConfig {
+    pub n: usize,
+    pub c: usize,
+    pub k: usize,
+    pub h: usize,
+    pub w: usize,
+    pub s: usize,
+    pub r: usize,
+    pub stride_p: usize,
+    pub stride_o: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+}
+
+impl ConvConfig {
+    /// A square-image, square-filter config with "same"-style padding
+    /// (pad = (filter-1)/2), matching the paper's Table 2 rows.
+    pub fn square(n: usize, c: usize, k: usize, hw: usize, rs: usize, stride: usize) -> ConvConfig {
+        ConvConfig {
+            n,
+            c,
+            k,
+            h: hw,
+            w: hw,
+            s: rs,
+            r: rs,
+            stride_p: stride,
+            stride_o: stride,
+            pad_h: (rs - 1) / 2,
+            pad_w: (rs - 1) / 2,
+        }
+    }
+
+    /// Output height H'.
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad_h - self.s) / self.stride_p + 1
+    }
+
+    /// Output width W'.
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad_w - self.r) / self.stride_o + 1
+    }
+
+    /// FLOPs (multiply+add counted as 2) of the dense forward convolution.
+    pub fn fwd_flops(&self) -> u64 {
+        2 * (self.n * self.k * self.out_h() * self.out_w() * self.c * self.s * self.r) as u64
+    }
+
+    /// Dense V-wide FMA count for FWD (vectorized over K).
+    pub fn fwd_vec_fmas(&self) -> u64 {
+        (self.n * (self.k / V) * self.out_h() * self.out_w() * self.c * self.s * self.r) as u64
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.c % V != 0 {
+            return Err(format!("C={} not a multiple of V={V}", self.c));
+        }
+        if self.k % V != 0 {
+            return Err(format!("K={} not a multiple of V={V}", self.k));
+        }
+        if self.s == 0 || self.r == 0 || self.stride_o == 0 || self.stride_p == 0 {
+            return Err("degenerate filter/stride".into());
+        }
+        if self.h + 2 * self.pad_h < self.s || self.w + 2 * self.pad_w < self.r {
+            return Err("filter larger than padded input".into());
+        }
+        Ok(())
+    }
+}
+
+/// Which training component a kernel run implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Component {
+    /// Forward propagation.
+    Fwd,
+    /// Backward propagation by input (∂L/∂D).
+    Bwi,
+    /// Backward propagation by weights (∂L/∂G).
+    Bww,
+}
+
+impl Component {
+    pub const ALL: [Component; 3] = [Component::Fwd, Component::Bwi, Component::Bww];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Component::Fwd => "FWD",
+            Component::Bwi => "BWI",
+            Component::Bww => "BWW",
+        }
+    }
+}
+
+/// Zero-check/skip strategy (§3.2.4 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SkipMode {
+    /// No skipping at all: behave densely (still the SparseTrain loop
+    /// structure, but every lane is processed). Isolates loop-order cost.
+    Dense,
+    /// Algorithm 2: a conditional branch per lane of the mask.
+    PerLaneBranch,
+    /// Algorithm 3: popcount + tzcnt loop over set lanes (default).
+    #[default]
+    MaskLoop,
+}
+
+/// Micro-op accounting filled by every kernel. All memory counters are in
+/// units of V-wide (64 B) vector accesses, which on the modeled machine is
+/// one cache line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KernelStats {
+    /// V-wide FMAs actually executed.
+    pub fma_vec: u64,
+    /// V-wide FMAs skipped thanks to detected zeros.
+    pub fma_vec_skipped: u64,
+    /// Vector compares against zero (one per input vector inspected).
+    pub zero_checks: u64,
+    /// Histogram over the zero-check mask popcount (0..=V). Drives both the
+    /// Algorithm-3 loop-iteration count and the branch-mispredict model.
+    pub popcount_hist: Vec<u64>,
+    /// V-wide loads of input (D or ∂L/∂Y being scanned).
+    pub loads_in: u64,
+    /// V-wide loads of filter operands.
+    pub loads_flt: u64,
+    /// V-wide loads of the output/accumulator working set.
+    pub loads_out: u64,
+    /// V-wide stores of the output/accumulator working set.
+    pub stores_out: u64,
+    /// Cheap integer ops in the skip machinery (Alg. 3: ~8 per set lane).
+    pub int_ops: u64,
+    /// Row sweeps executed.
+    pub sweeps: u64,
+    /// Non-FMA vector floating-point ops (transforms, reductions, max).
+    pub vec_fp_ops: u64,
+    /// Bytes of filter working set touched per sweep (L1 residency check).
+    pub filter_bytes_per_sweep: u64,
+}
+
+impl KernelStats {
+    pub fn new() -> KernelStats {
+        KernelStats { popcount_hist: vec![0; V + 1], ..Default::default() }
+    }
+
+    /// Record one zero-check over a V-lane mask with `nonzeros` set lanes.
+    #[inline]
+    pub fn record_check(&mut self, nonzeros: usize) {
+        self.zero_checks += 1;
+        if self.popcount_hist.is_empty() {
+            self.popcount_hist = vec![0; V + 1];
+        }
+        self.popcount_hist[nonzeros] += 1;
+    }
+
+    /// Total FMAs had nothing been skipped.
+    pub fn fma_total(&self) -> u64 {
+        self.fma_vec + self.fma_vec_skipped
+    }
+
+    /// Fraction of FMAs skipped.
+    pub fn skip_fraction(&self) -> f64 {
+        let t = self.fma_total();
+        if t == 0 {
+            0.0
+        } else {
+            self.fma_vec_skipped as f64 / t as f64
+        }
+    }
+
+    /// Merge another stats block (for multi-sweep / multi-thread merges).
+    pub fn merge(&mut self, other: &KernelStats) {
+        self.fma_vec += other.fma_vec;
+        self.fma_vec_skipped += other.fma_vec_skipped;
+        self.zero_checks += other.zero_checks;
+        if self.popcount_hist.len() < other.popcount_hist.len() {
+            self.popcount_hist.resize(other.popcount_hist.len(), 0);
+        }
+        for (a, b) in self.popcount_hist.iter_mut().zip(&other.popcount_hist) {
+            *a += b;
+        }
+        self.loads_in += other.loads_in;
+        self.loads_flt += other.loads_flt;
+        self.loads_out += other.loads_out;
+        self.stores_out += other.stores_out;
+        self.int_ops += other.int_ops;
+        self.sweeps += other.sweeps;
+        self.vec_fp_ops += other.vec_fp_ops;
+        self.filter_bytes_per_sweep = self.filter_bytes_per_sweep.max(other.filter_bytes_per_sweep);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dims_match_table2_examples() {
+        // vgg3_2: 256ch 56x56 3x3 s1 → 56x56
+        let c = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        assert_eq!((c.out_h(), c.out_w()), (56, 56));
+        // resnet3_2/r: 128ch 56x56 3x3 s2 → 28x28
+        let c = ConvConfig::square(16, 128, 128, 56, 3, 2);
+        assert_eq!((c.out_h(), c.out_w()), (28, 28));
+        // resnet2_1a: 1x1 s1 → same
+        let c = ConvConfig::square(16, 64, 64, 56, 1, 1);
+        assert_eq!((c.out_h(), c.out_w()), (56, 56));
+    }
+
+    #[test]
+    fn flops_counts() {
+        let c = ConvConfig::square(1, 16, 16, 4, 1, 1);
+        // 1*16*4*4*16*1*1 MACs * 2
+        assert_eq!(c.fwd_flops(), 2 * 16 * 16 * 16);
+        assert_eq!(c.fwd_vec_fmas(), 16 * 16); // K/V=1
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut c = ConvConfig::square(1, 16, 16, 4, 3, 1);
+        assert!(c.validate().is_ok());
+        c.c = 17;
+        assert!(c.validate().is_err());
+        let mut c2 = ConvConfig::square(1, 16, 16, 4, 3, 1);
+        c2.pad_h = 0;
+        c2.pad_w = 0;
+        c2.h = 2;
+        c2.w = 2;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn stats_merge_and_skip_fraction() {
+        let mut a = KernelStats::new();
+        a.fma_vec = 60;
+        a.fma_vec_skipped = 40;
+        a.record_check(3);
+        let mut b = KernelStats::new();
+        b.fma_vec = 40;
+        b.fma_vec_skipped = 60;
+        b.record_check(3);
+        b.record_check(16);
+        a.merge(&b);
+        assert_eq!(a.fma_total(), 200);
+        assert_eq!(a.skip_fraction(), 0.5);
+        assert_eq!(a.popcount_hist[3], 2);
+        assert_eq!(a.popcount_hist[16], 1);
+        assert_eq!(a.zero_checks, 3);
+    }
+}

@@ -1,0 +1,221 @@
+//! Scalar 7-loop reference convolutions over plain NCHW/KCSR buffers.
+//!
+//! These are the correctness oracles: deliberately naïve, no tiling, no
+//! vectorization, no sparsity exploitation. Every optimized kernel in this
+//! crate is tested against them.
+
+use super::ConvConfig;
+
+/// Forward: `Y[i,k,y',x'] = Σ_{c,s,r} D[i,c,y'·P+s-pad_h, x'·O+r-pad_w] · G[k,c,s,r]`
+/// over plain NCHW input (`d`), KCSR filters (`g`); returns NKH'W'.
+pub fn conv_fwd(cfg: &ConvConfig, d: &[f32], g: &[f32]) -> Vec<f32> {
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    assert_eq!(d.len(), cfg.n * cfg.c * cfg.h * cfg.w);
+    assert_eq!(g.len(), cfg.k * cfg.c * cfg.s * cfg.r);
+    let mut y = vec![0.0f32; cfg.n * cfg.k * oh * ow];
+    for i in 0..cfg.n {
+        for k in 0..cfg.k {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for c in 0..cfg.c {
+                        for s in 0..cfg.s {
+                            let iy = (oy * cfg.stride_p + s) as isize - cfg.pad_h as isize;
+                            if iy < 0 || iy >= cfg.h as isize {
+                                continue;
+                            }
+                            for r in 0..cfg.r {
+                                let ix = (ox * cfg.stride_o + r) as isize - cfg.pad_w as isize;
+                                if ix < 0 || ix >= cfg.w as isize {
+                                    continue;
+                                }
+                                acc += d[((i * cfg.c + c) * cfg.h + iy as usize) * cfg.w
+                                    + ix as usize]
+                                    * g[((k * cfg.c + c) * cfg.s + s) * cfg.r + r];
+                            }
+                        }
+                    }
+                    y[((i * cfg.k + k) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Backward by input: `dD[i,c,y,x] = Σ_{k,s,r} dY[i,k,y',x'] · G[k,c,s,r]`
+/// where `y'·P + s - pad_h = y`, `x'·O + r - pad_w = x`. Returns NCHW.
+pub fn conv_bwi(cfg: &ConvConfig, dy: &[f32], g: &[f32]) -> Vec<f32> {
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    assert_eq!(dy.len(), cfg.n * cfg.k * oh * ow);
+    assert_eq!(g.len(), cfg.k * cfg.c * cfg.s * cfg.r);
+    let mut dd = vec![0.0f32; cfg.n * cfg.c * cfg.h * cfg.w];
+    for i in 0..cfg.n {
+        for k in 0..cfg.k {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let gout = dy[((i * cfg.k + k) * oh + oy) * ow + ox];
+                    if gout == 0.0 {
+                        continue; // pure arithmetic shortcut; result identical
+                    }
+                    for c in 0..cfg.c {
+                        for s in 0..cfg.s {
+                            let iy = (oy * cfg.stride_p + s) as isize - cfg.pad_h as isize;
+                            if iy < 0 || iy >= cfg.h as isize {
+                                continue;
+                            }
+                            for r in 0..cfg.r {
+                                let ix = (ox * cfg.stride_o + r) as isize - cfg.pad_w as isize;
+                                if ix < 0 || ix >= cfg.w as isize {
+                                    continue;
+                                }
+                                dd[((i * cfg.c + c) * cfg.h + iy as usize) * cfg.w + ix as usize] +=
+                                    gout * g[((k * cfg.c + c) * cfg.s + s) * cfg.r + r];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dd
+}
+
+/// Backward by weights: `dG[k,c,s,r] = Σ_{i,y',x'} D[i,c,y'·P+s-pad_h, x'·O+r-pad_w] · dY[i,k,y',x']`.
+/// Returns KCSR.
+pub fn conv_bww(cfg: &ConvConfig, d: &[f32], dy: &[f32]) -> Vec<f32> {
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    assert_eq!(d.len(), cfg.n * cfg.c * cfg.h * cfg.w);
+    assert_eq!(dy.len(), cfg.n * cfg.k * oh * ow);
+    let mut dg = vec![0.0f32; cfg.k * cfg.c * cfg.s * cfg.r];
+    for k in 0..cfg.k {
+        for c in 0..cfg.c {
+            for s in 0..cfg.s {
+                for r in 0..cfg.r {
+                    let mut acc = 0.0f32;
+                    for i in 0..cfg.n {
+                        for oy in 0..oh {
+                            let iy = (oy * cfg.stride_p + s) as isize - cfg.pad_h as isize;
+                            if iy < 0 || iy >= cfg.h as isize {
+                                continue;
+                            }
+                            for ox in 0..ow {
+                                let ix = (ox * cfg.stride_o + r) as isize - cfg.pad_w as isize;
+                                if ix < 0 || ix >= cfg.w as isize {
+                                    continue;
+                                }
+                                acc += d[((i * cfg.c + c) * cfg.h + iy as usize) * cfg.w
+                                    + ix as usize]
+                                    * dy[((i * cfg.k + k) * oh + oy) * ow + ox];
+                            }
+                        }
+                    }
+                    dg[((k * cfg.c + c) * cfg.s + s) * cfg.r + r] = acc;
+                }
+            }
+        }
+    }
+    dg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::allclose;
+    use crate::util::prng::Xorshift;
+
+    fn rand_vec(rng: &mut Xorshift, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    /// Finite-difference check of BWI/BWW against FWD: the backward passes
+    /// must be the true gradients of L = Σ dy ⊙ Y(D, G).
+    #[test]
+    fn gradients_match_finite_difference() {
+        let cfg = ConvConfig::square(2, 16, 16, 5, 3, 1);
+        let mut rng = Xorshift::new(42);
+        let d = rand_vec(&mut rng, cfg.n * cfg.c * cfg.h * cfg.w);
+        let g = rand_vec(&mut rng, cfg.k * cfg.c * cfg.s * cfg.r);
+        let dy = rand_vec(&mut rng, cfg.n * cfg.k * cfg.out_h() * cfg.out_w());
+
+        let loss = |d: &[f32], g: &[f32]| -> f64 {
+            conv_fwd(&cfg, d, g)
+                .iter()
+                .zip(&dy)
+                .map(|(y, w)| (*y as f64) * (*w as f64))
+                .sum()
+        };
+
+        let dd = conv_bwi(&cfg, &dy, &g);
+        let dg = conv_bww(&cfg, &d, &dy);
+        let eps = 1e-3f32;
+
+        // spot-check a handful of coordinates
+        let mut rng2 = Xorshift::new(7);
+        for _ in 0..10 {
+            let idx = rng2.below(d.len());
+            let mut dp = d.clone();
+            dp[idx] += eps;
+            let mut dm = d.clone();
+            dm[idx] -= eps;
+            let fd = (loss(&dp, &g) - loss(&dm, &g)) / (2.0 * eps as f64);
+            assert!(
+                (fd - dd[idx] as f64).abs() < 2e-2,
+                "dD[{idx}]: fd={fd} analytic={}",
+                dd[idx]
+            );
+        }
+        for _ in 0..10 {
+            let idx = rng2.below(g.len());
+            let mut gp = g.clone();
+            gp[idx] += eps;
+            let mut gm = g.clone();
+            gm[idx] -= eps;
+            let fd = (loss(&d, &gp) - loss(&d, &gm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - dg[idx] as f64).abs() < 2e-2,
+                "dG[{idx}]: fd={fd} analytic={}",
+                dg[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn identity_filter_passes_through() {
+        // 1x1 conv with identity mapping (K=C, G = I per-channel)
+        let cfg = ConvConfig::square(1, 16, 16, 4, 1, 1);
+        let mut rng = Xorshift::new(1);
+        let d = rand_vec(&mut rng, cfg.n * cfg.c * cfg.h * cfg.w);
+        let mut g = vec![0.0f32; cfg.k * cfg.c];
+        for k in 0..16 {
+            g[k * 16 + k] = 1.0;
+        }
+        let y = conv_fwd(&cfg, &d, &g);
+        assert!(allclose(&y, &d, 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn strided_output_dims() {
+        let cfg = ConvConfig::square(1, 16, 16, 8, 3, 2);
+        let d = vec![1.0f32; cfg.n * cfg.c * cfg.h * cfg.w];
+        let g = vec![1.0f32; cfg.k * cfg.c * 9];
+        let y = conv_fwd(&cfg, &d, &g);
+        assert_eq!(y.len(), cfg.n * cfg.k * 4 * 4);
+        // interior outputs see the full 3x3*C support: 9*16 = 144
+        let oh = cfg.out_h();
+        let ow = cfg.out_w();
+        let interior = y[(0 * oh + 1) * ow + 1];
+        assert_eq!(interior, 144.0);
+    }
+
+    #[test]
+    fn padding_zeros_do_not_contribute() {
+        // All-ones input/filters: corner output of 3x3 pad-1 sees 4 taps/channel.
+        let cfg = ConvConfig::square(1, 16, 16, 4, 3, 1);
+        let d = vec![1.0f32; cfg.n * cfg.c * cfg.h * cfg.w];
+        let g = vec![1.0f32; cfg.k * cfg.c * 9];
+        let y = conv_fwd(&cfg, &d, &g);
+        assert_eq!(y[0], 4.0 * 16.0); // corner
+        assert_eq!(y[cfg.out_w() + 1], 9.0 * 16.0); // interior
+    }
+}

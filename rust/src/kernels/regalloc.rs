@@ -1,0 +1,167 @@
+//! Register-budget planning (§3.2.3, Table 3).
+//!
+//! The paper JIT-generates kernels whose output accumulators live in zmm
+//! registers: `T = R·Q/V` output vectors per row sweep, plus one register
+//! for the broadcast input element and one holding zeros for the vector
+//! compare — a budget of 30 of the 32 zmm registers. When spare registers
+//! remain, the loads of the *next* input element's output vectors are
+//! pipelined (cyclic renaming over `R+1` instead of `R` positions).
+//!
+//! This module reproduces that selection exactly; the chosen `Q` also
+//! drives the output-channel tiling of the Rust kernels and the parallel
+//! task count `N·H·K/Q` of the coordinator.
+
+use crate::V;
+
+/// Total architectural vector registers on the modeled CPU.
+pub const TOTAL_REGS: usize = 32;
+/// Registers reserved for the broadcast input element and the zero vector.
+pub const RESERVED_REGS: usize = 2;
+/// Budget available for output accumulators.
+pub const REG_BUDGET: usize = TOTAL_REGS - RESERVED_REGS;
+
+/// A register plan for one row-sweep kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegPlan {
+    /// Output-channel tile size (factor of K, multiple of V).
+    pub q: usize,
+    /// Skippable FMAs per zero check: `T = R·Q/V`.
+    pub t: usize,
+    /// Whether next-element output loads are pipelined (§3.2.3).
+    pub pipelined: bool,
+    /// Registers used for accumulators: `(R + pipelined)·Q/V`.
+    pub registers: usize,
+}
+
+/// All candidate Q values: multiples of V that divide K.
+fn q_candidates(k: usize) -> Vec<usize> {
+    (1..=k / V).map(|m| m * V).filter(|q| k % q == 0).collect()
+}
+
+/// Pick the optimal (Q, pipelined) for a FWD/BWI row sweep of filter width
+/// `r` over `k` output channels (Table 3 selection rule): maximize register
+/// utilization under the budget; prefer pipelined at equal utilization
+/// (the paper measured Q=256 unpipelined slower than Q=128 pipelined for
+/// R=1); prefer the larger Q at remaining ties.
+pub fn plan_fwd(k: usize, r: usize) -> RegPlan {
+    assert!(k % V == 0 && k > 0, "K must be a positive multiple of V");
+    let mut best: Option<RegPlan> = None;
+    for q in q_candidates(k) {
+        let t = r * q / V;
+        if t > REG_BUDGET {
+            continue;
+        }
+        for pipelined in [false, true] {
+            let registers = (r + usize::from(pipelined)) * q / V;
+            if registers > REG_BUDGET {
+                continue;
+            }
+            let cand = RegPlan { q, t, pipelined, registers };
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    (cand.registers, cand.pipelined as usize, cand.q)
+                        > (b.registers, b.pipelined as usize, b.q)
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+    }
+    best.expect("at least Q=V must fit: R too large for the register budget")
+}
+
+/// BWW plan (§3.4): the dG accumulators stay register-resident for the whole
+/// sweep, no cyclic renaming, no pipelining — just the largest `Q` with
+/// `T = R·Q/V ≤ budget`.
+pub fn plan_bww(k: usize, r: usize) -> RegPlan {
+    assert!(k % V == 0 && k > 0, "K must be a positive multiple of V");
+    let mut best: Option<RegPlan> = None;
+    for q in q_candidates(k) {
+        let t = r * q / V;
+        if t > REG_BUDGET {
+            continue;
+        }
+        let cand = RegPlan { q, t, pipelined: false, registers: t };
+        if best.map_or(true, |b| (cand.t, cand.q) > (b.t, b.q)) {
+            best = Some(cand);
+        }
+    }
+    best.expect("at least Q=V must fit: R too large for the register budget")
+}
+
+/// The row-sweep unroll factor: the cyclic renaming repeats every `R`
+/// iterations (`R+1` when pipelined) — §3.2.3.
+pub fn unroll_factor(plan: &RegPlan, r: usize) -> usize {
+    if plan.pipelined {
+        r + 1
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reproduces Table 3 of the paper: K = 256, V = 16.
+    #[test]
+    fn table3_k256() {
+        let p1 = plan_fwd(256, 1);
+        assert_eq!((p1.q, p1.t, p1.pipelined, p1.registers), (128, 8, true, 16));
+
+        let p3 = plan_fwd(256, 3);
+        assert_eq!((p3.q, p3.t, p3.pipelined, p3.registers), (128, 24, false, 24));
+
+        let p5 = plan_fwd(256, 5);
+        assert_eq!((p5.q, p5.t, p5.pipelined, p5.registers), (64, 20, true, 24));
+    }
+
+    #[test]
+    fn never_exceeds_budget() {
+        for k in [16, 64, 128, 256, 512, 1024, 2048] {
+            for r in [1, 3, 5, 7] {
+                let p = plan_fwd(k, r);
+                assert!(p.registers <= REG_BUDGET, "k={k} r={r} plan={p:?}");
+                assert!(p.t <= REG_BUDGET);
+                assert_eq!(k % p.q, 0);
+                assert_eq!(p.q % V, 0);
+                let b = plan_bww(k, r);
+                assert!(b.t <= REG_BUDGET);
+                assert!(!b.pipelined);
+            }
+        }
+    }
+
+    #[test]
+    fn small_k_uses_whole_k() {
+        // K=64, R=3: T = 3*64/16 = 12 ≤ 30 → Q = 64 (whole K);
+        // pipelined would use 4*4 = 16 regs, also legal, preferred at
+        // equal-or-better utilization.
+        let p = plan_fwd(64, 3);
+        assert_eq!(p.q, 64);
+        assert!(p.registers <= REG_BUDGET);
+        // vgg1_2-style observation of the paper (§5.1): C=K=64 gives only
+        // 12 skippable FMAs per check.
+        assert_eq!(plan_fwd(64, 3).t.min(12), 12);
+    }
+
+    #[test]
+    fn bww_plan_maximizes_t() {
+        // K=256, R=3 → T = 24 at Q=128 (48 at Q=256 exceeds 30).
+        let p = plan_bww(256, 3);
+        assert_eq!((p.q, p.t), (128, 24));
+        // 1x1: T = Q/V → Q can reach 480... but Q|K caps at 256, T=16.
+        let p = plan_bww(256, 1);
+        assert_eq!((p.q, p.t), (256, 16));
+    }
+
+    #[test]
+    fn unroll_factor_follows_pipelining() {
+        let p = plan_fwd(256, 3);
+        assert_eq!(unroll_factor(&p, 3), 3);
+        let p = plan_fwd(256, 5);
+        assert_eq!(unroll_factor(&p, 5), 6);
+    }
+}

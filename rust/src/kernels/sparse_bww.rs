@@ -1,0 +1,324 @@
+//! SparseTrain backward propagation by weights (Algorithms 4 + 5).
+//!
+//! BWW differs from FWD/BWI (§3.4):
+//! * the zero-check vectorizes along the **minibatch** dimension N (the dG
+//!   destination is minibatch-invariant, so all V lanes of a
+//!   `D[i:i+V, c, x, y]` vector update the *same* dG vectors — no register
+//!   spills). The input is therefore the N-tiled layout
+//!   [`BatchTiledTensor`];
+//! * each input vector is checked **once per row sweep** (Algorithm 5,
+//!   line 7); a nonzero lane then issues the full `T = R·Q/V` FMAs across
+//!   all filter taps touching that column;
+//! * the `T` dG accumulators are **register-resident for the whole row
+//!   sweep** — no cyclic renaming; previous partial results are loaded and
+//!   added once at the end of the sweep and stored right back;
+//! * either D or ∂L/∂Y can be the checked operand; the caller picks the
+//!   sparser one (§5.3 uses the higher average sparsity of the two).
+
+use super::regalloc::plan_bww;
+use super::{ConvConfig, KernelStats, SkipMode};
+use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use crate::V;
+
+/// Per-input-column taps: for column `ix`, the (r, ox) pairs with
+/// `ox·O + r − pad_w = ix`.
+pub(crate) fn bww_col_taps(cfg: &ConvConfig) -> Vec<Vec<(usize, usize)>> {
+    let ow = cfg.out_w();
+    (0..cfg.w)
+        .map(|ix| {
+            (0..cfg.r)
+                .filter_map(|r| {
+                    let t = ix as isize + cfg.pad_w as isize - r as isize;
+                    if t < 0 || t % cfg.stride_o as isize != 0 {
+                        return None;
+                    }
+                    let ox = (t / cfg.stride_o as isize) as usize;
+                    (ox < ow).then_some((r, ox))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// SparseTrain BWW: checks zeros in `d` (the N-tiled input). `dg` is
+/// accumulated into (zero it for a fresh gradient).
+pub fn bww(
+    cfg: &ConvConfig,
+    d: &BatchTiledTensor,
+    dy: &ActTensor,
+    dg: &mut FilterTensor,
+    mode: SkipMode,
+    stats: &mut KernelStats,
+) {
+    cfg.validate().expect("invalid conv config");
+    assert!(cfg.n % V == 0, "BWW requires batch size multiple of V (§5.4)");
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    debug_assert_eq!((d.n, d.c, d.h, d.w), (cfg.n, cfg.c, cfg.h, cfg.w));
+    debug_assert_eq!((dy.n, dy.c, dy.h, dy.w), (cfg.n, cfg.k, oh, ow));
+    debug_assert_eq!((dg.k, dg.c, dg.s, dg.r), (cfg.k, cfg.c, cfg.s, cfg.r));
+
+    let plan = plan_bww(cfg.k, cfg.r);
+    let kq_count = cfg.k / plan.q;
+    let taps = bww_col_taps(cfg);
+
+    for nb in 0..cfg.n / V {
+        for oy in 0..oh {
+            for s in 0..cfg.s {
+                let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+                if iy < 0 || iy >= cfg.h as isize {
+                    continue;
+                }
+                for qb in 0..kq_count {
+                    for c in 0..cfg.c {
+                        bww_sweep(
+                            cfg, d, dy, dg, nb, oy, iy as usize, s, qb, c, &taps, mode, stats,
+                        );
+                    }
+                }
+            }
+        }
+    }
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.r * plan.q * 4) as u64);
+}
+
+/// One BWW row sweep: fixed (minibatch tile, output row, s-tap, Q tile,
+/// input channel); accumulators cleared at entry, folded into dG at exit.
+/// Scans *input columns*, one zero-check each (Algorithm 5, line 7).
+#[allow(clippy::too_many_arguments)]
+pub fn bww_sweep(
+    cfg: &ConvConfig,
+    d: &BatchTiledTensor,
+    dy: &ActTensor,
+    dg: &mut FilterTensor,
+    nb: usize,
+    oy: usize,
+    iy: usize,
+    s: usize,
+    qb: usize,
+    c: usize,
+    taps: &[Vec<(usize, usize)>],
+    mode: SkipMode,
+    stats: &mut KernelStats,
+) {
+    let plan = plan_bww(cfg.k, cfg.r);
+    let qv = plan.q / V;
+
+    // Register-resident accumulators: R × Q/V vectors, cleared at entry.
+    let mut acc = vec![0.0f32; cfg.r * qv * V];
+    stats.sweeps += 1;
+
+    for ix in 0..cfg.w {
+        let tap = &taps[ix];
+        if tap.is_empty() {
+            continue;
+        }
+        let dvec = d.vec(nb, c, iy, ix);
+        stats.loads_in += 1;
+        let mut mask: u32 = 0;
+        for (l, &v) in dvec.iter().enumerate() {
+            if v != 0.0 {
+                mask |= 1 << l;
+            }
+        }
+        let nonzeros = mask.count_ones() as usize;
+        stats.record_check(nonzeros);
+        let t_here = (tap.len() * qv) as u64;
+        stats.fma_vec += nonzeros as u64 * t_here;
+        stats.fma_vec_skipped += (V - nonzeros) as u64 * t_here;
+        // the ∂L/∂Y operand comes from memory and is skipped along with the
+        // FMA (§5.2's BWW high-sparsity advantage)
+
+        match mode {
+            SkipMode::Dense => {
+                for nv in 0..V {
+                    fma_lane(dy, &mut acc, dvec[nv], nb * V + nv, qb, qv, oy, tap);
+                }
+                stats.fma_vec += (V - nonzeros) as u64 * t_here;
+                stats.fma_vec_skipped -= (V - nonzeros) as u64 * t_here;
+            }
+            SkipMode::PerLaneBranch => {
+                for nv in 0..V {
+                    if mask & (1 << nv) != 0 {
+                        fma_lane(dy, &mut acc, dvec[nv], nb * V + nv, qb, qv, oy, tap);
+                    }
+                }
+                stats.int_ops += V as u64;
+            }
+            SkipMode::MaskLoop => {
+                let mut m = mask;
+                while m != 0 {
+                    let nv = m.trailing_zeros() as usize;
+                    fma_lane(dy, &mut acc, dvec[nv], nb * V + nv, qb, qv, oy, tap);
+                    m &= m - 1;
+                }
+                stats.int_ops += 2 + 8 * nonzeros as u64;
+            }
+        }
+    }
+
+    // Fold into dG: load previous partials, add, store back (§3.4 —
+    // filter-gradient elements touched only twice, at sweep end).
+    for r in 0..cfg.r {
+        for j in 0..qv {
+            let kb = qb * qv + j;
+            let a = &acc[(r * qv + j) * V..(r * qv + j) * V + V];
+            let gv = dg.vec_mut(kb, c / V, s, r, c % V);
+            for l in 0..V {
+                gv[l] += a[l];
+            }
+        }
+    }
+    stats.loads_out += (cfg.r * qv) as u64;
+    stats.stores_out += (cfg.r * qv) as u64;
+}
+
+/// All FMAs for one nonzero input lane `i`: broadcast D element × the
+/// ∂L/∂Y K-vectors (memory operands) for every tap touching this column.
+#[inline(always)]
+fn fma_lane(
+    dy: &ActTensor,
+    acc: &mut [f32],
+    dval: f32,
+    i: usize,
+    qb: usize,
+    qv: usize,
+    oy: usize,
+    taps: &[(usize, usize)],
+) {
+    // Strength-reduced ∂L/∂Y indexing: for fixed (i, oy) the offset is
+    // kb·kb_stride + ox·V + base (see sparse_fwd::fma_lane).
+    let dyd = dy.data();
+    let kb_stride = dy.h * dy.w * V;
+    let row_base = (i * dy.c_blocks() * dy.h + oy) * dy.w * V;
+    for &(r, ox) in taps {
+        for j in 0..qv {
+            let kb = qb * qv + j;
+            let o = row_base + kb * kb_stride + ox * V;
+            let dyvec = &dyd[o..o + V];
+            let a = &mut acc[(r * qv + j) * V..(r * qv + j) * V + V];
+            for l in 0..V {
+                a[l] += dval * dyvec[l];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::tensor::allclose;
+    use crate::util::prng::Xorshift;
+
+    fn setup(
+        cfg: &ConvConfig,
+        d_sparsity: f64,
+        seed: u64,
+    ) -> (ActTensor, BatchTiledTensor, ActTensor) {
+        let mut rng = Xorshift::new(seed);
+        let mut dsrc = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        dsrc.fill_relu_sparse(&mut rng, d_sparsity);
+        let d = BatchTiledTensor::from_act(&dsrc);
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_uniform(&mut rng, -1.0, 1.0);
+        (dsrc, d, dy)
+    }
+
+    fn run_and_check(cfg: &ConvConfig, sparsity: f64, mode: SkipMode) -> KernelStats {
+        let (dsrc, d, dy) = setup(cfg, sparsity, 404);
+        let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let mut st = KernelStats::new();
+        bww(cfg, &d, &dy, &mut dg, mode, &mut st);
+        let dgref = reference::conv_bww(cfg, &dsrc.to_nchw(), &dy.to_nchw());
+        assert!(allclose(&dg.to_kcsr(), &dgref, 1e-3, 1e-4), "mode={mode:?}");
+        st
+    }
+
+    #[test]
+    fn matches_reference_all_modes() {
+        let cfg = ConvConfig::square(16, 32, 32, 6, 3, 1);
+        for mode in [SkipMode::Dense, SkipMode::PerLaneBranch, SkipMode::MaskLoop] {
+            run_and_check(&cfg, 0.5, mode);
+        }
+    }
+
+    #[test]
+    fn matches_reference_strided() {
+        let cfg = ConvConfig::square(16, 32, 32, 8, 3, 2);
+        run_and_check(&cfg, 0.5, SkipMode::MaskLoop);
+    }
+
+    #[test]
+    fn matches_reference_1x1() {
+        let cfg = ConvConfig::square(16, 32, 64, 5, 1, 1);
+        run_and_check(&cfg, 0.6, SkipMode::MaskLoop);
+    }
+
+    #[test]
+    fn skip_fraction_tracks_sparsity() {
+        let cfg = ConvConfig::square(16, 32, 64, 8, 3, 1);
+        for target in [0.3, 0.8] {
+            let st = run_and_check(&cfg, target, SkipMode::MaskLoop);
+            assert!(
+                (st.skip_fraction() - target).abs() < 0.05,
+                "target={target} got={}",
+                st.skip_fraction()
+            );
+        }
+    }
+
+    #[test]
+    fn one_check_per_input_column() {
+        // Algorithm 5: the mask is computed once per input vector per
+        // sweep — not once per filter tap.
+        let cfg = ConvConfig::square(16, 16, 16, 6, 3, 1);
+        let st = run_and_check(&cfg, 0.5, SkipMode::MaskLoop);
+        // every input column has ≥1 tap for 3x3 pad-1 s1, so checks ==
+        // sweeps × W
+        assert_eq!(st.zero_checks, st.sweeps * cfg.w as u64);
+    }
+
+    #[test]
+    fn accumulates_into_existing_dg() {
+        // Two half-batches accumulated == one full batch (gradient
+        // accumulation invariant the trainer relies on).
+        let cfg_full = ConvConfig::square(32, 16, 16, 5, 3, 1);
+        let cfg_half = ConvConfig::square(16, 16, 16, 5, 3, 1);
+        let (dsrc, d, dy) = setup(&cfg_full, 0.5, 15);
+        let mut dg_full = FilterTensor::zeros(16, 16, 3, 3);
+        let mut st = KernelStats::new();
+        bww(&cfg_full, &d, &dy, &mut dg_full, SkipMode::MaskLoop, &mut st);
+
+        let nchw = dsrc.to_nchw();
+        let dy_nchw = dy.to_nchw();
+        let img = 16 * 5 * 5;
+        let mut dg_acc = FilterTensor::zeros(16, 16, 3, 3);
+        for half in 0..2 {
+            let d_half =
+                ActTensor::from_nchw(16, 16, 5, 5, &nchw[half * 16 * img..(half + 1) * 16 * img]);
+            let dy_half =
+                ActTensor::from_nchw(16, 16, 5, 5, &dy_nchw[half * 16 * img..(half + 1) * 16 * img]);
+            let mut st2 = KernelStats::new();
+            bww(
+                &cfg_half,
+                &BatchTiledTensor::from_act(&d_half),
+                &dy_half,
+                &mut dg_acc,
+                SkipMode::MaskLoop,
+                &mut st2,
+            );
+        }
+        assert!(allclose(dg_full.data(), dg_acc.data(), 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn dg_touched_twice_per_sweep_only() {
+        // loads_out == stores_out == R·Q/V per sweep
+        let cfg = ConvConfig::square(16, 16, 256, 6, 3, 1);
+        let st = run_and_check(&cfg, 0.5, SkipMode::MaskLoop);
+        let plan = plan_bww(cfg.k, cfg.r);
+        assert_eq!(st.loads_out, st.sweeps * (cfg.r * plan.q / V) as u64);
+        assert_eq!(st.stores_out, st.loads_out);
+    }
+}

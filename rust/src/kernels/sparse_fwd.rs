@@ -1,0 +1,363 @@
+//! SparseTrain forward propagation (Algorithms 2 + 3 of the paper).
+//!
+//! Structure per §3.2:
+//! * **output parallelism** at output-row × K-tile granularity (§3.2.2):
+//!   the loop nest here is the per-task body; the coordinator parallelizes
+//!   over `(i, oy, qb)` tasks;
+//! * **vectorized zero-checking** along the input-channel dimension: one
+//!   vector compare per input V-vector produces a lane mask (§3.2.1);
+//! * **mask-loop skipping** (Algorithm 3): popcount + trailing-zero-count
+//!   iteration over set lanes, instead of one branch per lane (§3.2.4);
+//! * **register-budget tiling**: output channels tiled by `Q` from
+//!   [`regalloc::plan_fwd`] so `T = R·Q/V` accumulators stay in registers
+//!   (§3.2.3); the row-sweep accumulator here is a stack buffer the
+//!   compiler keeps in vector registers / L1.
+//!
+//! The kernel is *functional* (bit-exact against the dense direct kernel —
+//! skipping only elides multiplications by exact zeros) and *accounted*
+//! (issued vs skipped FMAs, mask statistics for the mispredict model).
+
+use super::direct::SweepGeom;
+use super::regalloc::plan_fwd;
+use super::{ConvConfig, KernelStats, SkipMode};
+use crate::tensor::{ActTensor, FilterTensor};
+use crate::V;
+
+/// SparseTrain FWD over the tiled layouts. `y` must be zero-initialized.
+pub fn fwd(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    y: &mut ActTensor,
+    mode: SkipMode,
+    stats: &mut KernelStats,
+) {
+    cfg.validate().expect("invalid conv config");
+    debug_assert_eq!((d.n, d.c, d.h, d.w), (cfg.n, cfg.c, cfg.h, cfg.w));
+    debug_assert_eq!((g.k, g.c, g.s, g.r), (cfg.k, cfg.c, cfg.s, cfg.r));
+    debug_assert_eq!((y.n, y.c, y.h, y.w), (cfg.n, cfg.k, cfg.out_h(), cfg.out_w()));
+
+    let plan = plan_fwd(cfg.k, cfg.r);
+    let geom = SweepGeom::fwd(cfg);
+    let oh = cfg.out_h();
+    let kq_count = cfg.k / plan.q;
+
+    for i in 0..cfg.n {
+        for oy in 0..oh {
+            for qb in 0..kq_count {
+                fwd_task(cfg, d, g, y, i, oy, qb, mode, stats);
+            }
+        }
+    }
+    let _ = &geom;
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.s * cfg.r * plan.q * V * 4) as u64);
+}
+
+/// The per-task body (one output row × one Q tile of output channels for
+/// one image): exactly the work unit the coordinator schedules (§3.2.2).
+pub fn fwd_task(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    y: &mut ActTensor,
+    i: usize,
+    oy: usize,
+    qb: usize,
+    mode: SkipMode,
+    stats: &mut KernelStats,
+) {
+    let plan = plan_fwd(cfg.k, cfg.r);
+    let qv = plan.q / V;
+    let geom = SweepGeom::fwd(cfg);
+    let cb_count = cfg.c / V;
+    let ow = cfg.out_w();
+
+    // Row-sweep accumulator: qv output vectors × ow columns. The paper keeps
+    // T = R·Q/V of these in zmm registers with cyclic renaming; a stack
+    // buffer of the live row gives the compiler the same freedom while
+    // staying functional for any W.
+    let mut acc = vec![0.0f32; ow * qv * V];
+
+    for j in 0..qv {
+        let kb = qb * qv + j;
+        // load existing output row (zero on entry, but the sweep protocol
+        // loads/stores once per row sweep — accounted below)
+        let yrow = y.row(i, kb, oy);
+        acc[j * ow * V..(j + 1) * ow * V].copy_from_slice(yrow);
+    }
+
+    for s in 0..cfg.s {
+        let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+        if iy < 0 || iy >= cfg.h as isize {
+            continue;
+        }
+        let iy = iy as usize;
+        for cb in 0..cb_count {
+            sweep_row(
+                cfg, d, g, &mut acc, i, iy, s, qb, qv, cb, ow, mode, &geom, stats,
+            );
+        }
+    }
+
+    for j in 0..qv {
+        let kb = qb * qv + j;
+        let yrow = y.row_mut(i, kb, oy);
+        yrow.copy_from_slice(&acc[j * ow * V..(j + 1) * ow * V]);
+    }
+    // Output row loaded once and stored once per task (cyclic renaming keeps
+    // intermediate values in registers — §3.2.3).
+    stats.loads_out += (ow * qv) as u64;
+    stats.stores_out += (ow * qv) as u64;
+}
+
+/// One row sweep: scan input row `iy` of channel tile `cb`, skip zero lanes,
+/// scatter into the row accumulator.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn sweep_row(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    acc: &mut [f32],
+    i: usize,
+    iy: usize,
+    s: usize,
+    qb: usize,
+    qv: usize,
+    cb: usize,
+    ow: usize,
+    mode: SkipMode,
+    geom: &SweepGeom,
+    stats: &mut KernelStats,
+) {
+    stats.sweeps += 1;
+    stats.loads_in += cfg.w as u64;
+
+    for x in 0..cfg.w {
+        let dvec = d.vec(i, cb, iy, x);
+        let taps = &geom.taps[x];
+        if taps.is_empty() {
+            continue;
+        }
+        // Vectorized zero check (vcmpps → mask).
+        let mut mask: u32 = 0;
+        for (l, &v) in dvec.iter().enumerate() {
+            if v != 0.0 {
+                mask |= 1 << l;
+            }
+        }
+        let nonzeros = mask.count_ones() as usize;
+        stats.record_check(nonzeros);
+
+        let t_here = (taps.len() * qv) as u64; // skippable FMAs per lane here
+        stats.fma_vec_skipped += (V - nonzeros) as u64 * t_here;
+        stats.fma_vec += nonzeros as u64 * t_here;
+
+        match mode {
+            SkipMode::Dense => {
+                // process every lane unconditionally (zeros multiply through)
+                for cv in 0..V {
+                    fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow);
+                }
+                // dense mode issues all FMAs: move the skipped count back
+                stats.fma_vec += (V - nonzeros) as u64 * t_here;
+                stats.fma_vec_skipped -= (V - nonzeros) as u64 * t_here;
+            }
+            SkipMode::PerLaneBranch => {
+                // Algorithm 2: test each lane (a branch per lane).
+                for cv in 0..V {
+                    if mask & (1 << cv) != 0 {
+                        fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow);
+                    }
+                }
+                stats.int_ops += V as u64; // one test per lane
+            }
+            SkipMode::MaskLoop => {
+                // Algorithm 3: popcount + tzcnt loop; ~8 cheap integer ops
+                // per set lane (pointer bumps, shifts, lea) per the paper.
+                let mut m = mask;
+                while m != 0 {
+                    let cv = m.trailing_zeros() as usize;
+                    fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow);
+                    m &= m - 1;
+                }
+                stats.int_ops += 2 + 8 * nonzeros as u64;
+            }
+        }
+    }
+}
+
+/// All FMAs for one nonzero input lane: `taps.len() × qv` vector FMAs, the
+/// filter operand straight from (modeled) memory.
+///
+/// Perf note (§Perf log): the filter offset is strength-reduced — for a
+/// fixed (cb, s, cv) the offset is `kb·kb_stride + r·V² + base`, so the
+/// inner loops use two adds instead of re-deriving the 5-term polynomial
+/// per FMA group (the JIT kernels' lea/shift scheduling, §3.2.4).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn fma_lane(
+    g: &FilterTensor,
+    acc: &mut [f32],
+    dval: f32,
+    qb: usize,
+    qv: usize,
+    cb: usize,
+    s: usize,
+    cv: usize,
+    taps: &[(usize, usize)],
+    ow: usize,
+) {
+    let gdata = g.data();
+    let kb_stride = g.c_blocks() * g.s * g.r * V * V;
+    let lane_base = ((cb * g.s + s) * g.r) * V * V + cv * V;
+    for j in 0..qv {
+        let kb = qb * qv + j;
+        let kb_base = kb * kb_stride + lane_base;
+        let base = j * ow * V;
+        for &(r, xo) in taps {
+            let go = kb_base + r * V * V;
+            let gvec = &gdata[go..go + V];
+            let a = &mut acc[base + xo * V..base + xo * V + V];
+            for l in 0..V {
+                a[l] += dval * gvec[l];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{direct, reference};
+    use super::*;
+    use crate::tensor::allclose;
+    use crate::util::prng::Xorshift;
+
+    fn sparse_setup(cfg: &ConvConfig, sparsity: f64, seed: u64) -> (ActTensor, FilterTensor) {
+        let mut rng = Xorshift::new(seed);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, sparsity);
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+        (d, g)
+    }
+
+    fn run_and_check(cfg: &ConvConfig, sparsity: f64, mode: SkipMode) -> KernelStats {
+        let (d, g) = sparse_setup(cfg, sparsity, 101);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        fwd(cfg, &d, &g, &mut y, mode, &mut st);
+        let yref = reference::conv_fwd(cfg, &d.to_nchw(), &g.to_kcsr());
+        assert!(allclose(&y.to_nchw(), &yref, 1e-4, 1e-5), "mode={mode:?}");
+        st
+    }
+
+    #[test]
+    fn matches_reference_all_modes_3x3() {
+        let cfg = ConvConfig::square(2, 32, 32, 8, 3, 1);
+        for mode in [SkipMode::Dense, SkipMode::PerLaneBranch, SkipMode::MaskLoop] {
+            run_and_check(&cfg, 0.6, mode);
+        }
+    }
+
+    #[test]
+    fn matches_reference_strided() {
+        let cfg = ConvConfig::square(2, 32, 32, 9, 3, 2);
+        run_and_check(&cfg, 0.5, SkipMode::MaskLoop);
+    }
+
+    #[test]
+    fn matches_reference_1x1() {
+        let cfg = ConvConfig::square(2, 64, 32, 7, 1, 1);
+        run_and_check(&cfg, 0.5, SkipMode::MaskLoop);
+    }
+
+    #[test]
+    fn matches_reference_5x5() {
+        let cfg = ConvConfig::square(1, 32, 32, 9, 5, 1);
+        run_and_check(&cfg, 0.4, SkipMode::MaskLoop);
+    }
+
+    #[test]
+    fn matches_dense_direct_bitexact_on_dense_input() {
+        // On a zero-free input the sparse kernel performs exactly the same
+        // FMAs in the same order as the dense kernel → bit-exact equality.
+        let cfg = ConvConfig::square(1, 32, 32, 6, 3, 1);
+        let (d, g) = sparse_setup(&cfg, 0.0, 5);
+        let mut y1 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut y2 = y1.clone();
+        let mut s1 = KernelStats::new();
+        let mut s2 = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut y1, SkipMode::MaskLoop, &mut s1);
+        direct::fwd(&cfg, &d, &g, &mut y2, &mut s2);
+        assert_eq!(y1.data(), y2.data());
+        // and issues the same number of FMAs
+        assert_eq!(s1.fma_vec, s2.fma_vec);
+        assert_eq!(s1.fma_vec_skipped, 0);
+    }
+
+    #[test]
+    fn skip_fraction_tracks_sparsity() {
+        let cfg = ConvConfig::square(2, 64, 64, 10, 3, 1);
+        for target in [0.2, 0.5, 0.8] {
+            let st = run_and_check(&cfg, target, SkipMode::MaskLoop);
+            assert!(
+                (st.skip_fraction() - target).abs() < 0.05,
+                "target={target} skipped={}",
+                st.skip_fraction()
+            );
+        }
+    }
+
+    #[test]
+    fn zero_input_skips_everything() {
+        let cfg = ConvConfig::square(1, 32, 32, 6, 3, 1);
+        let (mut d, g) = sparse_setup(&cfg, 0.0, 7);
+        d.fill_zero();
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop, &mut st);
+        assert_eq!(st.fma_vec, 0);
+        assert!(st.fma_vec_skipped > 0);
+        assert!(y.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mask_and_branch_modes_identical_results() {
+        let cfg = ConvConfig::square(1, 32, 48, 7, 3, 1);
+        let (d, g) = sparse_setup(&cfg, 0.55, 31);
+        let mut ya = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut yb = ya.clone();
+        let mut sa = KernelStats::new();
+        let mut sb = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut ya, SkipMode::MaskLoop, &mut sa);
+        fwd(&cfg, &d, &g, &mut yb, SkipMode::PerLaneBranch, &mut sb);
+        assert_eq!(ya.data(), yb.data());
+        assert_eq!(sa.fma_vec, sb.fma_vec);
+        // mask loop executes fewer overhead ops at high sparsity
+        assert_eq!(sa.zero_checks, sb.zero_checks);
+    }
+
+    #[test]
+    fn task_decomposition_equals_whole() {
+        // Running the per-task body over all (i, oy, qb) must equal fwd().
+        let cfg = ConvConfig::square(2, 32, 64, 6, 3, 1);
+        let (d, g) = sparse_setup(&cfg, 0.5, 77);
+        let plan = super::plan_fwd(cfg.k, cfg.r);
+        let mut y1 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut y1, SkipMode::MaskLoop, &mut st);
+        let mut y2 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st2 = KernelStats::new();
+        for i in 0..cfg.n {
+            for oy in 0..cfg.out_h() {
+                for qb in 0..cfg.k / plan.q {
+                    fwd_task(&cfg, &d, &g, &mut y2, i, oy, qb, SkipMode::MaskLoop, &mut st2);
+                }
+            }
+        }
+        assert_eq!(y1.data(), y2.data());
+        assert_eq!(st.fma_vec, st2.fma_vec);
+    }
+}

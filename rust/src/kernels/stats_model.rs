@@ -1,0 +1,627 @@
+//! Fast accounting-only runs: produce the exact [`KernelStats`] a
+//! functional kernel run would produce, in O(input-size) time instead of
+//! O(FLOPs).
+//!
+//! The paper's evaluation layers at batch 16 reach 10¹⁰–10¹¹ MACs; the
+//! functional Rust kernels are for correctness and host-mode micro-
+//! benchmarks on scaled-down configs, while the figure/table harnesses run
+//! these accounting models over *full-size* inputs (the zero pattern is
+//! still read element-by-element — sparsity statistics are exact) and feed
+//! the Skylake-X model in [`crate::sim`].
+//!
+//! Consistency between the two paths is enforced by tests that run both on
+//! small configurations and require identical counters.
+
+use super::direct::SweepGeom;
+use super::regalloc::{plan_bww, plan_fwd};
+use super::{ConvConfig, KernelStats, SkipMode};
+use crate::tensor::{ActTensor, BatchTiledTensor};
+use crate::V;
+
+/// Count, for every input row index, how many (oy, s) sweep pairs read it.
+fn row_uses(cfg: &ConvConfig) -> Vec<u64> {
+    let mut uses = vec![0u64; cfg.h];
+    for oy in 0..cfg.out_h() {
+        for s in 0..cfg.s {
+            let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+            if iy >= 0 && iy < cfg.h as isize {
+                uses[iy as usize] += 1;
+            }
+        }
+    }
+    uses
+}
+
+/// Per-lane-nonzero counts of a V-vector.
+#[inline(always)]
+fn popcount(vec: &[f32]) -> usize {
+    vec.iter().filter(|&&v| v != 0.0).count()
+}
+
+fn int_ops_for(mode: SkipMode, nonzeros: usize) -> u64 {
+    match mode {
+        SkipMode::Dense => 0,
+        SkipMode::PerLaneBranch => V as u64,
+        SkipMode::MaskLoop => 2 + 8 * nonzeros as u64,
+    }
+}
+
+/// Accounting model of [`super::sparse_fwd::fwd`].
+pub fn sparse_fwd_stats(cfg: &ConvConfig, d: &ActTensor, mode: SkipMode) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_fwd(cfg.k, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let kq_count = (cfg.k / plan.q) as u64;
+    let geom = SweepGeom::fwd(cfg);
+    let taps_len: Vec<u64> = geom.taps.iter().map(|t| t.len() as u64).collect();
+    let uses = row_uses(cfg);
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+
+    for i in 0..cfg.n {
+        for cb in 0..cfg.c / V {
+            for iy in 0..cfg.h {
+                let u = uses[iy] * kq_count;
+                if u == 0 {
+                    continue;
+                }
+                st.sweeps += u;
+                st.loads_in += u * cfg.w as u64;
+                for x in 0..cfg.w {
+                    if taps_len[x] == 0 {
+                        continue;
+                    }
+                    let nz = popcount(d.vec(i, cb, iy, x));
+                    st.zero_checks += u;
+                    st.popcount_hist[nz] += u;
+                    let t_here = taps_len[x] * qv;
+                    match mode {
+                        SkipMode::Dense => st.fma_vec += (V as u64) * t_here * u,
+                        _ => {
+                            st.fma_vec += nz as u64 * t_here * u;
+                            st.fma_vec_skipped += (V - nz) as u64 * t_here * u;
+                        }
+                    }
+                    st.int_ops += int_ops_for(mode, nz) * u;
+                }
+            }
+        }
+    }
+    let tasks = (cfg.n * oh) as u64 * kq_count;
+    st.loads_out += tasks * (ow as u64) * qv;
+    st.stores_out += tasks * (ow as u64) * qv;
+    st.filter_bytes_per_sweep = (cfg.s * cfg.r * plan.q * V * 4) as u64;
+    st
+}
+
+/// Accounting model of the dense [`super::direct::fwd`] baseline.
+pub fn direct_fwd_stats(cfg: &ConvConfig) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_fwd(cfg.k, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let kq_count = (cfg.k / plan.q) as u64;
+    let geom = SweepGeom::fwd(cfg);
+    let taps_total = geom.total_taps() as u64;
+    let uses = row_uses(cfg);
+    let sweeps: u64 =
+        uses.iter().sum::<u64>() * (cfg.n as u64) * (cfg.c as u64 / V as u64) * kq_count;
+    // FMA count: valid (oy,s,x,tap) combinations; per input row the taps
+    // sum is geometry-only.
+    let mut fma = 0u64;
+    for iy in 0..cfg.h {
+        fma += uses[iy] * taps_total;
+    }
+    st.fma_vec = fma * (cfg.n as u64) * (cfg.c as u64) * kq_count * qv;
+    st.sweeps = sweeps;
+    st.loads_in = sweeps * cfg.w as u64;
+    let tasks = (cfg.n * cfg.out_h()) as u64 * kq_count;
+    st.loads_out = tasks * cfg.out_w() as u64 * qv;
+    st.stores_out = st.loads_out;
+    st.filter_bytes_per_sweep = (cfg.r * plan.q * V * 4) as u64;
+    st
+}
+
+/// Accounting model of [`super::sparse_bwi::bwi`] (scans ∂L/∂Y).
+pub fn sparse_bwi_stats(cfg: &ConvConfig, dy: &ActTensor, mode: SkipMode) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_fwd(cfg.c, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let cq_count = (cfg.c / plan.q) as u64;
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+
+    // How many (y, s) pairs sweep each output row oy.
+    let mut oy_uses = vec![0u64; oh];
+    for y in 0..cfg.h {
+        for s in 0..cfg.s {
+            let t = y as isize + cfg.pad_h as isize - s as isize;
+            if t >= 0 && t % cfg.stride_p as isize == 0 {
+                let oy = (t / cfg.stride_p as isize) as usize;
+                if oy < oh {
+                    oy_uses[oy] += 1;
+                }
+            }
+        }
+    }
+    // Column taps are s-independent: ox → valid r count.
+    let taps_len: Vec<u64> = (0..ow)
+        .map(|ox| {
+            (0..cfg.r)
+                .filter(|&r| {
+                    let x =
+                        ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize;
+                    x >= 0 && x < cfg.w as isize
+                })
+                .count() as u64
+        })
+        .collect();
+
+    for i in 0..cfg.n {
+        for kb in 0..cfg.k / V {
+            for oy in 0..oh {
+                let u = oy_uses[oy] * cq_count;
+                if u == 0 {
+                    continue;
+                }
+                st.sweeps += u;
+                st.loads_in += u * ow as u64;
+                for ox in 0..ow {
+                    if taps_len[ox] == 0 {
+                        continue;
+                    }
+                    let nz = popcount(dy.vec(i, kb, oy, ox));
+                    st.zero_checks += u;
+                    st.popcount_hist[nz] += u;
+                    let t_here = taps_len[ox] * qv;
+                    match mode {
+                        SkipMode::Dense => st.fma_vec += (V as u64) * t_here * u,
+                        _ => {
+                            st.fma_vec += nz as u64 * t_here * u;
+                            st.fma_vec_skipped += (V - nz) as u64 * t_here * u;
+                        }
+                    }
+                    st.int_ops += int_ops_for(mode, nz) * u;
+                }
+            }
+        }
+    }
+    let tasks = (cfg.n * cfg.h) as u64 * cq_count;
+    st.loads_out += tasks * cfg.w as u64 * qv;
+    st.stores_out += tasks * cfg.w as u64 * qv;
+    st.filter_bytes_per_sweep = (cfg.s * cfg.r * plan.q * V * 4) as u64;
+    st
+}
+
+/// Accounting model of the dense direct BWI baseline.
+pub fn direct_bwi_stats(cfg: &ConvConfig) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_fwd(cfg.c, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let cq_count = (cfg.c / plan.q) as u64;
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    let mut valid_rows = 0u64;
+    for oy in 0..oh {
+        for s in 0..cfg.s {
+            let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+            if iy >= 0 && iy < cfg.h as isize {
+                valid_rows += 1;
+            }
+        }
+    }
+    let mut taps_total = 0u64;
+    for ox in 0..ow {
+        for r in 0..cfg.r {
+            let ix = ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize;
+            if ix >= 0 && ix < cfg.w as isize {
+                taps_total += 1;
+            }
+        }
+    }
+    let sweeps = (cfg.n as u64) * valid_rows * cq_count * (cfg.k as u64 / V as u64);
+    st.sweeps = sweeps;
+    st.loads_in = sweeps * ow as u64;
+    st.fma_vec = sweeps * taps_total * V as u64 * qv;
+    st.loads_out = (cfg.n * cfg.h) as u64 * cq_count * cfg.w as u64 * qv;
+    st.stores_out = st.loads_out;
+    st.filter_bytes_per_sweep = (cfg.r * plan.q * V * 4) as u64;
+    st
+}
+
+/// Accounting model of [`super::sparse_bww::bww`] (scans D, N-vectorized;
+/// one check per input column per sweep — Algorithm 5, line 7).
+pub fn sparse_bww_stats(cfg: &ConvConfig, d: &BatchTiledTensor, mode: SkipMode) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_bww(cfg.k, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let kq_count = (cfg.k / plan.q) as u64;
+
+    let uses = row_uses(cfg); // (oy, s) pairs reading each input row
+    // taps per input column: number of (ox, r) pairs hitting ix
+    let taps = super::sparse_bww::bww_col_taps(cfg);
+    let taps_len: Vec<u64> = taps.iter().map(|t| t.len() as u64).collect();
+
+    for nb in 0..cfg.n / V {
+        for c in 0..cfg.c {
+            for iy in 0..cfg.h {
+                let u = uses[iy] * kq_count;
+                if u == 0 {
+                    continue;
+                }
+                st.sweeps += u; // sweeps at (nb, oy, s, qb, c) granularity
+                for ix in 0..cfg.w {
+                    if taps_len[ix] == 0 {
+                        continue;
+                    }
+                    let nz = popcount(d.vec(nb, c, iy, ix));
+                    st.zero_checks += u;
+                    st.popcount_hist[nz] += u;
+                    st.loads_in += u;
+                    let t_here = taps_len[ix] * qv;
+                    match mode {
+                        SkipMode::Dense => st.fma_vec += (V as u64) * t_here * u,
+                        _ => {
+                            st.fma_vec += nz as u64 * t_here * u;
+                            st.fma_vec_skipped += (V - nz) as u64 * t_here * u;
+                        }
+                    }
+                    st.int_ops += int_ops_for(mode, nz) * u;
+                }
+            }
+        }
+    }
+    st.loads_out = st.sweeps * (cfg.r as u64) * qv;
+    st.stores_out = st.loads_out;
+    st.filter_bytes_per_sweep = (cfg.r * plan.q * 4) as u64;
+    st
+}
+
+/// Accounting model of the dense direct BWW baseline.
+pub fn direct_bww_stats(cfg: &ConvConfig) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_bww(cfg.k, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let kq_count = (cfg.k / plan.q) as u64;
+    let ow = cfg.out_w();
+    let uses = row_uses(cfg);
+    let sweeps: u64 =
+        uses.iter().sum::<u64>() * (cfg.n as u64 / V as u64) * kq_count * cfg.c as u64;
+    let mut taps_total = 0u64;
+    for ox in 0..ow {
+        for r in 0..cfg.r {
+            let ix = ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize;
+            if ix >= 0 && ix < cfg.w as isize {
+                taps_total += 1;
+            }
+        }
+    }
+    st.sweeps = sweeps;
+    st.fma_vec = sweeps * taps_total * V as u64 * qv;
+    st.loads_in = sweeps * taps_total;
+    st.loads_out = sweeps * cfg.r as u64 * qv;
+    st.stores_out = st.loads_out;
+    st.filter_bytes_per_sweep = (cfg.r * plan.q * 4) as u64;
+    st
+}
+
+// ---------------------------------------------------------------------------
+// Expected-value (i.i.d.) variants: identical accounting in expectation for
+// Bernoulli zero patterns, O(geometry) instead of O(input) — used by the
+// selector and the Fig-4/Table-6 projections where patterns are synthetic
+// anyway. Scanned variants above remain the path for *real* profiled
+// patterns (the end-to-end trainer).
+// ---------------------------------------------------------------------------
+
+/// Binomial(V, 1−s) pmf scaled to `total` checks (rounded to counts).
+fn binom_hist(total: u64, sparsity: f64) -> Vec<u64> {
+    let p = (1.0 - sparsity).clamp(0.0, 1.0);
+    let mut hist = vec![0u64; V + 1];
+    if total == 0 {
+        return hist;
+    }
+    // pmf via log to stay stable at the tails
+    for (k, h) in hist.iter_mut().enumerate() {
+        let mut logc = 0.0f64;
+        for i in 0..k {
+            logc += ((V - i) as f64 / (i + 1) as f64).ln();
+        }
+        let logp = if p <= 0.0 {
+            if k == 0 {
+                0.0
+            } else {
+                f64::NEG_INFINITY
+            }
+        } else if p >= 1.0 {
+            if k == V {
+                0.0
+            } else {
+                f64::NEG_INFINITY
+            }
+        } else {
+            logc + k as f64 * p.ln() + (V - k) as f64 * (1.0 - p).ln()
+        };
+        *h = (logp.exp() * total as f64).round() as u64;
+    }
+    hist
+}
+
+/// Shared i.i.d. expectation fill: given per-check structure, scale by the
+/// expected nonzero lanes `E[nz] = V·(1−s)`.
+fn fill_iid(
+    st: &mut KernelStats,
+    total_checks: u64,
+    weighted_taps_qv: f64, // Σ over checks of taps·qv (FMA groups per lane)
+    sparsity: f64,
+    mode: SkipMode,
+) {
+    let e_nz = V as f64 * (1.0 - sparsity);
+    st.zero_checks = total_checks;
+    st.popcount_hist = binom_hist(total_checks, sparsity);
+    match mode {
+        SkipMode::Dense => {
+            st.fma_vec = (V as f64 * weighted_taps_qv).round() as u64;
+            st.fma_vec_skipped = 0;
+        }
+        _ => {
+            st.fma_vec = (e_nz * weighted_taps_qv).round() as u64;
+            st.fma_vec_skipped = ((V as f64 - e_nz) * weighted_taps_qv).round() as u64;
+        }
+    }
+    st.int_ops = match mode {
+        SkipMode::Dense => 0,
+        SkipMode::PerLaneBranch => total_checks * V as u64,
+        SkipMode::MaskLoop => ((2.0 + 8.0 * e_nz) * total_checks as f64).round() as u64,
+    };
+}
+
+/// Expected SparseTrain FWD stats over an i.i.d. pattern of `sparsity`.
+pub fn sparse_fwd_stats_iid(cfg: &ConvConfig, sparsity: f64, mode: SkipMode) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_fwd(cfg.k, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let kq_count = (cfg.k / plan.q) as u64;
+    let geom = SweepGeom::fwd(cfg);
+    let uses = row_uses(cfg);
+    let reps = (cfg.n as u64) * (cfg.c as u64 / V as u64); // images × c-tiles
+    let uses_total: u64 = uses.iter().sum::<u64>() * kq_count;
+    let checked_cols = geom.taps.iter().filter(|t| !t.is_empty()).count() as u64;
+    let total_checks = reps * uses_total * checked_cols;
+    let wt: f64 = geom.taps.iter().map(|t| t.len() as f64).sum::<f64>()
+        * qv as f64
+        * (reps * uses_total) as f64;
+    fill_iid(&mut st, total_checks, wt, sparsity, mode);
+    st.sweeps = reps * uses_total;
+    st.loads_in = st.sweeps * cfg.w as u64;
+    let tasks = (cfg.n * cfg.out_h()) as u64 * kq_count;
+    st.loads_out = tasks * cfg.out_w() as u64 * qv;
+    st.stores_out = st.loads_out;
+    st.filter_bytes_per_sweep = (cfg.s * cfg.r * plan.q * V * 4) as u64;
+    st
+}
+
+/// Expected SparseTrain BWI stats over an i.i.d. ∂L/∂Y pattern.
+pub fn sparse_bwi_stats_iid(cfg: &ConvConfig, sparsity: f64, mode: SkipMode) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_fwd(cfg.c, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let cq_count = (cfg.c / plan.q) as u64;
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    let mut oy_uses = vec![0u64; oh];
+    for y in 0..cfg.h {
+        for s in 0..cfg.s {
+            let t = y as isize + cfg.pad_h as isize - s as isize;
+            if t >= 0 && t % cfg.stride_p as isize == 0 {
+                let oy = (t / cfg.stride_p as isize) as usize;
+                if oy < oh {
+                    oy_uses[oy] += 1;
+                }
+            }
+        }
+    }
+    let taps_len: Vec<u64> = (0..ow)
+        .map(|ox| {
+            (0..cfg.r)
+                .filter(|&r| {
+                    let x = ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize;
+                    x >= 0 && x < cfg.w as isize
+                })
+                .count() as u64
+        })
+        .collect();
+    let reps = (cfg.n as u64) * (cfg.k as u64 / V as u64);
+    let uses_total: u64 = oy_uses.iter().sum::<u64>() * cq_count;
+    let checked_cols = taps_len.iter().filter(|&&t| t > 0).count() as u64;
+    let total_checks = reps * uses_total * checked_cols;
+    let wt: f64 =
+        taps_len.iter().map(|&t| t as f64).sum::<f64>() * qv as f64 * (reps * uses_total) as f64;
+    fill_iid(&mut st, total_checks, wt, sparsity, mode);
+    st.sweeps = reps * uses_total;
+    st.loads_in = st.sweeps * ow as u64;
+    let tasks = (cfg.n * cfg.h) as u64 * cq_count;
+    st.loads_out = tasks * cfg.w as u64 * qv;
+    st.stores_out = st.loads_out;
+    st.filter_bytes_per_sweep = (cfg.s * cfg.r * plan.q * V * 4) as u64;
+    st
+}
+
+/// Expected SparseTrain BWW stats over an i.i.d. checked-operand pattern
+/// (one check per input column per sweep).
+pub fn sparse_bww_stats_iid(cfg: &ConvConfig, sparsity: f64, mode: SkipMode) -> KernelStats {
+    let mut st = KernelStats::new();
+    let plan = plan_bww(cfg.k, cfg.r);
+    let qv = (plan.q / V) as u64;
+    let kq_count = (cfg.k / plan.q) as u64;
+    let uses = row_uses(cfg);
+    let taps = super::sparse_bww::bww_col_taps(cfg);
+    let taps_total: u64 = taps.iter().map(|t| t.len() as u64).sum();
+    let checked_cols = taps.iter().filter(|t| !t.is_empty()).count() as u64;
+    let sweeps: u64 =
+        uses.iter().sum::<u64>() * (cfg.n as u64 / V as u64) * kq_count * cfg.c as u64;
+    let total_checks = sweeps * checked_cols;
+    let wt = (sweeps * taps_total * qv) as f64;
+    fill_iid(&mut st, total_checks, wt, sparsity, mode);
+    st.sweeps = sweeps;
+    st.loads_in = total_checks;
+    st.loads_out = sweeps * cfg.r as u64 * qv;
+    st.stores_out = st.loads_out;
+    st.filter_bytes_per_sweep = (cfg.r * plan.q * 4) as u64;
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{direct, sparse_bwi, sparse_bww, sparse_fwd};
+    use super::*;
+    use crate::tensor::FilterTensor;
+    use crate::util::prng::Xorshift;
+
+    fn assert_stats_eq(a: &KernelStats, b: &KernelStats, what: &str) {
+        assert_eq!(a.fma_vec, b.fma_vec, "{what}: fma_vec");
+        assert_eq!(a.fma_vec_skipped, b.fma_vec_skipped, "{what}: fma_vec_skipped");
+        assert_eq!(a.zero_checks, b.zero_checks, "{what}: zero_checks");
+        assert_eq!(a.popcount_hist, b.popcount_hist, "{what}: popcount_hist");
+        assert_eq!(a.loads_in, b.loads_in, "{what}: loads_in");
+        assert_eq!(a.loads_out, b.loads_out, "{what}: loads_out");
+        assert_eq!(a.stores_out, b.stores_out, "{what}: stores_out");
+        assert_eq!(a.int_ops, b.int_ops, "{what}: int_ops");
+        assert_eq!(a.sweeps, b.sweeps, "{what}: sweeps");
+    }
+
+    fn configs() -> Vec<ConvConfig> {
+        vec![
+            ConvConfig::square(2, 32, 32, 8, 3, 1),
+            ConvConfig::square(2, 32, 32, 9, 3, 2),
+            ConvConfig::square(2, 32, 64, 7, 1, 1),
+            ConvConfig::square(1, 32, 32, 9, 5, 1),
+        ]
+    }
+
+    #[test]
+    fn fwd_model_matches_functional() {
+        for cfg in configs() {
+            for mode in [SkipMode::MaskLoop, SkipMode::Dense, SkipMode::PerLaneBranch] {
+                let mut rng = Xorshift::new(55);
+                let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+                d.fill_relu_sparse(&mut rng, 0.6);
+                let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+                g.fill_uniform(&mut rng, -0.5, 0.5);
+                let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+                let mut st = KernelStats::new();
+                sparse_fwd::fwd(&cfg, &d, &g, &mut y, mode, &mut st);
+                let model = sparse_fwd_stats(&cfg, &d, mode);
+                assert_stats_eq(&model, &st, &format!("fwd {cfg:?} {mode:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn direct_fwd_model_matches_functional() {
+        for cfg in configs() {
+            let mut rng = Xorshift::new(56);
+            let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            d.fill_uniform(&mut rng, -1.0, 1.0);
+            let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            g.fill_uniform(&mut rng, -0.5, 0.5);
+            let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            let mut st = KernelStats::new();
+            direct::fwd(&cfg, &d, &g, &mut y, &mut st);
+            let model = direct_fwd_stats(&cfg);
+            assert_eq!(model.fma_vec, st.fma_vec, "direct fwd fma {cfg:?}");
+            assert_eq!(model.sweeps, st.sweeps, "direct fwd sweeps {cfg:?}");
+            assert_eq!(model.loads_in, st.loads_in, "direct fwd loads_in {cfg:?}");
+            assert_eq!(model.loads_out, st.loads_out, "direct fwd loads_out {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn bwi_model_matches_functional() {
+        for cfg in configs() {
+            let mut rng = Xorshift::new(57);
+            let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            dy.fill_relu_sparse(&mut rng, 0.5);
+            let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            g.fill_uniform(&mut rng, -0.5, 0.5);
+            let gt = g.transpose_channels();
+            let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let mut st = KernelStats::new();
+            sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop, &mut st);
+            let model = sparse_bwi_stats(&cfg, &dy, SkipMode::MaskLoop);
+            assert_stats_eq(&model, &st, &format!("bwi {cfg:?}"));
+        }
+    }
+
+    #[test]
+    fn bww_model_matches_functional() {
+        for cfg in [
+            ConvConfig::square(16, 32, 32, 6, 3, 1),
+            ConvConfig::square(16, 32, 32, 8, 3, 2),
+            ConvConfig::square(16, 32, 64, 5, 1, 1),
+        ] {
+            let mut rng = Xorshift::new(58);
+            let mut dsrc = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            dsrc.fill_relu_sparse(&mut rng, 0.55);
+            let d = BatchTiledTensor::from_act(&dsrc);
+            let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            dy.fill_uniform(&mut rng, -1.0, 1.0);
+            let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            let mut st = KernelStats::new();
+            sparse_bww::bww(&cfg, &d, &dy, &mut dg, SkipMode::MaskLoop, &mut st);
+            let model = sparse_bww_stats(&cfg, &d, SkipMode::MaskLoop);
+            assert_stats_eq(&model, &st, &format!("bww {cfg:?}"));
+        }
+    }
+
+    #[test]
+    fn iid_expectation_matches_scanned_random_pattern() {
+        // The i.i.d. closed forms must agree with scanning an actual
+        // Bernoulli pattern to within sampling noise.
+        let cfg = ConvConfig::square(4, 64, 64, 12, 3, 1);
+        let s = 0.6;
+        let mut rng = Xorshift::new(91);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, s);
+        let scanned = sparse_fwd_stats(&cfg, &d, SkipMode::MaskLoop);
+        let iid = sparse_fwd_stats_iid(&cfg, s, SkipMode::MaskLoop);
+        assert_eq!(iid.zero_checks, scanned.zero_checks);
+        assert_eq!(iid.sweeps, scanned.sweeps);
+        assert_eq!(iid.loads_out, scanned.loads_out);
+        let rel = |a: u64, b: u64| (a as f64 - b as f64).abs() / b.max(1) as f64;
+        assert!(rel(iid.fma_vec, scanned.fma_vec) < 0.03, "{iid:?} vs {scanned:?}");
+        assert!(rel(iid.int_ops, scanned.int_ops) < 0.03);
+        // BWI
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_relu_sparse(&mut rng, s);
+        let scanned = sparse_bwi_stats(&cfg, &dy, SkipMode::MaskLoop);
+        let iid = sparse_bwi_stats_iid(&cfg, s, SkipMode::MaskLoop);
+        assert_eq!(iid.zero_checks, scanned.zero_checks);
+        assert!(rel(iid.fma_vec, scanned.fma_vec) < 0.03);
+        // BWW
+        let cfgb = ConvConfig::square(16, 32, 32, 8, 3, 1);
+        let mut db = ActTensor::zeros(cfgb.n, cfgb.c, cfgb.h, cfgb.w);
+        db.fill_relu_sparse(&mut rng, s);
+        let scanned = sparse_bww_stats(&cfgb, &BatchTiledTensor::from_act(&db), SkipMode::MaskLoop);
+        let iid = sparse_bww_stats_iid(&cfgb, s, SkipMode::MaskLoop);
+        assert_eq!(iid.zero_checks, scanned.zero_checks);
+        assert!(rel(iid.fma_vec, scanned.fma_vec) < 0.04);
+    }
+
+    #[test]
+    fn iid_dense_matches_direct_fma_count() {
+        let cfg = ConvConfig::square(16, 256, 256, 28, 3, 1);
+        let iid = sparse_fwd_stats_iid(&cfg, 0.0, SkipMode::MaskLoop);
+        let direct = direct_fwd_stats(&cfg);
+        assert_eq!(iid.fma_vec, direct.fma_vec);
+        assert_eq!(iid.fma_vec_skipped, 0);
+    }
+
+    #[test]
+    fn model_is_fast_on_paper_scale_layers() {
+        // vgg4_2-sized accounting must run in well under a second.
+        let cfg = ConvConfig::square(16, 512, 512, 28, 3, 1);
+        let mut rng = Xorshift::new(60);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, 0.7);
+        let t0 = std::time::Instant::now();
+        let st = sparse_fwd_stats(&cfg, &d, SkipMode::MaskLoop);
+        assert!(st.fma_total() > 1_000_000_000 / 16);
+        assert!(t0.elapsed().as_secs_f64() < 2.0, "model too slow");
+        assert!((st.skip_fraction() - 0.7).abs() < 0.02);
+    }
+}

@@ -1,0 +1,256 @@
+//! Winograd F(2×2, 3×3) convolution — the `winograd` baseline.
+//!
+//! Restrictions exactly as in the paper (§5.1): 3×3 filters, unit stride
+//! only (MKL-DNN's Winograd does not support strided convolution), needs
+//! workspace memory, and the transform erases dynamic sparsity. The
+//! arithmetic reduction is 36/16 = 2.25× fewer MACs in the elementwise
+//! stage vs direct's 9 MACs per output (plus transform overhead).
+
+use super::{ConvConfig, KernelStats};
+use crate::tensor::{ActTensor, FilterTensor};
+use crate::V;
+
+/// Whether the Winograd kernel applies to a configuration.
+pub fn applicable(cfg: &ConvConfig) -> bool {
+    cfg.r == 3 && cfg.s == 3 && cfg.stride_o == 1 && cfg.stride_p == 1
+}
+
+/// Filter transform: `U = G_w · g · G_wᵀ` for each (k, c); g is 3×3,
+/// U is 4×4 with G_w = [[1,0,0],[.5,.5,.5],[.5,-.5,.5],[0,0,1]].
+fn filter_transform(g3: &[f32; 9]) -> [f32; 16] {
+    let gw = [[1.0, 0.0, 0.0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0.0, 0.0, 1.0f32]];
+    // t = G_w (4x3) · g (3x3) → 4x3
+    let mut t = [[0.0f32; 3]; 4];
+    for i in 0..4 {
+        for j in 0..3 {
+            for p in 0..3 {
+                t[i][j] += gw[i][p] * g3[p * 3 + j];
+            }
+        }
+    }
+    // u = t (4x3) · G_wᵀ (3x4) → 4x4
+    let mut u = [0.0f32; 16];
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut acc = 0.0;
+            for p in 0..3 {
+                acc += t[i][p] * gw[j][p];
+            }
+            u[i * 4 + j] = acc;
+        }
+    }
+    u
+}
+
+/// Input transform: `V = Bᵀ · d · B`; d is a 4×4 tile,
+/// Bᵀ = [[1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]].
+fn input_transform(d4: &[f32; 16]) -> [f32; 16] {
+    let bt = [[1.0, 0.0, -1.0, 0.0], [0.0, 1.0, 1.0, 0.0], [0.0, -1.0, 1.0, 0.0], [0.0, 1.0, 0.0, -1.0f32]];
+    let mut t = [[0.0f32; 4]; 4];
+    for i in 0..4 {
+        for j in 0..4 {
+            for p in 0..4 {
+                t[i][j] += bt[i][p] * d4[p * 4 + j];
+            }
+        }
+    }
+    let mut v = [0.0f32; 16];
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut acc = 0.0;
+            for p in 0..4 {
+                acc += t[i][p] * bt[j][p];
+            }
+            v[i * 4 + j] = acc;
+        }
+    }
+    v
+}
+
+/// Output transform: `y = Aᵀ · m · A`; m is 4×4, y is 2×2,
+/// Aᵀ = [[1,1,1,0],[0,1,-1,-1]].
+fn output_transform(m4: &[f32; 16]) -> [f32; 4] {
+    let at = [[1.0, 1.0, 1.0, 0.0], [0.0, 1.0, -1.0, -1.0f32]];
+    let mut t = [[0.0f32; 4]; 2];
+    for i in 0..2 {
+        for j in 0..4 {
+            for p in 0..4 {
+                t[i][j] += at[i][p] * m4[p * 4 + j];
+            }
+        }
+    }
+    let mut y = [0.0f32; 4];
+    for i in 0..2 {
+        for j in 0..2 {
+            let mut acc = 0.0;
+            for p in 0..4 {
+                acc += t[i][p] * at[j][p];
+            }
+            y[i * 2 + j] = acc;
+        }
+    }
+    y
+}
+
+/// Winograd F(2×2,3×3) forward convolution. Requires [`applicable`].
+pub fn fwd(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    y: &mut ActTensor,
+    stats: &mut KernelStats,
+) {
+    assert!(applicable(cfg), "winograd requires 3x3 stride-1");
+    cfg.validate().expect("invalid conv config");
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    let tiles_y = oh.div_ceil(2);
+    let tiles_x = ow.div_ceil(2);
+
+    // Pre-transform all filters: U[k][c] (4x4).
+    let mut u = vec![[0.0f32; 16]; cfg.k * cfg.c];
+    for k in 0..cfg.k {
+        for c in 0..cfg.c {
+            let mut g3 = [0.0f32; 9];
+            for s in 0..3 {
+                for r in 0..3 {
+                    g3[s * 3 + r] = g.get(k, c, s, r);
+                }
+            }
+            u[k * cfg.c + c] = filter_transform(&g3);
+        }
+    }
+
+    for i in 0..cfg.n {
+        for ty in 0..tiles_y {
+            for tx in 0..tiles_x {
+                // Input tile origin in input coords.
+                let y0 = (ty * 2) as isize - cfg.pad_h as isize;
+                let x0 = (tx * 2) as isize - cfg.pad_w as isize;
+                // Transform the input tile per channel, then accumulate the
+                // elementwise products per output channel.
+                let mut m = vec![[0.0f32; 16]; cfg.k];
+                for c in 0..cfg.c {
+                    let mut d4 = [0.0f32; 16];
+                    for dy_ in 0..4 {
+                        for dx in 0..4 {
+                            let yy = y0 + dy_ as isize;
+                            let xx = x0 + dx as isize;
+                            if yy >= 0 && yy < cfg.h as isize && xx >= 0 && xx < cfg.w as isize {
+                                d4[dy_ * 4 + dx] = d.get(i, c, yy as usize, xx as usize);
+                            }
+                        }
+                    }
+                    let v = input_transform(&d4);
+                    for k in 0..cfg.k {
+                        let uk = &u[k * cfg.c + c];
+                        let mk = &mut m[k];
+                        for e in 0..16 {
+                            mk[e] += uk[e] * v[e];
+                        }
+                    }
+                }
+                for k in 0..cfg.k {
+                    let out = output_transform(&m[k]);
+                    for dy_ in 0..2 {
+                        for dx in 0..2 {
+                            let oy = ty * 2 + dy_;
+                            let ox = tx * 2 + dx;
+                            if oy < oh && ox < ow {
+                                y.set(i, k, oy, ox, out[dy_ * 2 + dx]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    stats_only(cfg, stats);
+}
+
+/// Data-independent cost accounting for Winograd (the transform erases
+/// sparsity, so cost never depends on the input values).
+pub fn stats_only(cfg: &ConvConfig, stats: &mut KernelStats) {
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    let tiles = (cfg.n * oh.div_ceil(2) * ow.div_ceil(2)) as u64;
+    // Elementwise stage: each of the 16 Winograd-space points is one V-wide
+    // FMA over K → tiles · C · (K/V) · 16 vector FMAs.
+    let kv = (cfg.k as u64).div_ceil(V as u64);
+    let elementwise = tiles * cfg.c as u64 * kv * 16;
+    stats.fma_vec += elementwise;
+    // Input transform: 32 adds per (tile, c); output transform: 24 adds per
+    // (tile, k) — vectorized → /V vector FP ops.
+    let in_tf = tiles * (cfg.c as u64) * 32 / V as u64;
+    let out_tf = tiles * (cfg.k as u64) * 24 / V as u64;
+    stats.vec_fp_ops += in_tf + out_tf;
+    // Memory: input tiles read (overlapping 4x4 reads = 4 vectors per tile
+    // per C-tile), U streamed per tile, M workspace write+read, Y write.
+    let cb = (cfg.c / V) as u64;
+    stats.loads_in += tiles * cb * 16;
+    stats.loads_flt += elementwise; // U operand from memory
+    stats.loads_out += tiles * kv * 16;
+    stats.stores_out += tiles * kv * (16 + 4);
+    stats.sweeps += 1;
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.k * cfg.c * 16 * 4) as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::tensor::allclose;
+    use crate::util::prng::Xorshift;
+
+    #[test]
+    fn matches_reference_even_dims() {
+        let cfg = ConvConfig::square(2, 16, 32, 8, 3, 1);
+        let mut rng = Xorshift::new(21);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_uniform(&mut rng, -1.0, 1.0);
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, 3, 3);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut y, &mut st);
+        let yref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+        assert!(allclose(&y.to_nchw(), &yref, 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn matches_reference_odd_dims() {
+        // odd output size exercises partial tiles
+        let cfg = ConvConfig::square(1, 16, 16, 7, 3, 1);
+        let mut rng = Xorshift::new(23);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_uniform(&mut rng, -1.0, 1.0);
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, 3, 3);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        fwd(&cfg, &d, &g, &mut y, &mut st);
+        let yref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+        assert!(allclose(&y.to_nchw(), &yref, 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn not_applicable_to_strided_or_1x1() {
+        assert!(!applicable(&ConvConfig::square(1, 16, 16, 8, 3, 2)));
+        assert!(!applicable(&ConvConfig::square(1, 16, 16, 8, 1, 1)));
+        assert!(applicable(&ConvConfig::square(1, 16, 16, 8, 3, 1)));
+    }
+
+    #[test]
+    fn arithmetic_reduction_vs_direct() {
+        // Winograd's elementwise stage must use ~2.25x fewer MACs than
+        // direct's 9 per output (ignoring transforms).
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let mut st = KernelStats::new();
+        stats_only(&cfg, &mut st);
+        let direct_fmas = cfg.fwd_vec_fmas() as f64;
+        let ratio = direct_fmas / st.fma_vec as f64;
+        assert!(
+            (ratio - 2.25).abs() < 0.05,
+            "expected ~2.25x fewer elementwise FMAs, got {ratio}"
+        );
+    }
+}

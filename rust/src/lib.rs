@@ -1,0 +1,41 @@
+//! # SparseTrain
+//!
+//! A reproduction of *"SparseTrain: Leveraging Dynamic Sparsity in Training
+//! DNNs on General-Purpose SIMD Processors"* (Gong et al.) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate contains:
+//!
+//! * [`tensor`] — the NCHWc16 tiled tensor layout the paper's kernels operate
+//!   on (lowest dimension = channel tile of `V`, §3.2.5 of the paper).
+//! * [`kernels`] — functional + cost-accounted implementations of the paper's
+//!   convolution kernels: SparseTrain FWD/BWI/BWW, dense `direct`,
+//!   `im2col`+GEMM, Winograd F(2×2,3×3), and the specialized `1x1` kernel.
+//! * [`sim`] — an analytical Skylake-X core model used to turn per-kernel
+//!   micro-op counts into cycle estimates (the paper's testbed substitute).
+//! * [`sparsity`] — synthetic sparsity generators, the Fig-3 trajectory
+//!   model, and an activation profiler.
+//! * [`nets`] — the paper's Table 2 layer configurations and full conv-layer
+//!   inventories for VGG16 / ResNet-34 / ResNet-50 / Fixup ResNet-50.
+//! * [`coordinator`] — the L3 runtime: row-sweep work scheduler, per-layer
+//!   algorithm selector, and the PJRT-driven training loop.
+//! * [`runtime`] — PJRT client wrapper that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them.
+//! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`.
+//! * [`util`] — substrates built from scratch for the offline environment:
+//!   PRNG, statistics, thread pool, CLI parsing, text tables, and a mini
+//!   property-testing framework.
+
+pub mod bench;
+pub mod coordinator;
+pub mod kernels;
+pub mod nets;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;
+
+/// SIMD vector width in f32 lanes (AVX-512: 16 × f32). The tiled tensor
+/// layout, the kernels and the machine model all assume this width.
+pub const V: usize = 16;

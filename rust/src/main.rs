@@ -1,0 +1,141 @@
+//! SparseTrain CLI — the L3 coordinator entrypoint.
+//!
+//! ```text
+//! sparsetrain table3|table4|table5|table6|fig1|fig2|fig3|fig4   experiments
+//! sparsetrain sweep --layer vgg3_2                              one layer
+//! sparsetrain train --steps 200                                 PJRT trainer
+//! sparsetrain plan --k 256 --r 3                                register plan
+//! ```
+
+use sparsetrain::bench::experiments;
+use sparsetrain::coordinator::trainer::{Trainer, TrainerConfig};
+use sparsetrain::kernels::regalloc::{plan_bww, plan_fwd};
+use sparsetrain::kernels::Component;
+use sparsetrain::nets::table2::layer_by_name;
+use sparsetrain::runtime::artifacts::ArtifactSet;
+use sparsetrain::sim::{Algorithm, Machine};
+use sparsetrain::util::cli::Args;
+
+const USAGE: &str = "\
+sparsetrain — SparseTrain reproduction (dynamic ReLU sparsity on SIMD CPUs)
+
+USAGE: sparsetrain <command> [options]
+
+COMMANDS
+  fig1 | table4      3x3 layers: speedup vs sparsity (model)
+  fig2 | table5      1x1 layers: speedup vs sparsity (model)
+  fig3               sparsity trajectories over training
+  fig4 | table6      end-to-end projections  [--epochs N]
+  table3             register-budget plans (Q/T/pipelining)
+  sweep              one layer  [--layer NAME] [--csv]
+  train              run the PJRT trainer  [--steps N] [--seed N]
+  plan               register plan  [--k N] [--r N]
+
+All experiment outputs are also produced by `cargo bench` and the examples.";
+
+fn main() {
+    let args = Args::from_env(&["layer", "steps", "seed", "epochs", "k", "r"], &["csv", "detail"])
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        });
+    let m = Machine::skylake_x();
+    match args.subcommand() {
+        Some("fig1") | Some("table4") => {
+            let (_, fig, tab) = experiments::fig1_table4(&m);
+            fig.print();
+            tab.print();
+        }
+        Some("fig2") | Some("table5") => {
+            let (_, fig, tab) = experiments::fig2_table5(&m);
+            fig.print();
+            tab.print();
+        }
+        Some("fig3") => {
+            for (net, matrix) in experiments::fig3(100) {
+                println!(
+                    "{}: {} layers; layer-0 mean {:.2}, last-layer mean {:.2}",
+                    net.name(),
+                    matrix.len(),
+                    sparsetrain::util::stats::mean(&matrix[0]),
+                    sparsetrain::util::stats::mean(matrix.last().unwrap())
+                );
+            }
+        }
+        Some("fig4") | Some("table6") => {
+            let epochs = args.get_usize("epochs", 100).unwrap_or(100);
+            let (_, fig, tab) = experiments::fig4_table6(&m, epochs);
+            fig.print();
+            tab.print();
+        }
+        Some("table3") => {
+            for r in [1usize, 3, 5] {
+                let p = plan_fwd(256, r);
+                println!(
+                    "R={r}: Q={} T={} pipelined={} registers={}",
+                    p.q, p.t, p.pipelined, p.registers
+                );
+            }
+        }
+        Some("plan") => {
+            let k = args.get_usize("k", 256).unwrap_or(256);
+            let r = args.get_usize("r", 3).unwrap_or(3);
+            let f = plan_fwd(k, r);
+            let b = plan_bww(k, r);
+            println!("FWD/BWI: {f:?}");
+            println!("BWW    : {b:?}");
+        }
+        Some("sweep") => {
+            let layer = args.get_or("layer", "vgg3_2");
+            let Some(nl) = layer_by_name(layer) else {
+                eprintln!("unknown layer '{layer}'");
+                std::process::exit(2);
+            };
+            for comp in Component::ALL {
+                print!("{}: ", comp.name());
+                for &s in &experiments::SPARSITY_GRID {
+                    print!(
+                        "{:.2} ",
+                        experiments::speedup_over_direct(
+                            &m,
+                            Algorithm::SparseTrain,
+                            &nl.cfg,
+                            comp,
+                            s
+                        )
+                    );
+                }
+                println!();
+            }
+        }
+        Some("train") => {
+            let steps = args.get_usize("steps", 200).unwrap_or(200);
+            let seed = args.get_usize("seed", 7).unwrap_or(7) as u64;
+            let artifacts = ArtifactSet::default_location();
+            match Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20 }) {
+                Ok(mut t) => match t.run() {
+                    Ok(report) => {
+                        report.profiler.report().print();
+                        println!(
+                            "done: {} steps, {:.1} steps/s, learned={}",
+                            report.losses.len(),
+                            report.steps_per_sec,
+                            report.learned()
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!("training failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                },
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            println!("{USAGE}");
+        }
+    }
+}

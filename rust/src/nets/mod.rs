@@ -1,0 +1,8 @@
+//! Network definitions: the paper's Table 2 layer configurations and the
+//! full conv-layer inventories of the four evaluated networks.
+
+pub mod table2;
+pub mod zoo;
+
+pub use table2::{layer_by_name, resnet_layers, table2_layers, vgg_layers, NamedLayer};
+pub use zoo::{NetSpec, NetLayer, Network};

@@ -1,0 +1,123 @@
+//! The paper's Table 2: evaluated layer configurations from VGG and
+//! ResNet v1.5, batch size 16 (§4).
+
+use crate::kernels::ConvConfig;
+
+/// A named layer configuration from Table 2.
+#[derive(Debug, Clone)]
+pub struct NamedLayer {
+    pub name: &'static str,
+    pub cfg: ConvConfig,
+}
+
+/// Batch size used throughout the paper's per-layer evaluation (§4).
+pub const BATCH: usize = 16;
+
+fn l(name: &'static str, c: usize, k: usize, hw: usize, rs: usize, stride: usize) -> NamedLayer {
+    NamedLayer { name, cfg: ConvConfig::square(BATCH, c, k, hw, rs, stride) }
+}
+
+/// All VGG rows of Table 2 (the non-initial 3×3 layers).
+pub fn vgg_layers() -> Vec<NamedLayer> {
+    vec![
+        l("vgg1_2", 64, 64, 224, 3, 1),
+        l("vgg2_1", 64, 128, 112, 3, 1),
+        l("vgg2_2", 128, 128, 112, 3, 1),
+        l("vgg3_1", 128, 256, 56, 3, 1),
+        l("vgg3_2", 256, 256, 56, 3, 1),
+        l("vgg4_1", 256, 512, 28, 3, 1),
+        l("vgg4_2", 512, 512, 28, 3, 1),
+        l("vgg5_1", 512, 512, 14, 3, 1),
+    ]
+}
+
+/// All ResNet rows of Table 2 (1×1 and 3×3, incl. the strided `/r` rows).
+pub fn resnet_layers() -> Vec<NamedLayer> {
+    vec![
+        l("resnet2_1a", 64, 64, 56, 1, 1),
+        l("resnet2_1b", 256, 64, 56, 1, 1),
+        l("resnet2_2", 64, 64, 56, 3, 1),
+        l("resnet2_3", 64, 256, 56, 1, 1),
+        l("resnet3_1a", 256, 128, 56, 1, 1),
+        l("resnet3_1b", 512, 128, 28, 1, 1),
+        l("resnet3_2", 128, 128, 28, 3, 1),
+        l("resnet3_2/r", 128, 128, 56, 3, 2),
+        l("resnet3_3", 128, 512, 28, 1, 1),
+        l("resnet4_1a", 512, 256, 28, 1, 1),
+        l("resnet4_1b", 1024, 256, 14, 1, 1),
+        l("resnet4_2", 256, 256, 14, 3, 1),
+        l("resnet4_2/r", 256, 256, 28, 3, 2),
+        l("resnet4_3", 256, 1024, 14, 1, 1),
+        l("resnet5_1a", 1024, 512, 14, 1, 1),
+        l("resnet5_1b", 2048, 512, 7, 1, 1),
+        l("resnet5_2", 512, 512, 7, 3, 1),
+        l("resnet5_2/r", 512, 512, 14, 3, 2),
+        l("resnet5_3", 512, 2048, 7, 1, 1),
+    ]
+}
+
+/// Every row of Table 2.
+pub fn table2_layers() -> Vec<NamedLayer> {
+    let mut v = vgg_layers();
+    v.extend(resnet_layers());
+    v
+}
+
+/// The 3×3 subset (Figure 1 / Table 4).
+pub fn layers_3x3() -> Vec<NamedLayer> {
+    table2_layers().into_iter().filter(|nl| nl.cfg.r == 3).collect()
+}
+
+/// The 1×1 subset (Figure 2 / Table 5).
+pub fn layers_1x1() -> Vec<NamedLayer> {
+    table2_layers().into_iter().filter(|nl| nl.cfg.r == 1).collect()
+}
+
+/// Look up a Table 2 layer by name.
+pub fn layer_by_name(name: &str) -> Option<NamedLayer> {
+    table2_layers().into_iter().find(|nl| nl.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_table2() {
+        assert_eq!(vgg_layers().len(), 8);
+        assert_eq!(resnet_layers().len(), 19);
+        assert_eq!(layers_3x3().len(), 8 + 7); // 8 VGG + 7 ResNet 3x3 rows
+        assert_eq!(layers_1x1().len(), 12);
+    }
+
+    #[test]
+    fn all_configs_valid() {
+        for nl in table2_layers() {
+            nl.cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", nl.name));
+            assert_eq!(nl.cfg.n, BATCH);
+        }
+    }
+
+    #[test]
+    fn strided_rows_have_stride_2() {
+        for nl in table2_layers() {
+            let strided = nl.name.ends_with("/r");
+            assert_eq!(nl.cfg.stride_o == 2, strided, "{}", nl.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let nl = layer_by_name("vgg3_2").unwrap();
+        assert_eq!((nl.cfg.c, nl.cfg.k, nl.cfg.h), (256, 256, 56));
+        assert!(layer_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn spot_check_dimensions() {
+        let r52 = layer_by_name("resnet5_2").unwrap().cfg;
+        assert_eq!((r52.c, r52.k, r52.h, r52.r), (512, 512, 7, 3));
+        let r31b = layer_by_name("resnet3_1b").unwrap().cfg;
+        assert_eq!((r31b.c, r31b.k, r31b.h, r31b.r), (512, 128, 28, 1));
+    }
+}

@@ -1,0 +1,321 @@
+//! Full conv-layer inventories of the evaluated networks (ImageNet
+//! geometry, batch 16): VGG16, ResNet-34, ResNet-50, and the Fixup
+//! ResNet-50 variant (BatchNorm-free, scalar biases removed — §4).
+//!
+//! These drive the end-to-end projections (Figure 4 / Table 6): per layer
+//! we need the convolution shape, whether its *input* carries ReLU
+//! sparsity (FWD/BWW), whether its *output gradient* carries ReLU sparsity
+//! (BWI — destroyed by BatchNorm, §2.3), and its depth position for the
+//! trajectory model.
+
+use crate::kernels::ConvConfig;
+
+/// One convolution layer inside a network.
+#[derive(Debug, Clone)]
+pub struct NetLayer {
+    pub name: String,
+    pub cfg: ConvConfig,
+    /// First conv of the network: input is a zero-free image → SparseTrain
+    /// inapplicable; the paper charges it as constant `direct` overhead.
+    pub is_first: bool,
+    /// A BatchNorm sits between this conv and its ReLU.
+    pub has_bn: bool,
+    /// This conv's ReLU follows a residual-shortcut add (lower sparsity).
+    pub after_shortcut: bool,
+}
+
+/// The four evaluated networks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Network {
+    Vgg16,
+    ResNet34,
+    ResNet50,
+    FixupResNet50,
+}
+
+impl Network {
+    pub const ALL: [Network; 4] =
+        [Network::Vgg16, Network::ResNet34, Network::ResNet50, Network::FixupResNet50];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Network::Vgg16 => "VGG16",
+            Network::ResNet34 => "ResNet-34",
+            Network::ResNet50 => "ResNet-50",
+            Network::FixupResNet50 => "Fixup ResNet-50",
+        }
+    }
+
+    /// Trajectory-model parameters for this network (Fig 3).
+    pub fn trajectory(&self) -> crate::sparsity::TrajectoryParams {
+        use crate::sparsity::TrajectoryParams as P;
+        match self {
+            Network::Vgg16 => P::vgg16(),
+            Network::ResNet34 => P::resnet34(),
+            Network::ResNet50 => P::resnet50(),
+            Network::FixupResNet50 => P::fixup_resnet50(),
+        }
+    }
+}
+
+/// A network's conv inventory.
+#[derive(Debug, Clone)]
+pub struct NetSpec {
+    pub network: Network,
+    pub layers: Vec<NetLayer>,
+}
+
+const BATCH: usize = 16;
+
+fn conv(
+    name: String,
+    c: usize,
+    k: usize,
+    hw: usize,
+    rs: usize,
+    stride: usize,
+    has_bn: bool,
+) -> NetLayer {
+    NetLayer {
+        name,
+        cfg: ConvConfig::square(BATCH, c, k, hw, rs, stride),
+        is_first: false,
+        has_bn,
+        after_shortcut: false,
+    }
+}
+
+/// The first conv: 3 input channels, padded to V=16 for the tiled layout
+/// (cost model approximation; the paper charges this layer as constant
+/// `direct` overhead either way).
+fn first_conv(name: &str, k: usize, hw: usize, rs: usize, stride: usize, has_bn: bool) -> NetLayer {
+    let mut l = conv(name.to_string(), 16, k, hw, rs, stride, has_bn);
+    l.is_first = true;
+    l
+}
+
+impl NetSpec {
+    pub fn build(network: Network) -> NetSpec {
+        match network {
+            Network::Vgg16 => NetSpec { network, layers: vgg16_layers() },
+            Network::ResNet34 => NetSpec { network, layers: resnet34_layers(true) },
+            Network::ResNet50 => NetSpec { network, layers: resnet50_layers(true) },
+            Network::FixupResNet50 => NetSpec { network, layers: resnet50_layers(false) },
+        }
+    }
+
+    /// Layers excluding the first conv (the paper's "excl. 1st layer" rows).
+    pub fn non_initial(&self) -> impl Iterator<Item = &NetLayer> {
+        self.layers.iter().filter(|l| !l.is_first)
+    }
+
+    /// Total dense forward FLOPs of all conv layers.
+    pub fn total_fwd_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.cfg.fwd_flops()).sum()
+    }
+}
+
+fn vgg16_layers() -> Vec<NetLayer> {
+    let spec: [(usize, usize, usize); 13] = [
+        (3, 64, 224), // conv1_1 (first)
+        (64, 64, 224),
+        (64, 128, 112),
+        (128, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    spec.iter()
+        .enumerate()
+        .map(|(i, &(c, k, hw))| {
+            if i == 0 {
+                first_conv("conv1_1", k, hw, 3, 1, false)
+            } else {
+                conv(format!("conv{}", i + 1), c, k, hw, 3, 1, false)
+            }
+        })
+        .collect()
+}
+
+/// ResNet-34: basic blocks [3, 4, 6, 3], channels [64, 128, 256, 512].
+fn resnet34_layers(has_bn: bool) -> Vec<NetLayer> {
+    let mut layers = vec![first_conv("conv1", 64, 224, 7, 2, has_bn)];
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 56, 3), (128, 28, 4), (256, 14, 6), (512, 7, 3)];
+    let mut in_c = 64;
+    for (si, &(ch, hw, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let downsample = si > 0 && b == 0;
+            let stride = if downsample { 2 } else { 1 };
+            let in_hw = if downsample { hw * 2 } else { hw };
+            let mut l1 = conv(
+                format!("s{}b{}_conv1", si + 2, b + 1),
+                in_c,
+                ch,
+                in_hw,
+                3,
+                stride,
+                has_bn,
+            );
+            let mut l2 = conv(format!("s{}b{}_conv2", si + 2, b + 1), ch, ch, hw, 3, 1, has_bn);
+            l2.after_shortcut = true; // its ReLU follows the shortcut add
+            let _ = &mut l1;
+            layers.push(l1);
+            layers.push(l2);
+            if downsample {
+                // projection shortcut 1x1/2
+                let mut sc = conv(
+                    format!("s{}b{}_down", si + 2, b + 1),
+                    in_c,
+                    ch,
+                    in_hw,
+                    1,
+                    2,
+                    has_bn,
+                );
+                sc.cfg.pad_h = 0;
+                sc.cfg.pad_w = 0;
+                layers.push(sc);
+            }
+            in_c = ch;
+        }
+    }
+    layers
+}
+
+/// ResNet-50: bottleneck blocks [3, 4, 6, 3], widths [64, 128, 256, 512]
+/// (output 4× wider). `has_bn = false` gives the Fixup variant.
+fn resnet50_layers(has_bn: bool) -> Vec<NetLayer> {
+    let mut layers = vec![first_conv("conv1", 64, 224, 7, 2, has_bn)];
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 56, 3), (128, 28, 4), (256, 14, 6), (512, 7, 3)];
+    let mut in_c = 64;
+    for (si, &(w, hw, blocks)) in stages.iter().enumerate() {
+        let out_c = w * 4;
+        for b in 0..blocks {
+            let downsample = b == 0; // every stage's first block projects
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let in_hw = if stride == 2 { hw * 2 } else { hw };
+            // 1x1 reduce (stride 1; v1.5 puts the stride on the 3x3)
+            let mut l1 =
+                conv(format!("s{}b{}_conv1", si + 2, b + 1), in_c, w, in_hw, 1, 1, has_bn);
+            l1.cfg.pad_h = 0;
+            l1.cfg.pad_w = 0;
+            layers.push(l1);
+            // 3x3 (carries the stride in v1.5)
+            layers.push(conv(
+                format!("s{}b{}_conv2", si + 2, b + 1),
+                w,
+                w,
+                in_hw,
+                3,
+                stride,
+                has_bn,
+            ));
+            // 1x1 expand; its ReLU is after the shortcut add
+            let mut l3 = conv(format!("s{}b{}_conv3", si + 2, b + 1), w, out_c, hw, 1, 1, has_bn);
+            l3.cfg.pad_h = 0;
+            l3.cfg.pad_w = 0;
+            l3.after_shortcut = true;
+            layers.push(l3);
+            if downsample {
+                let mut sc = conv(
+                    format!("s{}b{}_down", si + 2, b + 1),
+                    in_c,
+                    out_c,
+                    in_hw,
+                    1,
+                    stride,
+                    has_bn,
+                );
+                sc.cfg.pad_h = 0;
+                sc.cfg.pad_w = 0;
+                layers.push(sc);
+            }
+            in_c = out_c;
+        }
+    }
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_has_13_convs() {
+        let net = NetSpec::build(Network::Vgg16);
+        assert_eq!(net.layers.len(), 13);
+        assert_eq!(net.non_initial().count(), 12);
+        assert!(net.layers.iter().all(|l| !l.has_bn));
+    }
+
+    #[test]
+    fn resnet34_conv_count() {
+        // 1 (stem) + 2·(3+4+6+3) + 3 downsample projections = 36
+        let net = NetSpec::build(Network::ResNet34);
+        assert_eq!(net.layers.len(), 1 + 32 + 3);
+        assert!(net.layers.iter().all(|l| l.has_bn));
+    }
+
+    #[test]
+    fn resnet50_conv_count() {
+        // 1 + 3·(3+4+6+3) + 4 downsample projections = 53
+        let net = NetSpec::build(Network::ResNet50);
+        assert_eq!(net.layers.len(), 1 + 48 + 4);
+        // Fixup variant identical but BN-free
+        let fix = NetSpec::build(Network::FixupResNet50);
+        assert_eq!(fix.layers.len(), net.layers.len());
+        assert!(fix.layers.iter().all(|l| !l.has_bn));
+    }
+
+    #[test]
+    fn all_configs_valid() {
+        for net in Network::ALL {
+            for l in &NetSpec::build(net).layers {
+                l.cfg.validate().unwrap_or_else(|e| panic!("{} {}: {e}", net.name(), l.name));
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_chains_consistently() {
+        // each stage's first conv input H/W equals previous stage output
+        let net = NetSpec::build(Network::ResNet50);
+        // spot: s2 spatial = 56, s5 = 7
+        let s2 = net.layers.iter().find(|l| l.name == "s2b1_conv2").unwrap();
+        assert_eq!(s2.cfg.h, 56);
+        let s5 = net.layers.iter().find(|l| l.name == "s5b3_conv3").unwrap();
+        assert_eq!(s5.cfg.h, 7);
+        assert_eq!((s5.cfg.c, s5.cfg.k), (512, 2048));
+    }
+
+    #[test]
+    fn vgg16_flops_order_of_magnitude() {
+        // ~15.3 GFLOPs ×2 (MAC=2) × batch16 ≈ 4.9e11; allow wide band.
+        let net = NetSpec::build(Network::Vgg16);
+        let flops = net.total_fwd_flops() as f64;
+        assert!(flops > 3e11 && flops < 8e11, "flops={flops:e}");
+    }
+
+    #[test]
+    fn resnet50_flops_order_of_magnitude() {
+        // ~4.1 GFLOPs ×2 × batch16 ≈ 1.3e11
+        let net = NetSpec::build(Network::ResNet50);
+        let flops = net.total_fwd_flops() as f64;
+        assert!(flops > 0.8e11 && flops < 2.0e11, "flops={flops:e}");
+    }
+
+    #[test]
+    fn shortcut_relus_marked() {
+        let net = NetSpec::build(Network::ResNet34);
+        let marked = net.layers.iter().filter(|l| l.after_shortcut).count();
+        assert_eq!(marked, 16); // one per basic block
+    }
+}

@@ -1,0 +1,87 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/*.hlo.txt` once, at build time) and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+/// The artifacts the AOT pipeline produces and the trainer consumes.
+/// Shapes are fixed at lowering time (AOT — no dynamic shapes).
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+}
+
+/// Names of all expected artifacts.
+pub const TRAIN_STEP: &str = "train_step";
+pub const PREDICT: &str = "predict";
+pub const KERNEL_FWD: &str = "kernel_fwd";
+
+/// Training-problem geometry baked into the artifacts (must match
+/// `python/compile/model.py`).
+pub mod geometry {
+    /// Batch size.
+    pub const N: usize = 16;
+    /// Input channels (multiple of V=16, matching the tiled layout story).
+    pub const C_IN: usize = 16;
+    /// Input spatial size.
+    pub const HW: usize = 16;
+    /// Conv channels.
+    pub const C1: usize = 32;
+    pub const C2: usize = 32;
+    /// Classes.
+    pub const CLASSES: usize = 8;
+    /// SGD learning rate baked into the train-step graph.
+    pub const LR: f32 = 0.2;
+}
+
+impl ArtifactSet {
+    pub fn new<P: AsRef<Path>>(dir: P) -> ArtifactSet {
+        ArtifactSet { dir: dir.as_ref().to_path_buf() }
+    }
+
+    /// Default location: `$SPARSETRAIN_ARTIFACTS` or `./artifacts`.
+    pub fn default_location() -> ArtifactSet {
+        let dir =
+            std::env::var("SPARSETRAIN_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        ArtifactSet::new(dir)
+    }
+
+    pub fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.path_of(name).is_file()
+    }
+
+    /// All artifacts present? (Used to gate runtime tests/examples so
+    /// `cargo test` works before `make artifacts`.)
+    pub fn complete(&self) -> bool {
+        [TRAIN_STEP, PREDICT, KERNEL_FWD].iter().all(|n| self.has(n))
+    }
+
+    /// Missing artifact names.
+    pub fn missing(&self) -> Vec<&'static str> {
+        [TRAIN_STEP, PREDICT, KERNEL_FWD].into_iter().filter(|n| !self.has(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_and_missing() {
+        let a = ArtifactSet::new("/nonexistent-dir");
+        assert_eq!(a.path_of("x"), PathBuf::from("/nonexistent-dir/x.hlo.txt"));
+        assert!(!a.complete());
+        assert_eq!(a.missing().len(), 3);
+    }
+
+    #[test]
+    fn geometry_is_consistent() {
+        use geometry::*;
+        assert_eq!(N % crate::V, 0, "batch must tile by V for BWW");
+        assert_eq!(C_IN % crate::V, 0);
+        assert!(CLASSES > 1);
+    }
+}

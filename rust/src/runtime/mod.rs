@@ -1,0 +1,10 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO **text**, see
+//! DESIGN.md §2 and /opt/xla-example/README.md) and executes them on the
+//! CPU PJRT client. Python never runs on this path — `make artifacts`
+//! produces the `.hlo.txt` files once at build time.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::ArtifactSet;
+pub use pjrt::{Executable, Runtime};

@@ -1,0 +1,123 @@
+//! Thin wrapper over the `xla` crate: PJRT CPU client + compiled
+//! executables keyed by artifact name.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given input literals; returns the flattened tuple
+    /// outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let first = outs
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .context("no output buffers")?;
+        let lit = first.to_literal_sync().context("device→host transfer")?;
+        Ok(lit.to_tuple().context("untupling outputs")?)
+    }
+}
+
+/// PJRT runtime bound to an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, usize>,
+    loaded: Vec<Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+            loaded: Vec::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load and compile `<name>.hlo.txt` (cached per runtime).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if let Some(&idx) = self.cache.get(name) {
+            return Ok(&self.loaded[idx]);
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.loaded.push(Executable { exe, name: name.to_string() });
+        self.cache.insert(name.to_string(), self.loaded.len() - 1);
+        Ok(self.loaded.last().unwrap())
+    }
+}
+
+/// Build an f32 literal of the given shape from a host buffer.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/product mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/product mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu("artifacts").unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let mut rt = Runtime::cpu("artifacts").unwrap();
+        let msg = match rt.load("definitely_not_there") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(msg.contains("definitely_not_there"), "{msg}");
+    }
+}

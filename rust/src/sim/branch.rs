@@ -1,0 +1,128 @@
+//! Branch-misprediction model driven by the zero-check mask statistics.
+//!
+//! The paper (§3.2.4, §5.4): the mask-loop transform (Algorithm 3) replaces
+//! 16 data-dependent branches per check with one loop whose trip count is
+//! the mask popcount — mispredictions remain "noticeable" because the trip
+//! count is low (≤ V) and data-dependent.
+//!
+//! Model:
+//! * **per-lane branches** (Algorithm 2): each lane is a biased coin with
+//!   P(taken) = lane density `p`; a TAGE-like predictor on an i.i.d. biased
+//!   coin mispredicts at ≈ min(p, 1-p) per branch → `V·min(p,1-p)`
+//!   mispredictions per check.
+//! * **mask loop** (Algorithm 3): the loop-exit branch mispredicts when the
+//!   trip count differs from the predictor's expectation; for an i.i.d.
+//!   trip-count distribution the collision probability Σₖ P(k)² is the
+//!   chance the count repeats → `1 − Σₖ P(k)²` mispredictions per check
+//!   (zero for constant masks, e.g. fully dense or fully zero inputs).
+
+use crate::kernels::{KernelStats, SkipMode};
+
+/// Expected mispredictions per zero-check given the observed popcount
+/// histogram and the skip mode.
+pub fn mispredicts_per_check(hist: &[u64], mode: SkipMode) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let v = (hist.len() - 1) as f64;
+    match mode {
+        SkipMode::Dense => 0.0,
+        SkipMode::PerLaneBranch => {
+            // density p from the histogram mean
+            let mean: f64 = hist
+                .iter()
+                .enumerate()
+                .map(|(k, &h)| k as f64 * h as f64)
+                .sum::<f64>()
+                / total as f64;
+            let p = mean / v;
+            v * p.min(1.0 - p)
+        }
+        SkipMode::MaskLoop => {
+            // Loop predictors track the recent trip count and absorb ±1
+            // jitter; a mispredict happens when the count moves further
+            // than that between consecutive checks (i.i.d. approximation).
+            let p: Vec<f64> = hist.iter().map(|&h| h as f64 / total as f64).collect();
+            let within: f64 = p
+                .iter()
+                .enumerate()
+                .map(|(k, &pk)| {
+                    let lo = k.saturating_sub(1);
+                    let hi = (k + 1).min(p.len() - 1);
+                    pk * p[lo..=hi].iter().sum::<f64>()
+                })
+                .sum();
+            1.0 - within
+        }
+    }
+}
+
+/// Total mispredict-cycle estimate for a kernel run.
+pub fn mispredict_cycles(stats: &KernelStats, mode: SkipMode, penalty: f64) -> f64 {
+    mispredicts_per_check(&stats.popcount_hist, mode) * stats.zero_checks as f64 * penalty
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::V;
+
+    fn hist_constant(k: usize, n: u64) -> Vec<u64> {
+        let mut h = vec![0u64; V + 1];
+        h[k] = n;
+        h
+    }
+
+    fn hist_binomial(p: f64, n: u64) -> Vec<u64> {
+        // crude binomial pmf scaled to counts
+        let mut h = vec![0u64; V + 1];
+        for k in 0..=V {
+            let mut logp = 0.0f64;
+            for i in 0..k {
+                logp += ((V - i) as f64 / (i + 1) as f64).ln();
+            }
+            logp += k as f64 * p.ln() + (V - k) as f64 * (1.0 - p).ln();
+            h[k] = (logp.exp() * n as f64).round() as u64;
+        }
+        h
+    }
+
+    #[test]
+    fn dense_input_never_mispredicts() {
+        let h = hist_constant(V, 1000);
+        assert_eq!(mispredicts_per_check(&h, SkipMode::MaskLoop), 0.0);
+        assert_eq!(mispredicts_per_check(&h, SkipMode::PerLaneBranch), 0.0);
+    }
+
+    #[test]
+    fn all_zero_input_never_mispredicts() {
+        let h = hist_constant(0, 1000);
+        assert_eq!(mispredicts_per_check(&h, SkipMode::MaskLoop), 0.0);
+    }
+
+    #[test]
+    fn per_lane_worst_at_half_density() {
+        let h50 = hist_binomial(0.5, 100_000);
+        let h90 = hist_binomial(0.1, 100_000);
+        let m50 = mispredicts_per_check(&h50, SkipMode::PerLaneBranch);
+        let m90 = mispredicts_per_check(&h90, SkipMode::PerLaneBranch);
+        assert!(m50 > m90, "m50={m50} m90={m90}");
+        assert!((m50 - 8.0).abs() < 0.5); // 16 * 0.5
+    }
+
+    #[test]
+    fn mask_loop_beats_per_lane_at_moderate_sparsity() {
+        // The whole point of Algorithm 3.
+        let h = hist_binomial(0.5, 100_000);
+        let loop_m = mispredicts_per_check(&h, SkipMode::MaskLoop);
+        let lane_m = mispredicts_per_check(&h, SkipMode::PerLaneBranch);
+        assert!(loop_m < lane_m / 4.0, "loop={loop_m} lane={lane_m}");
+        assert!(loop_m <= 1.0);
+    }
+
+    #[test]
+    fn empty_hist_is_zero() {
+        assert_eq!(mispredicts_per_check(&vec![0; V + 1], SkipMode::MaskLoop), 0.0);
+    }
+}

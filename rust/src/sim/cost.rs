@@ -1,0 +1,336 @@
+//! Analytical cycle model: micro-op counts → per-layer wall cycles on the
+//! modeled Skylake-X (bottleneck analysis, not cycle-accurate simulation).
+//!
+//! The model charges, per kernel invocation over a whole layer:
+//! * **FP ports**: V-wide FMAs + vector compares (zero checks) + transform
+//!   FP ops at 2/cycle/core;
+//! * **load/store ports**: every FMA's memory operand + explicit stream
+//!   loads/stores at 2 loads + 1 store per cycle;
+//! * **retire**: fused-domain µops at 4/cycle;
+//! * **integer**: the mask-loop bookkeeping at 2/cycle alongside;
+//! * **L2 bandwidth**: per-sweep stream refills + filter-tile refills
+//!   (amortized by the minibatch tiling M — §3.2.5) at 64 B/cycle/core;
+//! * **DRAM bandwidth**: compulsory tensor traffic at the shared package
+//!   bandwidth;
+//! * **branch mispredictions**: from the mask statistics ([`super::branch`]);
+//! * **sweep overhead**: fixed setup cost per row sweep.
+//!
+//! Wall time = max(core-bound share, L2 share, DRAM) — reported with the
+//! full breakdown so benches can show *why* a kernel wins.
+
+use super::branch::mispredict_cycles;
+use super::machine::Machine;
+use crate::kernels::{Component, ConvConfig, KernelStats, SkipMode};
+
+/// Which algorithm produced the stats (memory behavior differs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Direct,
+    SparseTrain,
+    Im2col,
+    Winograd,
+    OneByOne,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Direct => "direct",
+            Algorithm::SparseTrain => "SparseTrain",
+            Algorithm::Im2col => "im2col",
+            Algorithm::Winograd => "winograd",
+            Algorithm::OneByOne => "1x1",
+        }
+    }
+}
+
+/// Minibatch tile size M used to amortize filter refills (§3.2.5).
+pub const M_TILE: f64 = 16.0;
+
+/// Cycle breakdown for one kernel invocation over a layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CycleBreakdown {
+    /// FP-port-bound cycles (total across cores).
+    pub fp: f64,
+    /// Load-port-bound cycles.
+    pub load: f64,
+    /// Store-port-bound cycles.
+    pub store: f64,
+    /// Retire-bound cycles.
+    pub retire: f64,
+    /// Integer-op cycles (mask machinery).
+    pub int: f64,
+    /// L2-bandwidth cycles.
+    pub l2: f64,
+    /// DRAM-bandwidth cycles (package-wide).
+    pub dram: f64,
+    /// Branch-misprediction penalty cycles.
+    pub mispredict: f64,
+    /// Per-sweep fixed overhead cycles.
+    pub overhead: f64,
+    /// Final wall-clock cycle estimate for the layer.
+    pub wall: f64,
+}
+
+impl CycleBreakdown {
+    /// The dominant core-side bottleneck name (for reports).
+    pub fn bottleneck(&self) -> &'static str {
+        let mut best = ("fp", self.fp);
+        for (n, v) in [
+            ("load", self.load),
+            ("store", self.store),
+            ("retire", self.retire),
+            ("int", self.int),
+            ("l2", self.l2),
+            ("dram", self.dram),
+            ("mispredict", self.mispredict),
+        ] {
+            if v > best.1 {
+                best = (n, v);
+            }
+        }
+        best.0
+    }
+}
+
+/// Estimate wall cycles for a kernel run over a layer.
+pub fn estimate(
+    m: &Machine,
+    alg: Algorithm,
+    comp: Component,
+    mode: SkipMode,
+    cfg: &ConvConfig,
+    stats: &KernelStats,
+) -> CycleBreakdown {
+    let fma = stats.fma_vec as f64;
+    let checks = stats.zero_checks as f64;
+    // SparseTrain broadcasts each processed input element into a register
+    // (one vbroadcastss per nonzero lane) because its FMA memory operand is
+    // the *filter* vector; the tuned dense kernel instead embeds the
+    // broadcast in the FMA's memory operand ({1to16}) and pays nothing.
+    // This shuffle-port op is the main §5.1 "92–95 % of direct at 0 %" cost.
+    let broadcasts = if alg == Algorithm::SparseTrain && mode != SkipMode::Dense {
+        stats
+            .popcount_hist
+            .iter()
+            .enumerate()
+            .map(|(k, &h)| k as f64 * h as f64)
+            .sum::<f64>()
+    } else {
+        0.0
+    };
+    // Calibration (§4/§5.1 measured baselines): the lowered GEMM achieves a
+    // fraction of the JIT direct kernel's FMA efficiency — tall-skinny
+    // panels with strided B access and internal repacking. 3×3 lowering
+    // also duplicates data 9×; 1×1 lowering is a near-reshape.
+    let gemm_eff = match (alg, cfg.r) {
+        (Algorithm::Im2col, 1) => 0.55,
+        (Algorithm::Im2col, _) => 0.40,
+        // Winograd's elementwise stage + transforms run at a fraction of
+        // the JIT direct kernel's FMA efficiency (short dot products in
+        // Winograd space, shuffle-heavy transforms): the paper measures
+        // 1.44–1.48× end-to-end from a 2.25× MAC reduction.
+        (Algorithm::Winograd, _) => 0.70,
+        _ => 1.0,
+    };
+    // vbroadcastss from memory is a pure load-port µop on SKX.
+    let fp_uops = (fma / gemm_eff) + checks + stats.vec_fp_ops as f64;
+    let load_uops =
+        fma /* memory operand */ + broadcasts + (stats.loads_in + stats.loads_out) as f64;
+    let store_uops = stats.stores_out as f64;
+    // im2col lowering: per-element scalar address math + bounds + copy.
+    let lowering_ops = if alg == Algorithm::Im2col {
+        3.0 * (cfg.c * cfg.s * cfg.r * cfg.n * cfg.out_h() * cfg.out_w()) as f64
+    } else {
+        0.0
+    };
+    // fused-domain: FMA+load fuse; checks, int ops, stores retire separately
+    let retire_uops = fma + checks + broadcasts + stats.int_ops as f64 + store_uops
+        + (stats.loads_in + stats.loads_out) as f64
+        + lowering_ops;
+
+    let mut b = CycleBreakdown {
+        fp: fp_uops / m.fma_per_cycle,
+        load: load_uops / m.loads_per_cycle,
+        store: store_uops / m.stores_per_cycle,
+        retire: retire_uops / m.retire_per_cycle,
+        int: (stats.int_ops as f64 + lowering_ops) / m.int_per_cycle,
+        ..Default::default()
+    };
+
+    // --- L2 traffic (lines of 64 B) ---
+    let stream_lines = (stats.loads_in + stats.loads_out + stats.stores_out) as f64;
+    let filter_refill_lines = match (alg, comp) {
+        // FWD/BWI amortize the per-sweep filter set over the M-image tile.
+        (Algorithm::Direct | Algorithm::SparseTrain, Component::Fwd | Component::Bwi) => {
+            stats.sweeps as f64 * (stats.filter_bytes_per_sweep as f64 / 64.0) / M_TILE
+        }
+        // BWW's "filter" set is the accumulator (tiny, charged in streams).
+        (_, Component::Bww) => 0.0,
+        // gemm-style kernels: operand panels already counted in streams.
+        _ => 0.0,
+    };
+    // BWW's ∂L/∂Y FMA operand working set: SparseTrain sweeps V images at
+    // once (footprint V·ow·Q/V lines ≫ L1 → refilled from L2 each use,
+    // reuse only across the R-tap window); the dense baseline iterates one
+    // image at a time and keeps the row L1-resident across the C loop.
+    let bww_dy_lines = match (alg, comp) {
+        (Algorithm::SparseTrain, Component::Bww) => fma / (1.4 * cfg.r as f64),
+        (Algorithm::Direct, Component::Bww) => fma / (cfg.r as f64 * cfg.c as f64).max(1.0),
+        _ => 0.0,
+    };
+    let l2_lines = stream_lines + filter_refill_lines + bww_dy_lines;
+    b.l2 = l2_lines * 64.0 / m.l2_bw;
+
+    // --- DRAM compulsory traffic (bytes) ---
+    let f = 4.0; // f32
+    let d_bytes = (cfg.n * cfg.c * cfg.h * cfg.w) as f64 * f;
+    let y_bytes = (cfg.n * cfg.k * cfg.out_h() * cfg.out_w()) as f64 * f;
+    let g_bytes = (cfg.k * cfg.c * cfg.s * cfg.r) as f64 * f;
+    let dram_bytes = match (alg, comp) {
+        (Algorithm::Im2col, _) => {
+            let col = (cfg.c * cfg.s * cfg.r * cfg.n * cfg.out_h() * cfg.out_w()) as f64 * f;
+            d_bytes + g_bytes + 2.0 * y_bytes + 2.0 * col
+        }
+        (Algorithm::Winograd, _) => {
+            let u = (cfg.k * cfg.c * 16) as f64 * f;
+            d_bytes + u + 2.0 * y_bytes
+        }
+        (_, Component::Fwd) => d_bytes + g_bytes + 2.0 * y_bytes,
+        (_, Component::Bwi) => y_bytes + g_bytes + 2.0 * d_bytes,
+        (_, Component::Bww) => d_bytes + y_bytes + 2.0 * g_bytes,
+    };
+    b.dram = dram_bytes / m.dram_bw_total;
+
+    b.mispredict = mispredict_cycles(stats, mode, m.mispredict_penalty);
+    b.overhead = stats.sweeps as f64 * m.sweep_overhead;
+
+    // Per-check serial floor: each zero-check heads a dependency chain
+    // (vcmpps → kmov → popcnt → tzcnt → pointer arithmetic → broadcast →
+    // first FMA) that out-of-order execution cannot fully overlap when the
+    // per-check work is small, plus front-end/register-pressure cost that
+    // grows with the unrolled T-FMA loop body. At dense inputs the T FMAs
+    // per lane dwarf the chain and the floor vanishes under `max`; at high
+    // sparsity it is what caps the paper's measured speedup (§5.1: FWD
+    // tops out at ~2.5× at 90 % despite 10× fewer FMAs; 1×1 layers, with
+    // smaller T, saturate lower). Constants calibrated to Tables 4/5.
+    let t_avg = if stats.zero_checks > 0 {
+        stats.fma_total() as f64 / (stats.zero_checks as f64 * crate::V as f64)
+    } else {
+        0.0
+    };
+    let serial_floor =
+        stats.zero_checks as f64 * (m.check_serial_base + m.check_serial_per_t * t_avg);
+
+    // Core-bound time: the binding port plus serializing penalties.
+    let core_total = b
+        .fp
+        .max(b.load)
+        .max(b.store)
+        .max(b.retire)
+        .max(b.int)
+        .max(serial_floor)
+        + b.mispredict
+        + b.overhead;
+    let cores = m.cores as f64;
+    b.wall = (core_total / cores).max(b.l2 / cores).max(b.dram);
+    b
+}
+
+/// Convenience: seconds at a nominal frequency (ratios are the real output;
+/// absolute time only contextualizes reports).
+pub fn wall_seconds(b: &CycleBreakdown, ghz: f64) -> f64 {
+    b.wall / (ghz * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::stats_model::{direct_fwd_stats, sparse_fwd_stats};
+    use crate::tensor::ActTensor;
+    use crate::util::prng::Xorshift;
+
+    fn layer() -> ConvConfig {
+        ConvConfig::square(16, 256, 256, 56, 3, 1)
+    }
+
+    fn sparse_input(cfg: &ConvConfig, s: f64) -> ActTensor {
+        let mut rng = Xorshift::new(99);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, s);
+        d
+    }
+
+    #[test]
+    fn dense_sparsetrain_slightly_slower_than_direct() {
+        // Paper: 92–95 % of direct at 0 % sparsity.
+        let m = Machine::skylake_x();
+        let cfg = layer();
+        let d = sparse_input(&cfg, 0.0);
+        let st_direct = direct_fwd_stats(&cfg);
+        let st_sparse = sparse_fwd_stats(&cfg, &d, SkipMode::MaskLoop);
+        let t_direct =
+            estimate(&m, Algorithm::Direct, Component::Fwd, SkipMode::Dense, &cfg, &st_direct);
+        let t_sparse = estimate(
+            &m,
+            Algorithm::SparseTrain,
+            Component::Fwd,
+            SkipMode::MaskLoop,
+            &cfg,
+            &st_sparse,
+        );
+        let ratio = t_direct.wall / t_sparse.wall;
+        assert!(
+            ratio > 0.85 && ratio < 1.0,
+            "dense overhead out of range: {ratio}"
+        );
+    }
+
+    #[test]
+    fn speedup_monotone_in_sparsity() {
+        let m = Machine::skylake_x();
+        let cfg = layer();
+        let base = estimate(
+            &m,
+            Algorithm::Direct,
+            Component::Fwd,
+            SkipMode::Dense,
+            &cfg,
+            &direct_fwd_stats(&cfg),
+        )
+        .wall;
+        let mut last = 0.0;
+        for s in [0.2, 0.5, 0.8] {
+            let d = sparse_input(&cfg, s);
+            let st = sparse_fwd_stats(&cfg, &d, SkipMode::MaskLoop);
+            let t = estimate(
+                &m,
+                Algorithm::SparseTrain,
+                Component::Fwd,
+                SkipMode::MaskLoop,
+                &cfg,
+                &st,
+            );
+            let speedup = base / t.wall;
+            assert!(speedup > last, "not monotone at s={s}: {speedup} <= {last}");
+            last = speedup;
+        }
+        assert!(last > 1.5, "80% sparsity speedup too low: {last}");
+    }
+
+    #[test]
+    fn breakdown_bottleneck_is_reported() {
+        let m = Machine::skylake_x();
+        let cfg = layer();
+        let st = direct_fwd_stats(&cfg);
+        let b = estimate(&m, Algorithm::Direct, Component::Fwd, SkipMode::Dense, &cfg, &st);
+        assert!(!b.bottleneck().is_empty());
+        assert!(b.wall > 0.0);
+    }
+
+    #[test]
+    fn wall_seconds_scales() {
+        let b = CycleBreakdown { wall: 3.5e9, ..Default::default() };
+        assert!((wall_seconds(&b, 3.5) - 1.0).abs() < 1e-9);
+    }
+}

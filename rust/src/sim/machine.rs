@@ -1,0 +1,102 @@
+//! The modeled machine: an Intel Core i7-7800X (Skylake-X), the paper's
+//! evaluation platform (§2.4, §4).
+//!
+//! Per core and cycle: two AVX-512 FMA pipes, two 64 B loads, one 64 B
+//! store, four retired µops; 32 zmm registers; 32 KB L1D, 1 MB L2,
+//! 1.375 MB/core non-inclusive shared L3. Hyperthreading and frequency
+//! scaling disabled, 2 MB pages (§4).
+
+/// Machine parameters for the analytical model. All bandwidths in bytes
+/// per cycle, capacities in bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Machine {
+    pub cores: usize,
+    /// V-wide FMA issue per cycle per core.
+    pub fma_per_cycle: f64,
+    /// Vector loads per cycle per core (L1 read ports).
+    pub loads_per_cycle: f64,
+    /// Vector stores per cycle per core.
+    pub stores_per_cycle: f64,
+    /// Retired µops per cycle per core (fused domain).
+    pub retire_per_cycle: f64,
+    /// Scalar/integer ALU µops per cycle available alongside vector work.
+    pub int_per_cycle: f64,
+    pub l1d_bytes: usize,
+    pub l2_bytes: usize,
+    /// Shared L3 capacity (total).
+    pub l3_bytes: usize,
+    /// L2→L1 fill bandwidth per core.
+    pub l2_bw: f64,
+    /// L3→L2 bandwidth per core.
+    pub l3_bw: f64,
+    /// DRAM bandwidth, total across the package.
+    pub dram_bw_total: f64,
+    /// Branch misprediction penalty in cycles.
+    pub mispredict_penalty: f64,
+    /// Fixed per-row-sweep overhead (loop setup, pointer arithmetic), cycles.
+    pub sweep_overhead: f64,
+    /// Unoverlapped serial latency per zero-check (the mask-loop dependency
+    /// chain); binds only when per-check work is small (high sparsity).
+    pub check_serial_base: f64,
+    /// Additional per-check serial cost per unit of T = R·Q/V (front-end +
+    /// register pressure of the unrolled FMA block).
+    pub check_serial_per_t: f64,
+}
+
+impl Machine {
+    /// The paper's testbed: 6-core Skylake-X i7-7800X.
+    pub fn skylake_x() -> Machine {
+        Machine {
+            cores: 6,
+            fma_per_cycle: 2.0,
+            loads_per_cycle: 2.0,
+            stores_per_cycle: 1.0,
+            retire_per_cycle: 4.0,
+            int_per_cycle: 2.0,
+            l1d_bytes: 32 * 1024,
+            l2_bytes: 1024 * 1024,
+            l3_bytes: (8.25 * 1024.0 * 1024.0) as usize,
+            // ~64 B/cycle sustained L2 read on SKX
+            l2_bw: 64.0,
+            l3_bw: 30.0,
+            // ~4 channels DDR4-2666 ≈ 85 GB/s at 3.5 GHz ≈ 24 B/cycle total
+            dram_bw_total: 24.0,
+            mispredict_penalty: 16.0,
+            sweep_overhead: 25.0,
+            check_serial_base: 8.0,
+            check_serial_per_t: 2.2,
+        }
+    }
+
+    /// A single-core variant (used by unit tests for determinism).
+    pub fn single_core() -> Machine {
+        Machine { cores: 1, ..Machine::skylake_x() }
+    }
+
+    /// DRAM bandwidth available per active core.
+    pub fn dram_bw_per_core(&self, active_cores: usize) -> f64 {
+        self.dram_bw_total / active_cores.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skylake_parameters_match_paper() {
+        let m = Machine::skylake_x();
+        assert_eq!(m.cores, 6);
+        assert_eq!(m.fma_per_cycle, 2.0);
+        assert_eq!(m.l1d_bytes, 32 * 1024);
+        assert_eq!(m.l2_bytes, 1024 * 1024);
+        assert_eq!(m.l3_bytes, (8.25 * 1024.0 * 1024.0) as usize);
+    }
+
+    #[test]
+    fn dram_bw_splits_across_cores() {
+        let m = Machine::skylake_x();
+        assert!((m.dram_bw_per_core(6) - m.dram_bw_total / 6.0).abs() < 1e-12);
+        assert_eq!(m.dram_bw_per_core(0), m.dram_bw_total);
+    }
+}

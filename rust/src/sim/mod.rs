@@ -1,0 +1,155 @@
+//! Analytical Skylake-X performance model — the testbed substitute.
+//!
+//! The paper measures wallclock on a 6-core i7-7800X; this module turns the
+//! kernels' micro-op accounting ([`crate::kernels::KernelStats`]) into
+//! cycle estimates via bottleneck analysis over the machine's issue ports,
+//! cache/DRAM bandwidths and branch predictor (see [`cost::estimate`]).
+//! All experiment outputs are *ratios* against the modeled `direct`
+//! baseline, mirroring the paper's tables.
+
+pub mod branch;
+pub mod cost;
+pub mod machine;
+
+pub use cost::{estimate, Algorithm, CycleBreakdown};
+pub use machine::Machine;
+
+use crate::kernels::stats_model;
+use crate::kernels::{Component, ConvConfig, SkipMode};
+use crate::tensor::{ActTensor, BatchTiledTensor};
+
+/// Estimate the wall cycles of one (algorithm, component) on a layer whose
+/// relevant operand has the given zero pattern.
+///
+/// For SparseTrain the pattern tensor is scanned exactly; for the dense
+/// baselines the estimate is data-independent.
+pub fn estimate_layer(
+    m: &Machine,
+    alg: Algorithm,
+    comp: Component,
+    cfg: &ConvConfig,
+    pattern: Option<&ActTensor>,
+) -> CycleBreakdown {
+    match (alg, comp) {
+        (Algorithm::SparseTrain, Component::Fwd) => {
+            let d = pattern.expect("SparseTrain FWD needs the input pattern");
+            let st = stats_model::sparse_fwd_stats(cfg, d, SkipMode::MaskLoop);
+            cost::estimate(m, alg, comp, SkipMode::MaskLoop, cfg, &st)
+        }
+        (Algorithm::SparseTrain, Component::Bwi) => {
+            let dy = pattern.expect("SparseTrain BWI needs the ∂L/∂Y pattern");
+            let st = stats_model::sparse_bwi_stats(cfg, dy, SkipMode::MaskLoop);
+            cost::estimate(m, alg, comp, SkipMode::MaskLoop, cfg, &st)
+        }
+        (Algorithm::SparseTrain, Component::Bww) => {
+            let d = pattern.expect("SparseTrain BWW needs the checked pattern");
+            let bt = BatchTiledTensor::from_act(d);
+            let st = stats_model::sparse_bww_stats(cfg, &bt, SkipMode::MaskLoop);
+            cost::estimate(m, alg, comp, SkipMode::MaskLoop, cfg, &st)
+        }
+        (Algorithm::Direct, Component::Fwd) => {
+            let st = stats_model::direct_fwd_stats(cfg);
+            cost::estimate(m, alg, comp, SkipMode::Dense, cfg, &st)
+        }
+        (Algorithm::Direct, Component::Bwi) => {
+            let st = stats_model::direct_bwi_stats(cfg);
+            cost::estimate(m, alg, comp, SkipMode::Dense, cfg, &st)
+        }
+        (Algorithm::Direct, Component::Bww) => {
+            let st = stats_model::direct_bww_stats(cfg);
+            cost::estimate(m, alg, comp, SkipMode::Dense, cfg, &st)
+        }
+        (Algorithm::Im2col, _) => {
+            // im2col cost is component-symmetric to first order (the GEMM
+            // dims permute); charge the FWD formulation.
+            let mut st = crate::kernels::KernelStats::new();
+            crate::kernels::im2col::stats_only(cfg, &mut st);
+            cost::estimate(m, alg, comp, SkipMode::Dense, cfg, &st)
+        }
+        (Algorithm::Winograd, _) => {
+            assert!(
+                crate::kernels::winograd::applicable(cfg),
+                "winograd inapplicable to {cfg:?}"
+            );
+            let mut st = crate::kernels::KernelStats::new();
+            crate::kernels::winograd::stats_only(cfg, &mut st);
+            cost::estimate(m, alg, comp, SkipMode::Dense, cfg, &st)
+        }
+        (Algorithm::OneByOne, _) => {
+            assert!(
+                crate::kernels::onebyone::applicable(cfg),
+                "1x1 kernel inapplicable to {cfg:?}"
+            );
+            let mut st = crate::kernels::KernelStats::new();
+            crate::kernels::onebyone::stats_only(cfg, &mut st);
+            cost::estimate(m, alg, comp, SkipMode::Dense, cfg, &st)
+        }
+    }
+}
+
+/// Like [`estimate_layer`], but with the SparseTrain operand modeled as an
+/// i.i.d. Bernoulli pattern of the given sparsity (closed-form expected
+/// stats — no tensor materialization). The dense baselines ignore
+/// `sparsity`.
+pub fn estimate_layer_iid(
+    m: &Machine,
+    alg: Algorithm,
+    comp: Component,
+    cfg: &ConvConfig,
+    sparsity: f64,
+) -> CycleBreakdown {
+    if alg == Algorithm::SparseTrain {
+        let st = match comp {
+            Component::Fwd => stats_model::sparse_fwd_stats_iid(cfg, sparsity, SkipMode::MaskLoop),
+            Component::Bwi => stats_model::sparse_bwi_stats_iid(cfg, sparsity, SkipMode::MaskLoop),
+            Component::Bww => stats_model::sparse_bww_stats_iid(cfg, sparsity, SkipMode::MaskLoop),
+        };
+        cost::estimate(m, alg, comp, SkipMode::MaskLoop, cfg, &st)
+    } else {
+        estimate_layer(m, alg, comp, cfg, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xorshift;
+
+    #[test]
+    fn estimate_layer_all_algorithms_run() {
+        let m = Machine::skylake_x();
+        let cfg = ConvConfig::square(16, 64, 64, 14, 3, 1);
+        let mut rng = Xorshift::new(1);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, 0.5);
+        for comp in Component::ALL {
+            let ts = estimate_layer(&m, Algorithm::SparseTrain, comp, &cfg, Some(&d));
+            let td = estimate_layer(&m, Algorithm::Direct, comp, &cfg, None);
+            assert!(ts.wall > 0.0 && td.wall > 0.0, "{comp:?}");
+        }
+        assert!(estimate_layer(&m, Algorithm::Winograd, Component::Fwd, &cfg, None).wall > 0.0);
+        assert!(estimate_layer(&m, Algorithm::Im2col, Component::Fwd, &cfg, None).wall > 0.0);
+    }
+
+    #[test]
+    fn im2col_much_slower_than_direct_on_3x3() {
+        // Paper Table 4: im2col ≈ 0.33–0.37× of direct.
+        let m = Machine::skylake_x();
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let td = estimate_layer(&m, Algorithm::Direct, Component::Fwd, &cfg, None).wall;
+        let ti = estimate_layer(&m, Algorithm::Im2col, Component::Fwd, &cfg, None).wall;
+        let ratio = td / ti;
+        assert!(ratio < 0.7, "im2col should lose clearly, ratio={ratio}");
+    }
+
+    #[test]
+    fn winograd_beats_direct_on_3x3() {
+        // Paper Table 4: winograd ≈ 1.44–1.48× of direct on stride-1 3×3.
+        let m = Machine::skylake_x();
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let td = estimate_layer(&m, Algorithm::Direct, Component::Fwd, &cfg, None).wall;
+        let tw = estimate_layer(&m, Algorithm::Winograd, Component::Fwd, &cfg, None).wall;
+        let ratio = td / tw;
+        assert!(ratio > 1.1 && ratio < 2.25, "winograd ratio={ratio}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Synthetic sparse-pattern generators (§4: "we generate synthetic input
+//! with random sparse patterns").
+
+use crate::tensor::ActTensor;
+use crate::util::prng::Xorshift;
+
+/// Zero-pattern families for robustness experiments. The paper evaluates
+/// i.i.d. random patterns; channel- and row-structured variants probe the
+/// zero-check's sensitivity to clustering (the vector mask benefits from
+/// whole-vector zeros).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// i.i.d. Bernoulli zeros (the paper's synthetic inputs).
+    Iid,
+    /// Whole channels zero with probability `s` (pruning-like structure).
+    ChannelStructured,
+    /// Contiguous zero runs along rows (spatially-correlated ReLU maps).
+    RowRuns {
+        mean_run: usize,
+    },
+}
+
+/// Fill `t` as a ReLU output with target `sparsity` under the pattern.
+pub fn fill_pattern(t: &mut ActTensor, rng: &mut Xorshift, sparsity: f64, pattern: Pattern) {
+    match pattern {
+        Pattern::Iid => t.fill_relu_sparse(rng, sparsity),
+        Pattern::ChannelStructured => {
+            for i in 0..t.n {
+                for c in 0..t.c {
+                    let zero = rng.bernoulli(sparsity);
+                    for y in 0..t.h {
+                        for x in 0..t.w {
+                            let v = if zero { 0.0 } else { 0.05 + rng.next_f32() };
+                            t.set(i, c, y, x, v);
+                        }
+                    }
+                }
+            }
+        }
+        Pattern::RowRuns { mean_run } => {
+            let mean_run = mean_run.max(1);
+            for i in 0..t.n {
+                for c in 0..t.c {
+                    for y in 0..t.h {
+                        let mut x = 0;
+                        while x < t.w {
+                            let zero = rng.bernoulli(sparsity);
+                            // geometric-ish run length around mean_run
+                            let mut run = 1 + rng.below(2 * mean_run);
+                            while run > 0 && x < t.w {
+                                let v = if zero { 0.0 } else { 0.05 + rng.next_f32() };
+                                t.set(i, c, y, x, v);
+                                x += 1;
+                                run -= 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_hits_target() {
+        let mut rng = Xorshift::new(1);
+        let mut t = ActTensor::zeros(2, 64, 16, 16);
+        fill_pattern(&mut t, &mut rng, 0.65, Pattern::Iid);
+        assert!((t.sparsity() - 0.65).abs() < 0.02);
+    }
+
+    #[test]
+    fn channel_structured_zeros_whole_channels() {
+        let mut rng = Xorshift::new(2);
+        let mut t = ActTensor::zeros(2, 64, 8, 8);
+        fill_pattern(&mut t, &mut rng, 0.5, Pattern::ChannelStructured);
+        // each (i, c) plane is all-zero or all-nonzero
+        for i in 0..2 {
+            for c in 0..64 {
+                let mut zeros = 0;
+                for y in 0..8 {
+                    for x in 0..8 {
+                        if t.get(i, c, y, x) == 0.0 {
+                            zeros += 1;
+                        }
+                    }
+                }
+                assert!(zeros == 0 || zeros == 64, "plane ({i},{c}) mixed: {zeros}");
+            }
+        }
+        assert!((t.sparsity() - 0.5).abs() < 0.15);
+    }
+
+    #[test]
+    fn row_runs_roughly_hits_target() {
+        let mut rng = Xorshift::new(3);
+        let mut t = ActTensor::zeros(2, 32, 16, 16);
+        fill_pattern(&mut t, &mut rng, 0.7, Pattern::RowRuns { mean_run: 4 });
+        assert!((t.sparsity() - 0.7).abs() < 0.08, "s={}", t.sparsity());
+    }
+}

@@ -1,0 +1,10 @@
+//! Dynamic-sparsity substrate: synthetic pattern generators, the training
+//! sparsity-trajectory model behind Figure 3, and an activation profiler.
+
+pub mod gen;
+pub mod profiler;
+pub mod trace;
+
+pub use gen::{fill_pattern, Pattern};
+pub use profiler::SparsityProfiler;
+pub use trace::{TrajectoryModel, TrajectoryParams};

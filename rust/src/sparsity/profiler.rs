@@ -1,0 +1,113 @@
+//! Activation-sparsity profiler: records per-layer ReLU-output sparsity
+//! during real training runs (used by the trainer and the end-to-end
+//! example to produce measured Fig-3-style traces).
+
+use crate::tensor::ActTensor;
+use std::collections::BTreeMap;
+
+/// Accumulates sparsity observations keyed by layer name.
+#[derive(Debug, Default, Clone)]
+pub struct SparsityProfiler {
+    /// layer → (per-step sparsity observations)
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl SparsityProfiler {
+    pub fn new() -> SparsityProfiler {
+        SparsityProfiler::default()
+    }
+
+    /// Record the sparsity of an activation tensor.
+    pub fn observe(&mut self, layer: &str, t: &ActTensor) {
+        self.observe_value(layer, t.sparsity());
+    }
+
+    /// Record a pre-computed sparsity value (e.g. from PJRT outputs).
+    pub fn observe_value(&mut self, layer: &str, sparsity: f64) {
+        assert!((0.0..=1.0).contains(&sparsity), "sparsity {sparsity} out of range");
+        self.samples.entry(layer.to_string()).or_default().push(sparsity);
+    }
+
+    pub fn layers(&self) -> Vec<&str> {
+        self.samples.keys().map(String::as_str).collect()
+    }
+
+    /// All observations for a layer, in arrival order.
+    pub fn series(&self, layer: &str) -> Option<&[f64]> {
+        self.samples.get(layer).map(Vec::as_slice)
+    }
+
+    /// Mean sparsity for a layer.
+    pub fn mean(&self, layer: &str) -> Option<f64> {
+        self.series(layer).map(crate::util::stats::mean)
+    }
+
+    /// Mean sparsity over the most recent `window` observations — the
+    /// signal the dynamic algorithm selector uses (§5.3's "profile the
+    /// sparsity of each layer at intervals" suggestion).
+    pub fn recent_mean(&self, layer: &str, window: usize) -> Option<f64> {
+        self.series(layer).map(|s| {
+            let tail = &s[s.len().saturating_sub(window)..];
+            crate::util::stats::mean(tail)
+        })
+    }
+
+    /// Render a compact report table.
+    pub fn report(&self) -> crate::util::table::Table {
+        let mut t = crate::util::table::Table::new("ReLU output sparsity (measured)")
+            .header(&["layer", "mean", "first", "last", "n"]);
+        for (layer, s) in &self.samples {
+            t.row_strings(vec![
+                layer.clone(),
+                format!("{:.3}", crate::util::stats::mean(s)),
+                format!("{:.3}", s.first().copied().unwrap_or(0.0)),
+                format!("{:.3}", s.last().copied().unwrap_or(0.0)),
+                s.len().to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xorshift;
+
+    #[test]
+    fn observes_and_aggregates() {
+        let mut p = SparsityProfiler::new();
+        let mut rng = Xorshift::new(4);
+        let mut t = ActTensor::zeros(1, 16, 8, 8);
+        t.fill_relu_sparse(&mut rng, 0.6);
+        p.observe("conv1", &t);
+        t.fill_relu_sparse(&mut rng, 0.8);
+        p.observe("conv1", &t);
+        let m = p.mean("conv1").unwrap();
+        assert!((m - 0.7).abs() < 0.05, "mean={m}");
+        assert_eq!(p.series("conv1").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn recent_mean_windows() {
+        let mut p = SparsityProfiler::new();
+        for s in [0.1, 0.2, 0.8, 0.9] {
+            p.observe_value("l", s);
+        }
+        assert!((p.recent_mean("l", 2).unwrap() - 0.85).abs() < 1e-12);
+        assert!((p.recent_mean("l", 100).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_layer_is_none() {
+        let p = SparsityProfiler::new();
+        assert!(p.mean("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_invalid_sparsity() {
+        let mut p = SparsityProfiler::new();
+        p.observe_value("l", 1.5);
+    }
+}

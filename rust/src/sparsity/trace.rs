@@ -1,0 +1,197 @@
+//! Sparsity-trajectory model for Figure 3.
+//!
+//! The paper profiles ReLU-output sparsity over 100-epoch ImageNet training
+//! of ResNet-34/50/Fixup-50 and reports (§5.3, after Rhu et al. [30]):
+//! * sparsity starts near 50 % (weights centered at 0);
+//! * rises rapidly in the first several epochs, then slowly decreases;
+//! * later layers are sparser than earlier layers;
+//! * residual shortcuts add positive bias to block outputs → the ReLU after
+//!   each block is *less* sparse, producing a periodic fluctuation across
+//!   adjacent layers — more pronounced in ResNet-34 and Fixup ResNet-50
+//!   than in ResNet-50.
+//!
+//! We have no 100-epoch ImageNet budget, so this parametric model generates
+//! the trajectories; its *shape* is validated against a real (small-scale)
+//! training run by `examples/end_to_end_train.rs`, which logs measured
+//! per-layer sparsity from the PJRT-executed trainer.
+
+/// Parameters of the trajectory model for one network.
+#[derive(Debug, Clone, Copy)]
+pub struct TrajectoryParams {
+    /// Initial sparsity at epoch 0 (≈ 0.5 by the ReLU argument).
+    pub s0: f64,
+    /// Peak sparsity gain at the deepest layer.
+    pub depth_gain: f64,
+    /// Epochs to reach the early peak.
+    pub ramp_epochs: f64,
+    /// Slow late-training decay per epoch.
+    pub decay_per_epoch: f64,
+    /// Magnitude of the residual-shortcut dip on post-block ReLUs.
+    pub shortcut_dip: f64,
+    /// Layers per residual block (dip period); 0 disables fluctuation.
+    pub block_period: usize,
+}
+
+impl TrajectoryParams {
+    pub fn vgg16() -> TrajectoryParams {
+        TrajectoryParams {
+            s0: 0.5,
+            depth_gain: 0.42,
+            ramp_epochs: 8.0,
+            decay_per_epoch: 0.0008,
+            shortcut_dip: 0.0,
+            block_period: 0,
+        }
+    }
+
+    pub fn resnet34() -> TrajectoryParams {
+        TrajectoryParams {
+            s0: 0.5,
+            depth_gain: 0.38,
+            ramp_epochs: 10.0,
+            decay_per_epoch: 0.0009,
+            shortcut_dip: 0.18,
+            block_period: 2,
+        }
+    }
+
+    pub fn resnet50() -> TrajectoryParams {
+        TrajectoryParams {
+            s0: 0.5,
+            depth_gain: 0.30,
+            ramp_epochs: 10.0,
+            decay_per_epoch: 0.0010,
+            shortcut_dip: 0.08,
+            block_period: 3,
+        }
+    }
+
+    pub fn fixup_resnet50() -> TrajectoryParams {
+        TrajectoryParams {
+            s0: 0.5,
+            depth_gain: 0.34,
+            ramp_epochs: 9.0,
+            decay_per_epoch: 0.0009,
+            shortcut_dip: 0.16,
+            block_period: 3,
+        }
+    }
+}
+
+/// Generates per-layer, per-epoch ReLU-output sparsity.
+#[derive(Debug, Clone)]
+pub struct TrajectoryModel {
+    pub params: TrajectoryParams,
+    pub layers: usize,
+    pub epochs: usize,
+}
+
+impl TrajectoryModel {
+    pub fn new(params: TrajectoryParams, layers: usize, epochs: usize) -> TrajectoryModel {
+        TrajectoryModel { params, layers, epochs }
+    }
+
+    /// Sparsity of `layer` (0-based, input side → output side) at `epoch`.
+    pub fn sparsity(&self, layer: usize, epoch: usize) -> f64 {
+        let p = &self.params;
+        let depth = if self.layers > 1 {
+            layer as f64 / (self.layers - 1) as f64
+        } else {
+            1.0
+        };
+        // depth profile: later layers sparser (concave ramp)
+        let depth_target = p.s0 + p.depth_gain * depth.powf(0.7);
+        // time profile: fast ramp to the target, then slow decay
+        let e = epoch as f64;
+        let ramp = 1.0 - (-e / p.ramp_epochs).exp();
+        let decay = 1.0 - p.decay_per_epoch * (e - p.ramp_epochs).max(0.0);
+        let mut s = p.s0 + (depth_target - p.s0) * ramp;
+        s *= decay;
+        // residual fluctuation: the ReLU right after a shortcut-add is less
+        // sparse (positive bias from the skip path)
+        if p.block_period > 0 && (layer + 1) % p.block_period == 0 {
+            s -= p.shortcut_dip * ramp;
+        }
+        s.clamp(0.05, 0.97)
+    }
+
+    /// Mean sparsity of a layer across all epochs (drives the Fig-4/Table-6
+    /// static projections).
+    pub fn mean_sparsity(&self, layer: usize) -> f64 {
+        (0..self.epochs).map(|e| self.sparsity(layer, e)).sum::<f64>() / self.epochs as f64
+    }
+
+    /// The full trajectory matrix `[layer][epoch]`.
+    pub fn matrix(&self) -> Vec<Vec<f64>> {
+        (0..self.layers)
+            .map(|l| (0..self.epochs).map(|e| self.sparsity(l, e)).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TrajectoryModel {
+        TrajectoryModel::new(TrajectoryParams::resnet34(), 32, 100)
+    }
+
+    #[test]
+    fn starts_near_half() {
+        let m = model();
+        for l in 0..m.layers {
+            let s = m.sparsity(l, 0);
+            assert!((0.25..0.6).contains(&s), "layer {l} epoch0 s={s}");
+        }
+    }
+
+    #[test]
+    fn ramps_up_then_slowly_decays() {
+        let m = model();
+        let l = 20;
+        let early = m.sparsity(l, 0);
+        let peak = m.sparsity(l, 30);
+        let late = m.sparsity(l, 99);
+        assert!(peak > early + 0.1, "no ramp: {early} → {peak}");
+        assert!(late < peak, "no late decay: {peak} → {late}");
+        assert!(late > peak - 0.15, "decay too fast");
+    }
+
+    #[test]
+    fn later_layers_sparser() {
+        let m = TrajectoryModel::new(TrajectoryParams::vgg16(), 12, 100);
+        let early_layer = m.mean_sparsity(1);
+        let late_layer = m.mean_sparsity(10);
+        assert!(late_layer > early_layer + 0.1);
+    }
+
+    #[test]
+    fn vgg_reaches_80_plus_on_late_layers() {
+        // Rhu et al.: most VGG16 layers over 80 % sparse on average.
+        let m = TrajectoryModel::new(TrajectoryParams::vgg16(), 12, 100);
+        assert!(m.mean_sparsity(11) > 0.8, "{}", m.mean_sparsity(11));
+    }
+
+    #[test]
+    fn residual_fluctuation_present_and_stronger_in_resnet34() {
+        let m34 = TrajectoryModel::new(TrajectoryParams::resnet34(), 32, 100);
+        let m50 = TrajectoryModel::new(TrajectoryParams::resnet50(), 48, 100);
+        // dip at block boundary vs neighbor
+        let dip34 = m34.mean_sparsity(14) - m34.mean_sparsity(15); // 16th layer ends block
+        let dip50 = m50.mean_sparsity(13) - m50.mean_sparsity(14);
+        assert!(dip34 > 0.05, "resnet34 dip missing: {dip34}");
+        assert!(dip34 > dip50, "fluctuation should be stronger in resnet34");
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        let m = model();
+        for l in 0..m.layers {
+            for e in 0..m.epochs {
+                let s = m.sparsity(l, e);
+                assert!((0.0..=1.0).contains(&s));
+            }
+        }
+    }
+}

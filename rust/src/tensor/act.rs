@@ -1,0 +1,211 @@
+//! Activation tensor in NCHWc layout (§3.2.5): dims `[N][C/V][H][W][V]`.
+//!
+//! The channel tile of size V is the lowest dimension, aligned with the SIMD
+//! width and the cache-line size on the paper's platform, so a vector
+//! load/compare/FMA touches exactly one `[f32; V]` slice.
+
+use super::{assert_tiled, fill_relu_sparse, fill_uniform, measured_sparsity};
+use crate::util::prng::Xorshift;
+use crate::V;
+
+/// NCHWc-tiled activation tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActTensor {
+    /// Minibatch size.
+    pub n: usize,
+    /// Channels (multiple of V).
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    data: Vec<f32>,
+}
+
+impl ActTensor {
+    /// Zero-initialized tensor.
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> ActTensor {
+        assert_tiled(c, "C");
+        ActTensor { n, c, h, w, data: vec![0.0; n * c * h * w] }
+    }
+
+    /// Number of channel tiles `C/V`.
+    #[inline]
+    pub fn c_blocks(&self) -> usize {
+        self.c / V
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat offset of the V-vector at (i, cb, y, x).
+    #[inline(always)]
+    pub fn vec_offset(&self, i: usize, cb: usize, y: usize, x: usize) -> usize {
+        debug_assert!(i < self.n && cb < self.c_blocks() && y < self.h && x < self.w);
+        (((i * self.c_blocks() + cb) * self.h + y) * self.w + x) * V
+    }
+
+    /// Channel vector at (i, cb, y, x) as a `[f32; V]` slice.
+    #[inline(always)]
+    pub fn vec(&self, i: usize, cb: usize, y: usize, x: usize) -> &[f32] {
+        let o = self.vec_offset(i, cb, y, x);
+        &self.data[o..o + V]
+    }
+
+    /// Mutable channel vector.
+    #[inline(always)]
+    pub fn vec_mut(&mut self, i: usize, cb: usize, y: usize, x: usize) -> &mut [f32] {
+        let o = self.vec_offset(i, cb, y, x);
+        &mut self.data[o..o + V]
+    }
+
+    /// Scalar accessor in logical NCHW coordinates (for references/tests).
+    #[inline]
+    pub fn get(&self, i: usize, c: usize, y: usize, x: usize) -> f32 {
+        self.data[self.vec_offset(i, c / V, y, x) + c % V]
+    }
+
+    /// Scalar setter in logical NCHW coordinates.
+    #[inline]
+    pub fn set(&mut self, i: usize, c: usize, y: usize, x: usize, v: f32) {
+        let o = self.vec_offset(i, c / V, y, x) + c % V;
+        self.data[o] = v;
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// A whole image row (W consecutive V-vectors) for one (i, cb, y).
+    #[inline(always)]
+    pub fn row(&self, i: usize, cb: usize, y: usize) -> &[f32] {
+        let o = self.vec_offset(i, cb, y, 0);
+        &self.data[o..o + self.w * V]
+    }
+
+    /// Mutable image row.
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize, cb: usize, y: usize) -> &mut [f32] {
+        let o = self.vec_offset(i, cb, y, 0);
+        &mut self.data[o..o + self.w * V]
+    }
+
+    /// Fill with uniform random values in `[lo, hi)`.
+    pub fn fill_uniform(&mut self, rng: &mut Xorshift, lo: f32, hi: f32) {
+        fill_uniform(&mut self.data, rng, lo, hi);
+    }
+
+    /// Fill as a ReLU output with the given dynamic sparsity.
+    pub fn fill_relu_sparse(&mut self, rng: &mut Xorshift, sparsity: f64) {
+        fill_relu_sparse(&mut self.data, rng, sparsity);
+    }
+
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Fraction of zero elements.
+    pub fn sparsity(&self) -> f64 {
+        measured_sparsity(&self.data)
+    }
+
+    /// Convert from a plain NCHW buffer (tests / PJRT interchange).
+    pub fn from_nchw(n: usize, c: usize, h: usize, w: usize, src: &[f32]) -> ActTensor {
+        assert_eq!(src.len(), n * c * h * w);
+        let mut t = ActTensor::zeros(n, c, h, w);
+        for i in 0..n {
+            for ch in 0..c {
+                for y in 0..h {
+                    for x in 0..w {
+                        t.set(i, ch, y, x, src[((i * c + ch) * h + y) * w + x]);
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Convert to a plain NCHW buffer.
+    pub fn to_nchw(&self) -> Vec<f32> {
+        let (n, c, h, w) = (self.n, self.c, self.h, self.w);
+        let mut out = vec![0.0; n * c * h * w];
+        for i in 0..n {
+            for ch in 0..c {
+                for y in 0..h {
+                    for x in 0..w {
+                        out[((i * c + ch) * h + y) * w + x] = self.get(i, ch, y, x);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes occupied by the tensor payload.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nchw() {
+        let (n, c, h, w) = (2, 32, 3, 5);
+        let src: Vec<f32> = (0..n * c * h * w).map(|i| i as f32).collect();
+        let t = ActTensor::from_nchw(n, c, h, w, &src);
+        assert_eq!(t.to_nchw(), src);
+    }
+
+    #[test]
+    fn vec_is_channel_tile() {
+        let mut t = ActTensor::zeros(1, 32, 2, 2);
+        for ch in 0..32 {
+            t.set(0, ch, 1, 1, ch as f32);
+        }
+        let v0 = t.vec(0, 0, 1, 1);
+        let v1 = t.vec(0, 1, 1, 1);
+        assert_eq!(v0, (0..16).map(|x| x as f32).collect::<Vec<_>>().as_slice());
+        assert_eq!(v1, (16..32).map(|x| x as f32).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn row_is_contiguous_w_vectors() {
+        let mut t = ActTensor::zeros(1, 16, 2, 4);
+        for x in 0..4 {
+            t.set(0, 3, 1, x, x as f32 + 1.0);
+        }
+        let row = t.row(0, 0, 1);
+        assert_eq!(row.len(), 4 * V);
+        for x in 0..4 {
+            assert_eq!(row[x * V + 3], x as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn sparsity_measures() {
+        let mut rng = Xorshift::new(1);
+        let mut t = ActTensor::zeros(2, 64, 8, 8);
+        t.fill_relu_sparse(&mut rng, 0.5);
+        assert!((t.sparsity() - 0.5).abs() < 0.03);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_untiled_channels() {
+        ActTensor::zeros(1, 17, 2, 2);
+    }
+}

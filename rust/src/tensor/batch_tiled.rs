@@ -1,0 +1,127 @@
+//! BWW input layout (§3.4): dims `[N/V][C][H][W][V_n]`.
+//!
+//! BWW vectorizes the zero-check along the minibatch dimension (so all V
+//! lanes update the same dG vectors, avoiding register spills); the input D
+//! is transposed so the lowest dimension is a minibatch tile of size V and
+//! the check needs no gather.
+
+use super::{assert_tiled, measured_sparsity};
+use crate::tensor::ActTensor;
+use crate::V;
+
+/// N-tiled activation tensor used as the BWW input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchTiledTensor {
+    /// Minibatch size (multiple of V).
+    pub n: usize,
+    /// Channels.
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    data: Vec<f32>,
+}
+
+impl BatchTiledTensor {
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> BatchTiledTensor {
+        assert_tiled(n, "N");
+        BatchTiledTensor { n, c, h, w, data: vec![0.0; n * c * h * w] }
+    }
+
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.n / V
+    }
+
+    /// Flat offset of the minibatch V-vector at (nb, c, y, x).
+    #[inline(always)]
+    pub fn vec_offset(&self, nb: usize, c: usize, y: usize, x: usize) -> usize {
+        debug_assert!(nb < self.n_blocks() && c < self.c && y < self.h && x < self.w);
+        (((nb * self.c + c) * self.h + y) * self.w + x) * V
+    }
+
+    /// Minibatch vector `D[nb*V .. nb*V+V, c, y, x]`.
+    #[inline(always)]
+    pub fn vec(&self, nb: usize, c: usize, y: usize, x: usize) -> &[f32] {
+        let o = self.vec_offset(nb, c, y, x);
+        &self.data[o..o + V]
+    }
+
+    /// Scalar accessor in logical (i, c, y, x) coordinates.
+    #[inline]
+    pub fn get(&self, i: usize, c: usize, y: usize, x: usize) -> f32 {
+        self.data[self.vec_offset(i / V, c, y, x) + i % V]
+    }
+
+    /// Scalar setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, c: usize, y: usize, x: usize, v: f32) {
+        let o = self.vec_offset(i / V, c, y, x) + i % V;
+        self.data[o] = v;
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Transpose from the NCHWc activation layout (the explicit data-layout
+    /// transformation the paper performs before BWW).
+    pub fn from_act(src: &ActTensor) -> BatchTiledTensor {
+        let mut t = BatchTiledTensor::zeros(src.n, src.c, src.h, src.w);
+        for i in 0..src.n {
+            for c in 0..src.c {
+                for y in 0..src.h {
+                    for x in 0..src.w {
+                        t.set(i, c, y, x, src.get(i, c, y, x));
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        measured_sparsity(&self.data)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xorshift;
+
+    #[test]
+    fn transpose_preserves_values() {
+        let mut rng = Xorshift::new(7);
+        let mut a = ActTensor::zeros(16, 32, 3, 4);
+        a.fill_uniform(&mut rng, -1.0, 1.0);
+        let b = BatchTiledTensor::from_act(&a);
+        for i in 0..16 {
+            for c in 0..32 {
+                for y in 0..3 {
+                    for x in 0..4 {
+                        assert_eq!(b.get(i, c, y, x), a.get(i, c, y, x));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vec_is_minibatch_tile() {
+        let mut t = BatchTiledTensor::zeros(16, 4, 2, 2);
+        for i in 0..16 {
+            t.set(i, 2, 1, 0, i as f32);
+        }
+        assert_eq!(t.vec(0, 2, 1, 0), (0..16).map(|x| x as f32).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_untiled_batch() {
+        BatchTiledTensor::zeros(10, 4, 2, 2);
+    }
+}

@@ -1,0 +1,242 @@
+//! Filter tensor in the layout §3.2.5 prescribes:
+//! dims `[K/V][C/V][S][R][V_c][V_k]`.
+//!
+//! Lowest dimension is an output-channel (K) vector of length V — the FMA
+//! memory operand. Next is the input channel within a C-tile, then the
+//! filter width R, so that while the kernel works on input channel `c` the
+//! hardware prefetcher pulls the filter vectors for `c+1`.
+
+use super::{assert_tiled, fill_uniform};
+use crate::util::prng::Xorshift;
+use crate::V;
+
+/// Tiled filter tensor (G or ∂L/∂G).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FilterTensor {
+    /// Output channels (multiple of V).
+    pub k: usize,
+    /// Input channels (multiple of V).
+    pub c: usize,
+    /// Filter height S.
+    pub s: usize,
+    /// Filter width R.
+    pub r: usize,
+    data: Vec<f32>,
+}
+
+impl FilterTensor {
+    pub fn zeros(k: usize, c: usize, s: usize, r: usize) -> FilterTensor {
+        assert_tiled(k, "K");
+        assert_tiled(c, "C");
+        FilterTensor { k, c, s, r, data: vec![0.0; k * c * s * r] }
+    }
+
+    #[inline]
+    pub fn k_blocks(&self) -> usize {
+        self.k / V
+    }
+
+    #[inline]
+    pub fn c_blocks(&self) -> usize {
+        self.c / V
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat offset of the K-vector for (kb, cb, s, r, cv):
+    /// `((((kb*CB + cb)*S + s)*R + r)*V + cv)*V`.
+    #[inline(always)]
+    pub fn vec_offset(&self, kb: usize, cb: usize, s: usize, r: usize, cv: usize) -> usize {
+        debug_assert!(
+            kb < self.k_blocks() && cb < self.c_blocks() && s < self.s && r < self.r && cv < V
+        );
+        ((((kb * self.c_blocks() + cb) * self.s + s) * self.r + r) * V + cv) * V
+    }
+
+    /// K-vector of filter weights for input channel `cb*V+cv`, tap (s, r).
+    #[inline(always)]
+    pub fn vec(&self, kb: usize, cb: usize, s: usize, r: usize, cv: usize) -> &[f32] {
+        let o = self.vec_offset(kb, cb, s, r, cv);
+        &self.data[o..o + V]
+    }
+
+    /// Mutable K-vector.
+    #[inline(always)]
+    pub fn vec_mut(&mut self, kb: usize, cb: usize, s: usize, r: usize, cv: usize) -> &mut [f32] {
+        let o = self.vec_offset(kb, cb, s, r, cv);
+        &mut self.data[o..o + V]
+    }
+
+    /// Scalar accessor in logical KCSR coordinates (for references/tests).
+    #[inline]
+    pub fn get(&self, k: usize, c: usize, s: usize, r: usize) -> f32 {
+        self.data[self.vec_offset(k / V, c / V, s, r, c % V) + k % V]
+    }
+
+    /// Scalar setter in logical KCSR coordinates.
+    #[inline]
+    pub fn set(&mut self, k: usize, c: usize, s: usize, r: usize, v: f32) {
+        let o = self.vec_offset(k / V, c / V, s, r, c % V) + k % V;
+        self.data[o] = v;
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Fill with uniform random weights (centered at 0, as after init).
+    pub fn fill_uniform(&mut self, rng: &mut Xorshift, lo: f32, hi: f32) {
+        fill_uniform(&mut self.data, rng, lo, hi);
+    }
+
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Convert from a plain KCSR (i.e. KCHW-of-filters) buffer.
+    pub fn from_kcsr(k: usize, c: usize, s: usize, r: usize, src: &[f32]) -> FilterTensor {
+        assert_eq!(src.len(), k * c * s * r);
+        let mut t = FilterTensor::zeros(k, c, s, r);
+        for ko in 0..k {
+            for co in 0..c {
+                for si in 0..s {
+                    for ri in 0..r {
+                        t.set(ko, co, si, ri, src[((ko * c + co) * s + si) * r + ri]);
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Convert to a plain KCSR buffer.
+    pub fn to_kcsr(&self) -> Vec<f32> {
+        let (k, c, s, r) = (self.k, self.c, self.s, self.r);
+        let mut out = vec![0.0; k * c * s * r];
+        for ko in 0..k {
+            for co in 0..c {
+                for si in 0..s {
+                    for ri in 0..r {
+                        out[((ko * c + co) * s + si) * r + ri] = self.get(ko, co, si, ri);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Channel transpose (K↔C swapped, taps unchanged):
+    /// `G'[c,k,s,r] = G[k,c,s,r]`. This is the filter copy the BWI scatter
+    /// kernel keeps so its FMA memory operand is a C-vector.
+    pub fn transpose_channels(&self) -> FilterTensor {
+        let mut t = FilterTensor::zeros(self.c, self.k, self.s, self.r);
+        for ko in 0..self.k {
+            for co in 0..self.c {
+                for si in 0..self.s {
+                    for ri in 0..self.r {
+                        t.set(co, ko, si, ri, self.get(ko, co, si, ri));
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// The transposed filter view used by BWI: BWI convolves ∂L/∂Y with the
+    /// filters transposed (K↔C swapped, taps mirrored). Produces a new
+    /// FilterTensor with k=self.c, c=self.k, G'[c,k,s,r] = G[k,c,S-1-s,R-1-r].
+    pub fn transpose_for_bwi(&self) -> FilterTensor {
+        let mut t = FilterTensor::zeros(self.c, self.k, self.s, self.r);
+        for ko in 0..self.k {
+            for co in 0..self.c {
+                for si in 0..self.s {
+                    for ri in 0..self.r {
+                        t.set(
+                            co,
+                            ko,
+                            self.s - 1 - si,
+                            self.r - 1 - ri,
+                            self.get(ko, co, si, ri),
+                        );
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_kcsr() {
+        let (k, c, s, r) = (32, 16, 3, 3);
+        let src: Vec<f32> = (0..k * c * s * r).map(|i| i as f32).collect();
+        let t = FilterTensor::from_kcsr(k, c, s, r, &src);
+        assert_eq!(t.to_kcsr(), src);
+    }
+
+    #[test]
+    fn vec_is_k_tile() {
+        let mut t = FilterTensor::zeros(32, 16, 1, 1);
+        for ko in 0..32 {
+            t.set(ko, 5, 0, 0, ko as f32);
+        }
+        assert_eq!(t.vec(0, 0, 0, 0, 5), (0..16).map(|x| x as f32).collect::<Vec<_>>().as_slice());
+        assert_eq!(
+            t.vec(1, 0, 0, 0, 5),
+            (16..32).map(|x| x as f32).collect::<Vec<_>>().as_slice()
+        );
+    }
+
+    #[test]
+    fn bwi_transpose_swaps_and_mirrors() {
+        let mut rng = Xorshift::new(3);
+        let mut g = FilterTensor::zeros(16, 32, 3, 3);
+        g.fill_uniform(&mut rng, -1.0, 1.0);
+        let gt = g.transpose_for_bwi();
+        assert_eq!((gt.k, gt.c, gt.s, gt.r), (32, 16, 3, 3));
+        for ko in 0..16 {
+            for co in 0..32 {
+                for si in 0..3 {
+                    for ri in 0..3 {
+                        assert_eq!(gt.get(co, ko, 2 - si, 2 - ri), g.get(ko, co, si, ri));
+                    }
+                }
+            }
+        }
+        // double transpose is identity
+        let gtt = gt.transpose_for_bwi();
+        assert_eq!(gtt.to_kcsr(), g.to_kcsr());
+    }
+
+    #[test]
+    fn filter_layout_r_strides() {
+        // Vectors for consecutive r must be V*V apart (the prefetch-friendly
+        // property: R is above [Vc][Vk]).
+        let t = FilterTensor::zeros(16, 16, 3, 3);
+        let o0 = t.vec_offset(0, 0, 0, 0, 0);
+        let o1 = t.vec_offset(0, 0, 0, 1, 0);
+        assert_eq!(o1 - o0, V * V);
+        // consecutive cv are V apart
+        assert_eq!(t.vec_offset(0, 0, 0, 0, 1) - o0, V);
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiled tensor layouts from §3.2.5 of the paper.
+//!
+//! * [`ActTensor`] — activations (D, Y, ∂L/∂D, ∂L/∂Y) in **NCHWc** layout:
+//!   the lowest dimension is a channel tile of size [`V`](crate::V), so a
+//!   vector instruction (or a Rust `[f32; V]` loop the compiler vectorizes)
+//!   operates on one cache line of channel data.
+//! * [`FilterTensor`] — weights (G, ∂L/∂G) with lowest dim an output-channel
+//!   (K) vector of length V, then the input channel within a C-tile, then
+//!   the filter width R — the exact layout §3.2.5 chooses so the hardware
+//!   prefetcher streams the next input channel's filter vectors.
+//! * [`BatchTiledTensor`] — the BWW input layout (§3.4): lowest dimension is
+//!   a minibatch tile of size V so the zero-check vectorizes along N.
+//!
+//! All layouts require the tiled dimension (C, K, or N) to be a multiple of
+//! V; the paper's evaluated configurations (Table 2, batch 16) all satisfy
+//! this, and §5.4 notes the same restriction for BWW.
+
+mod act;
+mod batch_tiled;
+mod filter;
+
+pub use act::ActTensor;
+pub use batch_tiled::BatchTiledTensor;
+pub use filter::FilterTensor;
+
+use crate::util::prng::Xorshift;
+use crate::V;
+
+/// Shared helpers for filling tensors.
+pub(crate) fn fill_uniform(data: &mut [f32], rng: &mut Xorshift, lo: f32, hi: f32) {
+    for x in data.iter_mut() {
+        *x = rng.range_f32(lo, hi);
+    }
+}
+
+/// Zero out elements with probability `sparsity`, emulating a ReLU output
+/// with the given dynamic sparsity. Nonzero values stay strictly positive
+/// (as a real ReLU output would be).
+pub(crate) fn fill_relu_sparse(data: &mut [f32], rng: &mut Xorshift, sparsity: f64) {
+    for x in data.iter_mut() {
+        if rng.bernoulli(sparsity) {
+            *x = 0.0;
+        } else {
+            // strictly positive, bounded away from 0
+            *x = 0.05 + rng.next_f32();
+        }
+    }
+}
+
+/// Measured fraction of zeros in a buffer.
+pub(crate) fn measured_sparsity(data: &[f32]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter().filter(|&&x| x == 0.0).count() as f64 / data.len() as f64
+}
+
+/// Maximum absolute difference between two buffers.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "buffer length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Relative tolerance check used by kernel equivalence tests: passes when
+/// `|a-b| <= atol + rtol*max(|a|,|b|)` element-wise.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * x.abs().max(y.abs()))
+}
+
+/// Assert that a channel-like dimension is tileable by V.
+#[inline]
+pub(crate) fn assert_tiled(dim: usize, name: &str) {
+    assert!(
+        dim % V == 0 && dim > 0,
+        "{name}={dim} must be a positive multiple of V={V}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_sparse_fill_hits_target() {
+        let mut rng = Xorshift::new(5);
+        let mut buf = vec![1.0f32; 100_000];
+        fill_relu_sparse(&mut buf, &mut rng, 0.7);
+        let s = measured_sparsity(&buf);
+        assert!((s - 0.7).abs() < 0.01, "sparsity={s}");
+        assert!(buf.iter().all(|&x| x == 0.0 || x > 0.0));
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.1], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6));
+    }
+
+    #[test]
+    #[should_panic(expected = "must be a positive multiple")]
+    fn tiled_assert_fires() {
+        assert_tiled(17, "C");
+    }
+}

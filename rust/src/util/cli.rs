@@ -1,0 +1,159 @@
+//! Minimal command-line argument parsing (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Unknown flags produce an error listing valid options.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options (`--k v`), flags (`--k`) and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) given the set of
+    /// recognized value-taking options and boolean flags.
+    pub fn parse_tokens(
+        tokens: &[String],
+        value_opts: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if bool_flags.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                    out.flags.push(key);
+                } else if value_opts.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    out.opts.insert(key, val);
+                } else {
+                    return Err(format!(
+                        "unknown option --{key}; valid options: {}, flags: {}",
+                        value_opts.join(", "),
+                        bool_flags.join(", ")
+                    ));
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(value_opts: &[&str], bool_flags: &[&str]) -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_tokens(&tokens, value_opts, bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument, used as the subcommand name.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positionals() {
+        let a = Args::parse_tokens(
+            &toks(&["sweep", "--layer", "vgg3_2", "--host", "--iters=5"]),
+            &["layer", "iters"],
+            &["host"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand(), Some("sweep"));
+        assert_eq!(a.get("layer"), Some("vgg3_2"));
+        assert!(a.flag("host"));
+        assert_eq!(a.get_usize("iters", 1).unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = Args::parse_tokens(&toks(&["--nope"]), &["layer"], &["host"]).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse_tokens(&toks(&["--layer"]), &["layer"], &[]).unwrap_err();
+        assert!(e.contains("requires a value"));
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        let e = Args::parse_tokens(&toks(&["--host=1"]), &[], &["host"]).unwrap_err();
+        assert!(e.contains("does not take a value"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_tokens(&[], &["iters"], &[]).unwrap();
+        assert_eq!(a.get_usize("iters", 7).unwrap(), 7);
+        assert_eq!(a.get_or("iters", "x"), "x");
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = Args::parse_tokens(&toks(&["--iters", "abc"]), &["iters"], &[]).unwrap();
+        assert!(a.get_usize("iters", 1).is_err());
+    }
+}

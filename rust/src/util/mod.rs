@@ -1,0 +1,16 @@
+//! Substrate utilities built from scratch.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so everything a well-maintained project would normally pull from
+//! crates.io (`rand`, `rayon`, `clap`, `criterion`, `proptest`, …) is
+//! implemented here as small, tested modules.
+
+pub mod cli;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+pub use prng::Xorshift;
+pub use stats::{geomean, mean, median, percentile, stddev};

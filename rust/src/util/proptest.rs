@@ -1,0 +1,203 @@
+//! A miniature property-based testing framework (offline substitute for
+//! `proptest`), used for coordinator and kernel invariants.
+//!
+//! Features: seeded case generation, failure shrinking for integer-vector
+//! inputs, and readable counterexample reports via panic messages.
+
+use crate::util::prng::Xorshift;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE, max_shrink_steps: 512 }
+    }
+}
+
+/// A generator of values of type `T` from a PRNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Xorshift) -> T;
+    /// Candidate "smaller" versions of a failing value (one shrink step).
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform usize in `[lo, hi]` inclusive; shrinks toward `lo`.
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen<usize> for UsizeIn {
+    fn generate(&self, rng: &mut Xorshift) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 in `[lo, hi)`; shrinks toward lo and 0 (if representable in range).
+pub struct F64In {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen<f64> for F64In {
+    fn generate(&self, rng: &mut Xorshift) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = vec![self.lo];
+        if self.lo <= 0.0 && 0.0 < self.hi && *v != 0.0 {
+            out.push(0.0);
+        }
+        out.push(self.lo + (*v - self.lo) / 2.0);
+        out.retain(|x| x != v);
+        out
+    }
+}
+
+/// Vector of usizes with length in `[min_len, max_len]`, elements from
+/// `elem`. Shrinks by removing elements and shrinking single elements.
+pub struct VecOfUsize {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub elem: UsizeIn,
+}
+
+impl Gen<Vec<usize>> for VecOfUsize {
+    fn generate(&self, rng: &mut Xorshift) -> Vec<usize> {
+        let len = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // drop first half / second half / one element
+            out.push(v[v.len() / 2..].to_vec());
+            out.push(v[..v.len() / 2].to_vec());
+            let mut one_less = v.clone();
+            one_less.pop();
+            out.push(one_less);
+        }
+        // shrink the largest element
+        if let Some((i, _)) = v.iter().enumerate().max_by_key(|(_, &x)| x) {
+            for smaller in self.elem.shrink(&v[i]) {
+                let mut w = v.clone();
+                w[i] = smaller;
+                out.push(w);
+            }
+        }
+        out.retain(|w| w.len() >= self.min_len);
+        out
+    }
+}
+
+/// Run a property: `prop` returns `Ok(())` or `Err(description)`.
+/// Panics with the (shrunk) counterexample if the property fails.
+pub fn check<T, G, P>(cfg: Config, gen: &G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Xorshift::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}):\n  input: {best:?}\n  error: {best_msg}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default(), &UsizeIn { lo: 0, hi: 100 }, |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(Config::default(), &UsizeIn { lo: 0, hi: 100 }, |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_to_minimal_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            check(Config { cases: 64, seed: 3, max_shrink_steps: 1024 }, &UsizeIn { lo: 0, hi: 1000 }, |&x| {
+                if x < 500 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal failing input is 500
+        assert!(msg.contains("input: 500"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let gen = VecOfUsize { min_len: 1, max_len: 8, elem: UsizeIn { lo: 2, hi: 5 } };
+        let mut rng = Xorshift::new(1);
+        for _ in 0..200 {
+            let v = gen.generate(&mut rng);
+            assert!((1..=8).contains(&v.len()));
+            assert!(v.iter().all(|&x| (2..=5).contains(&x)));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Aligned text tables for experiment reports.
+//!
+//! Every bench target prints its figure/table with this, so `cargo bench`
+//! output is directly comparable to the paper's tables.
+
+/// A simple column-aligned text table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header<S: ToString>(mut self, cols: &[S]) -> Table {
+        self.header = cols.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    pub fn row<S: ToString>(&mut self, cols: &[S]) -> &mut Table {
+        self.rows.push(cols.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    /// Add a row from already-stringified cells.
+    pub fn row_strings(&mut self, cols: Vec<String>) -> &mut Table {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                if i == 0 {
+                    line.push_str(&format!("{cell:<w$}"));
+                } else {
+                    line.push_str(&format!("  {cell:>w$}"));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1));
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Render as CSV (for plotting outside the harness).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        if !self.header.is_empty() {
+            out.push_str(&self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a ratio like the paper's tables (two decimals, e.g. "2.19").
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a time in human-friendly units.
+pub fn fmt_duration_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["layer", "speedup"]);
+        t.row(&["vgg1_2", "1.04"]);
+        t.row(&["resnet5_2", "2.48"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("vgg1_2"));
+        // all data lines have the same length
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(lines[1].len(), lines[2].len().max(lines[3].len()));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(&["v,1", "2"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"v,1\",2"));
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration_ns(500.0), "500.0 ns");
+        assert_eq!(fmt_duration_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_duration_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_duration_ns(3.0e9), "3.000 s");
+    }
+}

@@ -1,0 +1,229 @@
+//! A work-stealing-free, channel-based thread pool (offline substitute for
+//! `rayon`), used by the coordinator's row-sweep scheduler.
+//!
+//! Design: a shared injector queue guarded by a mutex + condvar. Tasks are
+//! boxed closures. `scope_chunks` provides the parallel-for primitive the
+//! scheduler needs: split an index range into chunks and run a worker
+//! closure per chunk, blocking until every chunk completes.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Task>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// Tasks submitted but not yet finished (for `wait_idle`).
+    inflight: AtomicUsize,
+    idle_cv: Condvar,
+    idle_mx: Mutex<()>,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (`n >= 1`).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            idle_cv: Condvar::new(),
+            idle_mx: Mutex::new(()),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sparsetrain-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, n_threads: n }
+    }
+
+    /// Pool sized to available host parallelism.
+    pub fn with_host_parallelism() -> ThreadPool {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Submit a fire-and-forget task.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted task has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle_mx.lock().unwrap();
+        while self.shared.inflight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle_cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Parallel-for over `0..n` in `chunks` contiguous chunks. `f(chunk_idx,
+    /// start, end)` runs on pool threads; blocks until all chunks finish.
+    ///
+    /// `f` must be `Sync` because multiple workers call it concurrently.
+    pub fn for_chunks<F>(&self, n: usize, chunks: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunks = chunks.clamp(1, n);
+        let chunk_len = n.div_ceil(chunks);
+        // SAFETY of lifetime: we block until all tasks complete before
+        // returning, so borrowing f from the stack is sound. We enforce it
+        // by transmuting through Arc<…'static> after a scope barrier.
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let f: Arc<dyn Fn(usize, usize, usize) + Send + Sync> = {
+            // Extend lifetime: justified because of the completion barrier
+            // below (no task outlives this call).
+            let f_ref: &(dyn Fn(usize, usize, usize) + Send + Sync) = &f;
+            let f_static: &'static (dyn Fn(usize, usize, usize) + Send + Sync) =
+                unsafe { std::mem::transmute(f_ref) };
+            Arc::from(f_static)
+        };
+        let mut launched = 0usize;
+        for ci in 0..chunks {
+            let start = ci * chunk_len;
+            if start >= n {
+                break;
+            }
+            let end = (start + chunk_len).min(n);
+            let f = Arc::clone(&f);
+            let done = Arc::clone(&done);
+            launched += 1;
+            self.submit(move || {
+                f(ci, start, end);
+                let (mx, cv) = &*done;
+                *mx.lock().unwrap() += 1;
+                cv.notify_one();
+            });
+        }
+        let (mx, cv) = &*done;
+        let mut finished = mx.lock().unwrap();
+        while *finished < launched {
+            finished = cv.wait(finished).unwrap();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        task();
+        if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = sh.idle_mx.lock().unwrap();
+            sh.idle_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn for_chunks_covers_range_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let n = 1013;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.for_chunks(n, 8, |_ci, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn for_chunks_handles_more_chunks_than_items() {
+        let pool = ThreadPool::new(2);
+        let n = 3;
+        let sum = AtomicU64::new(0);
+        pool.for_chunks(n, 16, |_ci, s, e| {
+            for i in s..e {
+                sum.fetch_add(i as u64, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 0 + 1 + 2);
+    }
+
+    #[test]
+    fn for_chunks_empty_range() {
+        let pool = ThreadPool::new(2);
+        pool.for_chunks(0, 4, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,220 @@
+//! Integration tests across modules: kernels ↔ scheduler ↔ selector ↔ sim,
+//! the E9 prose claims of the paper, and (artifact-gated) the PJRT trainer.
+
+use sparsetrain::bench::experiments::{self, speedup_over_direct};
+use sparsetrain::coordinator::selector::{AlgoPolicy, Selector};
+use sparsetrain::coordinator::scheduler::Scheduler;
+use sparsetrain::coordinator::trainer::{Trainer, TrainerConfig};
+use sparsetrain::kernels::{
+    direct, layers, reference, sparse_bwi, sparse_bww, sparse_fwd, Component, ConvConfig,
+    KernelStats, SkipMode,
+};
+use sparsetrain::runtime::artifacts::ArtifactSet;
+use sparsetrain::sim::{estimate_layer_iid, Algorithm, Machine};
+use sparsetrain::tensor::{allclose, ActTensor, BatchTiledTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::proptest::{check, Config as PropConfig, UsizeIn};
+
+/// A full training micro-step through all three sparse components on one
+/// layer must equal the scalar reference end to end.
+#[test]
+fn full_conv_training_step_matches_reference() {
+    let cfg = ConvConfig::square(16, 32, 32, 8, 3, 1);
+    let mut rng = Xorshift::new(555);
+
+    // forward input: a ReLU output
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, 0.55);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, 3, 3);
+    g.fill_uniform(&mut rng, -0.4, 0.4);
+
+    // FWD
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut st = KernelStats::new();
+    sparse_fwd::fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop, &mut st);
+    let y_ref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+    assert!(allclose(&y.to_nchw(), &y_ref, 1e-4, 1e-5));
+
+    // ReLU + backprop gate: dY carries the ReLU zero pattern
+    let mut act = y.clone();
+    let s_out = layers::relu_fwd(&mut act);
+    assert!(s_out > 0.2 && s_out < 0.8, "relu sparsity {s_out}");
+    let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    dy.fill_uniform(&mut rng, -1.0, 1.0);
+    layers::relu_bwd(&act, &mut dy);
+    assert!(dy.sparsity() >= s_out - 1e-9);
+
+    // BWI on the gated gradient
+    let gt = g.transpose_channels();
+    let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    let mut st2 = KernelStats::new();
+    sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop, &mut st2);
+    let dd_ref = reference::conv_bwi(&cfg, &dy.to_nchw(), &g.to_kcsr());
+    assert!(allclose(&dd.to_nchw(), &dd_ref, 1e-4, 1e-5));
+    assert!(st2.skip_fraction() > 0.2, "BWI must exploit the gated gradient");
+
+    // BWW checking D
+    let dt = BatchTiledTensor::from_act(&d);
+    let mut dg = FilterTensor::zeros(cfg.k, cfg.c, 3, 3);
+    let mut st3 = KernelStats::new();
+    sparse_bww::bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop, &mut st3);
+    let dg_ref = reference::conv_bww(&cfg, &d.to_nchw(), &dy.to_nchw());
+    assert!(allclose(&dg.to_kcsr(), &dg_ref, 1e-3, 1e-4));
+}
+
+/// E9: SparseTrain's modeled execution time scales linearly with N
+/// (§5.3: "confirmed that SparseTrain's execution time scales linearly").
+#[test]
+fn model_scales_linearly_with_batch() {
+    let m = Machine::skylake_x();
+    let mk = |n: usize| ConvConfig::square(n, 128, 128, 28, 3, 1);
+    let t16 = estimate_layer_iid(&m, Algorithm::SparseTrain, Component::Fwd, &mk(16), 0.6).wall;
+    let t32 = estimate_layer_iid(&m, Algorithm::SparseTrain, Component::Fwd, &mk(32), 0.6).wall;
+    let t64 = estimate_layer_iid(&m, Algorithm::SparseTrain, Component::Fwd, &mk(64), 0.6).wall;
+    assert!((t32 / t16 - 2.0).abs() < 0.1, "t32/t16 = {}", t32 / t16);
+    assert!((t64 / t16 - 4.0).abs() < 0.2, "t64/t16 = {}", t64 / t16);
+}
+
+/// E9: dense-input overhead within ~10 % and crossover by 20–30 % on a
+/// representative 3×3 layer.
+#[test]
+fn dense_overhead_and_crossover() {
+    let m = Machine::skylake_x();
+    let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+    let at = |s: f64| speedup_over_direct(&m, Algorithm::SparseTrain, &cfg, Component::Fwd, s);
+    assert!(at(0.0) > 0.88, "dense overhead too high: {}", at(0.0));
+    assert!(at(0.0) < 1.0, "sparse cannot beat direct on dense input");
+    assert!(at(0.3) > 1.0, "no crossover by 30%: {}", at(0.3));
+    assert!(at(0.9) > 2.0, "90% speedup too low: {}", at(0.9));
+}
+
+/// E9: SparseTrain passes Winograd between 50–60 % sparsity on 3×3 layers
+/// (§5.1) — allow a band around it.
+#[test]
+fn winograd_crossover_band() {
+    let m = Machine::skylake_x();
+    let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+    let win = speedup_over_direct(&m, Algorithm::Winograd, &cfg, Component::Fwd, 0.0);
+    let sp = |s: f64| speedup_over_direct(&m, Algorithm::SparseTrain, &cfg, Component::Fwd, s);
+    assert!(sp(0.3) < win, "SparseTrain should trail Winograd at 30%");
+    assert!(sp(0.7) > win, "SparseTrain should pass Winograd by 70%");
+}
+
+/// Scheduler + selector compose: run a layer with the policy-selected
+/// algorithm in parallel and match the reference.
+#[test]
+fn scheduler_with_selected_algorithm_matches_reference() {
+    let m = Machine::skylake_x();
+    let sel = Selector::new(m);
+    let cfg = ConvConfig::square(2, 32, 64, 8, 3, 1);
+    let alg = sel.select(AlgoPolicy::Combined, &cfg, Component::Fwd, 0.9, true);
+    assert_eq!(alg, Algorithm::SparseTrain);
+
+    let mut rng = Xorshift::new(777);
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, 0.9);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, 3, 3);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+    let sched = Scheduler::new(3);
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let report = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+    assert!(report.stats.skip_fraction() > 0.8);
+    let y_ref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+    assert!(allclose(&y.to_nchw(), &y_ref, 1e-4, 1e-5));
+}
+
+/// Property: on random geometry, sparse FWD == dense direct numerics.
+#[test]
+fn property_sparse_equals_direct_random_geometry() {
+    check(
+        PropConfig { cases: 12, seed: 0xBEEF, max_shrink_steps: 24 },
+        &UsizeIn { lo: 0, hi: 500 },
+        |&case| {
+            let mut rng = Xorshift::new(case as u64);
+            let hw = 4 + rng.below(8);
+            let stride = 1 + rng.below(2);
+            let rs = [1, 3, 5][rng.below(3)];
+            if hw + 2 * ((rs - 1) / 2) < rs {
+                return Ok(());
+            }
+            let cfg = ConvConfig::square(1 + rng.below(2), 16, 32, hw, rs, stride);
+            if cfg.validate().is_err() {
+                return Ok(());
+            }
+            let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let sparsity = rng.next_f64();
+            d.fill_relu_sparse(&mut rng, sparsity);
+            let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            g.fill_uniform(&mut rng, -0.5, 0.5);
+            let mut y1 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            let mut y2 = y1.clone();
+            let mut s1 = KernelStats::new();
+            let mut s2 = KernelStats::new();
+            sparse_fwd::fwd(&cfg, &d, &g, &mut y1, SkipMode::MaskLoop, &mut s1);
+            direct::fwd(&cfg, &d, &g, &mut y2, &mut s2);
+            if allclose(y1.data(), y2.data(), 1e-4, 1e-5) {
+                Ok(())
+            } else {
+                Err(format!("mismatch at {cfg:?}"))
+            }
+        },
+    );
+}
+
+/// Projection pipeline produces the paper's ordering (E8) end to end.
+#[test]
+fn projection_pipeline_ordering() {
+    let m = Machine::skylake_x();
+    let (projections, _, _) = experiments::fig4_table6(&m, 50);
+    let by_name = |n: &str| {
+        projections
+            .iter()
+            .find(|p| p.network.name() == n)
+            .unwrap()
+            .speedup_excl_first(AlgoPolicy::SparseTrainOnly)
+    };
+    let vgg = by_name("VGG16");
+    let r34 = by_name("ResNet-34");
+    let r50 = by_name("ResNet-50");
+    let fix = by_name("Fixup ResNet-50");
+    assert!(vgg > r34 && vgg > r50 && vgg > fix, "VGG16 must benefit most");
+    assert!(fix > r50, "Fixup (no BN) must beat plain ResNet-50");
+}
+
+/// §5.2: "we also experimented with several 5×5 layers and got even
+/// higher speedup". In our model 5×5 lands in the same band as 3×3
+/// (slightly below at high sparsity: Table 3 forces Q=64 for R=5, so
+/// T=20 < 24 and the per-check floor bites marginally harder) — recorded
+/// as a known small deviation in EXPERIMENTS.md; the kernel itself
+/// supports R=5 end to end (functional tests in sparse_fwd).
+#[test]
+fn five_by_five_same_band_as_three_by_three() {
+    let m = Machine::skylake_x();
+    let c3 = ConvConfig::square(16, 256, 256, 28, 3, 1);
+    let c5 = ConvConfig::square(16, 256, 256, 28, 5, 1);
+    for s in [0.6, 0.8] {
+        let s3 = speedup_over_direct(&m, Algorithm::SparseTrain, &c3, Component::Fwd, s);
+        let s5 = speedup_over_direct(&m, Algorithm::SparseTrain, &c5, Component::Fwd, s);
+        assert!(s5 > 1.5, "5x5 must still clearly win at s={s}: {s5:.2}");
+        assert!(s5 > s3 * 0.9, "5x5 ({s5:.2}) within band of 3x3 ({s3:.2}) at s={s}");
+    }
+}
+
+/// Artifact-gated: the three-layer stack trains and the measured ReLU
+/// sparsity lands in a plausible band.
+#[test]
+fn pjrt_trainer_smoke() {
+    let arts = ArtifactSet::default_location();
+    if !arts.complete() {
+        eprintln!("skipping pjrt_trainer_smoke: run `make artifacts`");
+        return;
+    }
+    let mut t = Trainer::new(&arts, TrainerConfig { steps: 8, seed: 3, log_every: 0 }).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.losses.len(), 8);
+    assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0));
+    for layer in ["conv1_relu", "conv2_relu"] {
+        let s = report.profiler.mean(layer).unwrap();
+        assert!((0.05..0.95).contains(&s), "{layer} sparsity {s}");
+    }
+}
