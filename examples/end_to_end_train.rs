@@ -3,43 +3,56 @@
 //! The Rust coordinator loads the AOT-compiled JAX/Pallas train-step
 //! artifact (whose conv hot-spots are the block-sparse Pallas kernel),
 //! trains the small CNN for a few hundred steps on synthetic labeled data,
-//! logs the loss curve and the **measured** per-layer ReLU sparsities, and
-//! finally feeds the measured sparsities back into the Skylake-X model to
-//! show what SparseTrain would buy at this (real, not synthetic) sparsity.
+//! logs the loss curve and the **measured** per-layer ReLU sparsities, then
+//! feeds the measured sparsities back into the Skylake-X model and runs the
+//! **parallel training triad** — `Scheduler::run_fwd`/`run_bwi`/`run_bww` —
+//! on the trained model's conv2 geometry at those sparsities.
+//!
+//! Without artifacts (`make artifacts` not run) the PJRT phase is skipped
+//! and the parallel triad runs at prior sparsities, so the example always
+//! exercises the scheduler path.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end_train -- --steps 200
+//! cargo run --release --example end_to_end_train -- --threads 4   # no artifacts needed
 //! ```
 
 use sparsetrain::bench::experiments::speedup_over_direct;
 use sparsetrain::coordinator::trainer::{Trainer, TrainerConfig};
-use sparsetrain::kernels::{Component, ConvConfig};
+use sparsetrain::coordinator::Scheduler;
+use sparsetrain::kernels::{reference, sparse_fwd, Component, ConvConfig, KernelStats, SkipMode};
 use sparsetrain::runtime::artifacts::{geometry, ArtifactSet};
 use sparsetrain::sim::{Algorithm, Machine};
+use sparsetrain::tensor::{allclose, ActTensor, BatchTiledTensor, FilterTensor};
 use sparsetrain::util::cli::Args;
+use sparsetrain::util::prng::Xorshift;
 use sparsetrain::util::stats::mean;
 
-fn main() {
-    let args = Args::from_env(&["steps", "seed"], &[]).unwrap_or_else(|e| {
-        eprintln!("error: {e}");
-        std::process::exit(2);
-    });
-    let steps = args.get_usize("steps", 200).unwrap();
-    let seed = args.get_usize("seed", 7).unwrap() as u64;
-
+/// Train through PJRT if the artifacts are present. Returns the measured
+/// (input, gradient) ReLU sparsities of conv2, or `None` when skipped.
+fn pjrt_training_phase(steps: usize, seed: u64) -> Option<(f64, f64)> {
     let artifacts = ArtifactSet::default_location();
     if !artifacts.complete() {
         eprintln!(
-            "artifacts missing ({:?}); run `make artifacts` first",
+            "artifacts missing ({:?}); skipping the PJRT training phase \
+             (run `make artifacts` to enable it)",
             artifacts.missing()
         );
-        std::process::exit(1);
+        return None;
     }
 
     println!("== end-to-end training: rust coordinator → PJRT → JAX/Pallas artifact ==");
     let mut trainer = Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20 })
         .expect("trainer init");
-    let report = trainer.run().expect("training run");
+    let report = match trainer.run() {
+        Ok(r) => r,
+        Err(e) => {
+            // The offline build vendors an xla stub that cannot compile
+            // HLO; fall back to the scheduler demo instead of crashing.
+            eprintln!("PJRT training unavailable ({e:#}); skipping the training phase");
+            return None;
+        }
+    };
 
     let head = mean(&report.losses[..report.losses.len().min(10)]);
     let tail = mean(&report.losses[report.losses.len().saturating_sub(10)..]);
@@ -49,15 +62,84 @@ fn main() {
     println!("learned ✓ (≥20% loss reduction)");
 
     report.profiler.report().print();
+    let s_in = report.profiler.mean("conv1_relu").unwrap_or(0.5);
+    let s_dy = report.profiler.mean("conv2_relu").unwrap_or(0.5);
+    Some((s_in, s_dy))
+}
 
-    // Feed the *measured* sparsities into the Skylake-X model: what would
-    // SparseTrain buy on this model's conv layers at this real sparsity?
+/// The full sparse training triad on conv2's geometry, serial and
+/// scheduled, verified against the scalar reference.
+fn parallel_triad(threads: usize, s_in: f64, s_dy: f64) {
+    use geometry::*;
+    let cfg = ConvConfig::square(N, C1, C2, HW, 3, 1);
+    println!(
+        "\n== parallel triad on conv2 ({}x{} {}x{}, batch {}) at s_in={s_in:.2} s_dy={s_dy:.2}, \
+         {threads} threads ==",
+        cfg.c, cfg.k, cfg.r, cfg.s, cfg.n
+    );
+
+    let mut rng = Xorshift::new(42);
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, s_in);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    g.fill_uniform(&mut rng, -0.3, 0.3);
+    let gt = g.transpose_channels();
+    let dt = BatchTiledTensor::from_act(&d);
+    let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    dy.fill_relu_sparse(&mut rng, s_dy);
+
+    let sched = Scheduler::new(threads);
+
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let rf = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+    let yref = reference::conv_fwd(&cfg, &d.to_nchw(), &g.to_kcsr());
+    assert!(allclose(&y.to_nchw(), &yref, 1e-4, 1e-5), "FWD reference mismatch");
+
+    let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    let ri = sched.run_bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop);
+    let ddref = reference::conv_bwi(&cfg, &dy.to_nchw(), &g.to_kcsr());
+    assert!(allclose(&dd.to_nchw(), &ddref, 1e-4, 1e-5), "BWI reference mismatch");
+
+    let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    let rw = sched.run_bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop);
+    let dgref = reference::conv_bww(&cfg, &d.to_nchw(), &dy.to_nchw());
+    assert!(allclose(&dg.to_kcsr(), &dgref, 1e-3, 1e-4), "BWW reference mismatch");
+
+    // serial-parity spot check on the stats path
+    let mut y2 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut st = KernelStats::new();
+    sparse_fwd::fwd(&cfg, &d, &g, &mut y2, SkipMode::MaskLoop, &mut st);
+    assert_eq!(rf.stats.fma_vec, st.fma_vec);
+    assert_eq!(y.data(), y2.data(), "scheduled FWD must be bit-exact vs serial");
+
+    for (name, r) in [("FWD", &rf), ("BWI", &ri), ("BWW", &rw)] {
+        println!(
+            "  {name}: {} tasks over {} chunks, skip {:.0}%",
+            r.total_tasks,
+            r.tasks_per_chunk.iter().filter(|&&t| t > 0).count(),
+            100.0 * r.stats.skip_fraction()
+        );
+    }
+    println!("parallel triad verified against the scalar reference ✓");
+}
+
+fn main() {
+    let args = Args::from_env(&["steps", "seed", "threads"], &[]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let steps = args.get_usize("steps", 200).unwrap();
+    let seed = args.get_usize("seed", 7).unwrap() as u64;
+    let threads = args.get_usize("threads", 4).unwrap();
+
+    let measured = pjrt_training_phase(steps, seed);
+    let (s_in, s_dy) = measured.unwrap_or((0.5, 0.6));
+
+    // Feed the (measured or prior) sparsities into the Skylake-X model.
     let m = Machine::skylake_x();
     use geometry::*;
     let conv2_cfg = ConvConfig::square(N, C1, C2, HW, 3, 1);
-    let s_in = report.profiler.mean("conv1_relu").unwrap_or(0.5);
     let fwd = speedup_over_direct(&m, Algorithm::SparseTrain, &conv2_cfg, Component::Fwd, s_in);
-    let s_dy = report.profiler.mean("conv2_relu").unwrap_or(0.5);
     let bwi = speedup_over_direct(&m, Algorithm::SparseTrain, &conv2_cfg, Component::Bwi, s_dy);
     let bww = speedup_over_direct(
         &m,
@@ -67,8 +149,10 @@ fn main() {
         s_in.max(s_dy),
     );
     println!(
-        "\nmodeled SparseTrain speedup on conv2 at measured sparsity \
+        "\nmodeled SparseTrain speedup on conv2 at sparsity \
          (in={s_in:.2}, grad={s_dy:.2}): FWD {fwd:.2}x  BWI {bwi:.2}x  BWW {bww:.2}x"
     );
+
+    parallel_triad(threads, s_in, s_dy);
     println!("end_to_end_train OK");
 }

@@ -1,20 +1,127 @@
 //! Sweep a Table-2 layer across sparsity levels and algorithms — the
-//! single-layer view behind Figures 1/2.
+//! single-layer view behind Figures 1/2 — and exercise the row-sweep
+//! scheduler's parallel FWD/BWI/BWW on a scaled-down copy of the layer.
 //!
 //! ```bash
 //! cargo run --release --example layer_sweep -- --layer vgg3_2
 //! cargo run --release --example layer_sweep -- --layer resnet4_3 --csv
+//! cargo run --release --example layer_sweep -- --layer vgg3_2 --threads 4
 //! ```
 
-use sparsetrain::bench::experiments::{speedup_over_direct, SPARSITY_GRID};
-use sparsetrain::kernels::{onebyone, winograd, Component};
+use sparsetrain::bench::experiments::{machine_with_threads, speedup_over_direct, SPARSITY_GRID};
+use sparsetrain::coordinator::Scheduler;
+use sparsetrain::kernels::{
+    onebyone, sparse_bwi, sparse_bww, sparse_fwd, winograd, Component, ConvConfig, KernelStats,
+    SkipMode,
+};
 use sparsetrain::nets::table2::layer_by_name;
 use sparsetrain::sim::{Algorithm, Machine};
+use sparsetrain::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use sparsetrain::util::cli::Args;
+use sparsetrain::util::prng::Xorshift;
 use sparsetrain::util::table::Table;
 
+/// Time one component serial-vs-scheduled and append a table row; the
+/// closures run the serial kernel and the scheduler launch respectively.
+/// Returns the scheduler's report so callers can assert on the outputs.
+fn timed_row(
+    tab: &mut Table,
+    comp: &str,
+    serial: impl FnOnce(),
+    scheduled: impl FnOnce() -> sparsetrain::coordinator::scheduler::RunReport,
+) -> sparsetrain::coordinator::scheduler::RunReport {
+    let t0 = std::time::Instant::now();
+    serial();
+    let serial_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = std::time::Instant::now();
+    let report = scheduled();
+    let par_ms = t1.elapsed().as_secs_f64() * 1e3;
+    tab.row_strings(vec![
+        comp.to_string(),
+        report.total_tasks.to_string(),
+        format!("{serial_ms:.2}"),
+        format!("{par_ms:.2}"),
+        format!("{:.2}", serial_ms / par_ms.max(1e-9)),
+        format!("{:.0}", 100.0 * report.stats.skip_fraction()),
+    ]);
+    report
+}
+
+/// Run the parallel training triad on a scaled-down copy of the layer:
+/// serial kernels vs the scheduler at `threads` workers, wallclock + task
+/// counts. Scaling keeps the functional kernels fast while preserving the
+/// layer's filter geometry and stride.
+fn parallel_host_demo(layer_cfg: &ConvConfig, threads: usize, sparsity: f64) {
+    let cfg = ConvConfig::square(
+        16, // batch multiple of V so BWW applies
+        layer_cfg.c.min(64),
+        layer_cfg.k.min(64),
+        layer_cfg.h.min(16).max(layer_cfg.r),
+        layer_cfg.r,
+        layer_cfg.stride_o,
+    );
+    let mut rng = Xorshift::new(11);
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, sparsity);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+    let gt = g.transpose_channels();
+    let dt = BatchTiledTensor::from_act(&d);
+    let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    dy.fill_relu_sparse(&mut rng, sparsity);
+
+    let sched = Scheduler::new(threads);
+    let mut tab = Table::new(&format!(
+        "parallel path, scaled {}x{} {}x{}/{} at s={sparsity:.1}, {threads} threads",
+        cfg.c, cfg.k, cfg.r, cfg.s, cfg.stride_o
+    ))
+    .header(&["comp", "tasks", "serial ms", "parallel ms", "speedup", "skip%"]);
+
+    let mut y_s = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut y_p = y_s.clone();
+    timed_row(
+        &mut tab,
+        "FWD",
+        || {
+            let mut st = KernelStats::new();
+            sparse_fwd::fwd(&cfg, &d, &g, &mut y_s, SkipMode::MaskLoop, &mut st);
+        },
+        || sched.run_fwd(&cfg, &d, &g, &mut y_p, SkipMode::MaskLoop),
+    );
+    assert_eq!(y_p.data(), y_s.data(), "parallel FWD must be bit-exact");
+
+    let mut dd_s = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    let mut dd_p = dd_s.clone();
+    timed_row(
+        &mut tab,
+        "BWI",
+        || {
+            let mut st = KernelStats::new();
+            sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd_s, SkipMode::MaskLoop, &mut st);
+        },
+        || sched.run_bwi(&cfg, &dy, &gt, &mut dd_p, SkipMode::MaskLoop),
+    );
+    assert_eq!(dd_p.data(), dd_s.data(), "parallel BWI must be bit-exact");
+
+    let mut dg_s = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    let mut dg_p = dg_s.clone();
+    timed_row(
+        &mut tab,
+        "BWW",
+        || {
+            let mut st = KernelStats::new();
+            sparse_bww::bww(&cfg, &dt, &dy, &mut dg_s, SkipMode::MaskLoop, &mut st);
+        },
+        || sched.run_bww(&cfg, &dt, &dy, &mut dg_p, SkipMode::MaskLoop),
+    );
+    assert_eq!(dg_p.data(), dg_s.data(), "parallel BWW must be bit-exact");
+
+    tab.print();
+    println!("parallel outputs verified bit-exact against the serial kernels ✓");
+}
+
 fn main() {
-    let args = Args::from_env(&["layer"], &["csv"]).unwrap_or_else(|e| {
+    let args = Args::from_env(&["layer", "threads"], &["csv"]).unwrap_or_else(|e| {
         eprintln!("error: {e}");
         std::process::exit(2);
     });
@@ -23,10 +130,15 @@ fn main() {
         eprintln!("unknown layer '{layer}'; see Table 2 names (e.g. vgg3_2, resnet4_2)");
         std::process::exit(2);
     });
-    let m = Machine::skylake_x();
+    let base = Machine::skylake_x();
+    let threads = args.get_usize("threads", base.cores).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let m = machine_with_threads(&base, threads);
     println!(
-        "layer {layer}: C={} K={} H=W={} R=S={} stride={}  (batch {})",
-        nl.cfg.c, nl.cfg.k, nl.cfg.h, nl.cfg.r, nl.cfg.stride_o, nl.cfg.n
+        "layer {layer}: C={} K={} H=W={} R=S={} stride={}  (batch {}, {} modeled cores)",
+        nl.cfg.c, nl.cfg.k, nl.cfg.h, nl.cfg.r, nl.cfg.stride_o, nl.cfg.n, m.cores
     );
 
     let mut tab = Table::new(&format!("modeled speedup over direct — {layer}")).header(&[
@@ -59,4 +171,6 @@ fn main() {
     } else {
         tab.print();
     }
+
+    parallel_host_demo(&nl.cfg, threads, 0.6);
 }

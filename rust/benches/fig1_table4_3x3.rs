@@ -7,13 +7,21 @@
 //!   configurations at batch 16 (the paper's setup);
 //! * **host** — real wallclock of the functional Rust kernels on a
 //!   scaled-down 3×3 layer, verifying the *shape* (crossover, monotone
-//!   speedup) on this machine.
+//!   speedup) on this machine, plus the row-sweep scheduler's parallel
+//!   FWD/BWI/BWW speedup over the serial kernels.
+//!
+//! `cargo bench --bench fig1_table4_3x3 -- --threads 4` restricts both the
+//! modeled machine and the host scheduler to 4 cores.
 
-use sparsetrain::bench::experiments::{fig1_table4, SPARSITY_GRID};
+use sparsetrain::bench::experiments::{fig1_table4, machine_with_threads, SPARSITY_GRID};
 use sparsetrain::bench::{black_box, BenchGroup};
-use sparsetrain::kernels::{direct, sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use sparsetrain::coordinator::Scheduler;
+use sparsetrain::kernels::{
+    direct, sparse_bwi, sparse_bww, sparse_fwd, ConvConfig, KernelStats, SkipMode,
+};
 use sparsetrain::sim::Machine;
-use sparsetrain::tensor::{ActTensor, FilterTensor};
+use sparsetrain::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use sparsetrain::util::cli::Args;
 use sparsetrain::util::prng::Xorshift;
 use sparsetrain::util::table::Table;
 
@@ -61,11 +69,93 @@ fn host_mode() {
     tab.print();
 }
 
+/// Host-measured scaling of the row-sweep scheduler: serial kernel vs
+/// `Scheduler::run_{fwd,bwi,bww}` at the given thread count, one row per
+/// training component (§3.2.2 / §3.3 / §3.4).
+fn host_parallel_mode(threads: usize) {
+    // N=16 so BWW's minibatch vectorization applies; small spatial dims
+    // keep the serial baselines quick.
+    let cfg = ConvConfig::square(16, 32, 32, 16, 3, 1);
+    let mut rng = Xorshift::new(4096);
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, 0.5);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+    let gt = g.transpose_channels();
+    let dt = BatchTiledTensor::from_act(&d);
+    let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    dy.fill_relu_sparse(&mut rng, 0.5);
+
+    let sched = Scheduler::new(threads);
+    let mut group = BenchGroup::new(&format!(
+        "host: scheduler scaling, {threads} threads (N=16 C=K=32 16x16)"
+    ));
+    group.start();
+
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    group.bench("FWD serial", || {
+        y.fill_zero();
+        let mut st = KernelStats::new();
+        sparse_fwd::fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop, &mut st);
+        black_box(&y);
+    });
+    group.bench("FWD scheduler", || {
+        y.fill_zero();
+        black_box(sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop).total_tasks);
+    });
+
+    let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    group.bench("BWI serial", || {
+        dd.fill_zero();
+        let mut st = KernelStats::new();
+        sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop, &mut st);
+        black_box(&dd);
+    });
+    group.bench("BWI scheduler", || {
+        dd.fill_zero();
+        black_box(sched.run_bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop).total_tasks);
+    });
+
+    let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    group.bench("BWW serial", || {
+        dg.fill_zero();
+        let mut st = KernelStats::new();
+        sparse_bww::bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop, &mut st);
+        black_box(&dg);
+    });
+    group.bench("BWW scheduler", || {
+        dg.fill_zero();
+        black_box(sched.run_bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop).total_tasks);
+    });
+
+    let mut tab = Table::new(&format!("scheduler speedup over serial at {threads} threads"))
+        .header(&["comp", "speedup"]);
+    for comp in ["FWD", "BWI", "BWW"] {
+        let serial = group.ns_of(&format!("{comp} serial")).unwrap();
+        let par = group.ns_of(&format!("{comp} scheduler")).unwrap();
+        tab.row_strings(vec![comp.to_string(), format!("{:.2}", serial / par)]);
+    }
+    tab.print();
+}
+
 fn main() {
-    let m = Machine::skylake_x();
+    // cargo appends `--bench` when invoking harness=false bench binaries;
+    // accept and ignore it.
+    let args = Args::from_env(&["threads"], &["bench"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let base = Machine::skylake_x();
+    let threads = args.get_usize("threads", base.cores).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let m = machine_with_threads(&base, threads);
+    println!("modeling {} active cores (--threads)", m.cores);
     println!("sparsity grid: {SPARSITY_GRID:?}");
     let (_rows, fig, tab) = fig1_table4(&m);
     fig.print();
     tab.print();
     host_mode();
+    host_parallel_mode(threads);
 }

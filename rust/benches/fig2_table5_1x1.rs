@@ -3,11 +3,12 @@
 //! Model mode over the full Table 2 1×1 configurations + host-mode
 //! wallclock on a scaled layer (including the BWW asymmetry of §5.2).
 
-use sparsetrain::bench::experiments::fig2_table5;
+use sparsetrain::bench::experiments::{fig2_table5, machine_with_threads};
 use sparsetrain::bench::{black_box, BenchGroup};
 use sparsetrain::kernels::{direct, onebyone, sparse_bww, sparse_fwd, ConvConfig, KernelStats, SkipMode};
 use sparsetrain::sim::Machine;
 use sparsetrain::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use sparsetrain::util::cli::Args;
 use sparsetrain::util::prng::Xorshift;
 use sparsetrain::util::table::Table;
 
@@ -77,7 +78,19 @@ fn host_mode() {
 }
 
 fn main() {
-    let m = Machine::skylake_x();
+    // cargo appends `--bench` when invoking harness=false bench binaries;
+    // accept and ignore it.
+    let args = Args::from_env(&["threads"], &["bench"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let base = Machine::skylake_x();
+    let threads = args.get_usize("threads", base.cores).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let m = machine_with_threads(&base, threads);
+    println!("modeling {} active cores (--threads)", m.cores);
     let (_rows, fig, tab) = fig2_table5(&m);
     fig.print();
     tab.print();

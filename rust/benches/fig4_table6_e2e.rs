@@ -4,22 +4,39 @@
 //! win/1x1 and combined policies (profiled-sparsity trajectories, 100
 //! epochs).
 
-use sparsetrain::bench::experiments::{dynamic_vs_static, fig4_table6};
+use sparsetrain::bench::experiments::{dynamic_vs_static, fig4_table6, machine_with_threads};
 use sparsetrain::coordinator::selector::AlgoPolicy;
 use sparsetrain::nets::zoo::Network;
 use sparsetrain::sim::Machine;
+use sparsetrain::util::cli::Args;
 
 fn main() {
-    let m = Machine::skylake_x();
-    let (projections, fig, tab) = fig4_table6(&m, 100);
+    // cargo appends `--bench` when invoking harness=false bench binaries;
+    // accept and ignore it.
+    let args = Args::from_env(&["threads", "epochs"], &["bench"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let base = Machine::skylake_x();
+    let threads = args.get_usize("threads", base.cores).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let epochs = args.get_usize("epochs", 100).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let m = machine_with_threads(&base, threads);
+    println!("modeling {} active cores (--threads), {epochs} epochs", m.cores);
+    let (projections, fig, tab) = fig4_table6(&m, epochs);
     fig.print();
     tab.print();
 
     // §5.3 extension: dynamic per-epoch algorithm selection vs the static
     // combined policy (FWD, all non-initial layers).
-    println!("\n== dynamic vs static combined (FWD, 100 epochs) ==");
+    println!("\n== dynamic vs static combined (FWD, {epochs} epochs) ==");
     for net in Network::ALL {
-        let (_, _, gain) = dynamic_vs_static(&m, net, 100);
+        let (_, _, gain) = dynamic_vs_static(&m, net, epochs);
         println!("  {:<16} dynamic/static speedup: {gain:.3}x", net.name());
     }
 

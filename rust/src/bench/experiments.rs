@@ -14,6 +14,16 @@ use crate::util::table::Table;
 /// Sparsity grid of the paper's Tables 4/5.
 pub const SPARSITY_GRID: [f64; 10] = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
 
+/// The modeled machine restricted to `threads` active cores — the cost
+/// model's view of running the row-sweep scheduler at that width. Every
+/// experiment path (`fig1`/`fig2`/`fig4`, the benches, and the CLI) routes
+/// its `--threads` knob through here so model and host runs agree on the
+/// core count. Speedups reported *relative to direct* are computed with
+/// both sides at the same width.
+pub fn machine_with_threads(base: &Machine, threads: usize) -> Machine {
+    base.with_cores(threads)
+}
+
 /// Speedup of `alg` over modeled `direct` for one (layer, component,
 /// sparsity) cell.
 pub fn speedup_over_direct(
@@ -353,6 +363,21 @@ mod tests {
 
     fn m() -> Machine {
         Machine::skylake_x()
+    }
+
+    #[test]
+    fn machine_with_threads_overrides_cores_only() {
+        let base = m();
+        let m1 = machine_with_threads(&base, 1);
+        assert_eq!(m1.cores, 1);
+        assert_eq!(m1.fma_per_cycle, base.fma_per_cycle);
+        assert_eq!(m1.dram_bw_total, base.dram_bw_total);
+        assert_eq!(machine_with_threads(&base, 0).cores, 1);
+        // fewer modeled cores → more wall cycles for a compute-bound layer
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let t1 = estimate_layer_iid(&m1, Algorithm::SparseTrain, Component::Fwd, &cfg, 0.5).wall;
+        let t6 = estimate_layer_iid(&base, Algorithm::SparseTrain, Component::Fwd, &cfg, 0.5).wall;
+        assert!(t1 > t6, "1-core {t1} must exceed 6-core {t6}");
     }
 
     #[test]

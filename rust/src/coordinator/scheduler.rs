@@ -1,15 +1,42 @@
-//! Output-parallel row-sweep scheduler (§3.2.2).
+//! Output-parallel row-sweep scheduler (§3.2.2) for **all three** training
+//! components.
 //!
-//! SparseTrain parallelizes at output-row × K-tile granularity: the FWD
-//! task grid is `(i, oy, qb)` with `N·H'·K/Q` independent tasks (vs just
-//! `N` for the naïve input-parallel version, which would need atomic output
-//! updates). Tasks write disjoint output rows, so workers need no locks on
-//! the data — only on the shared task cursor.
+//! SparseTrain parallelizes at output-row × tile granularity; this module
+//! carries that scheme through the full training triad:
+//!
+//! | component | task grid | tasks | disjoint writes |
+//! |---|---|---|---|
+//! | FWD ([`Scheduler::run_fwd`]) | `(i, oy, qb)` | `N·H'·K/Q` | output rows `Y[i][qb·Q..][oy]` |
+//! | BWI ([`Scheduler::run_bwi`]) | `(i, iy, cb)` | `N·H·C/Q` | input-gradient rows `∂D[i][cb·Q..][iy]` |
+//! | BWW ([`Scheduler::run_bww`]) | `(qb, c)` | `(K/Q)·C` | filter-gradient tiles `∂G[qb·Q..][c][*][*]` |
+//!
+//! Tasks inside one grid write disjoint slices of the output tensor, so
+//! workers need no locks or atomics on the data — only the shared task
+//! cursor inside [`ThreadPool::for_chunks`]. FWD/BWI parallelize over
+//! images × rows (the naïve input-parallel alternative would need atomic
+//! output updates); BWW instead tiles the *filter gradient*: §3.4's
+//! minibatch vectorization makes every sweep's dG destination
+//! minibatch-invariant, so partitioning by `(Q-tile, input channel)` gives
+//! atomic-free weight-gradient accumulation with no per-thread dG slabs or
+//! post-barrier reduction — each dG element belongs to exactly one task.
+//!
+//! **Determinism.** Every task runs the same per-task body as the serial
+//! kernel and each output element is written by exactly one task in the
+//! same inner iteration order, so the parallel numerics are bit-identical
+//! to the serial kernels for all three components (not merely allclose).
+//!
+//! **Stats merge.** Each chunk accumulates a private [`KernelStats`] and
+//! merges it into the shared report under a mutex after its last task;
+//! every counter is a sum (and `filter_bytes_per_sweep` a max), so the
+//! merged stats equal the serial kernel's counters exactly, regardless of
+//! thread count or chunk assignment. The per-sweep filter-footprint floor
+//! is applied once after the merge, mirroring the serial kernels.
 
-use crate::kernels::regalloc::plan_fwd;
-use crate::kernels::{sparse_fwd, ConvConfig, KernelStats, SkipMode};
-use crate::tensor::{ActTensor, FilterTensor};
+use crate::kernels::regalloc::{plan_bww, plan_fwd};
+use crate::kernels::{sparse_bwi, sparse_bww, sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::util::threadpool::ThreadPool;
+use crate::V;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -27,9 +54,21 @@ pub struct RunReport {
     pub total_tasks: usize,
 }
 
+/// Share a `&mut T` across chunk workers through a raw pointer. The task
+/// grids guarantee disjoint writes; the wrapper only exists to move the
+/// pointer into the `Send + Sync` closure.
+struct SharedMut<T>(*mut T);
+unsafe impl<T> Send for SharedMut<T> {}
+unsafe impl<T> Sync for SharedMut<T> {}
+
 impl Scheduler {
     pub fn new(threads: usize) -> Scheduler {
         Scheduler { pool: ThreadPool::new(threads) }
+    }
+
+    /// A scheduler sized to the host's available parallelism.
+    pub fn with_host_parallelism() -> Scheduler {
+        Scheduler { pool: ThreadPool::with_host_parallelism() }
     }
 
     pub fn threads(&self) -> usize {
@@ -42,6 +81,27 @@ impl Scheduler {
         cfg.n * cfg.out_h() * (cfg.k / plan.q)
     }
 
+    /// Number of parallel BWI tasks: `N·H·C/Q` — BWI scatters into input
+    /// rows, and its accumulators are C-vectors, so the Q tiling is over
+    /// input channels (§3.3).
+    pub fn bwi_task_count(cfg: &ConvConfig) -> usize {
+        let plan = plan_fwd(cfg.c, cfg.r);
+        cfg.n * cfg.h * (cfg.c / plan.q)
+    }
+
+    /// Number of parallel BWW tasks: `(K/Q)·C` — one per disjoint filter-
+    /// gradient tile (§3.4).
+    pub fn bww_task_count(cfg: &ConvConfig) -> usize {
+        let plan = plan_bww(cfg.k, cfg.r);
+        (cfg.k / plan.q) * cfg.c
+    }
+
+    /// Default chunk count: a few chunks per worker so early-finishing
+    /// threads rebalance, without shredding locality.
+    fn chunks_for(&self, total: usize) -> usize {
+        (self.pool.threads() * 4).min(total.max(1))
+    }
+
     /// Run SparseTrain FWD with output parallelism. Tasks are `(i, oy, qb)`
     /// triples; each writes a disjoint slice of `y`.
     pub fn run_fwd(
@@ -52,20 +112,14 @@ impl Scheduler {
         y: &mut ActTensor,
         mode: SkipMode,
     ) -> RunReport {
+        cfg.validate().expect("invalid conv config");
         let plan = plan_fwd(cfg.k, cfg.r);
         let kq_count = cfg.k / plan.q;
         let oh = cfg.out_h();
         let total = Self::fwd_task_count(cfg);
-        let chunks = (self.pool.threads() * 4).min(total.max(1));
+        let chunks = self.chunks_for(total);
 
-        // Workers accumulate into per-chunk outputs merged at the end.
-        // Because tasks write disjoint rows, we share `y` through a raw
-        // pointer wrapper; disjointness is guaranteed by the task grid.
-        struct YPtr(*mut ActTensor);
-        unsafe impl Send for YPtr {}
-        unsafe impl Sync for YPtr {}
-        let yptr = YPtr(y as *mut ActTensor);
-
+        let yptr = SharedMut(y as *mut ActTensor);
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
 
@@ -85,8 +139,118 @@ impl Scheduler {
             merged.lock().unwrap().merge(&local);
         });
 
+        let mut stats = merged.into_inner().unwrap();
+        // Serial-parity: the whole-layer kernels record the per-sweep
+        // filter footprint once after their loops; do the same post-merge.
+        stats.filter_bytes_per_sweep =
+            stats.filter_bytes_per_sweep.max((cfg.s * cfg.r * plan.q * V * 4) as u64);
         RunReport {
-            stats: merged.into_inner().unwrap(),
+            stats,
+            tasks_per_chunk: tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            total_tasks: total,
+        }
+    }
+
+    /// Run SparseTrain BWI with output parallelism over `(i, iy, cb)`
+    /// tasks: each task scatters every ∂L/∂Y row feeding input row `iy`
+    /// into a disjoint slice of `dd` (one input-gradient row × one Q tile
+    /// of input channels).
+    ///
+    /// `gt` is the channel-transposed filter
+    /// ([`FilterTensor::transpose_channels`]); `dd` must be
+    /// zero-initialized, as for the serial [`sparse_bwi::bwi`].
+    pub fn run_bwi(
+        &self,
+        cfg: &ConvConfig,
+        dy: &ActTensor,
+        gt: &FilterTensor,
+        dd: &mut ActTensor,
+        mode: SkipMode,
+    ) -> RunReport {
+        cfg.validate().expect("invalid conv config");
+        let plan = plan_fwd(cfg.c, cfg.r); // BWI accumulators are C-vectors
+        let cq_count = cfg.c / plan.q;
+        let h = cfg.h;
+        let total = Self::bwi_task_count(cfg);
+        let chunks = self.chunks_for(total);
+
+        let dptr = SharedMut(dd as *mut ActTensor);
+        let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
+        let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+
+        self.pool.for_chunks(total, chunks, |ci, start, end| {
+            let mut local = KernelStats::new();
+            for t in start..end {
+                let i = t / (h * cq_count);
+                let rem = t % (h * cq_count);
+                let iy = rem / cq_count;
+                let cb = rem % cq_count;
+                // SAFETY: (i, iy, cb) ranges over distinct input rows ×
+                // C-tiles; bwi_task only reads and writes dd rows
+                // (i, cb·Q/V+j, iy) — disjoint across tasks.
+                let dd_mut: &mut ActTensor = unsafe { &mut *{ &dptr }.0 };
+                sparse_bwi::bwi_task(cfg, dy, gt, dd_mut, i, iy, cb, mode, &mut local);
+                tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
+            }
+            merged.lock().unwrap().merge(&local);
+        });
+
+        let mut stats = merged.into_inner().unwrap();
+        stats.filter_bytes_per_sweep =
+            stats.filter_bytes_per_sweep.max((cfg.s * cfg.r * plan.q * V * 4) as u64);
+        RunReport {
+            stats,
+            tasks_per_chunk: tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            total_tasks: total,
+        }
+    }
+
+    /// Run SparseTrain BWW in parallel over `(qb, c)` tasks — one per
+    /// disjoint filter-gradient tile, so weight-gradient accumulation is
+    /// atomic-free (§3.4: the minibatch-vectorized sweep's dG destination
+    /// is minibatch-invariant, making the filter gradient partitionable).
+    ///
+    /// `d` is the N-tiled input ([`BatchTiledTensor`]); `dg` is accumulated
+    /// into, exactly like the serial [`sparse_bww::bww`].
+    pub fn run_bww(
+        &self,
+        cfg: &ConvConfig,
+        d: &BatchTiledTensor,
+        dy: &ActTensor,
+        dg: &mut FilterTensor,
+        mode: SkipMode,
+    ) -> RunReport {
+        cfg.validate().expect("invalid conv config");
+        assert!(cfg.n % V == 0, "BWW requires batch size multiple of V (§5.4)");
+        let plan = plan_bww(cfg.k, cfg.r);
+        let taps = sparse_bww::bww_col_taps(cfg);
+        let total = Self::bww_task_count(cfg);
+        let chunks = self.chunks_for(total);
+
+        let gptr = SharedMut(dg as *mut FilterTensor);
+        let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
+        let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+
+        self.pool.for_chunks(total, chunks, |ci, start, end| {
+            let mut local = KernelStats::new();
+            for t in start..end {
+                let qb = t / cfg.c;
+                let c = t % cfg.c;
+                // SAFETY: (qb, c) ranges over distinct filter tiles;
+                // bww_task only reads and writes dg vectors
+                // (qb·Q/V+j, c/V, s, r, c%V) — disjoint across tasks.
+                let dg_mut: &mut FilterTensor = unsafe { &mut *{ &gptr }.0 };
+                sparse_bww::bww_task(cfg, d, dy, dg_mut, qb, c, &taps, mode, &mut local);
+                tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
+            }
+            merged.lock().unwrap().merge(&local);
+        });
+
+        let mut stats = merged.into_inner().unwrap();
+        stats.filter_bytes_per_sweep =
+            stats.filter_bytes_per_sweep.max((cfg.r * plan.q * 4) as u64);
+        RunReport {
+            stats,
             tasks_per_chunk: tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
             total_tasks: total,
         }
@@ -108,6 +272,19 @@ mod tests {
         let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
         g.fill_uniform(&mut rng, -0.5, 0.5);
         (d, g)
+    }
+
+    /// Signed, ReLU-sparse gradient tensor shaped like ∂L/∂Y.
+    fn setup_dy(cfg: &ConvConfig, sparsity: f64, seed: u64) -> ActTensor {
+        let mut rng = Xorshift::new(seed);
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_relu_sparse(&mut rng, sparsity);
+        for v in dy.data_mut().iter_mut() {
+            if *v != 0.0 && rng.bernoulli(0.5) {
+                *v = -*v;
+            }
+        }
+        dy
     }
 
     #[test]
@@ -133,8 +310,9 @@ mod tests {
         let mut y2 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
         let mut serial = KernelStats::new();
         crate::kernels::sparse_fwd::fwd(&cfg, &d, &g, &mut y2, SkipMode::MaskLoop, &mut serial);
-        assert_eq!(report.stats.fma_vec, serial.fma_vec);
-        assert_eq!(report.stats.zero_checks, serial.zero_checks);
+        // every counter (FMA, checks, hist, loads/stores, sweeps) merges
+        // to exactly the serial values
+        assert_eq!(report.stats, serial);
         assert_eq!(y.data(), y2.data());
     }
 
@@ -144,6 +322,126 @@ mod tests {
         let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
         let plan = plan_fwd(256, 3);
         assert_eq!(Scheduler::fwd_task_count(&cfg), 16 * 56 * (256 / plan.q));
+    }
+
+    #[test]
+    fn bwi_bww_task_count_formulas() {
+        // BWI: N·H·C/Q with Q planned over C; BWW: (K/Q)·C.
+        let cfg = ConvConfig::square(16, 256, 128, 28, 3, 1);
+        let pf = plan_fwd(cfg.c, cfg.r);
+        assert_eq!(Scheduler::bwi_task_count(&cfg), 16 * 28 * (256 / pf.q));
+        let pb = plan_bww(cfg.k, cfg.r);
+        assert_eq!(Scheduler::bww_task_count(&cfg), (128 / pb.q) * 256);
+    }
+
+    #[test]
+    fn parallel_bwi_matches_serial_and_reference() {
+        let cfg = ConvConfig::square(2, 32, 32, 8, 3, 1);
+        let dy = setup_dy(&cfg, 0.5, 303);
+        let (_, g) = setup(&cfg, 0.0);
+        let gt = g.transpose_channels();
+        let sched = Scheduler::new(4);
+
+        let mut dd_par = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        let report = sched.run_bwi(&cfg, &dy, &gt, &mut dd_par, SkipMode::MaskLoop);
+
+        let mut dd_ser = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        let mut serial = KernelStats::new();
+        crate::kernels::sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd_ser, SkipMode::MaskLoop, &mut serial);
+
+        assert_eq!(dd_par.data(), dd_ser.data(), "parallel BWI must be bit-exact");
+        assert_eq!(report.stats, serial);
+        assert_eq!(report.total_tasks, Scheduler::bwi_task_count(&cfg));
+        assert_eq!(report.tasks_per_chunk.iter().sum::<usize>(), report.total_tasks);
+
+        let ddref = reference::conv_bwi(&cfg, &dy.to_nchw(), &g.to_kcsr());
+        assert!(allclose(&dd_par.to_nchw(), &ddref, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn parallel_bww_matches_serial_and_reference() {
+        let cfg = ConvConfig::square(16, 32, 32, 6, 3, 1);
+        let (dsrc, _) = setup(&cfg, 0.5);
+        let d = BatchTiledTensor::from_act(&dsrc);
+        let mut rng = Xorshift::new(404);
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_uniform(&mut rng, -1.0, 1.0);
+        let sched = Scheduler::new(4);
+
+        let mut dg_par = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let report = sched.run_bww(&cfg, &d, &dy, &mut dg_par, SkipMode::MaskLoop);
+
+        let mut dg_ser = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let mut serial = KernelStats::new();
+        crate::kernels::sparse_bww::bww(&cfg, &d, &dy, &mut dg_ser, SkipMode::MaskLoop, &mut serial);
+
+        assert_eq!(dg_par.data(), dg_ser.data(), "parallel BWW must be bit-exact");
+        assert_eq!(report.stats, serial);
+        assert_eq!(report.total_tasks, Scheduler::bww_task_count(&cfg));
+        assert_eq!(report.tasks_per_chunk.iter().sum::<usize>(), report.total_tasks);
+
+        let dgref = reference::conv_bww(&cfg, &dsrc.to_nchw(), &dy.to_nchw());
+        assert!(allclose(&dg_par.to_kcsr(), &dgref, 1e-3, 1e-4));
+    }
+
+    /// BWW accumulates *into* dg — running two scheduled half-batches must
+    /// equal one scheduled full batch (the trainer's gradient-accumulation
+    /// invariant, now under parallel execution).
+    #[test]
+    fn parallel_bww_accumulates() {
+        let cfg = ConvConfig::square(16, 16, 16, 5, 3, 1);
+        let (dsrc, _) = setup(&cfg, 0.5);
+        let d = BatchTiledTensor::from_act(&dsrc);
+        let mut rng = Xorshift::new(15);
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_uniform(&mut rng, -1.0, 1.0);
+        let sched = Scheduler::new(3);
+        let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        sched.run_bww(&cfg, &d, &dy, &mut dg, SkipMode::MaskLoop);
+        let once = dg.data().to_vec();
+        sched.run_bww(&cfg, &d, &dy, &mut dg, SkipMode::MaskLoop);
+        let twice: Vec<f32> = once.iter().map(|v| v * 2.0).collect();
+        assert!(allclose(dg.data(), &twice, 1e-5, 1e-6));
+    }
+
+    /// Acceptance criterion: all three components match the serial kernels
+    /// (numerics bit-exact, merged stats identical) for 1–8 threads.
+    #[test]
+    fn all_components_match_serial_for_threads_1_to_8() {
+        let cfg = ConvConfig::square(16, 32, 32, 6, 3, 1);
+        let (d, g) = setup(&cfg, 0.5);
+        let dy = setup_dy(&cfg, 0.4, 99);
+        let gt = g.transpose_channels();
+        let dt = BatchTiledTensor::from_act(&d);
+
+        // serial baselines
+        let mut y_s = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st_f = KernelStats::new();
+        crate::kernels::sparse_fwd::fwd(&cfg, &d, &g, &mut y_s, SkipMode::MaskLoop, &mut st_f);
+        let mut dd_s = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        let mut st_i = KernelStats::new();
+        crate::kernels::sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd_s, SkipMode::MaskLoop, &mut st_i);
+        let mut dg_s = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let mut st_w = KernelStats::new();
+        crate::kernels::sparse_bww::bww(&cfg, &dt, &dy, &mut dg_s, SkipMode::MaskLoop, &mut st_w);
+
+        for threads in 1..=8 {
+            let sched = Scheduler::new(threads);
+            let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            let rf = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+            assert_eq!(y.data(), y_s.data(), "FWD numerics, threads={threads}");
+            assert_eq!(rf.stats, st_f, "FWD stats, threads={threads}");
+
+            let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let ri = sched.run_bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop);
+            assert_eq!(dd.data(), dd_s.data(), "BWI numerics, threads={threads}");
+            assert_eq!(ri.stats, st_i, "BWI stats, threads={threads}");
+
+            let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            let rw = sched.run_bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop);
+            assert_eq!(dg.data(), dg_s.data(), "BWW numerics, threads={threads}");
+            assert_eq!(rw.stats, st_w, "BWW stats, threads={threads}");
+        }
     }
 
     #[test]
@@ -164,6 +462,86 @@ mod tests {
             } else {
                 Err(format!("mismatch at hw={hw} threads={threads}"))
             }
+        });
+    }
+
+    /// Property: parallel BWI equals the serial kernel bit-for-bit (stats
+    /// included) and the scalar reference within tolerance, across random
+    /// spatial sizes, strides and thread counts.
+    #[test]
+    fn property_parallel_bwi_equals_serial_over_random_shapes() {
+        let gen = UsizeIn { lo: 0, hi: 7 };
+        check(PropConfig { cases: 8, seed: 909, max_shrink_steps: 16 }, &gen, |&case| {
+            let hw = 4 + case; // 4..=11
+            let threads = 1 + case % 4;
+            let stride = 1 + case % 2;
+            let cfg = ConvConfig::square(1, 32, 16, hw, 3, stride);
+            if cfg.validate().is_err() {
+                return Ok(());
+            }
+            let mut rng = Xorshift::new(4000 + case as u64);
+            let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            dy.fill_relu_sparse(&mut rng, 0.5);
+            let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            g.fill_uniform(&mut rng, -0.5, 0.5);
+            let gt = g.transpose_channels();
+
+            let sched = Scheduler::new(threads);
+            let mut dd_par = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let report = sched.run_bwi(&cfg, &dy, &gt, &mut dd_par, SkipMode::MaskLoop);
+            let mut dd_ser = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let mut st = KernelStats::new();
+            crate::kernels::sparse_bwi::bwi(
+                &cfg, &dy, &gt, &mut dd_ser, SkipMode::MaskLoop, &mut st,
+            );
+            if dd_par.data() != dd_ser.data() {
+                return Err(format!("BWI numerics diverge at hw={hw} threads={threads}"));
+            }
+            if report.stats != st {
+                return Err(format!("BWI stats diverge at hw={hw} threads={threads}"));
+            }
+            let ddref = reference::conv_bwi(&cfg, &dy.to_nchw(), &g.to_kcsr());
+            if !allclose(&dd_par.to_nchw(), &ddref, 1e-4, 1e-5) {
+                return Err(format!("BWI reference mismatch at hw={hw} stride={stride}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: parallel BWW equals the serial kernel bit-for-bit (stats
+    /// included) and the scalar reference within tolerance, across random
+    /// spatial sizes and thread counts.
+    #[test]
+    fn property_parallel_bww_equals_serial_over_random_shapes() {
+        let gen = UsizeIn { lo: 0, hi: 5 };
+        check(PropConfig { cases: 6, seed: 611, max_shrink_steps: 16 }, &gen, |&case| {
+            let hw = 4 + case; // 4..=9
+            let threads = 1 + case % 4;
+            let cfg = ConvConfig::square(16, 16, 32, hw, 3, 1);
+            let mut rng = Xorshift::new(6000 + case as u64);
+            let mut dsrc = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            dsrc.fill_relu_sparse(&mut rng, 0.5);
+            let d = BatchTiledTensor::from_act(&dsrc);
+            let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            dy.fill_uniform(&mut rng, -1.0, 1.0);
+
+            let sched = Scheduler::new(threads);
+            let mut dg_par = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            let report = sched.run_bww(&cfg, &d, &dy, &mut dg_par, SkipMode::MaskLoop);
+            let mut dg_ser = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            let mut st = KernelStats::new();
+            crate::kernels::sparse_bww::bww(&cfg, &d, &dy, &mut dg_ser, SkipMode::MaskLoop, &mut st);
+            if dg_par.data() != dg_ser.data() {
+                return Err(format!("BWW numerics diverge at hw={hw} threads={threads}"));
+            }
+            if report.stats != st {
+                return Err(format!("BWW stats diverge at hw={hw} threads={threads}"));
+            }
+            let dgref = reference::conv_bww(&cfg, &dsrc.to_nchw(), &dy.to_nchw());
+            if !allclose(&dg_par.to_kcsr(), &dgref, 1e-3, 1e-4) {
+                return Err(format!("BWW reference mismatch at hw={hw}"));
+            }
+            Ok(())
         });
     }
 

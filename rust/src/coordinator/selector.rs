@@ -39,13 +39,32 @@ impl AlgoPolicy {
 /// The selector: evaluates candidate algorithms on the cost model.
 pub struct Selector {
     pub machine: Machine,
+    /// Worker threads the row-sweep scheduler will run with. The cost
+    /// model sees this many active cores, so `combined` picks the best
+    /// algorithm *for the parallelism actually available* — at low thread
+    /// counts compute-bound kernels look relatively worse against the
+    /// DRAM-bound floor, which can flip a selection.
+    pub threads: usize,
     /// Seed for synthesizing pattern tensors at a given sparsity.
     pub seed: u64,
 }
 
 impl Selector {
     pub fn new(machine: Machine) -> Selector {
-        Selector { machine, seed: 0xA11CE }
+        let threads = machine.cores;
+        Selector { machine, threads, seed: 0xA11CE }
+    }
+
+    /// A selector whose cost estimates assume `threads` active cores —
+    /// pair it with a [`crate::coordinator::Scheduler`] of the same width.
+    pub fn with_threads(machine: Machine, threads: usize) -> Selector {
+        Selector { threads: threads.max(1), ..Selector::new(machine) }
+    }
+
+    /// The machine as the cost model sees it: `threads` active cores,
+    /// everything else as configured.
+    fn effective_machine(&self) -> Machine {
+        self.machine.with_cores(self.threads)
     }
 
     /// Candidate algorithms applicable to a layer/component.
@@ -77,9 +96,10 @@ impl Selector {
     }
 
     /// Estimated wall cycles of `alg` on (cfg, comp) at the given operand
-    /// sparsity (i.i.d. closed form — see [`crate::sim::estimate_layer_iid`]).
+    /// sparsity (i.i.d. closed form — see [`crate::sim::estimate_layer_iid`]),
+    /// modeled at the selector's configured thread count.
     pub fn cost(&self, alg: Algorithm, cfg: &ConvConfig, comp: Component, sparsity: f64) -> f64 {
-        crate::sim::estimate_layer_iid(&self.machine, alg, comp, cfg, sparsity).wall
+        crate::sim::estimate_layer_iid(&self.effective_machine(), alg, comp, cfg, sparsity).wall
     }
 
     /// Pick per policy. `sparse_applicable` is false when the checked
@@ -196,5 +216,47 @@ mod tests {
     fn policy_names() {
         assert_eq!(AlgoPolicy::Combined.name(), "combined");
         assert_eq!(AlgoPolicy::WinOr1x1.name(), "win/1x1");
+    }
+
+    #[test]
+    fn default_threads_match_machine_cores() {
+        let s = sel();
+        assert_eq!(s.threads, Machine::skylake_x().cores);
+    }
+
+    #[test]
+    fn thread_aware_cost_scales_with_threads() {
+        let m = Machine::skylake_x();
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let s1 = Selector::with_threads(m, 1);
+        let s6 = Selector::with_threads(m, 6);
+        let c1 = s1.cost(Algorithm::SparseTrain, &cfg, Component::Fwd, 0.5);
+        let c6 = s6.cost(Algorithm::SparseTrain, &cfg, Component::Fwd, 0.5);
+        assert!(c6 < c1, "more threads must be cheaper: 6-core {c6} vs 1-core {c1}");
+        assert!(c1 / c6 <= 6.0 + 1e-9, "speedup cannot exceed the thread count");
+        // zero clamps to one thread
+        assert_eq!(Selector::with_threads(m, 0).threads, 1);
+    }
+
+    #[test]
+    fn selection_can_depend_on_thread_count() {
+        // At equal sparsity the *ordering* of candidates may change with
+        // the modeled core count (bandwidth-bound vs compute-bound). At
+        // minimum, every thread count still returns an applicable
+        // algorithm and the combined policy never picks something more
+        // expensive than SparseTrain when SparseTrain is modeled fastest.
+        let m = Machine::skylake_x();
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        for threads in [1, 2, 4, 6, 8] {
+            let s = Selector::with_threads(m, threads);
+            let alg = s.select(AlgoPolicy::Combined, &cfg, Component::Fwd, 0.9, true);
+            let best_cost = s.cost(alg, &cfg, Component::Fwd, 0.9);
+            for cand in Selector::candidates(&cfg, true) {
+                assert!(
+                    best_cost <= s.cost(cand, &cfg, Component::Fwd, 0.9) + 1e-9,
+                    "threads={threads}: combined pick {alg:?} beaten by {cand:?}"
+                );
+            }
+        }
     }
 }

@@ -61,6 +61,38 @@ pub fn bww(
     let kq_count = cfg.k / plan.q;
     let taps = bww_col_taps(cfg);
 
+    for qb in 0..kq_count {
+        for c in 0..cfg.c {
+            bww_task(cfg, d, dy, dg, qb, c, &taps, mode, stats);
+        }
+    }
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.r * plan.q * 4) as u64);
+}
+
+/// Per-task body for the parallel scheduler: one `(qb, c)` pair — a Q tile
+/// of output channels × one input channel — swept over the whole minibatch
+/// and every output row. Distinct `(qb, c)` tasks write **disjoint** dG
+/// tiles (`dG[qb·Q .. (qb+1)·Q][c][*][*]`), so the coordinator can run them
+/// in parallel without locks or atomics on dG (§3.4's minibatch
+/// vectorization keeps each sweep's destination minibatch-invariant).
+///
+/// Each dG element is only ever touched by one task, and the task's
+/// `(nb, oy, s)` iteration order matches the serial [`bww`], so the
+/// parallel result is bit-identical to the serial kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn bww_task(
+    cfg: &ConvConfig,
+    d: &BatchTiledTensor,
+    dy: &ActTensor,
+    dg: &mut FilterTensor,
+    qb: usize,
+    c: usize,
+    taps: &[Vec<(usize, usize)>],
+    mode: SkipMode,
+    stats: &mut KernelStats,
+) {
+    let oh = cfg.out_h();
     for nb in 0..cfg.n / V {
         for oy in 0..oh {
             for s in 0..cfg.s {
@@ -68,18 +100,10 @@ pub fn bww(
                 if iy < 0 || iy >= cfg.h as isize {
                     continue;
                 }
-                for qb in 0..kq_count {
-                    for c in 0..cfg.c {
-                        bww_sweep(
-                            cfg, d, dy, dg, nb, oy, iy as usize, s, qb, c, &taps, mode, stats,
-                        );
-                    }
-                }
+                bww_sweep(cfg, d, dy, dg, nb, oy, iy as usize, s, qb, c, taps, mode, stats);
             }
         }
     }
-    stats.filter_bytes_per_sweep =
-        stats.filter_bytes_per_sweep.max((cfg.r * plan.q * 4) as u64);
 }
 
 /// One BWW row sweep: fixed (minibatch tile, output row, s-tap, Q tile,

@@ -17,8 +17,14 @@
 //!   model, and an activation profiler.
 //! * [`nets`] — the paper's Table 2 layer configurations and full conv-layer
 //!   inventories for VGG16 / ResNet-34 / ResNet-50 / Fixup ResNet-50.
-//! * [`coordinator`] — the L3 runtime: row-sweep work scheduler, per-layer
-//!   algorithm selector, and the PJRT-driven training loop.
+//! * [`coordinator`] — the L3 runtime: the output-parallel row-sweep
+//!   scheduler (all three training components — FWD over `(i, oy, qb)`
+//!   output-row tasks, BWI over `(i, iy, cb)` input-row tasks, BWW over
+//!   `(qb, c)` disjoint filter-gradient tiles, each atomic-free with
+//!   per-chunk stats merged to exact serial parity; see
+//!   [`coordinator::scheduler`] for the execution model), the
+//!   thread-count-aware per-layer algorithm selector, and the PJRT-driven
+//!   training loop.
 //! * [`runtime`] — PJRT client wrapper that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them.
 //! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`.

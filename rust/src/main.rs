@@ -31,15 +31,26 @@ COMMANDS
   train              run the PJRT trainer  [--steps N] [--seed N]
   plan               register plan  [--k N] [--r N]
 
+OPTIONS
+  --threads N        model N active cores (default: the testbed's 6)
+
 All experiment outputs are also produced by `cargo bench` and the examples.";
 
 fn main() {
-    let args = Args::from_env(&["layer", "steps", "seed", "epochs", "k", "r"], &["csv", "detail"])
-        .unwrap_or_else(|e| {
-            eprintln!("error: {e}\n\n{USAGE}");
-            std::process::exit(2);
-        });
-    let m = Machine::skylake_x();
+    let args = Args::from_env(
+        &["layer", "steps", "seed", "epochs", "k", "r", "threads"],
+        &["csv", "detail"],
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    });
+    let base = Machine::skylake_x();
+    let threads = args.get_usize("threads", base.cores).unwrap_or_else(|e| {
+        eprintln!("error: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    });
+    let m = experiments::machine_with_threads(&base, threads);
     match args.subcommand() {
         Some("fig1") | Some("table4") => {
             let (_, fig, tab) = experiments::fig1_table4(&m);

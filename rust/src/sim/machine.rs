@@ -70,7 +70,14 @@ impl Machine {
 
     /// A single-core variant (used by unit tests for determinism).
     pub fn single_core() -> Machine {
-        Machine { cores: 1, ..Machine::skylake_x() }
+        Machine::skylake_x().with_cores(1)
+    }
+
+    /// The same machine restricted to `cores` active cores (clamped to at
+    /// least one) — the single source of the "model fewer threads" rule
+    /// used by the selector, the benches and the CLI.
+    pub fn with_cores(&self, cores: usize) -> Machine {
+        Machine { cores: cores.max(1), ..*self }
     }
 
     /// DRAM bandwidth available per active core.

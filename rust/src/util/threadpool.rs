@@ -1,11 +1,25 @@
-//! A work-stealing-free, channel-based thread pool (offline substitute for
-//! `rayon`), used by the coordinator's row-sweep scheduler.
+//! A work-stealing-free thread pool (offline substitute for `rayon`), used
+//! by the coordinator's row-sweep scheduler.
 //!
-//! Design: a shared injector queue guarded by a mutex + condvar. Tasks are
-//! boxed closures. `scope_chunks` provides the parallel-for primitive the
-//! scheduler needs: split an index range into chunks and run a worker
-//! closure per chunk, blocking until every chunk completes.
+//! Two primitives:
+//!
+//! * [`ThreadPool::submit`] / [`ThreadPool::wait_idle`] — fire-and-forget
+//!   `'static` tasks on persistent worker threads (a mutex+condvar injector
+//!   queue). Worker threads wrap each task in `catch_unwind`, so a
+//!   panicking task can neither kill a worker nor wedge `wait_idle`; the
+//!   panic count is available via [`ThreadPool::panicked_tasks`].
+//! * [`ThreadPool::for_chunks`] — the parallel-for the scheduler needs:
+//!   split `0..n` into chunks and run a borrowed closure per chunk,
+//!   blocking until all complete. Built on `std::thread::scope`, which (a)
+//!   lets the closure borrow from the caller's stack *safely* (no lifetime
+//!   transmutes — the scope guarantees the threads are joined before the
+//!   borrow ends) and (b) propagates a panic from any chunk to the caller
+//!   instead of deadlocking a completion counter. Chunks are handed out
+//!   through a shared atomic cursor, so at most [`ThreadPool::threads`]
+//!   chunks run concurrently and early-finishing workers pick up the
+//!   remaining ones (the paper's dynamic row-sweep scheduling, §3.2.2).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -18,19 +32,24 @@ struct Shared {
     shutdown: AtomicBool,
     /// Tasks submitted but not yet finished (for `wait_idle`).
     inflight: AtomicUsize,
+    /// Submitted tasks that panicked (they still count as finished).
+    panicked: AtomicUsize,
     idle_cv: Condvar,
     idle_mx: Mutex<()>,
 }
 
-/// Fixed-size thread pool.
+/// Fixed-size thread pool. Persistent workers are spawned lazily on the
+/// first [`ThreadPool::submit`]: the `for_chunks` path uses scoped threads
+/// instead, so schedulers that never submit fire-and-forget work don't
+/// hold idle OS threads parked on the queue condvar.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
     n_threads: usize,
 }
 
 impl ThreadPool {
-    /// Create a pool with `n` worker threads (`n >= 1`).
+    /// Create a pool that will use `n` worker threads (`n >= 1`).
     pub fn new(n: usize) -> ThreadPool {
         let n = n.max(1);
         let shared = Arc::new(Shared {
@@ -38,19 +57,28 @@ impl ThreadPool {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
+            panicked: AtomicUsize::new(0),
             idle_cv: Condvar::new(),
             idle_mx: Mutex::new(()),
         });
-        let workers = (0..n)
-            .map(|i| {
-                let sh = Arc::clone(&shared);
+        ThreadPool { shared, workers: Mutex::new(Vec::new()), n_threads: n }
+    }
+
+    /// Spawn the persistent workers if they are not running yet.
+    fn ensure_workers(&self) {
+        let mut workers = self.workers.lock().unwrap();
+        if !workers.is_empty() {
+            return;
+        }
+        for i in 0..self.n_threads {
+            let sh = Arc::clone(&self.shared);
+            workers.push(
                 std::thread::Builder::new()
                     .name(format!("sparsetrain-worker-{i}"))
                     .spawn(move || worker_loop(sh))
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { shared, workers, n_threads: n }
+                    .expect("spawn worker"),
+            );
+        }
     }
 
     /// Pool sized to available host parallelism.
@@ -63,15 +91,18 @@ impl ThreadPool {
         self.n_threads
     }
 
-    /// Submit a fire-and-forget task.
+    /// Submit a fire-and-forget task (spawns the persistent workers on
+    /// first use).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.ensure_workers();
         self.shared.inflight.fetch_add(1, Ordering::SeqCst);
         let mut q = self.shared.queue.lock().unwrap();
         q.push_back(Box::new(f));
         self.shared.cv.notify_one();
     }
 
-    /// Block until every submitted task has finished.
+    /// Block until every submitted task has finished (panicked tasks count
+    /// as finished — see [`ThreadPool::panicked_tasks`]).
     pub fn wait_idle(&self) {
         let mut guard = self.shared.idle_mx.lock().unwrap();
         while self.shared.inflight.load(Ordering::SeqCst) != 0 {
@@ -79,10 +110,20 @@ impl ThreadPool {
         }
     }
 
-    /// Parallel-for over `0..n` in `chunks` contiguous chunks. `f(chunk_idx,
-    /// start, end)` runs on pool threads; blocks until all chunks finish.
+    /// Number of submitted tasks that panicked since pool creation.
+    pub fn panicked_tasks(&self) -> usize {
+        self.shared.panicked.load(Ordering::SeqCst)
+    }
+
+    /// Parallel-for over `0..n` in up to `chunks` contiguous chunks.
+    /// `f(chunk_idx, start, end)` runs on up to [`ThreadPool::threads`]
+    /// threads (the calling thread participates); blocks until all chunks
+    /// finish. `f` must be `Sync` because multiple workers call it
+    /// concurrently.
     ///
-    /// `f` must be `Sync` because multiple workers call it concurrently.
+    /// A panic inside `f` is propagated to the caller once every other
+    /// in-flight chunk has finished — callers observe the original panic
+    /// payload instead of a deadlock, and the pool stays usable.
     pub fn for_chunks<F>(&self, n: usize, chunks: usize, f: F)
     where
         F: Fn(usize, usize, usize) + Send + Sync,
@@ -92,40 +133,30 @@ impl ThreadPool {
         }
         let chunks = chunks.clamp(1, n);
         let chunk_len = n.div_ceil(chunks);
-        // SAFETY of lifetime: we block until all tasks complete before
-        // returning, so borrowing f from the stack is sound. We enforce it
-        // by transmuting through Arc<…'static> after a scope barrier.
-        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let f: Arc<dyn Fn(usize, usize, usize) + Send + Sync> = {
-            // Extend lifetime: justified because of the completion barrier
-            // below (no task outlives this call).
-            let f_ref: &(dyn Fn(usize, usize, usize) + Send + Sync) = &f;
-            let f_static: &'static (dyn Fn(usize, usize, usize) + Send + Sync) =
-                unsafe { std::mem::transmute(f_ref) };
-            Arc::from(f_static)
-        };
-        let mut launched = 0usize;
-        for ci in 0..chunks {
-            let start = ci * chunk_len;
-            if start >= n {
+        // Number of non-empty chunks actually dispatched.
+        let n_chunks = n.div_ceil(chunk_len);
+        let workers = self.n_threads.min(n_chunks);
+        let cursor = AtomicUsize::new(0);
+
+        let run_chunks = |cursor: &AtomicUsize, f: &F| loop {
+            let ci = cursor.fetch_add(1, Ordering::Relaxed);
+            if ci >= n_chunks {
                 break;
             }
+            let start = ci * chunk_len;
             let end = (start + chunk_len).min(n);
-            let f = Arc::clone(&f);
-            let done = Arc::clone(&done);
-            launched += 1;
-            self.submit(move || {
-                f(ci, start, end);
-                let (mx, cv) = &*done;
-                *mx.lock().unwrap() += 1;
-                cv.notify_one();
-            });
-        }
-        let (mx, cv) = &*done;
-        let mut finished = mx.lock().unwrap();
-        while *finished < launched {
-            finished = cv.wait(finished).unwrap();
-        }
+            f(ci, start, end);
+        };
+
+        // `scope` joins every spawned thread before returning, which makes
+        // borrowing `f` and `cursor` from this stack frame sound, and
+        // resumes the panic of any panicked chunk in the caller.
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(|| run_chunks(&cursor, &f));
+            }
+            run_chunks(&cursor, &f);
+        });
     }
 }
 
@@ -143,7 +174,11 @@ fn worker_loop(sh: Arc<Shared>) {
                 q = sh.cv.wait(q).unwrap();
             }
         };
-        task();
+        // A panicking task must not kill the worker or leak an inflight
+        // count (which would deadlock `wait_idle` forever).
+        if catch_unwind(AssertUnwindSafe(task)).is_err() {
+            sh.panicked.fetch_add(1, Ordering::SeqCst);
+        }
         if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
             let _g = sh.idle_mx.lock().unwrap();
             sh.idle_cv.notify_all();
@@ -155,7 +190,7 @@ impl Drop for ThreadPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
-        for w in self.workers.drain(..) {
+        for w in self.workers.lock().unwrap().drain(..) {
             let _ = w.join();
         }
     }
@@ -203,13 +238,79 @@ mod tests {
                 sum.fetch_add(i as u64, Ordering::SeqCst);
             }
         });
-        assert_eq!(sum.load(Ordering::SeqCst), 0 + 1 + 2);
+        assert_eq!(sum.load(Ordering::SeqCst), 3); // 0 + 1 + 2
     }
 
     #[test]
     fn for_chunks_empty_range() {
         let pool = ThreadPool::new(2);
         pool.for_chunks(0, 4, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn for_chunks_single_thread_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let caller = std::thread::current().id();
+        let same_thread = AtomicU64::new(1);
+        pool.for_chunks(10, 4, |_, _, _| {
+            if std::thread::current().id() != caller {
+                same_thread.store(0, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(same_thread.load(Ordering::SeqCst), 1);
+    }
+
+    /// Regression: a panicking chunk used to leave the completion counter
+    /// short, blocking the caller forever. Now the panic propagates and
+    /// the pool survives.
+    #[test]
+    fn for_chunks_panic_propagates_instead_of_deadlocking() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.for_chunks(100, 8, |_ci, s, _e| {
+                if s == 0 {
+                    panic!("task boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must reach the caller");
+
+        // The pool is fully usable afterwards.
+        let sum = AtomicU64::new(0);
+        pool.for_chunks(10, 4, |_ci, s, e| {
+            for i in s..e {
+                sum.fetch_add(i as u64, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    /// Regression: a panicking submitted task must not wedge `wait_idle`
+    /// or kill the worker thread.
+    #[test]
+    fn submit_panic_does_not_wedge_wait_idle() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("submitted boom"));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+        assert_eq!(pool.panicked_tasks(), 1);
+    }
+
+    #[test]
+    fn for_chunks_needs_no_persistent_workers() {
+        let pool = ThreadPool::new(4);
+        pool.for_chunks(100, 8, |_, _, _| {});
+        assert!(pool.workers.lock().unwrap().is_empty(), "scoped path must not spawn workers");
+        pool.submit(|| {});
+        pool.wait_idle();
+        assert_eq!(pool.workers.lock().unwrap().len(), 4, "submit spawns the full worker set");
     }
 
     #[test]
