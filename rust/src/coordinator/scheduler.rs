@@ -10,19 +10,35 @@
 //! | BWI ([`Scheduler::run_bwi`]) | `(i, iy, cb)` | `N·H·C/Q` | input-gradient rows `∂D[i][cb·Q..][iy]` |
 //! | BWW ([`Scheduler::run_bww`]) | `(qb, c)` | `(K/Q)·C` | filter-gradient tiles `∂G[qb·Q..][c][*][*]` |
 //!
-//! Tasks inside one grid write disjoint slices of the output tensor, so
-//! workers need no locks or atomics on the data — only the shared task
-//! cursor inside [`ThreadPool::for_chunks`]. FWD/BWI parallelize over
-//! images × rows (the naïve input-parallel alternative would need atomic
-//! output updates); BWW instead tiles the *filter gradient*: §3.4's
-//! minibatch vectorization makes every sweep's dG destination
-//! minibatch-invariant, so partitioning by `(Q-tile, input channel)` gives
-//! atomic-free weight-gradient accumulation with no per-thread dG slabs or
-//! post-barrier reduction — each dG element belongs to exactly one task.
+//! ## The slice-view contract (who splits, who owns, why it's safe)
 //!
-//! **Determinism.** Every task runs the same per-task body as the serial
-//! kernel and each output element is written by exactly one task in the
-//! same inner iteration order, so the parallel numerics are bit-identical
+//! Each run splits the output tensor into **owned disjoint task views**
+//! *before* any worker starts — [`ActTensor::par_row_tiles_mut`] for
+//! FWD/BWI rows, [`FilterTensor::par_qc_tiles_mut`] for BWW tiles. The
+//! split is built on `chunks_mut`/`split_at_mut`, so every element belongs
+//! to exactly one view and the views are non-aliasing `&mut` slices by
+//! construction. [`ThreadPool::for_chunk_slices`] then hands each chunk
+//! worker an **exclusive `&mut` sub-slice** of the view vector; a task
+//! writes only through its own view (which also carries the `(i, y, qb)` /
+//! `(qb, c)` index metadata, so tasks no longer recompute it).
+//!
+//! The split means data-race freedom is *proved by the borrow checker*,
+//! not asserted by a safety comment: there is no `unsafe` anywhere in the
+//! scheduler, no `Send`/`Sync` wrapper smuggling a whole-tensor `*mut`
+//! across threads (the former raw-pointer idiom is retired), and the whole
+//! parallel triad runs cleanly under `cargo +nightly miri test`. Workers
+//! need no locks or
+//! atomics on tensor data — only the chunk cursor and the stats merge
+//! below. FWD/BWI parallelize over images × rows (the naïve input-parallel
+//! alternative would need atomic output updates); BWW instead tiles the
+//! *filter gradient*: §3.4's minibatch vectorization makes every sweep's
+//! dG destination minibatch-invariant, so partitioning by `(Q-tile, input
+//! channel)` gives atomic-free weight-gradient accumulation with no
+//! per-thread dG slabs or post-barrier reduction.
+//!
+//! **Determinism.** The serial kernels iterate the *same* views in task
+//! order, and each output element is written by exactly one task in the
+//! same inner iteration order — so the parallel numerics are bit-identical
 //! to the serial kernels for all three components (not merely allclose).
 //!
 //! **Stats merge.** Each chunk accumulates a private [`KernelStats`] and
@@ -53,13 +69,6 @@ pub struct RunReport {
     pub tasks_per_chunk: Vec<usize>,
     pub total_tasks: usize,
 }
-
-/// Share a `&mut T` across chunk workers through a raw pointer. The task
-/// grids guarantee disjoint writes; the wrapper only exists to move the
-/// pointer into the `Send + Sync` closure.
-struct SharedMut<T>(*mut T);
-unsafe impl<T> Send for SharedMut<T> {}
-unsafe impl<T> Sync for SharedMut<T> {}
 
 impl Scheduler {
     pub fn new(threads: usize) -> Scheduler {
@@ -103,7 +112,8 @@ impl Scheduler {
     }
 
     /// Run SparseTrain FWD with output parallelism. Tasks are `(i, oy, qb)`
-    /// triples; each writes a disjoint slice of `y`.
+    /// triples; each receives an owned disjoint [`crate::tensor::RowTileMut`]
+    /// view of `y` and writes nothing else.
     pub fn run_fwd(
         &self,
         cfg: &ConvConfig,
@@ -114,26 +124,19 @@ impl Scheduler {
     ) -> RunReport {
         cfg.validate().expect("invalid conv config");
         let plan = plan_fwd(cfg.k, cfg.r);
-        let kq_count = cfg.k / plan.q;
-        let oh = cfg.out_h();
         let total = Self::fwd_task_count(cfg);
         let chunks = self.chunks_for(total);
 
-        let yptr = SharedMut(y as *mut ActTensor);
+        // Split y into one view per task, in scheduler task order.
+        let mut views = y.par_row_tiles_mut(plan.q / V);
+        debug_assert_eq!(views.len(), total);
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
 
-        self.pool.for_chunks(total, chunks, |ci, start, end| {
+        self.pool.for_chunk_slices(&mut views, chunks, |ci, _start, chunk| {
             let mut local = KernelStats::new();
-            for t in start..end {
-                let i = t / (oh * kq_count);
-                let rem = t % (oh * kq_count);
-                let oy = rem / kq_count;
-                let qb = rem % kq_count;
-                // SAFETY: (i, oy, qb) ranges over distinct output rows ×
-                // K-tiles; fwd_task only writes y rows (i, qb·Q/V+j, oy).
-                let y_mut: &mut ActTensor = unsafe { &mut *{ &yptr }.0 };
-                sparse_fwd::fwd_task(cfg, d, g, y_mut, i, oy, qb, mode, &mut local);
+            for view in chunk.iter_mut() {
+                sparse_fwd::fwd_task(cfg, d, g, view, mode, &mut local);
                 tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
             }
             merged.lock().unwrap().merge(&local);
@@ -153,8 +156,8 @@ impl Scheduler {
 
     /// Run SparseTrain BWI with output parallelism over `(i, iy, cb)`
     /// tasks: each task scatters every ∂L/∂Y row feeding input row `iy`
-    /// into a disjoint slice of `dd` (one input-gradient row × one Q tile
-    /// of input channels).
+    /// into its owned disjoint view of `dd` (one input-gradient row × one
+    /// Q tile of input channels).
     ///
     /// `gt` is the channel-transposed filter
     /// ([`FilterTensor::transpose_channels`]); `dd` must be
@@ -169,27 +172,19 @@ impl Scheduler {
     ) -> RunReport {
         cfg.validate().expect("invalid conv config");
         let plan = plan_fwd(cfg.c, cfg.r); // BWI accumulators are C-vectors
-        let cq_count = cfg.c / plan.q;
-        let h = cfg.h;
         let total = Self::bwi_task_count(cfg);
         let chunks = self.chunks_for(total);
 
-        let dptr = SharedMut(dd as *mut ActTensor);
+        // Split dd into one view per task, in scheduler task order.
+        let mut views = dd.par_row_tiles_mut(plan.q / V);
+        debug_assert_eq!(views.len(), total);
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
 
-        self.pool.for_chunks(total, chunks, |ci, start, end| {
+        self.pool.for_chunk_slices(&mut views, chunks, |ci, _start, chunk| {
             let mut local = KernelStats::new();
-            for t in start..end {
-                let i = t / (h * cq_count);
-                let rem = t % (h * cq_count);
-                let iy = rem / cq_count;
-                let cb = rem % cq_count;
-                // SAFETY: (i, iy, cb) ranges over distinct input rows ×
-                // C-tiles; bwi_task only reads and writes dd rows
-                // (i, cb·Q/V+j, iy) — disjoint across tasks.
-                let dd_mut: &mut ActTensor = unsafe { &mut *{ &dptr }.0 };
-                sparse_bwi::bwi_task(cfg, dy, gt, dd_mut, i, iy, cb, mode, &mut local);
+            for view in chunk.iter_mut() {
+                sparse_bwi::bwi_task(cfg, dy, gt, view, mode, &mut local);
                 tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
             }
             merged.lock().unwrap().merge(&local);
@@ -206,9 +201,10 @@ impl Scheduler {
     }
 
     /// Run SparseTrain BWW in parallel over `(qb, c)` tasks — one per
-    /// disjoint filter-gradient tile, so weight-gradient accumulation is
-    /// atomic-free (§3.4: the minibatch-vectorized sweep's dG destination
-    /// is minibatch-invariant, making the filter gradient partitionable).
+    /// disjoint filter-gradient tile view, so weight-gradient accumulation
+    /// is atomic-free (§3.4: the minibatch-vectorized sweep's dG
+    /// destination is minibatch-invariant, making the filter gradient
+    /// partitionable).
     ///
     /// `d` is the N-tiled input ([`BatchTiledTensor`]); `dg` is accumulated
     /// into, exactly like the serial [`sparse_bww::bww`].
@@ -227,20 +223,16 @@ impl Scheduler {
         let total = Self::bww_task_count(cfg);
         let chunks = self.chunks_for(total);
 
-        let gptr = SharedMut(dg as *mut FilterTensor);
+        // Split dg into one (qb, c) tile view per task, in task order.
+        let mut views = dg.par_qc_tiles_mut(plan.q / V);
+        debug_assert_eq!(views.len(), total);
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
 
-        self.pool.for_chunks(total, chunks, |ci, start, end| {
+        self.pool.for_chunk_slices(&mut views, chunks, |ci, _start, chunk| {
             let mut local = KernelStats::new();
-            for t in start..end {
-                let qb = t / cfg.c;
-                let c = t % cfg.c;
-                // SAFETY: (qb, c) ranges over distinct filter tiles;
-                // bww_task only reads and writes dg vectors
-                // (qb·Q/V+j, c/V, s, r, c%V) — disjoint across tasks.
-                let dg_mut: &mut FilterTensor = unsafe { &mut *{ &gptr }.0 };
-                sparse_bww::bww_task(cfg, d, dy, dg_mut, qb, c, &taps, mode, &mut local);
+            for view in chunk.iter_mut() {
+                sparse_bww::bww_task(cfg, d, dy, view, &taps, mode, &mut local);
                 tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
             }
             merged.lock().unwrap().merge(&local);
@@ -288,6 +280,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn parallel_matches_reference() {
         let cfg = ConvConfig::square(2, 32, 64, 8, 3, 1);
         let (d, g) = setup(&cfg, 0.5);
@@ -301,6 +294,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn parallel_stats_match_serial() {
         let cfg = ConvConfig::square(2, 32, 64, 8, 3, 1);
         let (d, g) = setup(&cfg, 0.4);
@@ -335,6 +329,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn parallel_bwi_matches_serial_and_reference() {
         let cfg = ConvConfig::square(2, 32, 32, 8, 3, 1);
         let dy = setup_dy(&cfg, 0.5, 303);
@@ -359,6 +354,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn parallel_bww_matches_serial_and_reference() {
         let cfg = ConvConfig::square(16, 32, 32, 6, 3, 1);
         let (dsrc, _) = setup(&cfg, 0.5);
@@ -388,6 +384,7 @@ mod tests {
     /// equal one scheduled full batch (the trainer's gradient-accumulation
     /// invariant, now under parallel execution).
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn parallel_bww_accumulates() {
         let cfg = ConvConfig::square(16, 16, 16, 5, 3, 1);
         let (dsrc, _) = setup(&cfg, 0.5);
@@ -407,6 +404,7 @@ mod tests {
     /// Acceptance criterion: all three components match the serial kernels
     /// (numerics bit-exact, merged stats identical) for 1–8 threads.
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn all_components_match_serial_for_threads_1_to_8() {
         let cfg = ConvConfig::square(16, 32, 32, 6, 3, 1);
         let (d, g) = setup(&cfg, 0.5);
@@ -445,6 +443,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn property_parallel_equals_serial_over_random_shapes() {
         // Property: for random (hw, threads), parallel == serial output.
         let gen = UsizeIn { lo: 0, hi: 6 };
@@ -469,6 +468,7 @@ mod tests {
     /// included) and the scalar reference within tolerance, across random
     /// spatial sizes, strides and thread counts.
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn property_parallel_bwi_equals_serial_over_random_shapes() {
         let gen = UsizeIn { lo: 0, hi: 7 };
         check(PropConfig { cases: 8, seed: 909, max_shrink_steps: 16 }, &gen, |&case| {
@@ -512,6 +512,7 @@ mod tests {
     /// included) and the scalar reference within tolerance, across random
     /// spatial sizes and thread counts.
     #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn property_parallel_bww_equals_serial_over_random_shapes() {
         let gen = UsizeIn { lo: 0, hi: 5 };
         check(PropConfig { cases: 6, seed: 611, max_shrink_steps: 16 }, &gen, |&case| {
@@ -545,7 +546,54 @@ mod tests {
         });
     }
 
+    /// The reduced-geometry triad the Miri CI gate runs: all three
+    /// components through the parallel scheduler on a tiny layer,
+    /// bit-exact against the serial kernels with identical merged stats.
+    /// Natively this is a fast smoke test; under `cargo +nightly miri
+    /// test` it is the proof that the slice-view scheduler is free of UB
+    /// and data races (the retired raw-pointer idiom failed exactly here).
     #[test]
+    fn miri_reduced_triad_matches_serial() {
+        // n = V so BWW runs; spatial size shrinks further under the
+        // interpreter to keep the CI gate fast.
+        let hw = if cfg!(miri) { 3 } else { 6 };
+        let cfg = ConvConfig::square(V, 16, 16, hw, 3, 1);
+        let (d, g) = setup(&cfg, 0.5);
+        let dy = setup_dy(&cfg, 0.4, 17);
+        let gt = g.transpose_channels();
+        let dt = BatchTiledTensor::from_act(&d);
+
+        let mut y_s = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st_f = KernelStats::new();
+        crate::kernels::sparse_fwd::fwd(&cfg, &d, &g, &mut y_s, SkipMode::MaskLoop, &mut st_f);
+        let mut dd_s = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        let mut st_i = KernelStats::new();
+        crate::kernels::sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd_s, SkipMode::MaskLoop, &mut st_i);
+        let mut dg_s = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let mut st_w = KernelStats::new();
+        crate::kernels::sparse_bww::bww(&cfg, &dt, &dy, &mut dg_s, SkipMode::MaskLoop, &mut st_w);
+
+        // 3 threads exercises real cross-thread view hand-off without
+        // making the interpreted run crawl.
+        let sched = Scheduler::new(3);
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let rf = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+        assert_eq!(y.data(), y_s.data(), "FWD numerics");
+        assert_eq!(rf.stats, st_f, "FWD stats");
+
+        let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        let ri = sched.run_bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop);
+        assert_eq!(dd.data(), dd_s.data(), "BWI numerics");
+        assert_eq!(ri.stats, st_i, "BWI stats");
+
+        let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let rw = sched.run_bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop);
+        assert_eq!(dg.data(), dg_s.data(), "BWW numerics");
+        assert_eq!(rw.stats, st_w, "BWW stats");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "too slow under miri; miri_* tests cover the reduced set")]
     fn load_balance_reasonable() {
         let cfg = ConvConfig::square(2, 32, 64, 16, 3, 1);
         let (d, g) = setup(&cfg, 0.5);

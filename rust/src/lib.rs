@@ -21,10 +21,21 @@
 //!   scheduler (all three training components — FWD over `(i, oy, qb)`
 //!   output-row tasks, BWI over `(i, iy, cb)` input-row tasks, BWW over
 //!   `(qb, c)` disjoint filter-gradient tiles, each atomic-free with
-//!   per-chunk stats merged to exact serial parity; see
-//!   [`coordinator::scheduler`] for the execution model), the
+//!   per-chunk stats merged to exact serial parity), the
 //!   thread-count-aware per-layer algorithm selector, and the PJRT-driven
 //!   training loop.
+//!
+//!   **Parallel execution model.** The scheduler never shares a `&mut`
+//!   tensor across threads: before a run it splits the output tensor into
+//!   owned disjoint task views ([`tensor::RowTileMut`] /
+//!   [`tensor::FilterTileMut`], carved with `chunks_mut`), and the thread
+//!   pool hands each worker an exclusive `&mut` sub-slice of those views.
+//!   Every per-task kernel body writes only through its own view, so
+//!   data-race freedom is enforced by the borrow checker — zero `unsafe`
+//!   in the scheduling path — and verified continuously by a `cargo
+//!   +nightly miri test` CI gate plus 1–8-thread bit-exactness property
+//!   tests. See [`coordinator::scheduler`] for the full contract (who
+//!   splits, who owns, why it's safe).
 //! * [`runtime`] — PJRT client wrapper that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them.
 //! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`.

@@ -8,6 +8,47 @@ use super::{assert_tiled, fill_relu_sparse, fill_uniform, measured_sparsity};
 use crate::util::prng::Xorshift;
 use crate::V;
 
+/// An owned, disjoint view of one scheduler task's output: the `qv` image
+/// rows of image `i`, row `y`, channel tiles `qb·qv .. (qb+1)·qv` — exactly
+/// the slice a `(i, y, qb)` row-sweep task is allowed to write (§3.2.2).
+///
+/// Views are produced by [`ActTensor::par_row_tiles_mut`], which carves the
+/// tensor's backing buffer with `chunks_mut`, so two views can never alias:
+/// the borrow checker, not a safety comment, guarantees data-race freedom
+/// when views are moved to worker threads.
+#[derive(Debug)]
+pub struct RowTileMut<'a> {
+    /// Image (minibatch) index.
+    pub i: usize,
+    /// Spatial row index.
+    pub y: usize,
+    /// Q-tile index: this view covers channel tiles `qb*qv + j`, `j < qv`.
+    pub qb: usize,
+    /// Row `j` is channel tile `qb*qv + j`; each slice is `W·V` long.
+    rows: Vec<&'a mut [f32]>,
+}
+
+impl<'a> RowTileMut<'a> {
+    /// Number of channel-tile rows in this view (the plan's `Q/V`).
+    #[inline]
+    pub fn tiles(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Image row for channel tile `qb*qv + j` (read side: the sweep
+    /// protocol loads the previous output row once per task).
+    #[inline(always)]
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.rows[j][..]
+    }
+
+    /// Mutable image row for channel tile `qb*qv + j`.
+    #[inline(always)]
+    pub fn row_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.rows[j][..]
+    }
+}
+
 /// NCHWc-tiled activation tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ActTensor {
@@ -152,6 +193,41 @@ impl ActTensor {
         out
     }
 
+    /// Split the tensor into per-task disjoint row-tile views, one per
+    /// `(i, y, qb)` triple, ordered so that view index
+    /// `(i·H + y)·(C/V/qv) + qb` matches the scheduler's task numbering.
+    ///
+    /// `qv` is the number of channel tiles per view (the register plan's
+    /// `Q/V`); it must divide `C/V`. Every element of the tensor belongs to
+    /// exactly one view, so the views can be distributed across threads —
+    /// the replacement for the scheduler's retired raw-pointer sharing.
+    pub fn par_row_tiles_mut(&mut self, qv: usize) -> Vec<RowTileMut<'_>> {
+        let cb_count = self.c_blocks();
+        assert!(qv >= 1 && cb_count % qv == 0, "qv={qv} must divide C/V={cb_count}");
+        let (h, w, n) = (self.h, self.w, self.n);
+        let qb_count = cb_count / qv;
+        let mut views: Vec<RowTileMut<'_>> = Vec::with_capacity(n * h * qb_count);
+        for i in 0..n {
+            for y in 0..h {
+                for qb in 0..qb_count {
+                    views.push(RowTileMut { i, y, qb, rows: Vec::with_capacity(qv) });
+                }
+            }
+        }
+        // Memory order is (i, cb, y): walk the buffer once and route each
+        // image row to its owning view. For a fixed view, rows arrive in
+        // ascending cb order, i.e. already in `j` order.
+        for (ridx, row) in self.data.chunks_mut(w * V).enumerate() {
+            let y = ridx % h;
+            let icb = ridx / h;
+            let cb = icb % cb_count;
+            let i = icb / cb_count;
+            let tid = (i * h + y) * qb_count + cb / qv;
+            views[tid].rows.push(row);
+        }
+        views
+    }
+
     /// Bytes occupied by the tensor payload.
     pub fn bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
@@ -207,5 +283,62 @@ mod tests {
     #[should_panic]
     fn rejects_untiled_channels() {
         ActTensor::zeros(1, 17, 2, 2);
+    }
+
+    #[test]
+    fn par_row_tiles_cover_tensor_disjointly() {
+        // Writing view index + j through every view must touch every
+        // element exactly once, at the position row()/row_mut() promise.
+        let (n, c, h, w) = (2, 64, 3, 4);
+        let qv = 2; // 4 channel tiles → 2 tiles per view
+        let mut t = ActTensor::zeros(n, c, h, w);
+        let qb_count = t.c_blocks() / qv;
+        {
+            let mut views = t.par_row_tiles_mut(qv);
+            assert_eq!(views.len(), n * h * qb_count);
+            for (tid, view) in views.iter_mut().enumerate() {
+                // scheduler task numbering: (i, y, qb)
+                assert_eq!(tid, (view.i * h + view.y) * qb_count + view.qb);
+                assert_eq!(view.tiles(), qv);
+                for j in 0..qv {
+                    assert_eq!(view.row(j).len(), w * V);
+                    for (x, v) in view.row_mut(j).iter_mut().enumerate() {
+                        *v += (tid * qv + j) as f32 + x as f32 / 1000.0;
+                    }
+                }
+            }
+        }
+        // Check against the direct accessors: row j of view (i, y, qb) is
+        // image row (i, qb*qv + j, y).
+        for i in 0..n {
+            for y in 0..h {
+                for qb in 0..qb_count {
+                    let tid = (i * h + y) * qb_count + qb;
+                    for j in 0..qv {
+                        let row = t.row(i, qb * qv + j, y);
+                        for (x, &v) in row.iter().enumerate() {
+                            let expect = (tid * qv + j) as f32 + x as f32 / 1000.0;
+                            assert_eq!(v, expect, "i={i} y={y} qb={qb} j={j} x={x}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_tiles_full_width_tile() {
+        // qv == C/V: one view per (i, y), covering every channel tile.
+        let mut t = ActTensor::zeros(1, 32, 2, 3);
+        let views = t.par_row_tiles_mut(2);
+        assert_eq!(views.len(), 2);
+        assert!(views.iter().all(|v| v.qb == 0 && v.tiles() == 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn par_row_tiles_rejects_non_dividing_qv() {
+        let mut t = ActTensor::zeros(1, 48, 2, 2); // 3 channel tiles
+        let _ = t.par_row_tiles_mut(2);
     }
 }

@@ -10,6 +10,41 @@ use super::{assert_tiled, fill_uniform};
 use crate::util::prng::Xorshift;
 use crate::V;
 
+/// An owned, disjoint view of one BWW task's filter-gradient tile: every
+/// dG K-vector for output-channel tiles `qb·qv .. (qb+1)·qv` × single input
+/// channel `c`, i.e. the `(qb, c)` partition §3.4's minibatch-invariant
+/// sweep destination makes atomic-free.
+///
+/// Produced by [`FilterTensor::par_qc_tiles_mut`], which carves the backing
+/// buffer with `chunks_mut` at V-vector granularity — two views can never
+/// alias, so handing them to worker threads needs no `unsafe`.
+#[derive(Debug)]
+pub struct FilterTileMut<'a> {
+    /// Q-tile index: this view covers K-tiles `qb*qv + j`, `j < qv`.
+    pub qb: usize,
+    /// The single input channel this view owns.
+    pub c: usize,
+    s: usize,
+    r: usize,
+    /// Indexed `(j·S + s)·R + r`; each slice is one K-vector of length V.
+    vecs: Vec<&'a mut [f32]>,
+}
+
+impl<'a> FilterTileMut<'a> {
+    /// Number of K-tiles in this view (the plan's `Q/V`).
+    #[inline]
+    pub fn tiles(&self) -> usize {
+        self.vecs.len() / (self.s * self.r)
+    }
+
+    /// The dG K-vector for K-tile `qb*qv + j`, tap `(s, r)`, input channel
+    /// `self.c` — the slice the sweep's end-of-row fold accumulates into.
+    #[inline(always)]
+    pub fn vec_mut(&mut self, j: usize, s: usize, r: usize) -> &mut [f32] {
+        &mut self.vecs[(j * self.s + s) * self.r + r][..]
+    }
+}
+
 /// Tiled filter tensor (G or ∂L/∂G).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FilterTensor {
@@ -177,6 +212,41 @@ impl FilterTensor {
         t
     }
 
+    /// Split the tensor into per-task disjoint `(qb, c)` tile views,
+    /// ordered so that view index `qb·C + c` matches the BWW scheduler's
+    /// task numbering.
+    ///
+    /// `qv` is the number of K-tiles per view (the BWW plan's `Q/V`); it
+    /// must divide `K/V`. Every K-vector of the tensor belongs to exactly
+    /// one view — the property that makes parallel filter-gradient
+    /// accumulation lock- and atomic-free (§3.4).
+    pub fn par_qc_tiles_mut(&mut self, qv: usize) -> Vec<FilterTileMut<'_>> {
+        let kb_count = self.k_blocks();
+        assert!(qv >= 1 && kb_count % qv == 0, "qv={qv} must divide K/V={kb_count}");
+        let (c, s, r) = (self.c, self.s, self.r);
+        let cb_count = self.c_blocks();
+        let qb_count = kb_count / qv;
+        let mut views: Vec<FilterTileMut<'_>> = Vec::with_capacity(qb_count * c);
+        for qb in 0..qb_count {
+            for ch in 0..c {
+                views.push(FilterTileMut { qb, c: ch, s, r, vecs: Vec::with_capacity(qv * s * r) });
+            }
+        }
+        // Memory order is (kb, cb, s, r, cv): walk the buffer one K-vector
+        // at a time and route it to the view owning (kb/qv, cb·V + cv).
+        // For a fixed view, vectors arrive in (j, s, r) order — exactly the
+        // `vec_mut` index layout.
+        for (vidx, kvec) in self.data.chunks_mut(V).enumerate() {
+            let cv = vidx % V;
+            let rest = vidx / (V * r * s); // drop the (s, r, cv) coordinates
+            let cb = rest % cb_count;
+            let kb = rest / cb_count;
+            let tid = (kb / qv) * c + (cb * V + cv);
+            views[tid].vecs.push(kvec);
+        }
+        views
+    }
+
     pub fn bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }
@@ -226,6 +296,64 @@ mod tests {
         // double transpose is identity
         let gtt = gt.transpose_for_bwi();
         assert_eq!(gtt.to_kcsr(), g.to_kcsr());
+    }
+
+    #[test]
+    fn par_qc_tiles_cover_tensor_disjointly() {
+        // Writing a view-unique value through every vec_mut slot must
+        // reach every element exactly once, at the position the scalar
+        // accessor predicts.
+        let (k, c, s, r) = (32, 32, 2, 3);
+        let qv = 2; // 2 K-tiles → 1 view per (qb=0, c)
+        let mut t = FilterTensor::zeros(k, c, s, r);
+        let qb_count = t.k_blocks() / qv;
+        {
+            let mut views = t.par_qc_tiles_mut(qv);
+            assert_eq!(views.len(), qb_count * c);
+            for (tid, view) in views.iter_mut().enumerate() {
+                // BWW task numbering: (qb, c)
+                assert_eq!(tid, view.qb * c + view.c);
+                assert_eq!(view.tiles(), qv);
+                for j in 0..qv {
+                    for si in 0..s {
+                        for ri in 0..r {
+                            let vec = view.vec_mut(j, si, ri);
+                            assert_eq!(vec.len(), V);
+                            for (l, v) in vec.iter_mut().enumerate() {
+                                *v = (((tid * qv + j) * s + si) * r + ri) as f32
+                                    + l as f32 / 100.0;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // vec (j, si, ri) of view (qb, ch) is K-vector (qb*qv+j, ch/V, si,
+        // ri, ch%V); lane l is logical K index (qb*qv+j)*V + l.
+        for qb in 0..qb_count {
+            for ch in 0..c {
+                let tid = qb * c + ch;
+                for j in 0..qv {
+                    for si in 0..s {
+                        for ri in 0..r {
+                            let vec = t.vec(qb * qv + j, ch / V, si, ri, ch % V);
+                            for (l, &v) in vec.iter().enumerate() {
+                                let expect = (((tid * qv + j) * s + si) * r + ri) as f32
+                                    + l as f32 / 100.0;
+                                assert_eq!(v, expect, "qb={qb} c={ch} j={j} s={si} r={ri} l={l}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn par_qc_tiles_rejects_non_dividing_qv() {
+        let mut t = FilterTensor::zeros(48, 16, 3, 3); // 3 K-tiles
+        let _ = t.par_qc_tiles_mut(2);
     }
 
     #[test]

@@ -14,14 +14,21 @@
 //! All layouts require the tiled dimension (C, K, or N) to be a multiple of
 //! V; the paper's evaluated configurations (Table 2, batch 16) all satisfy
 //! this, and §5.4 notes the same restriction for BWW.
+//!
+//! For parallel execution, the tensors split into **owned disjoint task
+//! views** — [`RowTileMut`] (one `(i, y, qb)` row-sweep destination) and
+//! [`FilterTileMut`] (one `(qb, c)` filter-gradient tile) — carved with
+//! `chunks_mut` so the borrow checker itself proves the scheduler's writes
+//! race-free (no `unsafe` pointer sharing; see
+//! [`crate::coordinator::scheduler`]).
 
 mod act;
 mod batch_tiled;
 mod filter;
 
-pub use act::ActTensor;
+pub use act::{ActTensor, RowTileMut};
 pub use batch_tiled::BatchTiledTensor;
-pub use filter::FilterTensor;
+pub use filter::{FilterTensor, FilterTileMut};
 
 use crate::util::prng::Xorshift;
 use crate::V;

@@ -73,6 +73,68 @@ impl Gen<f64> for F64In {
     }
 }
 
+/// A randomized convolution geometry for kernel/scheduler property tests:
+/// odd *and* even spatial sizes, strides 1–2, filter sizes 1/3/5, an extra
+/// padding ring beyond "same", and a worker thread count — every knob the
+/// row-sweep edge cases (truncated taps, skipped strided rows, boundary
+/// columns) depend on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Input spatial size (H = W).
+    pub hw: usize,
+    /// Stride on both axes.
+    pub stride: usize,
+    /// Filter size (S = R): 1, 3 or 5.
+    pub rs: usize,
+    /// Padding rings added on top of the "same" padding `(rs-1)/2`.
+    pub extra_pad: usize,
+    /// Worker threads for scheduler properties.
+    pub threads: usize,
+}
+
+/// Generator for [`ConvGeom`]: `hw` in `[min_hw, max_hw]`, `threads` in
+/// `[1, max_threads]`, stride in `{1, 2}`, filter in `{1, 3, 5}`,
+/// `extra_pad` in `{0, 1}`. Shrinks toward the smallest spatial size,
+/// stride 1, filter 1×1, no extra padding and 1 thread.
+pub struct ConvGeomGen {
+    pub min_hw: usize,
+    pub max_hw: usize,
+    pub max_threads: usize,
+}
+
+impl Gen<ConvGeom> for ConvGeomGen {
+    fn generate(&self, rng: &mut Xorshift) -> ConvGeom {
+        ConvGeom {
+            hw: self.min_hw + rng.below(self.max_hw - self.min_hw + 1),
+            stride: 1 + rng.below(2),
+            rs: [1, 3, 5][rng.below(3)],
+            extra_pad: rng.below(2),
+            threads: 1 + rng.below(self.max_threads),
+        }
+    }
+    fn shrink(&self, v: &ConvGeom) -> Vec<ConvGeom> {
+        let mut out = Vec::new();
+        if v.hw > self.min_hw {
+            out.push(ConvGeom { hw: self.min_hw, ..*v });
+            out.push(ConvGeom { hw: v.hw - 1, ..*v });
+        }
+        if v.stride > 1 {
+            out.push(ConvGeom { stride: 1, ..*v });
+        }
+        if v.rs > 1 {
+            out.push(ConvGeom { rs: 1, ..*v });
+            out.push(ConvGeom { rs: v.rs - 2, ..*v });
+        }
+        if v.extra_pad > 0 {
+            out.push(ConvGeom { extra_pad: 0, ..*v });
+        }
+        if v.threads > 1 {
+            out.push(ConvGeom { threads: 1, ..*v });
+        }
+        out
+    }
+}
+
 /// Vector of usizes with length in `[min_len, max_len]`, elements from
 /// `elem`. Shrinks by removing elements and shrinking single elements.
 pub struct VecOfUsize {
@@ -188,6 +250,35 @@ mod tests {
         let msg = *result.unwrap_err().downcast::<String>().unwrap();
         // minimal failing input is 500
         assert!(msg.contains("input: 500"), "{msg}");
+    }
+
+    #[test]
+    fn conv_geom_gen_respects_bounds_and_shrinks_down() {
+        let gen = ConvGeomGen { min_hw: 4, max_hw: 11, max_threads: 8 };
+        let mut rng = Xorshift::new(9);
+        let mut seen_odd = false;
+        let mut seen_even = false;
+        for _ in 0..300 {
+            let g = gen.generate(&mut rng);
+            assert!((4..=11).contains(&g.hw));
+            assert!((1..=2).contains(&g.stride));
+            assert!([1, 3, 5].contains(&g.rs));
+            assert!(g.extra_pad <= 1);
+            assert!((1..=8).contains(&g.threads));
+            seen_odd |= g.hw % 2 == 1;
+            seen_even |= g.hw % 2 == 0;
+        }
+        assert!(seen_odd && seen_even, "must sweep odd and even spatial sizes");
+
+        // every shrink candidate is strictly "smaller" in some axis and
+        // stays in bounds
+        let big = ConvGeom { hw: 11, stride: 2, rs: 5, extra_pad: 1, threads: 8 };
+        for s in gen.shrink(&big) {
+            assert!(s != big);
+            assert!(s.hw >= gen.min_hw && [1, 3, 5].contains(&s.rs));
+        }
+        let minimal = ConvGeom { hw: 4, stride: 1, rs: 1, extra_pad: 0, threads: 1 };
+        assert!(gen.shrink(&minimal).is_empty(), "minimal geometry must not shrink");
     }
 
     #[test]

@@ -8,16 +8,24 @@
 //!   queue). Worker threads wrap each task in `catch_unwind`, so a
 //!   panicking task can neither kill a worker nor wedge `wait_idle`; the
 //!   panic count is available via [`ThreadPool::panicked_tasks`].
-//! * [`ThreadPool::for_chunks`] — the parallel-for the scheduler needs:
-//!   split `0..n` into chunks and run a borrowed closure per chunk,
-//!   blocking until all complete. Built on `std::thread::scope`, which (a)
-//!   lets the closure borrow from the caller's stack *safely* (no lifetime
-//!   transmutes — the scope guarantees the threads are joined before the
-//!   borrow ends) and (b) propagates a panic from any chunk to the caller
-//!   instead of deadlocking a completion counter. Chunks are handed out
-//!   through a shared atomic cursor, so at most [`ThreadPool::threads`]
-//!   chunks run concurrently and early-finishing workers pick up the
-//!   remaining ones (the paper's dynamic row-sweep scheduling, §3.2.2).
+//! * [`ThreadPool::for_chunks`] — a plain parallel-for: split `0..n` into
+//!   chunks and run a borrowed closure per chunk, blocking until all
+//!   complete. Built on `std::thread::scope`, which (a) lets the closure
+//!   borrow from the caller's stack *safely* (no lifetime transmutes — the
+//!   scope guarantees the threads are joined before the borrow ends) and
+//!   (b) propagates a panic from any chunk to the caller instead of
+//!   deadlocking a completion counter. Chunks are handed out through a
+//!   shared atomic cursor, so at most [`ThreadPool::threads`] chunks run
+//!   concurrently and early-finishing workers pick up the remaining ones
+//!   (the paper's dynamic row-sweep scheduling, §3.2.2).
+//! * [`ThreadPool::for_chunk_slices`] — the ownership-passing variant the
+//!   kernel scheduler uses: the caller brings a `&mut [T]` of per-task
+//!   items (e.g. disjoint tensor views) and each chunk worker receives an
+//!   **exclusive `&mut` sub-slice** of it, carved with `split_at_mut`
+//!   before any thread starts. Exclusivity is enforced by the borrow
+//!   checker — no `unsafe`, no aliased `&mut`, nothing for Miri to object
+//!   to. Same cursor-based dynamic chunk assignment and panic propagation
+//!   as [`ThreadPool::for_chunks`].
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -158,6 +166,63 @@ impl ThreadPool {
             run_chunks(&cursor, &f);
         });
     }
+
+    /// Parallel-for over a slice of per-task items, handing each chunk
+    /// worker an **exclusive** `&mut` sub-slice of `items`.
+    ///
+    /// `f(chunk_idx, start, chunk_items)` runs once per non-empty chunk;
+    /// `start` is the index of `chunk_items[0]` within `items`. The
+    /// sub-slices are produced by repeated `split_at_mut` *before* any
+    /// worker starts, so every `&mut [T]` a worker sees is disjoint by
+    /// construction and checked by the compiler — this is the primitive
+    /// that lets the kernel scheduler pass owned tensor views into tasks
+    /// without any `unsafe` pointer sharing.
+    ///
+    /// Chunk → worker assignment is dynamic (shared atomic cursor), so
+    /// early-finishing workers pick up remaining chunks. A panic inside
+    /// `f` propagates to the caller once the scope joins, and the pool
+    /// stays usable afterwards.
+    pub fn for_chunk_slices<T, F>(&self, items: &mut [T], chunks: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Send + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let chunks = chunks.clamp(1, n);
+        let chunk_len = n.div_ceil(chunks);
+        // Carve `items` into disjoint sub-slices up front. Each slot is
+        // taken exactly once (by whichever worker claims that chunk index
+        // from the cursor); the Mutex<Option<..>> is only the hand-off
+        // cell, not a lock anything contends on.
+        let parts: Vec<Mutex<Option<(usize, &mut [T])>>> = items
+            .chunks_mut(chunk_len)
+            .enumerate()
+            .map(|(i, chunk)| Mutex::new(Some((i * chunk_len, chunk))))
+            .collect();
+        let n_chunks = parts.len();
+        let workers = self.n_threads.min(n_chunks);
+        let cursor = AtomicUsize::new(0);
+
+        let run_chunks = |cursor: &AtomicUsize, f: &F| loop {
+            let ci = cursor.fetch_add(1, Ordering::Relaxed);
+            if ci >= n_chunks {
+                break;
+            }
+            let (chunk_start, chunk_items) =
+                parts[ci].lock().unwrap().take().expect("chunk claimed exactly once");
+            f(ci, chunk_start, chunk_items);
+        };
+
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(|| run_chunks(&cursor, &f));
+            }
+            run_chunks(&cursor, &f);
+        });
+    }
 }
 
 fn worker_loop(sh: Arc<Shared>) {
@@ -283,6 +348,91 @@ mod tests {
             }
         });
         assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn for_chunk_slices_visits_every_item_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let mut items: Vec<u64> = vec![0; 1013];
+        pool.for_chunk_slices(&mut items, 8, |_ci, start, chunk| {
+            for (off, item) in chunk.iter_mut().enumerate() {
+                // record which index the worker believes it owns
+                *item += (start + off) as u64 + 1;
+            }
+        });
+        for (i, item) in items.iter().enumerate() {
+            assert_eq!(*item, i as u64 + 1, "item {i} visited wrong number of times");
+        }
+    }
+
+    #[test]
+    fn for_chunk_slices_empty_and_oversubscribed() {
+        let pool = ThreadPool::new(4);
+        let mut empty: Vec<u32> = Vec::new();
+        pool.for_chunk_slices(&mut empty, 8, |_, _, _| panic!("must not run"));
+
+        let mut small = vec![0u32; 3];
+        pool.for_chunk_slices(&mut small, 16, |_ci, _start, chunk| {
+            for item in chunk.iter_mut() {
+                *item += 1;
+            }
+        });
+        assert_eq!(small, vec![1, 1, 1]);
+    }
+
+    /// Stress test (ISSUE 2 satellite): a task that panics mid-chunk must
+    /// propagate the panic to the caller — no deadlock, no poisoned pool —
+    /// under *repeated* invocations of both parallel-for primitives. This
+    /// is regression cover for the PR 1 `std::thread::scope` rebuild: the
+    /// pre-rebuild completion-counter design deadlocked on the first
+    /// panicking chunk and the old pool was unusable afterwards.
+    #[test]
+    fn repeated_panics_propagate_without_poisoning_the_pool() {
+        let pool = ThreadPool::new(4);
+        let rounds: usize = if cfg!(miri) { 3 } else { 20 };
+        for round in 0..rounds {
+            // for_chunks: panic in a different chunk each round.
+            let boom = (round * 13) % 100;
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                pool.for_chunks(100, 8, |_ci, s, e| {
+                    if (s..e).contains(&boom) {
+                        panic!("for_chunks boom round {round}");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "round {round}: panic must reach the caller");
+
+            // for_chunk_slices: same, through the ownership-passing path.
+            let mut items = vec![0u8; 64];
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                pool.for_chunk_slices(&mut items, 8, |_ci, start, chunk| {
+                    if (start..start + chunk.len()).contains(&(boom % 64)) {
+                        panic!("for_chunk_slices boom round {round}");
+                    }
+                    for item in chunk.iter_mut() {
+                        *item = 1;
+                    }
+                });
+            }));
+            assert!(result.is_err(), "round {round}: slice panic must reach the caller");
+
+            // The pool must stay fully usable between panicking rounds.
+            let sum = AtomicU64::new(0);
+            pool.for_chunks(10, 4, |_ci, s, e| {
+                for i in s..e {
+                    sum.fetch_add(i as u64, Ordering::SeqCst);
+                }
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 45, "round {round}: pool wedged");
+
+            let mut ok = vec![0u64; 32];
+            pool.for_chunk_slices(&mut ok, 4, |_ci, _start, chunk| {
+                for item in chunk.iter_mut() {
+                    *item += 1;
+                }
+            });
+            assert!(ok.iter().all(|&v| v == 1), "round {round}: slice pool wedged");
+        }
     }
 
     /// Regression: a panicking submitted task must not wedge `wait_idle`

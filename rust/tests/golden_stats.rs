@@ -1,0 +1,149 @@
+//! Golden [`KernelStats`] tests (ISSUE 2 satellite): pin the serialized
+//! per-component counters for two fixed layers and assert parallel merge
+//! parity, so stat drift is caught by `cargo test` without running benches.
+//!
+//! The two geometries are Table-2-derived: same filter/stride/padding shape
+//! as the paper's rows, with channel and spatial dims scaled down so the
+//! functional kernels run in milliseconds under `cargo test`:
+//!
+//! * `G1` — `square(16, 32, 32, 8, 3, 2)`: the strided-3×3 ResNet
+//!   downsampling shape (`resnet3_2/r`-like, C=K), batch 16;
+//! * `G2` — `square(16, 32, 64, 6, 3, 1)`: the stride-1 3×3
+//!   channel-doubling VGG shape (`vgg3_1`-like, K=2C), batch 16.
+//!
+//! The golden lines cover every **data-independent** counter (total FMA
+//! slots, zero checks, sweeps, vector loads/stores, and the post-merge
+//! filter-footprint floor). The data-dependent split (issued vs skipped
+//! FMAs, popcount histogram, integer ops) is covered by the exact
+//! serial-vs-parallel stats equality plus conservation assertions, so any
+//! accounting drift — serial or in the scheduler's chunk merge — fails one
+//! of the assertions below.
+
+use sparsetrain::coordinator::scheduler::Scheduler;
+use sparsetrain::kernels::{
+    sparse_bwi, sparse_bww, sparse_fwd, ConvConfig, KernelStats, SkipMode,
+};
+use sparsetrain::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+
+/// Serialize the data-independent counters of a stats block.
+fn golden_line(st: &KernelStats) -> String {
+    format!(
+        "fma_total={} zero_checks={} sweeps={} loads_in={} loads_out={} stores_out={} filter_bytes_per_sweep={}",
+        st.fma_total(),
+        st.zero_checks,
+        st.sweeps,
+        st.loads_in,
+        st.loads_out,
+        st.stores_out,
+        st.filter_bytes_per_sweep
+    )
+}
+
+struct TriadStats {
+    fwd: KernelStats,
+    bwi: KernelStats,
+    bww: KernelStats,
+}
+
+fn run_serial(cfg: &ConvConfig, seed: u64) -> TriadStats {
+    let (d, g, dy) = setup(cfg, seed);
+    let gt = g.transpose_channels();
+    let dt = BatchTiledTensor::from_act(&d);
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut fwd = KernelStats::new();
+    sparse_fwd::fwd(cfg, &d, &g, &mut y, SkipMode::MaskLoop, &mut fwd);
+    let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    let mut bwi = KernelStats::new();
+    sparse_bwi::bwi(cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop, &mut bwi);
+    let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    let mut bww = KernelStats::new();
+    sparse_bww::bww(cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop, &mut bww);
+    TriadStats { fwd, bwi, bww }
+}
+
+fn run_parallel(cfg: &ConvConfig, seed: u64, threads: usize) -> TriadStats {
+    let (d, g, dy) = setup(cfg, seed);
+    let gt = g.transpose_channels();
+    let dt = BatchTiledTensor::from_act(&d);
+    let sched = Scheduler::new(threads);
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let fwd = sched.run_fwd(cfg, &d, &g, &mut y, SkipMode::MaskLoop).stats;
+    let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    let bwi = sched.run_bwi(cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop).stats;
+    let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    let bww = sched.run_bww(cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop).stats;
+    TriadStats { fwd, bwi, bww }
+}
+
+fn setup(cfg: &ConvConfig, seed: u64) -> (ActTensor, FilterTensor, ActTensor) {
+    let mut rng = Xorshift::new(seed);
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, 0.5);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+    let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    dy.fill_relu_sparse(&mut rng, 0.45);
+    (d, g, dy)
+}
+
+fn check_layer(cfg: &ConvConfig, seed: u64, golden: [&str; 3]) {
+    let serial = run_serial(cfg, seed);
+    let [gf, gi, gw] = golden;
+    assert_eq!(golden_line(&serial.fwd), gf, "FWD golden drift");
+    assert_eq!(golden_line(&serial.bwi), gi, "BWI golden drift");
+    assert_eq!(golden_line(&serial.bww), gw, "BWW golden drift");
+
+    for st in [&serial.fwd, &serial.bwi, &serial.bww] {
+        // conservation: the data-dependent split and histogram must agree
+        // with the data-independent totals
+        assert_eq!(st.fma_vec + st.fma_vec_skipped, st.fma_total());
+        assert_eq!(st.popcount_hist.iter().sum::<u64>(), st.zero_checks);
+        assert!(st.fma_vec > 0 && st.fma_vec_skipped > 0, "50% sparsity must split FMAs");
+    }
+
+    // Parallel merge parity: the chunk-merged stats — including the
+    // post-merge filter-footprint floor — must equal the serial counters
+    // exactly, for an uneven and an even thread count.
+    for threads in [3, 4] {
+        let par = run_parallel(cfg, seed, threads);
+        assert_eq!(par.fwd, serial.fwd, "FWD merge parity, threads={threads}");
+        assert_eq!(par.bwi, serial.bwi, "BWI merge parity, threads={threads}");
+        assert_eq!(par.bww, serial.bww, "BWW merge parity, threads={threads}");
+        assert_eq!(golden_line(&par.fwd), gf, "FWD parallel golden drift");
+        assert_eq!(golden_line(&par.bwi), gi, "BWI parallel golden drift");
+        assert_eq!(golden_line(&par.bww), gw, "BWW parallel golden drift");
+    }
+}
+
+/// G1: strided-3×3 ResNet downsampling shape (`resnet3_2/r`-derived).
+#[test]
+#[cfg_attr(miri, ignore = "too slow under miri; the lib miri_* tests cover the reduced set")]
+fn golden_stats_strided_resnet_shape() {
+    let cfg = ConvConfig::square(16, 32, 32, 8, 3, 2);
+    check_layer(
+        &cfg,
+        0x6015EED,
+        [
+            "fma_total=123904 zero_checks=2816 sweeps=352 loads_in=2816 loads_out=512 stores_out=512 filter_bytes_per_sweep=18432",
+            "fma_total=123904 zero_checks=1408 sweeps=352 loads_in=1408 loads_out=2048 stores_out=2048 filter_bytes_per_sweep=18432",
+            "fma_total=123904 zero_checks=2816 sweeps=352 loads_in=2816 loads_out=2112 stores_out=2112 filter_bytes_per_sweep=384",
+        ],
+    );
+}
+
+/// G2: stride-1 3×3 channel-doubling VGG shape (`vgg3_1`-derived).
+#[test]
+#[cfg_attr(miri, ignore = "too slow under miri; the lib miri_* tests cover the reduced set")]
+fn golden_stats_vgg_shape() {
+    let cfg = ConvConfig::square(16, 32, 64, 6, 3, 1);
+    check_layer(
+        &cfg,
+        0xBEE5,
+        [
+            "fma_total=524288 zero_checks=3072 sweeps=512 loads_in=3072 loads_out=2304 stores_out=2304 filter_bytes_per_sweep=36864",
+            "fma_total=524288 zero_checks=6144 sweeps=1024 loads_in=6144 loads_out=1152 stores_out=1152 filter_bytes_per_sweep=18432",
+            "fma_total=524288 zero_checks=3072 sweeps=512 loads_in=3072 loads_out=6144 stores_out=6144 filter_bytes_per_sweep=768",
+        ],
+    );
+}
