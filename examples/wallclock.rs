@@ -1,0 +1,95 @@
+//! Real-kernel wall-clock benchmark → `BENCH_kernels.json`.
+//!
+//! Times FWD/BWI/BWW × {dense `direct`, Dense, PerLaneBranch, MaskLoop} ×
+//! sparsity {0.0, 0.5, 0.9} on Table-2 layers across thread counts, on the
+//! runtime-dispatched SIMD backend, and writes the JSON perf trajectory.
+//!
+//! ```bash
+//! cargo run --release --example wallclock                      # full sweep
+//! cargo run --release --example wallclock -- --smoke           # seconds-scale CI smoke
+//! cargo run --release --example wallclock -- --layers resnet5_2,vgg5_1
+//! cargo run --release --example wallclock -- --threads 1,2,4,8 --out BENCH_kernels.json
+//! SPARSETRAIN_BACKEND=scalar cargo run --release --example wallclock -- --smoke
+//! ```
+
+use sparsetrain::bench::wallclock::{run, WallclockConfig};
+use sparsetrain::kernels::simd;
+use sparsetrain::nets::table2::layer_by_name;
+use sparsetrain::util::cli::Args;
+
+const USAGE: &str = "\
+wallclock — real-kernel wall-clock sweep (writes BENCH_kernels.json)
+
+OPTIONS
+  --layers A,B,C     comma-separated Table-2 layer names
+  --threads 1,2,4    comma-separated thread counts (default: powers of two up to host)
+  --sparsities 0,0.9 comma-separated sparsity levels (default: 0.0,0.5,0.9)
+  --out PATH         output JSON path (default: BENCH_kernels.json)
+  --smoke            tiny layer, seconds-scale run (CI emitter check)
+
+Set SPARSETRAIN_BENCH_FAST=1 for shorter measurements and
+SPARSETRAIN_BACKEND=scalar|avx2|avx512|neon to force a backend.";
+
+fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> Vec<T> {
+    s.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse().unwrap_or_else(|_| {
+                eprintln!("error: bad {what} entry '{t}'\n\n{USAGE}");
+                std::process::exit(2);
+            })
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env(&["layers", "threads", "sparsities", "out"], &["smoke"])
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        });
+
+    let mut wcfg = if args.flag("smoke") {
+        WallclockConfig::smoke()
+    } else {
+        WallclockConfig::default_sweep()
+    };
+    if let Some(names) = args.get("layers") {
+        wcfg.layers = names
+            .split(',')
+            .filter(|n| !n.is_empty())
+            .map(|n| {
+                layer_by_name(n).unwrap_or_else(|| {
+                    eprintln!("error: unknown Table-2 layer '{n}'\n\n{USAGE}");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
+    if let Some(t) = args.get("threads") {
+        wcfg.threads = parse_list(t, "--threads");
+    }
+    if let Some(s) = args.get("sparsities") {
+        wcfg.sparsities = parse_list(s, "--sparsities");
+    }
+    let out = args.get_or("out", "BENCH_kernels.json").to_string();
+
+    let bk = simd::dispatch();
+    println!(
+        "backend: {} (V=16); layers: {}; threads: {:?}; sparsities: {:?}",
+        bk.name(),
+        wcfg.layers.iter().map(|l| l.name).collect::<Vec<_>>().join(", "),
+        wcfg.threads,
+        wcfg.sparsities
+    );
+
+    let report = run(&wcfg);
+    report.write_json(std::path::Path::new(&out)).unwrap_or_else(|e| {
+        eprintln!("error: cannot write {out}: {e}");
+        std::process::exit(1);
+    });
+    println!("\nwrote {out} ({} records, backend {})", report.records.len(), report.backend);
+    if let Some(s) = report.best_maskloop_speedup(0.9, 1) {
+        println!("best 1-thread MaskLoop speedup vs dense direct at 90% sparsity: {s:.2}x");
+    }
+}

@@ -2,9 +2,11 @@
 //!
 //! Used by every target in `rust/benches/`. Provides warmup, adaptive
 //! iteration counts, outlier-trimmed summaries, and a `black_box` to defeat
-//! dead-code elimination.
+//! dead-code elimination. [`wallclock`] layers the real-kernel wall-clock
+//! sweep (→ `BENCH_kernels.json`) on top of it.
 
 pub mod experiments;
+pub mod wallclock;
 
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};

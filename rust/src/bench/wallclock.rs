@@ -1,0 +1,464 @@
+//! Wall-clock kernel benchmark harness → `BENCH_kernels.json`.
+//!
+//! Everything else under `bench/` times the *model* (`sim::cost`); this
+//! module times the **real kernels** on the host CPU: FWD/BWI/BWW × {dense
+//! `direct`, [`SkipMode::Dense`], [`SkipMode::PerLaneBranch`],
+//! [`SkipMode::MaskLoop`]} × sparsity grid × thread counts, on Table-2
+//! layers, through the dispatched SIMD backend. The JSON report it writes
+//! is the repo's perf trajectory: every future PR can regenerate it
+//! (`cargo run --release --example wallclock`) and diff medians against
+//! the committed history in ROADMAP.md's Perf log.
+//!
+//! Two speedups are recorded per row:
+//! * `speedup_vs_direct1` — serial dense `direct` time ÷ row time: the
+//!   headline "sparse training beats a tuned dense kernel" number
+//!   (includes parallel scaling for multi-thread rows);
+//! * `speedup_vs_dense_same_threads` — Dense-mode time at the same thread
+//!   count ÷ row time: isolates the skip machinery's benefit from both
+//!   parallelism and loop-structure effects.
+
+use crate::bench::{bench, BenchConfig, BenchResult};
+use crate::coordinator::scheduler::Scheduler;
+use crate::kernels::simd::{self, Backend};
+use crate::kernels::{direct, sparse_bwi, sparse_bww, sparse_fwd};
+use crate::kernels::{Component, ConvConfig, KernelStats, Scratch, SkipMode};
+use crate::nets::table2::{layer_by_name, NamedLayer};
+use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use crate::util::prng::Xorshift;
+use crate::V;
+
+/// Default Table-2 layer set: three 3×3 shapes (one strided) and one 1×1,
+/// small enough that a full sweep finishes in minutes, large enough that
+/// the working sets exceed L2.
+pub const DEFAULT_LAYERS: [&str; 4] = ["resnet5_2", "resnet4_2", "resnet3_2/r", "resnet5_1a"];
+
+/// Sparsity grid from the acceptance criteria.
+pub const DEFAULT_SPARSITIES: [f64; 3] = [0.0, 0.5, 0.9];
+
+/// Harness configuration.
+pub struct WallclockConfig {
+    pub layers: Vec<NamedLayer>,
+    pub sparsities: Vec<f64>,
+    /// Thread counts to sweep (deduplicated, each ≥ 1).
+    pub threads: Vec<usize>,
+    pub bench: BenchConfig,
+    pub seed: u64,
+}
+
+impl WallclockConfig {
+    /// The default sweep: [`DEFAULT_LAYERS`] × [`DEFAULT_SPARSITIES`] ×
+    /// powers-of-two threads up to the host parallelism.
+    pub fn default_sweep() -> WallclockConfig {
+        let layers = DEFAULT_LAYERS
+            .iter()
+            .map(|n| layer_by_name(n).expect("default layer must exist in Table 2"))
+            .collect();
+        WallclockConfig {
+            layers,
+            sparsities: DEFAULT_SPARSITIES.to_vec(),
+            threads: host_thread_sweep(),
+            bench: BenchConfig::default(),
+            seed: 0xBE_BC,
+        }
+    }
+
+    /// A seconds-scale smoke sweep on one tiny 3×3 layer — exercised by
+    /// `cargo test` and the CI smoke leg so the JSON emitter cannot rot.
+    pub fn smoke() -> WallclockConfig {
+        WallclockConfig {
+            layers: vec![NamedLayer {
+                name: "tiny3x3",
+                cfg: ConvConfig::square(V, 16, 16, 4, 3, 1),
+            }],
+            sparsities: vec![0.0, 0.9],
+            threads: vec![1, 2],
+            bench: BenchConfig {
+                warmup: std::time::Duration::from_millis(2),
+                measure: std::time::Duration::from_millis(10),
+                min_samples: 2,
+                max_samples: 10,
+            },
+            seed: 7,
+        }
+    }
+}
+
+/// `1, 2, 4, …` up to and including the host's available parallelism.
+pub fn host_thread_sweep() -> Vec<usize> {
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut out = Vec::new();
+    let mut t = 1;
+    while t < max {
+        out.push(t);
+        t *= 2;
+    }
+    out.push(max);
+    out.dedup();
+    out
+}
+
+/// One measured configuration.
+#[derive(Debug, Clone)]
+pub struct WallclockRecord {
+    pub layer: String,
+    /// Filter size R (= S) of the layer — lets readers split 3×3 vs 1×1.
+    pub rs: usize,
+    pub component: &'static str,
+    /// "direct" (dense baseline kernel) or the `SkipMode` name.
+    pub mode: &'static str,
+    pub sparsity: f64,
+    pub threads: usize,
+    pub median_ns: f64,
+    /// Effective (dense-equivalent) GFLOP/s: dense FLOPs ÷ wall time.
+    pub gflops: f64,
+    pub speedup_vs_direct1: f64,
+    pub speedup_vs_dense_same_threads: f64,
+}
+
+/// The full report: detected backend + all records.
+#[derive(Debug)]
+pub struct WallclockReport {
+    pub backend: &'static str,
+    /// "release" or "debug" — debug timings must never be compared against
+    /// release trajectories.
+    pub profile: &'static str,
+    pub threads_available: usize,
+    pub records: Vec<WallclockRecord>,
+}
+
+/// The build profile of this binary, as recorded in the report.
+pub fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+fn mode_name(mode: SkipMode) -> &'static str {
+    match mode {
+        SkipMode::Dense => "Dense",
+        SkipMode::PerLaneBranch => "PerLaneBranch",
+        SkipMode::MaskLoop => "MaskLoop",
+    }
+}
+
+/// Per-layer fixture: inputs at one sparsity plus reusable outputs.
+struct Fixture {
+    cfg: ConvConfig,
+    d: ActTensor,
+    g: FilterTensor,
+    gt: FilterTensor,
+    dt: BatchTiledTensor,
+    dy: ActTensor,
+    y: ActTensor,
+    dd: ActTensor,
+    dg: FilterTensor,
+}
+
+impl Fixture {
+    fn new(cfg: &ConvConfig, sparsity: f64, seed: u64) -> Fixture {
+        let mut rng = Xorshift::new(seed);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, sparsity);
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+        let gt = g.transpose_channels();
+        let dt = BatchTiledTensor::from_act(&d);
+        // ∂L/∂Y carries the same ReLU sparsity (signed) — it is the BWI
+        // checked operand and the BWW memory operand.
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_relu_sparse(&mut rng, sparsity);
+        for v in dy.data_mut().iter_mut() {
+            if *v != 0.0 && rng.bernoulli(0.5) {
+                *v = -*v;
+            }
+        }
+        Fixture {
+            cfg: *cfg,
+            y: ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w()),
+            dd: ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w),
+            dg: FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r),
+            d,
+            g,
+            gt,
+            dt,
+            dy,
+        }
+    }
+}
+
+/// Time one (component, mode) cell. The output tensor is re-zeroed inside
+/// the timed closure (the kernels accumulate), so every iteration performs
+/// the same work.
+fn time_cell(
+    fx: &mut Fixture,
+    comp: Component,
+    mode: Option<SkipMode>, // None = dense `direct` baseline
+    threads: usize,
+    bk: Backend,
+    bcfg: &BenchConfig,
+) -> BenchResult {
+    let cfg = fx.cfg;
+    let name = format!("{} {} t{threads}", comp.name(), mode.map_or("direct", mode_name));
+    // One stats block reused across iterations: counters just accumulate
+    // (never read here), keeping the timed loop allocation-free.
+    let mut st = KernelStats::new();
+    match (mode, comp) {
+        (None, Component::Fwd) => {
+            let mut scratch = Scratch::new();
+            let (d, g, y) = (&fx.d, &fx.g, &mut fx.y);
+            bench(&name, bcfg, || {
+                y.fill_zero();
+                direct::fwd_with(&cfg, d, g, y, bk, &mut scratch, &mut st);
+            })
+        }
+        (None, Component::Bwi) => {
+            let (dy, g, dd) = (&fx.dy, &fx.g, &mut fx.dd);
+            bench(&name, bcfg, || {
+                dd.fill_zero();
+                direct::bwi_with(&cfg, dy, g, dd, bk, &mut st);
+            })
+        }
+        (None, Component::Bww) => {
+            let mut scratch = Scratch::new();
+            let (dt, dy, dg) = (&fx.dt, &fx.dy, &mut fx.dg);
+            bench(&name, bcfg, || {
+                dg.fill_zero();
+                direct::bww_with(&cfg, dt, dy, dg, bk, &mut scratch, &mut st);
+            })
+        }
+        (Some(mode), comp) if threads == 1 => {
+            // serial drivers: the zero-alloc `*_with` entry points
+            let mut scratch = Scratch::new();
+            match comp {
+                Component::Fwd => {
+                    let (d, g, y) = (&fx.d, &fx.g, &mut fx.y);
+                    bench(&name, bcfg, || {
+                        y.fill_zero();
+                        sparse_fwd::fwd_with(&cfg, d, g, y, mode, bk, &mut scratch, &mut st);
+                    })
+                }
+                Component::Bwi => {
+                    let (dy, gt, dd) = (&fx.dy, &fx.gt, &mut fx.dd);
+                    bench(&name, bcfg, || {
+                        dd.fill_zero();
+                        sparse_bwi::bwi_with(&cfg, dy, gt, dd, mode, bk, &mut scratch, &mut st);
+                    })
+                }
+                Component::Bww => {
+                    let (dt, dy, dg) = (&fx.dt, &fx.dy, &mut fx.dg);
+                    bench(&name, bcfg, || {
+                        dg.fill_zero();
+                        sparse_bww::bww_with(&cfg, dt, dy, dg, mode, bk, &mut scratch, &mut st);
+                    })
+                }
+            }
+        }
+        (Some(mode), comp) => {
+            let sched = Scheduler::with_backend(threads, bk);
+            match comp {
+                Component::Fwd => {
+                    let (d, g, y) = (&fx.d, &fx.g, &mut fx.y);
+                    bench(&name, bcfg, || {
+                        y.fill_zero();
+                        sched.run_fwd(&cfg, d, g, y, mode);
+                    })
+                }
+                Component::Bwi => {
+                    let (dy, gt, dd) = (&fx.dy, &fx.gt, &mut fx.dd);
+                    bench(&name, bcfg, || {
+                        dd.fill_zero();
+                        sched.run_bwi(&cfg, dy, gt, dd, mode);
+                    })
+                }
+                Component::Bww => {
+                    let (dt, dy, dg) = (&fx.dt, &fx.dy, &mut fx.dg);
+                    bench(&name, bcfg, || {
+                        dg.fill_zero();
+                        sched.run_bww(&cfg, dt, dy, dg, mode);
+                    })
+                }
+            }
+        }
+    }
+}
+
+/// Run the full sweep and build the report. Prints one line per cell so
+/// long runs show progress.
+pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
+    let bk = simd::dispatch();
+    let mut records = Vec::new();
+    for nl in &wcfg.layers {
+        let flops = nl.cfg.fwd_flops() as f64;
+        // Dense-filled inputs for the `direct` baselines: built once per
+        // layer, shared by all three components.
+        let mut dense_fx = Fixture::new(&nl.cfg, 0.0, wcfg.seed);
+        for comp in Component::ALL {
+            // Dense `direct` baseline: sparsity-independent, serial.
+            let direct_ns = time_cell(&mut dense_fx, comp, None, 1, bk, &wcfg.bench).ns();
+            println!(
+                "{:<12} {} direct            t=1  {:>12.0} ns  {:>7.2} GF/s",
+                nl.name, comp.name(), direct_ns, flops / direct_ns
+            );
+            records.push(WallclockRecord {
+                layer: nl.name.to_string(),
+                rs: nl.cfg.r,
+                component: comp.name(),
+                mode: "direct",
+                sparsity: 0.0,
+                threads: 1,
+                median_ns: direct_ns,
+                gflops: flops / direct_ns,
+                speedup_vs_direct1: 1.0,
+                speedup_vs_dense_same_threads: 1.0,
+            });
+
+            for &sparsity in &wcfg.sparsities {
+                let mut fx = Fixture::new(&nl.cfg, sparsity, wcfg.seed);
+                for &threads in &wcfg.threads {
+                    let mut dense_same_ns = f64::NAN;
+                    for mode in [SkipMode::Dense, SkipMode::PerLaneBranch, SkipMode::MaskLoop] {
+                        let r = time_cell(&mut fx, comp, Some(mode), threads, bk, &wcfg.bench);
+                        let ns = r.ns();
+                        if mode == SkipMode::Dense {
+                            dense_same_ns = ns;
+                        }
+                        println!(
+                            "{:<12} {} {:<14} s={sparsity:.1} t={threads}  {:>12.0} ns  \
+                             {:>7.2} GF/s  {:>5.2}x vs direct",
+                            nl.name, comp.name(), mode_name(mode), ns, flops / ns, direct_ns / ns
+                        );
+                        records.push(WallclockRecord {
+                            layer: nl.name.to_string(),
+                            rs: nl.cfg.r,
+                            component: comp.name(),
+                            mode: mode_name(mode),
+                            sparsity,
+                            threads,
+                            median_ns: ns,
+                            gflops: flops / ns,
+                            speedup_vs_direct1: direct_ns / ns,
+                            speedup_vs_dense_same_threads: dense_same_ns / ns,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    WallclockReport {
+        backend: bk.name(),
+        profile: build_profile(),
+        threads_available: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        records,
+    }
+}
+
+impl WallclockReport {
+    /// Serialize to the `BENCH_kernels.json` schema (hand-rolled — the
+    /// offline environment has no serde).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096 + self.records.len() * 256);
+        out.push_str("{\n");
+        out.push_str("  \"schema\": \"sparsetrain-wallclock-v1\",\n");
+        out.push_str(&format!("  \"backend\": \"{}\",\n", self.backend));
+        out.push_str(&format!("  \"profile\": \"{}\",\n", self.profile));
+        out.push_str(&format!("  \"v\": {V},\n"));
+        out.push_str(&format!("  \"threads_available\": {},\n", self.threads_available));
+        out.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"layer\": \"{}\", \"rs\": {}, \"component\": \"{}\", \"mode\": \"{}\", \
+                 \"sparsity\": {:.2}, \"threads\": {}, \"median_ns\": {:.1}, \
+                 \"gflops\": {:.3}, \"speedup_vs_direct1\": {:.3}, \
+                 \"speedup_vs_dense_same_threads\": {:.3}}}{}\n",
+                r.layer,
+                r.rs,
+                r.component,
+                r.mode,
+                r.sparsity,
+                r.threads,
+                r.median_ns,
+                r.gflops,
+                r.speedup_vs_direct1,
+                r.speedup_vs_dense_same_threads,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON atomically (temp file + rename).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Best `speedup_vs_direct1` over MaskLoop rows of **3×3 layers** at
+    /// the given sparsity and thread count — the acceptance-criterion
+    /// readout (1×1 rows are excluded: the criterion names 3×3 layers).
+    pub fn best_maskloop_speedup(&self, sparsity: f64, threads: usize) -> Option<f64> {
+        self.records
+            .iter()
+            .filter(|r| {
+                r.mode == "MaskLoop"
+                    && r.rs == 3
+                    && r.threads == threads
+                    && (r.sparsity - sparsity).abs() < 1e-9
+            })
+            .map(|r| r.speedup_vs_direct1)
+            .max_by(|a, b| a.total_cmp(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(miri, ignore = "wall-clock timing is meaningless under the interpreter")]
+    fn smoke_sweep_produces_complete_report() {
+        let wcfg = WallclockConfig::smoke();
+        let report = run(&wcfg);
+        // 3 components × (1 direct + 2 sparsities × 2 threads × 3 modes)
+        assert_eq!(report.records.len(), 3 * (1 + 2 * 2 * 3));
+        assert!(report.records.iter().all(|r| r.median_ns > 0.0 && r.gflops > 0.0));
+        assert!(report.records.iter().all(|r| r.speedup_vs_direct1 > 0.0));
+        assert!(!report.backend.is_empty());
+        assert!(report.best_maskloop_speedup(0.9, 1).is_some());
+
+        let json = report.to_json();
+        assert!(json.contains("\"schema\": \"sparsetrain-wallclock-v1\""));
+        assert!(json.contains("\"backend\""));
+        assert!(json.contains("MaskLoop"));
+        // structurally sound: balanced braces/brackets, one object per record
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert_eq!(json.matches("\"layer\"").count(), report.records.len());
+    }
+
+    /// Tier-1 materialization of the perf trajectory: a `cargo test
+    /// --release` run writes `BENCH_kernels.json` at the repo root when it
+    /// is missing (or when `SPARSETRAIN_RECORD_BENCH=1` forces a refresh),
+    /// so any dev/CI machine produces real measured numbers with the
+    /// detected backend and build profile recorded. Debug builds never
+    /// record (unless forced): debug timings must not seed the trajectory
+    /// future release runs are compared against. The full-sweep file comes
+    /// from `cargo run --release --example wallclock`.
+    #[test]
+    #[cfg_attr(miri, ignore = "wall-clock timing is meaningless under the interpreter")]
+    fn smoke_records_bench_json_at_repo_root() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
+        let force = std::env::var("SPARSETRAIN_RECORD_BENCH").is_ok();
+        if (path.exists() || build_profile() == "debug") && !force {
+            return; // keep existing trajectories; never seed one from debug
+        }
+        let report = run(&WallclockConfig::smoke());
+        report.write_json(&path).expect("write BENCH_kernels.json");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("sparsetrain-wallclock-v1"));
+        assert!(body.contains(&format!("\"profile\": \"{}\"", build_profile())));
+    }
+}

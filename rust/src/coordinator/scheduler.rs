@@ -47,9 +47,22 @@
 //! merged stats equal the serial kernel's counters exactly, regardless of
 //! thread count or chunk assignment. The per-sweep filter-footprint floor
 //! is applied once after the merge, mirroring the serial kernels.
+//!
+//! **Zero-alloc hot path.** Each run hoists the register plan, the sweep
+//! geometry / tap tables and the SIMD [`Backend`] out of the task bodies,
+//! and [`ThreadPool::for_chunk_slices_with`] gives every worker thread one
+//! reusable [`Scratch`] accumulator — no task allocates, re-plans or
+//! re-detects CPU features. The backend is fixed at scheduler construction
+//! ([`Scheduler::with_backend`] pins it for parity tests), and since every
+//! backend computes bit-identical fused multiply-adds, the serial-parity
+//! and cross-thread determinism guarantees above are backend-independent.
 
+use crate::kernels::direct::SweepGeom;
 use crate::kernels::regalloc::{plan_bww, plan_fwd};
-use crate::kernels::{sparse_bwi, sparse_bww, sparse_fwd, ConvConfig, KernelStats, SkipMode};
+use crate::kernels::simd::{self, Backend};
+use crate::kernels::{
+    sparse_bwi, sparse_bww, sparse_fwd, ConvConfig, KernelStats, Scratch, SkipMode,
+};
 use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::util::threadpool::ThreadPool;
 use crate::V;
@@ -57,8 +70,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// A parallel executor for SparseTrain kernels.
+///
+/// The SIMD [`Backend`] is resolved once at construction (the process-wide
+/// dispatch) and threaded into every task; each worker thread owns one
+/// reusable [`Scratch`] accumulator (created by the pool's per-worker
+/// `init`), so the scheduled hot path performs no heap allocation and no
+/// repeated feature detection.
 pub struct Scheduler {
     pool: ThreadPool,
+    backend: Backend,
 }
 
 /// Execution report: merged kernel stats + load-balance info.
@@ -72,16 +92,26 @@ pub struct RunReport {
 
 impl Scheduler {
     pub fn new(threads: usize) -> Scheduler {
-        Scheduler { pool: ThreadPool::new(threads) }
+        Scheduler { pool: ThreadPool::new(threads), backend: simd::dispatch() }
     }
 
     /// A scheduler sized to the host's available parallelism.
     pub fn with_host_parallelism() -> Scheduler {
-        Scheduler { pool: ThreadPool::with_host_parallelism() }
+        Scheduler { pool: ThreadPool::with_host_parallelism(), backend: simd::dispatch() }
+    }
+
+    /// A scheduler pinned to an explicit backend (parity tests, benches).
+    pub fn with_backend(threads: usize, backend: Backend) -> Scheduler {
+        Scheduler { pool: ThreadPool::new(threads), backend }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The SIMD backend every scheduled task runs on.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// Number of parallel FWD tasks for a config (§3.2.2: `N·H'·K/Q`).
@@ -124,6 +154,8 @@ impl Scheduler {
     ) -> RunReport {
         cfg.validate().expect("invalid conv config");
         let plan = plan_fwd(cfg.k, cfg.r);
+        let geom = SweepGeom::fwd(cfg);
+        let bk = self.backend;
         let total = Self::fwd_task_count(cfg);
         let chunks = self.chunks_for(total);
 
@@ -133,14 +165,21 @@ impl Scheduler {
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
 
-        self.pool.for_chunk_slices(&mut views, chunks, |ci, _start, chunk| {
-            let mut local = KernelStats::new();
-            for view in chunk.iter_mut() {
-                sparse_fwd::fwd_task(cfg, d, g, view, mode, &mut local);
-                tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
-            }
-            merged.lock().unwrap().merge(&local);
-        });
+        self.pool.for_chunk_slices_with(
+            &mut views,
+            chunks,
+            Scratch::new,
+            |ci, _start, chunk, scratch| {
+                let mut local = KernelStats::new();
+                for view in chunk.iter_mut() {
+                    sparse_fwd::fwd_task(
+                        cfg, d, g, view, mode, &plan, &geom, bk, scratch, &mut local,
+                    );
+                    tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
+                }
+                merged.lock().unwrap().merge(&local);
+            },
+        );
 
         let mut stats = merged.into_inner().unwrap();
         // Serial-parity: the whole-layer kernels record the per-sweep
@@ -172,6 +211,8 @@ impl Scheduler {
     ) -> RunReport {
         cfg.validate().expect("invalid conv config");
         let plan = plan_fwd(cfg.c, cfg.r); // BWI accumulators are C-vectors
+        let taps = sparse_bwi::bwi_col_taps(cfg);
+        let bk = self.backend;
         let total = Self::bwi_task_count(cfg);
         let chunks = self.chunks_for(total);
 
@@ -181,14 +222,21 @@ impl Scheduler {
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
 
-        self.pool.for_chunk_slices(&mut views, chunks, |ci, _start, chunk| {
-            let mut local = KernelStats::new();
-            for view in chunk.iter_mut() {
-                sparse_bwi::bwi_task(cfg, dy, gt, view, mode, &mut local);
-                tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
-            }
-            merged.lock().unwrap().merge(&local);
-        });
+        self.pool.for_chunk_slices_with(
+            &mut views,
+            chunks,
+            Scratch::new,
+            |ci, _start, chunk, scratch| {
+                let mut local = KernelStats::new();
+                for view in chunk.iter_mut() {
+                    sparse_bwi::bwi_task(
+                        cfg, dy, gt, view, &taps, mode, &plan, bk, scratch, &mut local,
+                    );
+                    tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
+                }
+                merged.lock().unwrap().merge(&local);
+            },
+        );
 
         let mut stats = merged.into_inner().unwrap();
         stats.filter_bytes_per_sweep =
@@ -220,6 +268,7 @@ impl Scheduler {
         assert!(cfg.n % V == 0, "BWW requires batch size multiple of V (§5.4)");
         let plan = plan_bww(cfg.k, cfg.r);
         let taps = sparse_bww::bww_col_taps(cfg);
+        let bk = self.backend;
         let total = Self::bww_task_count(cfg);
         let chunks = self.chunks_for(total);
 
@@ -229,14 +278,21 @@ impl Scheduler {
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
 
-        self.pool.for_chunk_slices(&mut views, chunks, |ci, _start, chunk| {
-            let mut local = KernelStats::new();
-            for view in chunk.iter_mut() {
-                sparse_bww::bww_task(cfg, d, dy, view, &taps, mode, &mut local);
-                tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
-            }
-            merged.lock().unwrap().merge(&local);
-        });
+        self.pool.for_chunk_slices_with(
+            &mut views,
+            chunks,
+            Scratch::new,
+            |ci, _start, chunk, scratch| {
+                let mut local = KernelStats::new();
+                for view in chunk.iter_mut() {
+                    sparse_bww::bww_task(
+                        cfg, d, dy, view, &taps, mode, &plan, bk, scratch, &mut local,
+                    );
+                    tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
+                }
+                merged.lock().unwrap().merge(&local);
+            },
+        );
 
         let mut stats = merged.into_inner().unwrap();
         stats.filter_bytes_per_sweep =
@@ -590,6 +646,42 @@ mod tests {
         let rw = sched.run_bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop);
         assert_eq!(dg.data(), dg_s.data(), "BWW numerics");
         assert_eq!(rw.stats, st_w, "BWW stats");
+    }
+
+    /// A scheduler pinned to the forced-scalar backend must be bit-exact
+    /// against the dispatched-backend scheduler on all three components —
+    /// the scheduler-level half of the SIMD-vs-scalar parity contract.
+    #[test]
+    fn miri_scalar_and_dispatched_schedulers_bitexact() {
+        let hw = if cfg!(miri) { 3 } else { 6 };
+        let cfg = ConvConfig::square(V, 16, 16, hw, 3, 1);
+        let (d, g) = setup(&cfg, 0.5);
+        let dy = setup_dy(&cfg, 0.4, 55);
+        let gt = g.transpose_channels();
+        let dt = BatchTiledTensor::from_act(&d);
+        let auto = Scheduler::new(3);
+        let scalar = Scheduler::with_backend(3, crate::kernels::simd::Backend::scalar());
+
+        let mut y_a = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut y_s = y_a.clone();
+        let ra = auto.run_fwd(&cfg, &d, &g, &mut y_a, SkipMode::MaskLoop);
+        let rs = scalar.run_fwd(&cfg, &d, &g, &mut y_s, SkipMode::MaskLoop);
+        assert_eq!(y_a.data(), y_s.data(), "FWD backend parity");
+        assert_eq!(ra.stats, rs.stats);
+
+        let mut dd_a = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        let mut dd_s = dd_a.clone();
+        let ra = auto.run_bwi(&cfg, &dy, &gt, &mut dd_a, SkipMode::MaskLoop);
+        let rs = scalar.run_bwi(&cfg, &dy, &gt, &mut dd_s, SkipMode::MaskLoop);
+        assert_eq!(dd_a.data(), dd_s.data(), "BWI backend parity");
+        assert_eq!(ra.stats, rs.stats);
+
+        let mut dg_a = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let mut dg_s = dg_a.clone();
+        let ra = auto.run_bww(&cfg, &dt, &dy, &mut dg_a, SkipMode::MaskLoop);
+        let rs = scalar.run_bww(&cfg, &dt, &dy, &mut dg_s, SkipMode::MaskLoop);
+        assert_eq!(dg_a.data(), dg_s.data(), "BWW backend parity");
+        assert_eq!(ra.stats, rs.stats);
     }
 
     #[test]

@@ -9,14 +9,17 @@
 //! comparison isolate exactly the cost of the sparsity machinery.
 
 use super::regalloc::{plan_bww, plan_fwd};
-use super::{ConvConfig, KernelStats};
+use super::simd::{self, Backend};
+use super::{ConvConfig, KernelStats, Scratch};
 use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::V;
 
 /// Precomputed sweep geometry: for each input column `x`, the list of
 /// (filter tap r, output column x') pairs it touches. Shared by the dense
-/// and sparse kernels so they perform identical index math.
-pub(crate) struct SweepGeom {
+/// and sparse kernels so they perform identical index math; the drivers
+/// compute it once and pass it into every task (hoisted out of the hot
+/// path alongside the register plan).
+pub struct SweepGeom {
     /// For each x: (r, x') pairs (length ≤ R).
     pub taps: Vec<Vec<(usize, usize)>>,
 }
@@ -59,6 +62,20 @@ pub fn fwd(
     y: &mut ActTensor,
     stats: &mut KernelStats,
 ) {
+    fwd_with(cfg, d, g, y, simd::dispatch(), &mut Scratch::new(), stats);
+}
+
+/// [`fwd`] with an explicit backend and reusable scratch (zero-alloc
+/// steady state for the wallclock harness).
+pub fn fwd_with(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    y: &mut ActTensor,
+    bk: Backend,
+    scratch: &mut Scratch,
+    stats: &mut KernelStats,
+) {
     cfg.validate().expect("invalid conv config");
     debug_assert_eq!((d.n, d.c, d.h, d.w), (cfg.n, cfg.c, cfg.h, cfg.w));
     debug_assert_eq!((g.k, g.c, g.s, g.r), (cfg.k, cfg.c, cfg.s, cfg.r));
@@ -73,8 +90,9 @@ pub fn fwd(
 
     // Task structure mirrors the SparseTrain kernel (same blocking per
     // Georganas et al. [11]): per (i, oy, qb) the output row stays in a
-    // stack accumulator across the (s, cb) sweeps.
-    let mut acc = vec![0.0f32; ow * qv * V];
+    // reused scratch accumulator across the (s, cb) sweeps (acc_uninit:
+    // the per-task row load overwrites every element).
+    let acc = scratch.acc_uninit(ow * qv * V);
     for i in 0..cfg.n {
         for oy in 0..oh {
             for qb in 0..kq_count {
@@ -90,7 +108,7 @@ pub fn fwd(
                     }
                     let iy = iy as usize;
                     for cb in 0..cb_count {
-                        sweep_row_dense(cfg, d, g, &mut acc, i, iy, s, qb, qv, cb, ow, &geom);
+                        sweep_row_dense(cfg, d, g, acc, i, iy, s, qb, qv, cb, ow, &geom, bk);
                         account_sweep_dense(cfg, stats, &geom, qv, ow);
                     }
                 }
@@ -109,7 +127,9 @@ pub fn fwd(
 }
 
 /// One dense row sweep: all V lanes of every input vector processed,
-/// scattered into the row accumulator.
+/// scattered into the row accumulator through [`Backend::axpy_v`] — the
+/// same V-wide FMA the sparse kernels issue, so the 0 %-sparsity
+/// comparison isolates exactly the cost of the sparsity machinery.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn sweep_row_dense(
@@ -125,6 +145,7 @@ fn sweep_row_dense(
     cb: usize,
     ow: usize,
     geom: &SweepGeom,
+    bk: Backend,
 ) {
     for x in 0..cfg.w {
         let dvec = d.vec(i, cb, iy, x);
@@ -140,9 +161,7 @@ fn sweep_row_dense(
                 for &(r, xo) in taps {
                     let gvec = g.vec(kb, cb, s, r, cv);
                     let a = &mut acc[base + xo * V..base + xo * V + V];
-                    for l in 0..V {
-                        a[l] += dval * gvec[l];
-                    }
+                    bk.axpy_v(a, dval, gvec);
                 }
             }
         }
@@ -169,6 +188,18 @@ pub fn bwi(
     dy: &ActTensor,
     g: &FilterTensor,
     dd: &mut ActTensor,
+    stats: &mut KernelStats,
+) {
+    bwi_with(cfg, dy, g, dd, simd::dispatch(), stats);
+}
+
+/// [`bwi`] with an explicit backend.
+pub fn bwi_with(
+    cfg: &ConvConfig,
+    dy: &ActTensor,
+    g: &FilterTensor,
+    dd: &mut ActTensor,
+    bk: Backend,
     stats: &mut KernelStats,
 ) {
     cfg.validate().expect("invalid conv config");
@@ -210,9 +241,7 @@ pub fn bwi(
                                             g_vec_for_bwi(g, kb * V + kv, cb, s, r);
                                         let ddrow = &mut dd.data_mut()
                                             [ddoff + ix as usize * V..ddoff + ix as usize * V + V];
-                                        for l in 0..V {
-                                            ddrow[l] += gval * gvec[l];
-                                        }
+                                        bk.axpy_v(ddrow, gval, &gvec);
                                     }
                                 }
                             }
@@ -268,15 +297,14 @@ fn bww_dense_lane(
     qv: usize,
     oy: usize,
     taps: &[(usize, usize)],
+    bk: Backend,
 ) {
     for &(r, ox) in taps {
         for j in 0..qv {
             let kb = qb * qv + j;
             let dyvec = dy.vec(i, kb, oy, ox);
             let a = &mut acc[(r * qv + j) * V..(r * qv + j) * V + V];
-            for l in 0..V {
-                a[l] += dval * dyvec[l];
-            }
+            bk.axpy_v(a, dval, dyvec);
         }
     }
 }
@@ -302,6 +330,19 @@ pub fn bww(
     dg: &mut FilterTensor,
     stats: &mut KernelStats,
 ) {
+    bww_with(cfg, d, dy, dg, simd::dispatch(), &mut Scratch::new(), stats);
+}
+
+/// [`bww`] with an explicit backend and reusable scratch.
+pub fn bww_with(
+    cfg: &ConvConfig,
+    d: &BatchTiledTensor,
+    dy: &ActTensor,
+    dg: &mut FilterTensor,
+    bk: Backend,
+    scratch: &mut Scratch,
+    stats: &mut KernelStats,
+) {
     cfg.validate().expect("invalid conv config");
     assert!(cfg.n % V == 0, "BWW requires batch size multiple of V (§5.4)");
     let (oh, ow) = (cfg.out_h(), cfg.out_w());
@@ -316,7 +357,7 @@ pub fn bww(
     // Loop order per Algorithm 5 (dense): i-tile, y (output row), s, q, c;
     // row sweep over input columns; accumulators dG[r][q-tile] resident.
     let taps = super::sparse_bww::bww_col_taps(cfg);
-    let mut acc = vec![0.0f32; cfg.r * qv * V];
+    let acc = scratch.acc(cfg.r * qv * V);
     for nb in 0..cfg.n / V {
         for oy in 0..oh {
             for s in 0..cfg.s {
@@ -337,25 +378,26 @@ pub fn bww(
                             for nv in 0..V {
                                 bww_dense_lane(
                                     dy,
-                                    &mut acc,
+                                    acc,
                                     dvec[nv],
                                     nb * V + nv,
                                     qb,
                                     qv,
                                     oy,
                                     tap,
+                                    bk,
                                 );
                             }
                         }
-                        // Fold the sweep accumulators into dG.
+                        // Fold the sweep accumulators into dG (scale 1.0:
+                        // fma(a, 1, g) rounds once on the sum — bit-equal
+                        // to a plain add).
                         for r in 0..cfg.r {
                             for j in 0..qv {
                                 let kb = qb * qv + j;
                                 let a = &acc[(r * qv + j) * V..(r * qv + j) * V + V];
                                 let gv = dg.vec_mut(kb, c / V, s, r, c % V);
-                                for l in 0..V {
-                                    gv[l] += a[l];
-                                }
+                                bk.axpy_v(gv, 1.0, a);
                             }
                         }
                         stats.sweeps += 1;

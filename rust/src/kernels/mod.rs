@@ -10,6 +10,7 @@
 //!
 //! | module | paper name | role |
 //! |---|---|---|
+//! | [`simd`] | §3.2.1/§3.2.4 machine ops | explicit-SIMD primitive backend (runtime-dispatched) |
 //! | [`direct`] | `direct` (MKL-DNN) | dense baseline, all three components |
 //! | [`sparse_fwd`] | SparseTrain FWD (Alg. 2+3) | sparse forward |
 //! | [`sparse_bwi`] | SparseTrain BWI (§3.3) | sparse backward-by-input |
@@ -20,6 +21,15 @@
 //! | [`regalloc`] | Table 3 | Q/T/pipelining register-budget selection |
 //! | [`layers`] | — | ReLU / BatchNorm / pooling / FC / loss substrates |
 //! | [`reference`] | — | scalar 7-loop oracle for tests |
+//!
+//! The SparseTrain and `direct` hot loops no longer carry per-lane scalar
+//! arithmetic: the zero-check, the FMA-group body and the V-vector copies
+//! all go through the three [`simd::Backend`] primitives, resolved once per
+//! process (AVX-512F where available and built, AVX2+FMA on other x86-64,
+//! NEON on AArch64, portable scalar under Miri and everywhere else). All
+//! backends are bit-identical by construction — a fused multiply-add and an
+//! IEEE `!= 0.0` compare — so the choice never changes numerics, only
+//! wall-clock.
 
 pub mod direct;
 pub mod im2col;
@@ -27,6 +37,7 @@ pub mod layers;
 pub mod onebyone;
 pub mod reference;
 pub mod regalloc;
+pub mod simd;
 pub mod sparse_bwi;
 pub mod sparse_bww;
 pub mod sparse_fwd;
@@ -147,10 +158,55 @@ pub enum SkipMode {
     MaskLoop,
 }
 
+/// Reusable per-worker scratch memory for the kernel task bodies.
+///
+/// Every task used to allocate its row/sweep accumulator with
+/// `vec![0.0f32; ..]` — one heap round-trip per task (and per *sweep* in
+/// BWW). A `Scratch` is created once per worker thread (plumbed through
+/// [`crate::util::threadpool::ThreadPool::for_chunk_slices_with`]) or once
+/// per serial kernel launch, and [`Scratch::acc`] hands out a zeroed
+/// accumulator that reuses the grown allocation — the hot path performs no
+/// allocation after the first task.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { buf: Vec::new() }
+    }
+
+    /// A zero-filled accumulator of length `n`, reusing the allocation
+    /// (equivalent to a fresh `vec![0.0; n]` without the heap traffic).
+    #[inline]
+    pub fn acc(&mut self, n: usize) -> &mut [f32] {
+        self.buf.clear();
+        self.buf.resize(n, 0.0);
+        &mut self.buf
+    }
+
+    /// An accumulator of length `n` with **unspecified contents** — for
+    /// call sites that fully overwrite the buffer before reading (the
+    /// FWD/BWI row load copies every element), skipping [`Scratch::acc`]'s
+    /// zero-fill memset on the hot path.
+    #[inline]
+    pub fn acc_uninit(&mut self, n: usize) -> &mut [f32] {
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+        &mut self.buf[..n]
+    }
+}
+
 /// Micro-op accounting filled by every kernel. All memory counters are in
 /// units of V-wide (64 B) vector accesses, which on the modeled machine is
 /// one cache line.
-#[derive(Debug, Clone, Default, PartialEq)]
+///
+/// Invariant: `popcount_hist` always has at least `V + 1` buckets — both
+/// constructors and [`KernelStats::merge`] guarantee it, so the hot-path
+/// [`KernelStats::record_check`] indexes without a re-init branch.
+#[derive(Debug, Clone, PartialEq)]
 pub struct KernelStats {
     /// V-wide FMAs actually executed.
     pub fma_vec: u64,
@@ -179,18 +235,40 @@ pub struct KernelStats {
     pub filter_bytes_per_sweep: u64,
 }
 
+impl Default for KernelStats {
+    /// Zeroed counters with the histogram invariant already established
+    /// (`V + 1` buckets), so a `Default`-constructed block records checks
+    /// without any lazy re-initialization.
+    fn default() -> KernelStats {
+        KernelStats {
+            fma_vec: 0,
+            fma_vec_skipped: 0,
+            zero_checks: 0,
+            popcount_hist: vec![0; V + 1],
+            loads_in: 0,
+            loads_flt: 0,
+            loads_out: 0,
+            stores_out: 0,
+            int_ops: 0,
+            sweeps: 0,
+            vec_fp_ops: 0,
+            filter_bytes_per_sweep: 0,
+        }
+    }
+}
+
 impl KernelStats {
     pub fn new() -> KernelStats {
-        KernelStats { popcount_hist: vec![0; V + 1], ..Default::default() }
+        KernelStats::default()
     }
 
     /// Record one zero-check over a V-lane mask with `nonzeros` set lanes.
+    /// Hot path: a plain increment — the `V + 1`-bucket histogram invariant
+    /// is guaranteed by the constructors and [`KernelStats::merge`], so no
+    /// emptiness branch runs per check.
     #[inline]
     pub fn record_check(&mut self, nonzeros: usize) {
         self.zero_checks += 1;
-        if self.popcount_hist.is_empty() {
-            self.popcount_hist = vec![0; V + 1];
-        }
         self.popcount_hist[nonzeros] += 1;
     }
 
@@ -268,6 +346,61 @@ mod tests {
         c2.h = 2;
         c2.w = 2;
         assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn default_stats_record_without_reinit() {
+        // The histogram invariant must hold for *both* constructors — the
+        // old lazy re-init branch in record_check is gone.
+        for mut st in [KernelStats::default(), KernelStats::new()] {
+            assert_eq!(st.popcount_hist.len(), V + 1);
+            st.record_check(0);
+            st.record_check(V);
+            assert_eq!(st.zero_checks, 2);
+            assert_eq!(st.popcount_hist[0], 1);
+            assert_eq!(st.popcount_hist[V], 1);
+        }
+    }
+
+    #[test]
+    fn merge_preserves_hist_invariant() {
+        let mut a = KernelStats::default();
+        let mut b = KernelStats::new();
+        b.record_check(7);
+        a.merge(&b);
+        assert!(a.popcount_hist.len() >= V + 1);
+        a.record_check(V); // must not panic after a merge
+        assert_eq!(a.popcount_hist[7], 1);
+    }
+
+    #[test]
+    fn scratch_reuses_allocation_and_zeroes() {
+        let mut s = Scratch::new();
+        {
+            let acc = s.acc(64);
+            assert_eq!(acc.len(), 64);
+            assert!(acc.iter().all(|&v| v == 0.0));
+            acc.iter_mut().for_each(|v| *v = 7.0);
+        }
+        let ptr = s.acc(64).as_ptr();
+        // same length again: same allocation, contents re-zeroed
+        let acc = s.acc(64);
+        assert_eq!(acc.as_ptr(), ptr);
+        assert!(acc.iter().all(|&v| v == 0.0));
+        // shrinking must not leave stale tail values visible
+        assert!(s.acc(16).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn scratch_uninit_has_right_length_and_reuses() {
+        let mut s = Scratch::new();
+        s.acc(32).iter_mut().for_each(|v| *v = 3.0);
+        // acc_uninit makes no content promise — only length and reuse
+        let b = s.acc_uninit(16);
+        assert_eq!(b.len(), 16);
+        let ptr = s.acc_uninit(32).as_ptr();
+        assert_eq!(s.acc_uninit(32).as_ptr(), ptr);
+        assert_eq!(s.acc_uninit(64).len(), 64);
     }
 
     #[test]

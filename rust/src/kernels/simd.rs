@@ -1,0 +1,487 @@
+//! Explicit-SIMD backend for the three hot kernel primitives.
+//!
+//! The paper's speedup story rests on two machine facts (§3.2.1, §3.2.4):
+//! one vector compare produces a lane mask (`vcmpps` + `kmov`/`movmsk`),
+//! and each surviving lane costs exactly one V-wide FMA per `(tap, Q-tile)`
+//! pair (`vfmadd231ps` with a memory operand). The scalar `for l in 0..V`
+//! loops the kernels used to carry merely *hoped* the autovectorizer would
+//! emit those instructions; this module makes them explicit and lets a
+//! [`Backend`] value — resolved **once per process** with
+//! `is_x86_feature_detected!` — carry the chosen implementation through the
+//! kernels as plain function pointers.
+//!
+//! | primitive | semantics | x86-64 | AArch64 |
+//! |---|---|---|---|
+//! | [`Backend::nonzero_mask`] | bit `l` set iff `v[l] != 0.0` | `vcmpps(NEQ_UQ)` + mask extract | `vceqzq`+`vmvnq`+bit-select |
+//! | [`Backend::axpy_v`] | `acc[l] ← fma(g[l], s, acc[l])` | `vfmadd` (AVX-512F / AVX2+FMA) | `vfmaq_n_f32` |
+//! | [`Backend::copy_v`] | `dst ← src` (one V-vector) | vector load + store | vector load + store |
+//!
+//! **Dispatch order** (first available wins): AVX-512F (only when the
+//! `avx512` cargo feature is on — the AVX-512 intrinsics need rustc ≥ 1.89),
+//! AVX2+FMA, NEON (unconditional on AArch64), scalar. The scalar path is
+//! the *mandatory* backend under Miri (`cfg!(miri)` short-circuits
+//! detection) and on unknown targets, and can be forced anywhere with
+//! `SPARSETRAIN_BACKEND=scalar` — that is the reference implementation the
+//! parity suite compares every SIMD path against.
+//!
+//! **Bit-exactness.** All backends implement the *same* arithmetic: a fused
+//! multiply-add with a single rounding (`f32::mul_add` in the scalar path,
+//! hardware FMA in the vector paths) and an IEEE-754 `!= 0.0` compare
+//! (`-0.0` is zero, NaN is nonzero, matching the scalar `v != 0.0`). The
+//! SIMD-vs-scalar parity tests therefore assert **bit-identical** outputs,
+//! not approximate ones, and the serial/parallel bit-exactness contract of
+//! the scheduler is unchanged.
+
+use crate::V;
+use std::sync::OnceLock;
+
+/// Which instruction set backs the primitives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Portable scalar loops (`f32::mul_add`): the Miri/reference path.
+    Scalar,
+    /// 2× 256-bit ops per primitive (`vfmadd231ps ymm`, `vcmpps`+`vmovmskps`).
+    Avx2,
+    /// 1× 512-bit op per primitive (`vfmadd231ps zmm`, `vcmpps k`).
+    Avx512,
+    /// 4× 128-bit ops per primitive (`fmla.4s`, `fcmeq`+bit-select).
+    Neon,
+}
+
+type MaskFn = fn(&[f32; V]) -> u32;
+type AxpyFn = fn(&mut [f32; V], f32, &[f32; V]);
+type CopyFn = fn(&mut [f32; V], &[f32; V]);
+
+/// A resolved primitive set. `Copy` so kernels thread it by value; the
+/// function pointers are bound once at detection time, so the hot loops
+/// pay an indirect call (predicted perfectly — the target never changes)
+/// instead of a per-call feature check.
+#[derive(Debug, Clone, Copy)]
+pub struct Backend {
+    kind: BackendKind,
+    mask_fn: MaskFn,
+    axpy_fn: AxpyFn,
+    copy_fn: CopyFn,
+}
+
+#[inline(always)]
+fn arr(v: &[f32]) -> &[f32; V] {
+    v.try_into().expect("primitive operand must be exactly V lanes")
+}
+
+#[inline(always)]
+fn arr_mut(v: &mut [f32]) -> &mut [f32; V] {
+    v.try_into().expect("primitive operand must be exactly V lanes")
+}
+
+impl Backend {
+    /// Bit `l` of the result is set iff `v[l] != 0.0` — the vectorized
+    /// zero-check of §3.2.1. `-0.0` counts as zero and NaN as nonzero,
+    /// exactly like the scalar compare.
+    #[inline(always)]
+    pub fn nonzero_mask(&self, v: &[f32; V]) -> u32 {
+        (self.mask_fn)(v)
+    }
+
+    /// `acc[l] += scale * g[l]` as one fused multiply-add per lane (one
+    /// V-wide FMA on vector backends). `acc` and `g` must be exactly `V`
+    /// lanes.
+    #[inline(always)]
+    pub fn axpy_v(&self, acc: &mut [f32], scale: f32, g: &[f32]) {
+        (self.axpy_fn)(arr_mut(acc), scale, arr(g))
+    }
+
+    /// Copy one V-vector (`dst ← src`). Both must be exactly `V` lanes.
+    /// For *single*-vector moves; the kernels deliberately keep
+    /// `copy_from_slice` (one memcpy) for whole-row loads/stores, where a
+    /// per-vector indirect call would only add overhead.
+    #[inline(always)]
+    pub fn copy_v(&self, dst: &mut [f32], src: &[f32]) {
+        (self.copy_fn)(arr_mut(dst), arr(src))
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// Stable lowercase name ("scalar", "avx2", "avx512", "neon") — the
+    /// value recorded in `BENCH_kernels.json` and accepted by the
+    /// `SPARSETRAIN_BACKEND` override.
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Avx2 => "avx2",
+            BackendKind::Avx512 => "avx512",
+            BackendKind::Neon => "neon",
+        }
+    }
+
+    /// The portable scalar backend — always available, the mandatory path
+    /// under Miri and the reference for the parity suite.
+    pub fn scalar() -> Backend {
+        Backend {
+            kind: BackendKind::Scalar,
+            mask_fn: scalar::nonzero_mask,
+            axpy_fn: scalar::axpy,
+            copy_fn: scalar::copy,
+        }
+    }
+
+    /// Detect the best backend for this process (ignoring the env
+    /// override): AVX-512F → AVX2+FMA → NEON → scalar. Under Miri this is
+    /// always scalar — the interpreter must run the portable path.
+    #[allow(unreachable_code)]
+    pub fn detect() -> Backend {
+        if cfg!(miri) {
+            return Backend::scalar();
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            #[cfg(feature = "avx512")]
+            if is_x86_feature_detected!("avx512f") {
+                return x86::avx512_backend();
+            }
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return x86::avx2_backend();
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return neon::backend();
+        }
+        Backend::scalar()
+    }
+
+    /// Look up a backend by name, returning `None` when it is unknown or
+    /// not available on this machine/build (e.g. "avx512" without the
+    /// `avx512` cargo feature or on a non-AVX-512 CPU).
+    pub fn by_name(name: &str) -> Option<Backend> {
+        match name {
+            "scalar" => Some(Backend::scalar()),
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
+            "avx2" => (is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"))
+                .then(x86::avx2_backend),
+            #[cfg(all(target_arch = "x86_64", not(miri), feature = "avx512"))]
+            "avx512" => is_x86_feature_detected!("avx512f").then(x86::avx512_backend),
+            #[cfg(all(target_arch = "aarch64", not(miri)))]
+            "neon" => Some(neon::backend()),
+            _ => None,
+        }
+    }
+}
+
+/// The process-wide dispatched backend, resolved exactly once: the
+/// `SPARSETRAIN_BACKEND` env var (scalar/avx2/avx512/neon) if set,
+/// otherwise [`Backend::detect`]. An explicit override that cannot be
+/// honored (unknown name, or a backend unavailable on this machine/build)
+/// **panics** — silently running a different backend than the one forced
+/// would let e.g. the forced-scalar CI leg pass while testing AVX2.
+pub fn dispatch() -> Backend {
+    static CHOSEN: OnceLock<Backend> = OnceLock::new();
+    *CHOSEN.get_or_init(|| match std::env::var("SPARSETRAIN_BACKEND") {
+        Ok(name) => Backend::by_name(&name).unwrap_or_else(|| {
+            panic!(
+                "SPARSETRAIN_BACKEND={name} is unknown or unavailable on this \
+                 machine/build (valid: scalar, avx2, avx512 [needs the avx512 \
+                 cargo feature], neon); unset it to use auto-detection"
+            )
+        }),
+        Err(_) => Backend::detect(),
+    })
+}
+
+/// Portable reference implementation. `mul_add` is a *fused* multiply-add
+/// (one rounding), so the vector backends' `vfmadd`/`fmla` produce
+/// bit-identical results. Tradeoff: on targets without hardware FMA (e.g.
+/// pre-Haswell x86-64) `mul_add` lowers to a libm `fmaf` call per lane —
+/// slower than the autovectorized mul-then-add it replaced. That is the
+/// price of cross-backend bit-identity, and it only affects the fallback
+/// tier: every dispatched vector backend has hardware FMA by construction.
+mod scalar {
+    use crate::V;
+
+    pub(super) fn nonzero_mask(v: &[f32; V]) -> u32 {
+        let mut m = 0u32;
+        for (l, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                m |= 1 << l;
+            }
+        }
+        m
+    }
+
+    pub(super) fn axpy(acc: &mut [f32; V], scale: f32, g: &[f32; V]) {
+        for l in 0..V {
+            acc[l] = g[l].mul_add(scale, acc[l]);
+        }
+    }
+
+    pub(super) fn copy(dst: &mut [f32; V], src: &[f32; V]) {
+        *dst = *src;
+    }
+}
+
+/// x86-64 implementations. The `#[target_feature]` inner functions are
+/// `unsafe fn`s; the safe entry wrappers are only ever installed into a
+/// [`Backend`] after `is_x86_feature_detected!` confirmed the features, so
+/// the `unsafe` obligation (ISA availability) is discharged at
+/// construction time.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{Backend, BackendKind};
+    use crate::V;
+    use core::arch::x86_64::*;
+
+    pub(super) fn avx2_backend() -> Backend {
+        Backend {
+            kind: BackendKind::Avx2,
+            mask_fn: mask_avx2_entry,
+            axpy_fn: axpy_avx2_entry,
+            copy_fn: copy_avx2_entry,
+        }
+    }
+
+    fn mask_avx2_entry(v: &[f32; V]) -> u32 {
+        // SAFETY: installed only after avx2+fma detection.
+        unsafe { mask_avx2(v) }
+    }
+    fn axpy_avx2_entry(acc: &mut [f32; V], s: f32, g: &[f32; V]) {
+        // SAFETY: installed only after avx2+fma detection.
+        unsafe { axpy_avx2(acc, s, g) }
+    }
+    fn copy_avx2_entry(dst: &mut [f32; V], src: &[f32; V]) {
+        // SAFETY: installed only after avx2+fma detection.
+        unsafe { copy_avx2(dst, src) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn mask_avx2(v: &[f32; V]) -> u32 {
+        let zero = _mm256_setzero_ps();
+        let lo = _mm256_loadu_ps(v.as_ptr());
+        let hi = _mm256_loadu_ps(v.as_ptr().add(8));
+        // NEQ_UQ: unordered quiet not-equal — NaN != 0.0 is true, -0.0
+        // compares equal to 0.0, matching the scalar `x != 0.0`.
+        let mlo = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_NEQ_UQ>(lo, zero)) as u32;
+        let mhi = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_NEQ_UQ>(hi, zero)) as u32;
+        mlo | (mhi << 8)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn axpy_avx2(acc: &mut [f32; V], s: f32, g: &[f32; V]) {
+        let sv = _mm256_set1_ps(s);
+        let a0 = _mm256_loadu_ps(acc.as_ptr());
+        let g0 = _mm256_loadu_ps(g.as_ptr());
+        _mm256_storeu_ps(acc.as_mut_ptr(), _mm256_fmadd_ps(g0, sv, a0));
+        let a1 = _mm256_loadu_ps(acc.as_ptr().add(8));
+        let g1 = _mm256_loadu_ps(g.as_ptr().add(8));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(8), _mm256_fmadd_ps(g1, sv, a1));
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn copy_avx2(dst: &mut [f32; V], src: &[f32; V]) {
+        _mm256_storeu_ps(dst.as_mut_ptr(), _mm256_loadu_ps(src.as_ptr()));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(8), _mm256_loadu_ps(src.as_ptr().add(8)));
+    }
+
+    #[cfg(feature = "avx512")]
+    pub(super) fn avx512_backend() -> Backend {
+        Backend {
+            kind: BackendKind::Avx512,
+            mask_fn: mask_avx512_entry,
+            axpy_fn: axpy_avx512_entry,
+            copy_fn: copy_avx512_entry,
+        }
+    }
+
+    #[cfg(feature = "avx512")]
+    fn mask_avx512_entry(v: &[f32; V]) -> u32 {
+        // SAFETY: installed only after avx512f detection.
+        unsafe { mask_avx512(v) }
+    }
+    #[cfg(feature = "avx512")]
+    fn axpy_avx512_entry(acc: &mut [f32; V], s: f32, g: &[f32; V]) {
+        // SAFETY: installed only after avx512f detection.
+        unsafe { axpy_avx512(acc, s, g) }
+    }
+    #[cfg(feature = "avx512")]
+    fn copy_avx512_entry(dst: &mut [f32; V], src: &[f32; V]) {
+        // SAFETY: installed only after avx512f detection.
+        unsafe { copy_avx512(dst, src) }
+    }
+
+    /// One `vcmpps zmm, k` + `kmovw` — exactly the paper's zero-check.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn mask_avx512(v: &[f32; V]) -> u32 {
+        let x = _mm512_loadu_ps(v.as_ptr());
+        _mm512_cmp_ps_mask::<_CMP_NEQ_UQ>(x, _mm512_setzero_ps()) as u32
+    }
+
+    /// One `vfmadd231ps zmm` — the paper's per-lane FMA group body.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn axpy_avx512(acc: &mut [f32; V], s: f32, g: &[f32; V]) {
+        let a = _mm512_loadu_ps(acc.as_ptr());
+        let gv = _mm512_loadu_ps(g.as_ptr());
+        _mm512_storeu_ps(acc.as_mut_ptr(), _mm512_fmadd_ps(gv, _mm512_set1_ps(s), a));
+    }
+
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn copy_avx512(dst: &mut [f32; V], src: &[f32; V]) {
+        _mm512_storeu_ps(dst.as_mut_ptr(), _mm512_loadu_ps(src.as_ptr()));
+    }
+}
+
+/// AArch64 NEON implementations. NEON is architecturally mandatory on
+/// AArch64, so the entry wrappers are unconditionally sound there.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{Backend, BackendKind};
+    use crate::V;
+    use core::arch::aarch64::*;
+
+    pub(super) fn backend() -> Backend {
+        Backend {
+            kind: BackendKind::Neon,
+            mask_fn: mask_neon_entry,
+            axpy_fn: axpy_neon_entry,
+            copy_fn: copy_neon_entry,
+        }
+    }
+
+    fn mask_neon_entry(v: &[f32; V]) -> u32 {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { mask_neon(v) }
+    }
+    fn axpy_neon_entry(acc: &mut [f32; V], s: f32, g: &[f32; V]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { axpy_neon(acc, s, g) }
+    }
+    fn copy_neon_entry(dst: &mut [f32; V], src: &[f32; V]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { copy_neon(dst, src) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn mask_neon(v: &[f32; V]) -> u32 {
+        // No movemask on NEON: select a per-lane bit via AND with
+        // (1, 2, 4, 8) and reduce with a horizontal add per quad.
+        let lane_bits: [u32; 4] = [1, 2, 4, 8];
+        let bits = vld1q_u32(lane_bits.as_ptr());
+        let mut m = 0u32;
+        for q in 0..4 {
+            let x = vld1q_f32(v.as_ptr().add(q * 4));
+            // vceqzq: lanes equal to ±0.0 (NaN lanes false) — invert for
+            // the nonzero mask, matching the scalar `x != 0.0`.
+            let nz = vmvnq_u32(vceqzq_f32(x));
+            m |= vaddvq_u32(vandq_u32(nz, bits)) << (q * 4);
+        }
+        m
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_neon(acc: &mut [f32; V], s: f32, g: &[f32; V]) {
+        for q in 0..4 {
+            let a = vld1q_f32(acc.as_ptr().add(q * 4));
+            let gv = vld1q_f32(g.as_ptr().add(q * 4));
+            vst1q_f32(acc.as_mut_ptr().add(q * 4), vfmaq_n_f32(a, gv, s));
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn copy_neon(dst: &mut [f32; V], src: &[f32; V]) {
+        for q in 0..4 {
+            vst1q_f32(dst.as_mut_ptr().add(q * 4), vld1q_f32(src.as_ptr().add(q * 4)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xorshift;
+
+    fn random_vec(rng: &mut Xorshift, sparsity: f64) -> [f32; V] {
+        let mut v = [0.0f32; V];
+        for x in v.iter_mut() {
+            if rng.next_f64() >= sparsity {
+                *x = (rng.next_f64() * 2.0 - 1.0) as f32;
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn scalar_mask_semantics() {
+        let bk = Backend::scalar();
+        assert_eq!(bk.nonzero_mask(&[0.0; V]), 0);
+        assert_eq!(bk.nonzero_mask(&[1.0; V]), 0xFFFF);
+        let mut v = [0.0f32; V];
+        v[0] = 1.0;
+        v[3] = -2.5;
+        v[15] = 1e-30;
+        assert_eq!(bk.nonzero_mask(&v), 1 | (1 << 3) | (1 << 15));
+        // -0.0 is zero; NaN is nonzero (matches the scalar `x != 0.0`)
+        v = [0.0; V];
+        v[1] = -0.0;
+        v[2] = f32::NAN;
+        assert_eq!(bk.nonzero_mask(&v), 1 << 2);
+    }
+
+    #[test]
+    fn scalar_axpy_is_fused() {
+        let bk = Backend::scalar();
+        let mut acc = [1.0f32; V];
+        let g: [f32; V] = core::array::from_fn(|l| l as f32);
+        bk.axpy_v(&mut acc, 0.5, &g);
+        for (l, &a) in acc.iter().enumerate() {
+            assert_eq!(a, (l as f32).mul_add(0.5, 1.0));
+        }
+    }
+
+    #[test]
+    fn copy_v_copies() {
+        let bk = dispatch();
+        let src: [f32; V] = core::array::from_fn(|l| l as f32 - 7.5);
+        let mut dst = [0.0f32; V];
+        bk.copy_v(&mut dst, &src);
+        assert_eq!(dst, src);
+    }
+
+    /// The dispatched backend must be bit-identical to scalar on both
+    /// primitives across random vectors — the unit-level half of the
+    /// SIMD-vs-scalar parity contract (the kernel-level half lives in
+    /// `rust/tests/backend_parity.rs`). Under Miri the dispatched backend
+    /// *is* scalar, which also pins the mandatory-scalar rule.
+    #[test]
+    fn dispatched_backend_matches_scalar_bitwise() {
+        let bk = dispatch();
+        let sc = Backend::scalar();
+        if cfg!(miri) {
+            assert_eq!(bk.kind(), BackendKind::Scalar, "Miri must run the scalar path");
+        }
+        let mut rng = Xorshift::new(0x51D);
+        for case in 0..200 {
+            let sparsity = [0.0, 0.3, 0.6, 0.9][case % 4];
+            let v = random_vec(&mut rng, sparsity);
+            assert_eq!(bk.nonzero_mask(&v), sc.nonzero_mask(&v), "mask case {case}");
+            let g = random_vec(&mut rng, 0.0);
+            let scale = (rng.next_f64() * 4.0 - 2.0) as f32;
+            let mut a1 = random_vec(&mut rng, 0.0);
+            let mut a2 = a1;
+            bk.axpy_v(&mut a1, scale, &g);
+            sc.axpy_v(&mut a2, scale, &g);
+            assert_eq!(a1, a2, "axpy case {case} (backend {})", bk.name());
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip_and_unknown() {
+        assert_eq!(Backend::by_name("scalar").unwrap().kind(), BackendKind::Scalar);
+        assert!(Backend::by_name("nope").is_none());
+        let bk = dispatch();
+        // the dispatched backend's own name must resolve back to it
+        assert_eq!(Backend::by_name(bk.name()).map(|b| b.kind()), Some(bk.kind()));
+    }
+}

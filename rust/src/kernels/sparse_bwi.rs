@@ -3,7 +3,10 @@
 //! BWI mirrors FWD with the roles of the tensors swapped: the sweep scans
 //! ∂L/∂Y (which carries the ReLU sparsity when no BatchNorm intervenes —
 //! §2.3) and scatters into ∂L/∂D, with the filters channel-transposed so
-//! the FMA memory operand is a C-vector.
+//! the FMA memory operand is a C-vector. The zero-check and the FMA groups
+//! run through the dispatched [`Backend`] primitives, and the column-tap
+//! table is computed **once per launch** ([`bwi_col_taps`]) instead of per
+//! task — the per-task hot path allocates nothing.
 //!
 //! Differences from FWD the paper calls out:
 //! * with row stride `O > 1`, `O·Q/V` new ∂L/∂D vectors enter the register
@@ -12,14 +15,34 @@
 //! * ignoring boundaries, a ∂L/∂Y element always affects the full
 //!   `T = R·Q/V` vectors (no stride-induced tap gaps).
 
-use super::regalloc::plan_fwd;
-use super::{ConvConfig, KernelStats, SkipMode};
+use super::regalloc::{plan_fwd, RegPlan};
+use super::simd::{self, Backend};
+use super::{ConvConfig, KernelStats, Scratch, SkipMode};
 use crate::tensor::{ActTensor, FilterTensor, RowTileMut};
 use crate::V;
 
+/// Column taps for a BWI sweep: for each output column `ox`, the (r, x)
+/// pairs with `ox·O + r − pad_w = x` inside the input. Identical for every
+/// `s`, so the driver computes it once per launch and passes it to every
+/// task (the BWI analogue of [`super::sparse_bww::bww_col_taps`]).
+pub fn bwi_col_taps(cfg: &ConvConfig) -> Vec<Vec<(usize, usize)>> {
+    let ow = cfg.out_w();
+    (0..ow)
+        .map(|ox| {
+            (0..cfg.r)
+                .filter_map(|r| {
+                    let x = ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize;
+                    (x >= 0 && x < cfg.w as isize).then_some((r, x as usize))
+                })
+                .collect()
+        })
+        .collect()
+}
+
 /// SparseTrain BWI. `gt` is the channel-transposed filter tensor
 /// ([`FilterTensor::transpose_channels`]; dims `[C][K][S][R]` logically).
-/// `dd` must be zero-initialized.
+/// `dd` must be zero-initialized. Uses the process-wide dispatched
+/// [`Backend`] and a fresh [`Scratch`].
 ///
 /// Like FWD, the serial driver iterates the same per-task views the
 /// parallel scheduler distributes ([`ActTensor::par_row_tiles_mut`] over
@@ -32,6 +55,22 @@ pub fn bwi(
     mode: SkipMode,
     stats: &mut KernelStats,
 ) {
+    bwi_with(cfg, dy, gt, dd, mode, simd::dispatch(), &mut Scratch::new(), stats);
+}
+
+/// [`bwi`] with an explicit backend and reusable scratch — the zero-alloc
+/// entry point the wallclock harness and the parity suite drive.
+#[allow(clippy::too_many_arguments)]
+pub fn bwi_with(
+    cfg: &ConvConfig,
+    dy: &ActTensor,
+    gt: &FilterTensor,
+    dd: &mut ActTensor,
+    mode: SkipMode,
+    bk: Backend,
+    scratch: &mut Scratch,
+    stats: &mut KernelStats,
+) {
     cfg.validate().expect("invalid conv config");
     let (oh, ow) = (cfg.out_h(), cfg.out_w());
     debug_assert_eq!((dy.n, dy.c, dy.h, dy.w), (cfg.n, cfg.k, oh, ow));
@@ -39,8 +78,9 @@ pub fn bwi(
     debug_assert_eq!((dd.n, dd.c, dd.h, dd.w), (cfg.n, cfg.c, cfg.h, cfg.w));
 
     let plan = plan_fwd(cfg.c, cfg.r); // accumulators are C-vectors
+    let taps = bwi_col_taps(cfg);
     for view in dd.par_row_tiles_mut(plan.q / V).iter_mut() {
-        bwi_task(cfg, dy, gt, view, mode, stats);
+        bwi_task(cfg, dy, gt, view, &taps, mode, &plan, bk, scratch, stats);
     }
     stats.filter_bytes_per_sweep =
         stats.filter_bytes_per_sweep.max((cfg.s * cfg.r * plan.q * V * 4) as u64);
@@ -49,23 +89,33 @@ pub fn bwi(
 /// Per-task body: one ∂L/∂D row × one Q tile of input channels. The task
 /// scatters only into its own [`RowTileMut`] view of `dd` — the disjoint
 /// `(view.i, view.y, view.qb)` slice — so parallel tasks cannot alias.
+/// `taps` is the launch-wide [`bwi_col_taps`] table and `plan` the
+/// driver's register plan (both hoisted out of the per-task hot path).
+#[allow(clippy::too_many_arguments)]
 pub fn bwi_task(
     cfg: &ConvConfig,
     dy: &ActTensor,
     gt: &FilterTensor,
     view: &mut RowTileMut<'_>,
+    taps: &[Vec<(usize, usize)>],
     mode: SkipMode,
+    plan: &RegPlan,
+    bk: Backend,
+    scratch: &mut Scratch,
     stats: &mut KernelStats,
 ) {
-    let plan = plan_fwd(cfg.c, cfg.r);
+    debug_assert_eq!(*plan, plan_fwd(cfg.c, cfg.r), "plan must come from the driver's plan_fwd");
     let qv = plan.q / V;
     debug_assert_eq!(view.tiles(), qv, "view tiling must match the register plan");
     let (i, y, qb) = (view.i, view.y, view.qb);
     let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    debug_assert_eq!(taps.len(), ow, "taps must match the layer's output width");
     let kb_count = cfg.k / V;
 
-    // Row accumulator over the full input width.
-    let mut acc = vec![0.0f32; cfg.w * qv * V];
+    // Row accumulator over the full input width (reused across tasks);
+    // whole-row memcpy beats per-vector copy_v calls for the load/store,
+    // and acc_uninit skips the zero-fill the copy would overwrite anyway.
+    let acc = scratch.acc_uninit(cfg.w * qv * V);
     for j in 0..qv {
         acc[j * cfg.w * V..(j + 1) * cfg.w * V].copy_from_slice(view.row(j));
     }
@@ -80,34 +130,17 @@ pub fn bwi_task(
         if oy >= oh {
             continue;
         }
-        // Column taps for this sweep: ox feeds x = ox·O + r - pad_w.
-        let taps: Vec<Vec<(usize, usize)>> = (0..ow)
-            .map(|ox| {
-                (0..cfg.r)
-                    .filter_map(|r| {
-                        let x = ox as isize * cfg.stride_o as isize + r as isize
-                            - cfg.pad_w as isize;
-                        (x >= 0 && x < cfg.w as isize).then_some((r, x as usize))
-                    })
-                    .collect()
-            })
-            .collect();
 
         for kb in 0..kb_count {
             stats.sweeps += 1;
             stats.loads_in += ow as u64;
             for ox in 0..ow {
-                let dyvec = dy.vec(i, kb, oy, ox);
+                let dyvec = dy.vec_arr(i, kb, oy, ox);
                 let tap = &taps[ox];
                 if tap.is_empty() {
                     continue;
                 }
-                let mut mask: u32 = 0;
-                for (l, &v) in dyvec.iter().enumerate() {
-                    if v != 0.0 {
-                        mask |= 1 << l;
-                    }
-                }
+                let mask = bk.nonzero_mask(dyvec);
                 let nonzeros = mask.count_ones() as usize;
                 stats.record_check(nonzeros);
                 let t_here = (tap.len() * qv) as u64;
@@ -117,7 +150,7 @@ pub fn bwi_task(
                 match mode {
                     SkipMode::Dense => {
                         for kv in 0..V {
-                            fma_lane(gt, &mut acc, dyvec[kv], qb, qv, kb, s, kv, tap, cfg.w);
+                            fma_lane(gt, acc, dyvec[kv], qb, qv, kb, s, kv, tap, cfg.w, bk);
                         }
                         stats.fma_vec += (V - nonzeros) as u64 * t_here;
                         stats.fma_vec_skipped -= (V - nonzeros) as u64 * t_here;
@@ -125,7 +158,7 @@ pub fn bwi_task(
                     SkipMode::PerLaneBranch => {
                         for kv in 0..V {
                             if mask & (1 << kv) != 0 {
-                                fma_lane(gt, &mut acc, dyvec[kv], qb, qv, kb, s, kv, tap, cfg.w);
+                                fma_lane(gt, acc, dyvec[kv], qb, qv, kb, s, kv, tap, cfg.w, bk);
                             }
                         }
                         stats.int_ops += V as u64;
@@ -134,7 +167,7 @@ pub fn bwi_task(
                         let mut m = mask;
                         while m != 0 {
                             let kv = m.trailing_zeros() as usize;
-                            fma_lane(gt, &mut acc, dyvec[kv], qb, qv, kb, s, kv, tap, cfg.w);
+                            fma_lane(gt, acc, dyvec[kv], qb, qv, kb, s, kv, tap, cfg.w, bk);
                             m &= m - 1;
                         }
                         stats.int_ops += 2 + 8 * nonzeros as u64;
@@ -153,8 +186,9 @@ pub fn bwi_task(
     stats.stores_out += (cfg.w * qv) as u64;
 }
 
-/// FMAs for one nonzero ∂L/∂Y lane: `gt` C-vector operand from memory.
-/// Strength-reduced filter indexing (see `sparse_fwd::fma_lane`).
+/// FMAs for one nonzero ∂L/∂Y lane: `gt` C-vector operand from memory,
+/// issued through [`Backend::axpy_v`]. Strength-reduced filter indexing
+/// (see `sparse_fwd::fma_lane`).
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
 fn fma_lane(
@@ -168,6 +202,7 @@ fn fma_lane(
     kv: usize,
     taps: &[(usize, usize)],
     w: usize,
+    bk: Backend,
 ) {
     let gdata = gt.data();
     let cb_stride = gt.c_blocks() * gt.s * gt.r * V * V;
@@ -180,9 +215,7 @@ fn fma_lane(
             let go = cb_base + r * V * V;
             let gvec = &gdata[go..go + V];
             let a = &mut acc[base + x * V..base + x * V + V];
-            for l in 0..V {
-                a[l] += dyval * gvec[l];
-            }
+            bk.axpy_v(a, dyval, gvec);
         }
     }
 }
@@ -289,6 +322,27 @@ mod tests {
         assert!(st.fma_vec > 0);
     }
 
+    /// The hoisted tap table matches the geometry the per-sweep code used
+    /// to recompute: every (ox, r) pair lands on a valid input column.
+    #[test]
+    fn col_taps_match_geometry() {
+        for (hw, rs, stride, extra_pad) in [(8, 3, 1, 0), (9, 3, 2, 0), (7, 5, 1, 1)] {
+            let mut cfg = ConvConfig::square(1, 16, 16, hw, rs, stride);
+            cfg.pad_w += extra_pad;
+            let taps = bwi_col_taps(&cfg);
+            assert_eq!(taps.len(), cfg.out_w());
+            for (ox, tap) in taps.iter().enumerate() {
+                for &(r, x) in tap {
+                    assert!(r < cfg.r && x < cfg.w);
+                    assert_eq!(
+                        ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize,
+                        x as isize
+                    );
+                }
+            }
+        }
+    }
+
     /// Reduced-geometry Miri gate: the view-based task decomposition (the
     /// slices `bwi_task` scatters into) equals the whole-kernel run on a
     /// layer small enough for the interpreter.
@@ -298,13 +352,17 @@ mod tests {
         let (dy, g) = setup(&cfg, 0.5, 23);
         let gt = g.transpose_channels();
         let plan = plan_fwd(cfg.c, cfg.r);
+        let taps = bwi_col_taps(&cfg);
+        let bk = simd::dispatch();
         let mut dd1 = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
         let mut st = KernelStats::new();
         bwi(&cfg, &dy, &gt, &mut dd1, SkipMode::MaskLoop, &mut st);
         let mut dd2 = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
         let mut st2 = KernelStats::new();
+        let mut scratch = Scratch::new();
+        let mode = SkipMode::MaskLoop;
         for view in dd2.par_row_tiles_mut(plan.q / V).iter_mut().rev() {
-            bwi_task(&cfg, &dy, &gt, view, SkipMode::MaskLoop, &mut st2);
+            bwi_task(&cfg, &dy, &gt, view, &taps, mode, &plan, bk, &mut scratch, &mut st2);
         }
         assert_eq!(dd1.data(), dd2.data());
         assert_eq!(st.fma_vec, st2.fma_vec);

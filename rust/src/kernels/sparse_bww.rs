@@ -7,22 +7,26 @@
 //!   spills). The input is therefore the N-tiled layout
 //!   [`BatchTiledTensor`];
 //! * each input vector is checked **once per row sweep** (Algorithm 5,
-//!   line 7); a nonzero lane then issues the full `T = R·Q/V` FMAs across
-//!   all filter taps touching that column;
+//!   line 7) — one [`Backend::nonzero_mask`] compare; a nonzero lane then
+//!   issues the full `T = R·Q/V` FMAs ([`Backend::axpy_v`]) across all
+//!   filter taps touching that column;
 //! * the `T` dG accumulators are **register-resident for the whole row
 //!   sweep** — no cyclic renaming; previous partial results are loaded and
-//!   added once at the end of the sweep and stored right back;
+//!   added once at the end of the sweep and stored right back (the sweep
+//!   accumulator itself is per-worker [`Scratch`], so no allocation per
+//!   sweep);
 //! * either D or ∂L/∂Y can be the checked operand; the caller picks the
 //!   sparser one (§5.3 uses the higher average sparsity of the two).
 
-use super::regalloc::plan_bww;
-use super::{ConvConfig, KernelStats, SkipMode};
+use super::regalloc::{plan_bww, RegPlan};
+use super::simd::{self, Backend};
+use super::{ConvConfig, KernelStats, Scratch, SkipMode};
 use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor, FilterTileMut};
 use crate::V;
 
 /// Per-input-column taps: for column `ix`, the (r, ox) pairs with
 /// `ox·O + r − pad_w = ix`.
-pub(crate) fn bww_col_taps(cfg: &ConvConfig) -> Vec<Vec<(usize, usize)>> {
+pub fn bww_col_taps(cfg: &ConvConfig) -> Vec<Vec<(usize, usize)>> {
     let ow = cfg.out_w();
     (0..cfg.w)
         .map(|ix| {
@@ -41,13 +45,30 @@ pub(crate) fn bww_col_taps(cfg: &ConvConfig) -> Vec<Vec<(usize, usize)>> {
 }
 
 /// SparseTrain BWW: checks zeros in `d` (the N-tiled input). `dg` is
-/// accumulated into (zero it for a fresh gradient).
+/// accumulated into (zero it for a fresh gradient). Uses the process-wide
+/// dispatched [`Backend`] and a fresh [`Scratch`].
 pub fn bww(
     cfg: &ConvConfig,
     d: &BatchTiledTensor,
     dy: &ActTensor,
     dg: &mut FilterTensor,
     mode: SkipMode,
+    stats: &mut KernelStats,
+) {
+    bww_with(cfg, d, dy, dg, mode, simd::dispatch(), &mut Scratch::new(), stats);
+}
+
+/// [`bww`] with an explicit backend and reusable scratch — the zero-alloc
+/// entry point the wallclock harness and the parity suite drive.
+#[allow(clippy::too_many_arguments)]
+pub fn bww_with(
+    cfg: &ConvConfig,
+    d: &BatchTiledTensor,
+    dy: &ActTensor,
+    dg: &mut FilterTensor,
+    mode: SkipMode,
+    bk: Backend,
+    scratch: &mut Scratch,
     stats: &mut KernelStats,
 ) {
     cfg.validate().expect("invalid conv config");
@@ -63,7 +84,7 @@ pub fn bww(
     // Iterate the same per-task (qb, c) tile views the parallel scheduler
     // distributes ([`FilterTensor::par_qc_tiles_mut`]), in the same order.
     for view in dg.par_qc_tiles_mut(plan.q / V).iter_mut() {
-        bww_task(cfg, d, dy, view, &taps, mode, stats);
+        bww_task(cfg, d, dy, view, &taps, mode, &plan, bk, scratch, stats);
     }
     stats.filter_bytes_per_sweep =
         stats.filter_bytes_per_sweep.max((cfg.r * plan.q * 4) as u64);
@@ -76,9 +97,12 @@ pub fn bww(
 /// the coordinator can run tasks in parallel without locks or atomics on
 /// dG (§3.4's minibatch vectorization keeps each sweep's destination
 /// minibatch-invariant) — and the borrow checker proves the tiles disjoint.
+/// `plan` is the driver's [`plan_bww`] result, hoisted out of the per-sweep
+/// hot path.
 ///
 /// The task's `(nb, oy, s)` iteration order matches the serial [`bww`], so
 /// the parallel result is bit-identical to the serial kernel.
+#[allow(clippy::too_many_arguments)]
 pub fn bww_task(
     cfg: &ConvConfig,
     d: &BatchTiledTensor,
@@ -86,6 +110,9 @@ pub fn bww_task(
     view: &mut FilterTileMut<'_>,
     taps: &[Vec<(usize, usize)>],
     mode: SkipMode,
+    plan: &RegPlan,
+    bk: Backend,
+    scratch: &mut Scratch,
     stats: &mut KernelStats,
 ) {
     let oh = cfg.out_h();
@@ -96,7 +123,9 @@ pub fn bww_task(
                 if iy < 0 || iy >= cfg.h as isize {
                     continue;
                 }
-                bww_sweep(cfg, d, dy, view, nb, oy, iy as usize, s, taps, mode, stats);
+                bww_sweep(
+                    cfg, d, dy, view, nb, oy, iy as usize, s, taps, mode, plan, bk, scratch, stats,
+                );
             }
         }
     }
@@ -118,15 +147,19 @@ pub fn bww_sweep(
     s: usize,
     taps: &[Vec<(usize, usize)>],
     mode: SkipMode,
+    plan: &RegPlan,
+    bk: Backend,
+    scratch: &mut Scratch,
     stats: &mut KernelStats,
 ) {
-    let plan = plan_bww(cfg.k, cfg.r);
+    debug_assert_eq!(*plan, plan_bww(cfg.k, cfg.r), "plan must come from the driver's plan_bww");
     let qv = plan.q / V;
     debug_assert_eq!(view.tiles(), qv, "view tiling must match the register plan");
     let (qb, c) = (view.qb, view.c);
 
-    // Register-resident accumulators: R × Q/V vectors, cleared at entry.
-    let mut acc = vec![0.0f32; cfg.r * qv * V];
+    // Register-resident accumulators: R × Q/V vectors, cleared at entry
+    // (reused scratch — the old per-sweep vec![] allocation is gone).
+    let acc = scratch.acc(cfg.r * qv * V);
     stats.sweeps += 1;
 
     for ix in 0..cfg.w {
@@ -134,14 +167,9 @@ pub fn bww_sweep(
         if tap.is_empty() {
             continue;
         }
-        let dvec = d.vec(nb, c, iy, ix);
+        let dvec = d.vec_arr(nb, c, iy, ix);
         stats.loads_in += 1;
-        let mut mask: u32 = 0;
-        for (l, &v) in dvec.iter().enumerate() {
-            if v != 0.0 {
-                mask |= 1 << l;
-            }
-        }
+        let mask = bk.nonzero_mask(dvec);
         let nonzeros = mask.count_ones() as usize;
         stats.record_check(nonzeros);
         let t_here = (tap.len() * qv) as u64;
@@ -153,7 +181,7 @@ pub fn bww_sweep(
         match mode {
             SkipMode::Dense => {
                 for nv in 0..V {
-                    fma_lane(dy, &mut acc, dvec[nv], nb * V + nv, qb, qv, oy, tap);
+                    fma_lane(dy, acc, dvec[nv], nb * V + nv, qb, qv, oy, tap, bk);
                 }
                 stats.fma_vec += (V - nonzeros) as u64 * t_here;
                 stats.fma_vec_skipped -= (V - nonzeros) as u64 * t_here;
@@ -161,7 +189,7 @@ pub fn bww_sweep(
             SkipMode::PerLaneBranch => {
                 for nv in 0..V {
                     if mask & (1 << nv) != 0 {
-                        fma_lane(dy, &mut acc, dvec[nv], nb * V + nv, qb, qv, oy, tap);
+                        fma_lane(dy, acc, dvec[nv], nb * V + nv, qb, qv, oy, tap, bk);
                     }
                 }
                 stats.int_ops += V as u64;
@@ -170,7 +198,7 @@ pub fn bww_sweep(
                 let mut m = mask;
                 while m != 0 {
                     let nv = m.trailing_zeros() as usize;
-                    fma_lane(dy, &mut acc, dvec[nv], nb * V + nv, qb, qv, oy, tap);
+                    fma_lane(dy, acc, dvec[nv], nb * V + nv, qb, qv, oy, tap, bk);
                     m &= m - 1;
                 }
                 stats.int_ops += 2 + 8 * nonzeros as u64;
@@ -179,14 +207,14 @@ pub fn bww_sweep(
     }
 
     // Fold into dG: load previous partials, add, store back (§3.4 —
-    // filter-gradient elements touched only twice, at sweep end).
+    // filter-gradient elements touched only twice, at sweep end). Scale
+    // 1.0 makes the fused axpy round once on the sum — bit-equal to the
+    // plain add it replaces.
     for r in 0..cfg.r {
         for j in 0..qv {
             let a = &acc[(r * qv + j) * V..(r * qv + j) * V + V];
             let gv = view.vec_mut(j, s, r);
-            for l in 0..V {
-                gv[l] += a[l];
-            }
+            bk.axpy_v(gv, 1.0, a);
         }
     }
     stats.loads_out += (cfg.r * qv) as u64;
@@ -194,8 +222,10 @@ pub fn bww_sweep(
 }
 
 /// All FMAs for one nonzero input lane `i`: broadcast D element × the
-/// ∂L/∂Y K-vectors (memory operands) for every tap touching this column.
+/// ∂L/∂Y K-vectors (memory operands) for every tap touching this column,
+/// through [`Backend::axpy_v`].
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn fma_lane(
     dy: &ActTensor,
     acc: &mut [f32],
@@ -205,6 +235,7 @@ fn fma_lane(
     qv: usize,
     oy: usize,
     taps: &[(usize, usize)],
+    bk: Backend,
 ) {
     // Strength-reduced ∂L/∂Y indexing: for fixed (i, oy) the offset is
     // kb·kb_stride + ox·V + base (see sparse_fwd::fma_lane).
@@ -217,9 +248,7 @@ fn fma_lane(
             let o = row_base + kb * kb_stride + ox * V;
             let dyvec = &dyd[o..o + V];
             let a = &mut acc[(r * qv + j) * V..(r * qv + j) * V + V];
-            for l in 0..V {
-                a[l] += dval * dyvec[l];
-            }
+            bk.axpy_v(a, dval, dyvec);
         }
     }
 }
@@ -358,13 +387,16 @@ mod tests {
         let (_, d, dy) = setup(&cfg, 0.5, 29);
         let plan = plan_bww(cfg.k, cfg.r);
         let taps = bww_col_taps(&cfg);
+        let bk = simd::dispatch();
         let mut dg1 = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
         let mut st = KernelStats::new();
         bww(&cfg, &d, &dy, &mut dg1, SkipMode::MaskLoop, &mut st);
         let mut dg2 = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
         let mut st2 = KernelStats::new();
+        let mut scratch = Scratch::new();
+        let mode = SkipMode::MaskLoop;
         for view in dg2.par_qc_tiles_mut(plan.q / V).iter_mut().rev() {
-            bww_task(&cfg, &d, &dy, view, &taps, SkipMode::MaskLoop, &mut st2);
+            bww_task(&cfg, &d, &dy, view, &taps, mode, &plan, bk, &mut scratch, &mut st2);
         }
         assert_eq!(dg1.data(), dg2.data());
         assert_eq!(st.fma_vec, st2.fma_vec);

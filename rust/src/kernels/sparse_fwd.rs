@@ -5,25 +5,32 @@
 //!   the loop nest here is the per-task body; the coordinator parallelizes
 //!   over `(i, oy, qb)` tasks;
 //! * **vectorized zero-checking** along the input-channel dimension: one
-//!   vector compare per input V-vector produces a lane mask (§3.2.1);
+//!   vector compare per input V-vector produces a lane mask (§3.2.1),
+//!   executed as one `vcmpps` + mask extract by the dispatched
+//!   [`Backend`];
 //! * **mask-loop skipping** (Algorithm 3): popcount + trailing-zero-count
 //!   iteration over set lanes, instead of one branch per lane (§3.2.4);
+//!   each surviving lane issues its `taps·Q/V` FMA group through
+//!   [`Backend::axpy_v`] — one V-wide `vfmadd` per group element;
 //! * **register-budget tiling**: output channels tiled by `Q` from
 //!   [`regalloc::plan_fwd`] so `T = R·Q/V` accumulators stay in registers
-//!   (§3.2.3); the row-sweep accumulator here is a stack buffer the
-//!   compiler keeps in vector registers / L1.
+//!   (§3.2.3); the row-sweep accumulator here is a per-worker
+//!   [`Scratch`] buffer the compiler keeps in vector registers / L1 —
+//!   reused across tasks, so the hot path allocates nothing.
 //!
 //! The kernel is *functional* (bit-exact against the dense direct kernel —
 //! skipping only elides multiplications by exact zeros) and *accounted*
 //! (issued vs skipped FMAs, mask statistics for the mispredict model).
 
 use super::direct::SweepGeom;
-use super::regalloc::plan_fwd;
-use super::{ConvConfig, KernelStats, SkipMode};
+use super::regalloc::{plan_fwd, RegPlan};
+use super::simd::{self, Backend};
+use super::{ConvConfig, KernelStats, Scratch, SkipMode};
 use crate::tensor::{ActTensor, FilterTensor, RowTileMut};
 use crate::V;
 
 /// SparseTrain FWD over the tiled layouts. `y` must be zero-initialized.
+/// Uses the process-wide dispatched [`Backend`] and a fresh [`Scratch`].
 ///
 /// The serial driver iterates the *same* per-task views the parallel
 /// scheduler distributes ([`ActTensor::par_row_tiles_mut`]), in the same
@@ -37,14 +44,31 @@ pub fn fwd(
     mode: SkipMode,
     stats: &mut KernelStats,
 ) {
+    fwd_with(cfg, d, g, y, mode, simd::dispatch(), &mut Scratch::new(), stats);
+}
+
+/// [`fwd`] with an explicit backend and reusable scratch — the zero-alloc
+/// entry point the wallclock harness and the parity suite drive.
+#[allow(clippy::too_many_arguments)]
+pub fn fwd_with(
+    cfg: &ConvConfig,
+    d: &ActTensor,
+    g: &FilterTensor,
+    y: &mut ActTensor,
+    mode: SkipMode,
+    bk: Backend,
+    scratch: &mut Scratch,
+    stats: &mut KernelStats,
+) {
     cfg.validate().expect("invalid conv config");
     debug_assert_eq!((d.n, d.c, d.h, d.w), (cfg.n, cfg.c, cfg.h, cfg.w));
     debug_assert_eq!((g.k, g.c, g.s, g.r), (cfg.k, cfg.c, cfg.s, cfg.r));
     debug_assert_eq!((y.n, y.c, y.h, y.w), (cfg.n, cfg.k, cfg.out_h(), cfg.out_w()));
 
     let plan = plan_fwd(cfg.k, cfg.r);
+    let geom = SweepGeom::fwd(cfg);
     for view in y.par_row_tiles_mut(plan.q / V).iter_mut() {
-        fwd_task(cfg, d, g, view, mode, stats);
+        fwd_task(cfg, d, g, view, mode, &plan, &geom, bk, scratch, stats);
     }
     stats.filter_bytes_per_sweep =
         stats.filter_bytes_per_sweep.max((cfg.s * cfg.r * plan.q * V * 4) as u64);
@@ -55,32 +79,41 @@ pub fn fwd(
 ///
 /// The task writes only through its own [`RowTileMut`] view — the owned
 /// disjoint slice of `y` for `(view.i, view.y, view.qb)` — so the borrow
-/// checker guarantees two tasks can never write the same memory.
+/// checker guarantees two tasks can never write the same memory. The
+/// driver passes the register `plan` and sweep `geom` it already computed
+/// (hoisted out of the hot path) plus the worker's reusable `scratch`.
+#[allow(clippy::too_many_arguments)]
 pub fn fwd_task(
     cfg: &ConvConfig,
     d: &ActTensor,
     g: &FilterTensor,
     view: &mut RowTileMut<'_>,
     mode: SkipMode,
+    plan: &RegPlan,
+    geom: &SweepGeom,
+    bk: Backend,
+    scratch: &mut Scratch,
     stats: &mut KernelStats,
 ) {
-    let plan = plan_fwd(cfg.k, cfg.r);
+    debug_assert_eq!(*plan, plan_fwd(cfg.k, cfg.r), "plan must come from the driver's plan_fwd");
     let qv = plan.q / V;
     debug_assert_eq!(view.tiles(), qv, "view tiling must match the register plan");
     let (i, oy, qb) = (view.i, view.y, view.qb);
-    let geom = SweepGeom::fwd(cfg);
+    debug_assert_eq!(geom.taps.len(), cfg.w, "geom must match the layer width");
     let cb_count = cfg.c / V;
     let ow = cfg.out_w();
 
     // Row-sweep accumulator: qv output vectors × ow columns. The paper keeps
-    // T = R·Q/V of these in zmm registers with cyclic renaming; a stack
-    // buffer of the live row gives the compiler the same freedom while
-    // staying functional for any W.
-    let mut acc = vec![0.0f32; ow * qv * V];
+    // T = R·Q/V of these in zmm registers with cyclic renaming; a reused
+    // scratch buffer of the live row gives the compiler the same freedom
+    // while staying functional for any W (and allocation-free per task).
+    // acc_uninit: the row load below overwrites every element.
+    let acc = scratch.acc_uninit(ow * qv * V);
 
     for j in 0..qv {
         // load existing output row (zero on entry, but the sweep protocol
-        // loads/stores once per row sweep — accounted below)
+        // loads/stores once per row sweep — accounted below); whole-row
+        // memcpy beats per-vector copy_v calls here
         acc[j * ow * V..(j + 1) * ow * V].copy_from_slice(view.row(j));
     }
 
@@ -91,9 +124,7 @@ pub fn fwd_task(
         }
         let iy = iy as usize;
         for cb in 0..cb_count {
-            sweep_row(
-                cfg, d, g, &mut acc, i, iy, s, qb, qv, cb, ow, mode, &geom, stats,
-            );
+            sweep_row(cfg, d, g, acc, i, iy, s, qb, qv, cb, ow, mode, geom, bk, stats);
         }
     }
 
@@ -124,24 +155,20 @@ fn sweep_row(
     ow: usize,
     mode: SkipMode,
     geom: &SweepGeom,
+    bk: Backend,
     stats: &mut KernelStats,
 ) {
     stats.sweeps += 1;
     stats.loads_in += cfg.w as u64;
 
     for x in 0..cfg.w {
-        let dvec = d.vec(i, cb, iy, x);
+        let dvec = d.vec_arr(i, cb, iy, x);
         let taps = &geom.taps[x];
         if taps.is_empty() {
             continue;
         }
-        // Vectorized zero check (vcmpps → mask).
-        let mut mask: u32 = 0;
-        for (l, &v) in dvec.iter().enumerate() {
-            if v != 0.0 {
-                mask |= 1 << l;
-            }
-        }
+        // Vectorized zero check: one vcmpps → lane mask (§3.2.1).
+        let mask = bk.nonzero_mask(dvec);
         let nonzeros = mask.count_ones() as usize;
         stats.record_check(nonzeros);
 
@@ -153,7 +180,7 @@ fn sweep_row(
             SkipMode::Dense => {
                 // process every lane unconditionally (zeros multiply through)
                 for cv in 0..V {
-                    fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow);
+                    fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow, bk);
                 }
                 // dense mode issues all FMAs: move the skipped count back
                 stats.fma_vec += (V - nonzeros) as u64 * t_here;
@@ -163,7 +190,7 @@ fn sweep_row(
                 // Algorithm 2: test each lane (a branch per lane).
                 for cv in 0..V {
                     if mask & (1 << cv) != 0 {
-                        fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow);
+                        fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow, bk);
                     }
                 }
                 stats.int_ops += V as u64; // one test per lane
@@ -174,7 +201,7 @@ fn sweep_row(
                 let mut m = mask;
                 while m != 0 {
                     let cv = m.trailing_zeros() as usize;
-                    fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow);
+                    fma_lane(g, acc, dvec[cv], qb, qv, cb, s, cv, taps, ow, bk);
                     m &= m - 1;
                 }
                 stats.int_ops += 2 + 8 * nonzeros as u64;
@@ -183,8 +210,9 @@ fn sweep_row(
     }
 }
 
-/// All FMAs for one nonzero input lane: `taps.len() × qv` vector FMAs, the
-/// filter operand straight from (modeled) memory.
+/// All FMAs for one nonzero input lane: `taps.len() × qv` vector FMAs
+/// ([`Backend::axpy_v`], the filter operand straight from (modeled)
+/// memory).
 ///
 /// Perf note (§Perf log): the filter offset is strength-reduced — for a
 /// fixed (cb, s, cv) the offset is `kb·kb_stride + r·V² + base`, so the
@@ -203,6 +231,7 @@ fn fma_lane(
     cv: usize,
     taps: &[(usize, usize)],
     ow: usize,
+    bk: Backend,
 ) {
     let gdata = g.data();
     let kb_stride = g.c_blocks() * g.s * g.r * V * V;
@@ -215,9 +244,7 @@ fn fma_lane(
             let go = kb_base + r * V * V;
             let gvec = &gdata[go..go + V];
             let a = &mut acc[base + xo * V..base + xo * V + V];
-            for l in 0..V {
-                a[l] += dval * gvec[l];
-            }
+            bk.axpy_v(a, dval, gvec);
         }
     }
 }
@@ -348,6 +375,9 @@ mod tests {
         let cfg = ConvConfig::square(2, 32, 64, 6, 3, 1);
         let (d, g) = sparse_setup(&cfg, 0.5, 77);
         let plan = super::plan_fwd(cfg.k, cfg.r);
+        let geom = SweepGeom::fwd(&cfg);
+        let bk = simd::dispatch();
+        let mut scratch = Scratch::new();
         let mut y1 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
         let mut st = KernelStats::new();
         fwd(&cfg, &d, &g, &mut y1, SkipMode::MaskLoop, &mut st);
@@ -356,7 +386,9 @@ mod tests {
         let mut views = y2.par_row_tiles_mut(plan.q / V);
         assert_eq!(views.len(), cfg.n * cfg.out_h() * (cfg.k / plan.q));
         for view in views.iter_mut().rev() {
-            fwd_task(&cfg, &d, &g, view, SkipMode::MaskLoop, &mut st2);
+            fwd_task(
+                &cfg, &d, &g, view, SkipMode::MaskLoop, &plan, &geom, bk, &mut scratch, &mut st2,
+            );
         }
         drop(views);
         assert_eq!(y1.data(), y2.data());
@@ -372,14 +404,17 @@ mod tests {
         let cfg = ConvConfig::square(1, 16, 16, 4, 3, 1);
         let (d, g) = sparse_setup(&cfg, 0.5, 11);
         let plan = super::plan_fwd(cfg.k, cfg.r);
+        let geom = SweepGeom::fwd(&cfg);
+        let bk = simd::dispatch();
         for mode in [SkipMode::Dense, SkipMode::PerLaneBranch, SkipMode::MaskLoop] {
             let mut y1 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
             let mut st = KernelStats::new();
             fwd(&cfg, &d, &g, &mut y1, mode, &mut st);
             let mut y2 = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
             let mut st2 = KernelStats::new();
+            let mut scratch = Scratch::new();
             for view in y2.par_row_tiles_mut(plan.q / V).iter_mut().rev() {
-                fwd_task(&cfg, &d, &g, view, mode, &mut st2);
+                fwd_task(&cfg, &d, &g, view, mode, &plan, &geom, bk, &mut scratch, &mut st2);
             }
             assert_eq!(y1.data(), y2.data(), "mode={mode:?}");
             assert_eq!(st.fma_vec, st2.fma_vec, "mode={mode:?}");

@@ -11,6 +11,22 @@
 //! * [`kernels`] — functional + cost-accounted implementations of the paper's
 //!   convolution kernels: SparseTrain FWD/BWI/BWW, dense `direct`,
 //!   `im2col`+GEMM, Winograd F(2×2,3×3), and the specialized `1x1` kernel.
+//!
+//!   **SIMD backend dispatch.** The three hot primitives — the vectorized
+//!   zero-check (`vcmpps` → lane mask), the V-wide FMA group body
+//!   (`vfmadd231ps`), and the V-vector copy — live in [`kernels::simd`]
+//!   behind a [`kernels::simd::Backend`] of plain function pointers,
+//!   resolved **once per process** with `is_x86_feature_detected!`:
+//!   AVX-512F (one 512-bit op per primitive; needs the `avx512` cargo
+//!   feature and rustc ≥ 1.89) → AVX2+FMA (two 256-bit ops) → NEON on
+//!   AArch64 (four 128-bit ops) → portable scalar. The scalar path is the
+//!   *reference and Miri* implementation: `cfg!(miri)` forces it (the
+//!   interpreter cannot execute vendor intrinsics), `SPARSETRAIN_BACKEND=
+//!   scalar` forces it anywhere, and because every backend computes the
+//!   same correctly-rounded fused multiply-add (`f32::mul_add` ↔ hardware
+//!   FMA) and IEEE `!= 0.0` compare, all backends are **bit-identical** —
+//!   pinned by the `backend_parity` test suite across every `SkipMode`,
+//!   geometry sweep, and all three components.
 //! * [`sim`] — an analytical Skylake-X core model used to turn per-kernel
 //!   micro-op counts into cycle estimates (the paper's testbed substitute).
 //! * [`sparsity`] — synthetic sparsity generators, the Fig-3 trajectory
@@ -34,11 +50,17 @@
 //!   data-race freedom is enforced by the borrow checker — zero `unsafe`
 //!   in the scheduling path — and verified continuously by a `cargo
 //!   +nightly miri test` CI gate plus 1–8-thread bit-exactness property
-//!   tests. See [`coordinator::scheduler`] for the full contract (who
-//!   splits, who owns, why it's safe).
+//!   tests. Each run hoists the register plan, sweep geometry/tap tables
+//!   and the SIMD backend out of the task bodies, and every worker thread
+//!   owns one reusable [`kernels::Scratch`] accumulator (per-worker state
+//!   through `ThreadPool::for_chunk_slices_with`), so the scheduled hot
+//!   path performs no heap allocation. See [`coordinator::scheduler`] for
+//!   the full contract (who splits, who owns, why it's safe).
 //! * [`runtime`] — PJRT client wrapper that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them.
-//! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`.
+//! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`,
+//!   plus [`bench::wallclock`]: the real-kernel wall-clock sweep behind
+//!   `cargo run --release --example wallclock` → `BENCH_kernels.json`.
 //! * [`util`] — substrates built from scratch for the offline environment:
 //!   PRNG, statistics, thread pool, CLI parsing, text tables, and a mini
 //!   property-testing framework.

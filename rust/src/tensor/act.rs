@@ -107,6 +107,15 @@ impl ActTensor {
         &mut self.data[o..o + V]
     }
 
+    /// Channel vector as a fixed-size array reference — the operand shape
+    /// the [`crate::kernels::simd::Backend`] primitives take (compile-time
+    /// V-lane guarantee, no per-call length check in release builds).
+    #[inline(always)]
+    pub fn vec_arr(&self, i: usize, cb: usize, y: usize, x: usize) -> &[f32; V] {
+        let o = self.vec_offset(i, cb, y, x);
+        self.data[o..o + V].try_into().expect("tiled layout stores whole V-vectors")
+    }
+
     /// Scalar accessor in logical NCHW coordinates (for references/tests).
     #[inline]
     pub fn get(&self, i: usize, c: usize, y: usize, x: usize) -> f32 {

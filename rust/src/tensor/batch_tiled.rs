@@ -46,6 +46,14 @@ impl BatchTiledTensor {
         &self.data[o..o + V]
     }
 
+    /// Minibatch vector as a fixed-size array reference — the zero-check
+    /// operand shape for [`crate::kernels::simd::Backend::nonzero_mask`].
+    #[inline(always)]
+    pub fn vec_arr(&self, nb: usize, c: usize, y: usize, x: usize) -> &[f32; V] {
+        let o = self.vec_offset(nb, c, y, x);
+        self.data[o..o + V].try_into().expect("tiled layout stores whole V-vectors")
+    }
+
     /// Scalar accessor in logical (i, c, y, x) coordinates.
     #[inline]
     pub fn get(&self, i: usize, c: usize, y: usize, x: usize) -> f32 {

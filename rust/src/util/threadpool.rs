@@ -26,6 +26,10 @@
 //!   checker — no `unsafe`, no aliased `&mut`, nothing for Miri to object
 //!   to. Same cursor-based dynamic chunk assignment and panic propagation
 //!   as [`ThreadPool::for_chunks`].
+//! * [`ThreadPool::for_chunk_slices_with`] — the same, plus a per-worker
+//!   state value (`init()` once per participating thread, `&mut S` into
+//!   every chunk that worker runs): the zero-alloc-hot-path hook the kernel
+//!   scheduler uses to hand each worker one reusable scratch accumulator.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -187,6 +191,25 @@ impl ThreadPool {
         T: Send,
         F: Fn(usize, usize, &mut [T]) + Send + Sync,
     {
+        self.for_chunk_slices_with(items, chunks, || (), |ci, start, chunk, _| f(ci, start, chunk));
+    }
+
+    /// [`ThreadPool::for_chunk_slices`] with **per-worker state**: each
+    /// participating worker thread calls `init()` exactly once before
+    /// claiming chunks and passes the resulting `&mut S` to every chunk it
+    /// runs. This is how the kernel scheduler gives each worker one
+    /// reusable [`crate::kernels::Scratch`] accumulator — tasks stop
+    /// allocating per-task buffers while the state never crosses threads
+    /// (so `S` needs no `Send`/`Sync`).
+    ///
+    /// Same chunk carving, dynamic cursor assignment and panic propagation
+    /// as [`ThreadPool::for_chunk_slices`].
+    pub fn for_chunk_slices_with<T, S, I, F>(&self, items: &mut [T], chunks: usize, init: I, f: F)
+    where
+        T: Send,
+        I: Fn() -> S + Send + Sync,
+        F: Fn(usize, usize, &mut [T], &mut S) + Send + Sync,
+    {
         let n = items.len();
         if n == 0 {
             return;
@@ -206,21 +229,24 @@ impl ThreadPool {
         let workers = self.n_threads.min(n_chunks);
         let cursor = AtomicUsize::new(0);
 
-        let run_chunks = |cursor: &AtomicUsize, f: &F| loop {
-            let ci = cursor.fetch_add(1, Ordering::Relaxed);
-            if ci >= n_chunks {
-                break;
+        let run_chunks = |cursor: &AtomicUsize, init: &I, f: &F| {
+            let mut state = init();
+            loop {
+                let ci = cursor.fetch_add(1, Ordering::Relaxed);
+                if ci >= n_chunks {
+                    break;
+                }
+                let (chunk_start, chunk_items) =
+                    parts[ci].lock().unwrap().take().expect("chunk claimed exactly once");
+                f(ci, chunk_start, chunk_items, &mut state);
             }
-            let (chunk_start, chunk_items) =
-                parts[ci].lock().unwrap().take().expect("chunk claimed exactly once");
-            f(ci, chunk_start, chunk_items);
         };
 
         std::thread::scope(|s| {
             for _ in 1..workers {
-                s.spawn(|| run_chunks(&cursor, &f));
+                s.spawn(|| run_chunks(&cursor, &init, &f));
             }
-            run_chunks(&cursor, &f);
+            run_chunks(&cursor, &init, &f);
         });
     }
 }
@@ -363,6 +389,34 @@ mod tests {
         for (i, item) in items.iter().enumerate() {
             assert_eq!(*item, i as u64 + 1, "item {i} visited wrong number of times");
         }
+    }
+
+    /// Per-worker state: `init` runs at most once per participating
+    /// thread, the state is reused across every chunk that worker claims,
+    /// and all items are still visited exactly once.
+    #[test]
+    fn for_chunk_slices_with_reuses_worker_state() {
+        let pool = ThreadPool::new(3);
+        let inits = AtomicU64::new(0);
+        let mut items: Vec<u64> = vec![0; 257];
+        pool.for_chunk_slices_with(
+            &mut items,
+            12,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                // per-worker chunk counter, never shared across threads
+                0u64
+            },
+            |_ci, _start, chunk, state| {
+                *state += 1;
+                for item in chunk.iter_mut() {
+                    *item += *state; // nonzero: state survives across chunks
+                }
+            },
+        );
+        let n_inits = inits.load(Ordering::SeqCst);
+        assert!((1..=3).contains(&n_inits), "one init per worker, got {n_inits}");
+        assert!(items.iter().all(|&v| v >= 1), "every item visited with live state");
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! SIMD-vs-scalar backend parity suite.
+//!
+//! The explicit-SIMD backend (`kernels::simd`) promises that every
+//! implementation of the three primitives — AVX-512F, AVX2+FMA, NEON,
+//! scalar — computes the *same* arithmetic: a fused multiply-add with one
+//! rounding and an IEEE `!= 0.0` compare. These tests pin that promise at
+//! the kernel level: for **every `SkipMode`** and a randomized
+//! [`ConvGeomGen`] geometry sweep, the dispatched backend must produce
+//! **bit-identical outputs and identical `KernelStats`** to the
+//! forced-scalar backend on all three training components.
+//!
+//! On an x86-64 CI runner the dispatched backend is AVX2 (or AVX-512 with
+//! `--features avx512`), so this is a real cross-ISA comparison; under
+//! `SPARSETRAIN_BACKEND=scalar` (the forced-scalar CI leg) it degenerates
+//! to scalar-vs-scalar, which still pins the dispatch plumbing.
+
+use sparsetrain::kernels::simd::{self, Backend};
+use sparsetrain::kernels::{
+    sparse_bwi, sparse_bww, sparse_fwd, ConvConfig, KernelStats, Scratch, SkipMode,
+};
+use sparsetrain::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::proptest::{check, Config as PropConfig, ConvGeomGen};
+
+struct Triad {
+    y: ActTensor,
+    dd: ActTensor,
+    dg: FilterTensor,
+    st_fwd: KernelStats,
+    st_bwi: KernelStats,
+    st_bww: KernelStats,
+}
+
+/// Run FWD, BWI and BWW serially on one backend with a reusable scratch.
+fn run_triad(cfg: &ConvConfig, mode: SkipMode, bk: Backend, seed: u64) -> Triad {
+    let mut rng = Xorshift::new(seed);
+    let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    d.fill_relu_sparse(&mut rng, 0.55);
+    let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    g.fill_uniform(&mut rng, -0.5, 0.5);
+    let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    dy.fill_relu_sparse(&mut rng, 0.45);
+    for v in dy.data_mut().iter_mut() {
+        if *v != 0.0 && rng.bernoulli(0.5) {
+            *v = -*v;
+        }
+    }
+    let gt = g.transpose_channels();
+    let dt = BatchTiledTensor::from_act(&d);
+    let mut scratch = Scratch::new();
+
+    let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+    let mut st_fwd = KernelStats::new();
+    sparse_fwd::fwd_with(cfg, &d, &g, &mut y, mode, bk, &mut scratch, &mut st_fwd);
+
+    let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+    let mut st_bwi = KernelStats::new();
+    sparse_bwi::bwi_with(cfg, &dy, &gt, &mut dd, mode, bk, &mut scratch, &mut st_bwi);
+
+    let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+    let mut st_bww = KernelStats::new();
+    sparse_bww::bww_with(cfg, &dt, &dy, &mut dg, mode, bk, &mut scratch, &mut st_bww);
+
+    Triad { y, dd, dg, st_fwd, st_bwi, st_bww }
+}
+
+fn assert_parity(cfg: &ConvConfig, mode: SkipMode, seed: u64) -> Result<(), String> {
+    let auto = run_triad(cfg, mode, simd::dispatch(), seed);
+    let scalar = run_triad(cfg, mode, Backend::scalar(), seed);
+    if auto.y.data() != scalar.y.data() {
+        return Err(format!("FWD outputs diverge (mode={mode:?}, cfg={cfg:?})"));
+    }
+    if auto.st_fwd != scalar.st_fwd {
+        return Err(format!("FWD stats diverge (mode={mode:?}, cfg={cfg:?})"));
+    }
+    if auto.dd.data() != scalar.dd.data() {
+        return Err(format!("BWI outputs diverge (mode={mode:?}, cfg={cfg:?})"));
+    }
+    if auto.st_bwi != scalar.st_bwi {
+        return Err(format!("BWI stats diverge (mode={mode:?}, cfg={cfg:?})"));
+    }
+    if auto.dg.data() != scalar.dg.data() {
+        return Err(format!("BWW outputs diverge (mode={mode:?}, cfg={cfg:?})"));
+    }
+    if auto.st_bww != scalar.st_bww {
+        return Err(format!("BWW stats diverge (mode={mode:?}, cfg={cfg:?})"));
+    }
+    Ok(())
+}
+
+/// Every `SkipMode` on a fixed Table-2-derived 3×3 shape.
+#[test]
+#[cfg_attr(miri, ignore = "dispatched backend is scalar under miri; covered by lib tests")]
+fn parity_all_modes_fixed_3x3() {
+    let cfg = ConvConfig::square(16, 32, 32, 8, 3, 1);
+    println!("dispatched backend: {}", simd::dispatch().name());
+    for mode in [SkipMode::Dense, SkipMode::PerLaneBranch, SkipMode::MaskLoop] {
+        assert_parity(&cfg, mode, 0xFACE).unwrap();
+    }
+}
+
+/// Every `SkipMode` on a strided shape and a 1×1 shape.
+#[test]
+#[cfg_attr(miri, ignore = "dispatched backend is scalar under miri; covered by lib tests")]
+fn parity_all_modes_strided_and_1x1() {
+    for cfg in [ConvConfig::square(16, 32, 32, 9, 3, 2), ConvConfig::square(16, 64, 32, 6, 1, 1)] {
+        for mode in [SkipMode::Dense, SkipMode::PerLaneBranch, SkipMode::MaskLoop] {
+            assert_parity(&cfg, mode, 0xB0A7).unwrap();
+        }
+    }
+}
+
+/// Randomized-geometry sweep (odd/even spatial sizes, strides 1–2, filter
+/// 1/3/5, extra padding) × every `SkipMode`: the dispatched backend must
+/// stay bit-identical to forced scalar everywhere.
+#[test]
+#[cfg_attr(miri, ignore = "dispatched backend is scalar under miri; covered by lib tests")]
+fn parity_over_random_geometry_all_modes() {
+    let gen = ConvGeomGen { min_hw: 4, max_hw: 9, max_threads: 1 };
+    check(PropConfig { cases: 8, seed: 0x51D0, max_shrink_steps: 12 }, &gen, |g| {
+        let mut cfg = ConvConfig::square(16, 16, 32, g.hw, g.rs, g.stride);
+        cfg.pad_h += g.extra_pad;
+        cfg.pad_w += g.extra_pad;
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+        for mode in [SkipMode::Dense, SkipMode::PerLaneBranch, SkipMode::MaskLoop] {
+            assert_parity(&cfg, mode, 0xD1CE + g.hw as u64)?;
+        }
+        Ok(())
+    });
+}
