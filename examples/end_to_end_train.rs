@@ -8,13 +8,14 @@
 //! **parallel training triad** — `Scheduler::run_fwd`/`run_bwi`/`run_bww` —
 //! on the trained model's conv2 geometry at those sparsities.
 //!
-//! Without artifacts (`make artifacts` not run) the PJRT phase is skipped
-//! and the parallel triad runs at prior sparsities, so the example always
-//! exercises the scheduler path.
+//! Without artifacts (`make artifacts` not run) the Rust-side reference
+//! HLO is materialized automatically and executed by the vendored mini-HLO
+//! interpreter, so the training phase runs on a cold checkout with no
+//! Python at all.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example end_to_end_train -- --steps 200
-//! cargo run --release --example end_to_end_train -- --threads 4   # no artifacts needed
+//! cargo run --release --example end_to_end_train -- --steps 40 --threads 4
+//! make artifacts && cargo run --release --example end_to_end_train   # real JAX lowering
 //! ```
 
 use sparsetrain::bench::experiments::speedup_over_direct;
@@ -28,31 +29,27 @@ use sparsetrain::util::cli::Args;
 use sparsetrain::util::prng::Xorshift;
 use sparsetrain::util::stats::mean;
 
-/// Train through PJRT if the artifacts are present. Returns the measured
-/// (input, gradient) ReLU sparsities of conv2, or `None` when skipped.
-fn pjrt_training_phase(steps: usize, seed: u64) -> Option<(f64, f64)> {
-    let artifacts = ArtifactSet::default_location();
-    if !artifacts.complete() {
-        eprintln!(
-            "artifacts missing ({:?}); skipping the PJRT training phase \
-             (run `make artifacts` to enable it)",
-            artifacts.missing()
-        );
-        return None;
-    }
+/// Train through the PJRT runtime (real JAX artifacts when `make
+/// artifacts` has run, the Rust-emitted reference HLO through the mini-HLO
+/// interpreter otherwise). Returns the measured (input, gradient) ReLU
+/// sparsities of conv2.
+fn pjrt_training_phase(steps: usize, seed: u64) -> (f64, f64) {
+    let artifacts = ArtifactSet::bootstrap_offline().expect("materializing offline artifacts");
 
-    println!("== end-to-end training: rust coordinator → PJRT → JAX/Pallas artifact ==");
+    println!("== end-to-end training: rust coordinator → PJRT → train-step artifact ==");
     let mut trainer = Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20 })
         .expect("trainer init");
-    let report = match trainer.run() {
-        Ok(r) => r,
-        Err(e) => {
-            // The offline build vendors an xla stub that cannot compile
-            // HLO; fall back to the scheduler demo instead of crashing.
-            eprintln!("PJRT training unavailable ({e:#}); skipping the training phase");
-            return None;
-        }
-    };
+    let report = trainer.run().unwrap_or_else(|e| {
+        eprintln!(
+            "training failed: {e:#}\n\
+             note: artifacts in `{}` take precedence over the built-in fallback. \
+             If they are raw XLA text dumps outside the offline interpreter's \
+             reference grammar, delete them (or point SPARSETRAIN_ARTIFACTS at \
+             another directory) and re-run.",
+            artifacts.dir.display()
+        );
+        std::process::exit(1);
+    });
 
     let head = mean(&report.losses[..report.losses.len().min(10)]);
     let tail = mean(&report.losses[report.losses.len().saturating_sub(10)..]);
@@ -64,7 +61,7 @@ fn pjrt_training_phase(steps: usize, seed: u64) -> Option<(f64, f64)> {
     report.profiler.report().print();
     let s_in = report.profiler.mean("conv1_relu").unwrap_or(0.5);
     let s_dy = report.profiler.mean("conv2_relu").unwrap_or(0.5);
-    Some((s_in, s_dy))
+    (s_in, s_dy)
 }
 
 /// The full sparse training triad on conv2's geometry, serial and
@@ -132,10 +129,9 @@ fn main() {
     let seed = args.get_usize("seed", 7).unwrap() as u64;
     let threads = args.get_usize("threads", 4).unwrap();
 
-    let measured = pjrt_training_phase(steps, seed);
-    let (s_in, s_dy) = measured.unwrap_or((0.5, 0.6));
+    let (s_in, s_dy) = pjrt_training_phase(steps, seed);
 
-    // Feed the (measured or prior) sparsities into the Skylake-X model.
+    // Feed the measured sparsities into the Skylake-X model.
     let m = Machine::skylake_x();
     use geometry::*;
     let conv2_cfg = ConvConfig::square(N, C1, C2, HW, 3, 1);

@@ -122,7 +122,15 @@ fn main() {
         Some("train") => {
             let steps = args.get_usize("steps", 200).unwrap_or(200);
             let seed = args.get_usize("seed", 7).unwrap_or(7) as u64;
-            let artifacts = ArtifactSet::default_location();
+            // Use real artifacts when present; otherwise materialize the
+            // Rust-emitted reference HLO so training works offline.
+            let artifacts = match ArtifactSet::bootstrap_offline() {
+                Ok(set) => set,
+                Err(e) => {
+                    eprintln!("materializing offline artifacts failed: {e}");
+                    std::process::exit(1);
+                }
+            };
             match Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20 }) {
                 Ok(mut t) => match t.run() {
                     Ok(report) => {

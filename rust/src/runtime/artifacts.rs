@@ -1,6 +1,33 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` (which
-//! writes `artifacts/*.hlo.txt` once, at build time) and the Rust runtime.
+//! Artifact manifest: the contract between the artifact producers and the
+//! Rust runtime.
+//!
+//! Two producers can satisfy the manifest:
+//!
+//! 1. `make artifacts` → `python/compile/aot.py` (real JAX + Pallas)
+//!    writes `artifacts/*.hlo.txt` once at build time — the primary path
+//!    when a Python toolchain is available. Point `SPARSETRAIN_ARTIFACTS`
+//!    at the output directory to override the default `./artifacts`.
+//! 2. [`ArtifactSet::write_fallback`] emits the Rust-side reference HLO
+//!    (`runtime::hlo_builder`, derived from the same [`geometry`]
+//!    constants as `python/compile/model.py`) for any *missing* artifact,
+//!    so a cold checkout with no Python still trains end to end through
+//!    the vendored mini-HLO interpreter. Files without the fallback
+//!    marker (real lowerings) are never overwritten and always take
+//!    precedence; the fallback's own output carries a version + geometry
+//!    fingerprint (`hlo_builder::fallback_marker`) and is refreshed
+//!    automatically when the emitter or the geometry changes.
+//!
+//! [`ArtifactSet::bootstrap_offline`] composes the two: use what's there,
+//! fill the gaps with the fallback.
+//!
+//! Caveat: the offline interpreter consumes the reference HLO grammar and
+//! op subset (`vendor/xla`'s `hlo` module). Raw `as_hlo_text()` dumps from
+//! an arbitrary XLA build may use ops/syntax outside that subset and then
+//! fail loudly at `Runtime::load` — executing those requires linking the
+//! real `xla` crate (see ROADMAP), or deleting the files to fall back to
+//! the reference emitter.
 
+use std::io;
 use std::path::{Path, PathBuf};
 
 /// The artifacts the AOT pipeline produces and the trainer consumes.
@@ -53,8 +80,8 @@ impl ArtifactSet {
         self.path_of(name).is_file()
     }
 
-    /// All artifacts present? (Used to gate runtime tests/examples so
-    /// `cargo test` works before `make artifacts`.)
+    /// All artifacts present? (`Trainer::new` requires this; callers that
+    /// want a cold checkout to work use [`ArtifactSet::bootstrap_offline`].)
     pub fn complete(&self) -> bool {
         [TRAIN_STEP, PREDICT, KERNEL_FWD].iter().all(|n| self.has(n))
     }
@@ -62,6 +89,87 @@ impl ArtifactSet {
     /// Missing artifact names.
     pub fn missing(&self) -> Vec<&'static str> {
         [TRAIN_STEP, PREDICT, KERNEL_FWD].into_iter().filter(|n| !self.has(n)).collect()
+    }
+
+    /// Write the Rust-emitted reference HLO for every artifact that is
+    /// missing **or** is a *stale* fallback (first line carries
+    /// `hlo_builder::FALLBACK_PREFIX` but an outdated version/geometry
+    /// fingerprint — e.g. after a geometry change, so old fallback files
+    /// can't silently pin an old graph). Files without the marker are real
+    /// lowerings (`make artifacts`) and are never clobbered, even under
+    /// races: new files are published with `hard_link`, which is atomic
+    /// and fails (rather than replaces) when the target already exists.
+    pub fn write_fallback(&self) -> io::Result<()> {
+        use super::hlo_builder;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+
+        std::fs::create_dir_all(&self.dir)?;
+        let g = hlo_builder::Geometry::paper();
+        let marker = hlo_builder::fallback_marker(&g);
+        for (name, text) in [
+            (TRAIN_STEP, hlo_builder::train_step_hlo(&g)),
+            (PREDICT, hlo_builder::predict_hlo(&g)),
+            (KERNEL_FWD, hlo_builder::kernel_fwd_hlo(&g)),
+        ] {
+            let path = self.path_of(name);
+            let stale = match std::fs::read_to_string(&path) {
+                Ok(existing) => {
+                    let first = existing.lines().next().unwrap_or("");
+                    if !first.starts_with(hlo_builder::FALLBACK_PREFIX) || first == marker {
+                        continue; // a real artifact, or our current output
+                    }
+                    true
+                }
+                Err(_) => false,
+            };
+            let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+            let tmp = self.dir.join(format!(".{name}.{}.{seq}.tmp", std::process::id()));
+            std::fs::write(&tmp, text)?;
+            if stale {
+                // Our own outdated output: unlink it, then publish through
+                // the same no-clobber hard_link below — if a real lowering
+                // lands in the window, AlreadyExists lets it win.
+                let _ = std::fs::remove_file(&path);
+            }
+            let publish = std::fs::hard_link(&tmp, &path);
+            let cleanup = std::fs::remove_file(&tmp);
+            match publish {
+                Ok(()) => {}
+                // someone else (another test binary, `make artifacts`)
+                // provided the artifact first — theirs wins
+                Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {}
+                Err(e) => return Err(e),
+            }
+            cleanup?;
+        }
+        Ok(())
+    }
+
+    /// A scratch artifact set under the system temp dir, wiped on creation
+    /// (so pid reuse cannot resurrect files from an older checkout) and
+    /// populated with the offline fallback. Test-binary plumbing: keeps
+    /// gating tests independent of whatever `./artifacts` holds.
+    pub fn scratch_fallback(tag: &str) -> io::Result<ArtifactSet> {
+        let dir = std::env::temp_dir()
+            .join(format!("sparsetrain-scratch-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let set = ArtifactSet::new(dir);
+        set.write_fallback()?;
+        Ok(set)
+    }
+
+    /// The default location, materializing the offline fallback for any
+    /// missing artifact — the cold-checkout entry point used by tests and
+    /// examples so the trainer runs with no Python and no pre-built
+    /// artifacts.
+    pub fn bootstrap_offline() -> io::Result<ArtifactSet> {
+        let set = Self::default_location();
+        // Unconditional: write_fallback no-ops on real or current files and
+        // refreshes stale fallback output, so the fingerprint-based
+        // auto-refresh actually runs even when the manifest looks complete.
+        set.write_fallback()?;
+        Ok(set)
     }
 }
 
@@ -83,5 +191,37 @@ mod tests {
         assert_eq!(N % crate::V, 0, "batch must tile by V for BWW");
         assert_eq!(C_IN % crate::V, 0);
         assert!(CLASSES > 1);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // touches the real filesystem
+    fn fallback_completes_a_cold_directory_and_never_overwrites() {
+        let dir = std::env::temp_dir()
+            .join(format!("sparsetrain-artifacts-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let set = ArtifactSet::new(&dir);
+        assert!(!set.complete());
+        set.write_fallback().unwrap();
+        assert!(set.complete(), "fallback must satisfy the manifest");
+
+        // a pre-existing (e.g. real JAX) artifact must be preserved
+        std::fs::write(set.path_of(PREDICT), "HloModule sentinel\n").unwrap();
+        set.write_fallback().unwrap();
+        let kept = std::fs::read_to_string(set.path_of(PREDICT)).unwrap();
+        assert!(kept.contains("sentinel"), "write_fallback overwrote a real artifact");
+
+        // ...but our own *stale* fallback output (marker with an outdated
+        // fingerprint) must be refreshed, not pinned forever
+        let stale = format!("{} v0 Geometry {{ old }}\nHloModule old\n",
+            crate::runtime::hlo_builder::FALLBACK_PREFIX);
+        std::fs::write(set.path_of(TRAIN_STEP), stale).unwrap();
+        set.write_fallback().unwrap();
+        let refreshed = std::fs::read_to_string(set.path_of(TRAIN_STEP)).unwrap();
+        assert!(
+            !refreshed.contains("HloModule old"),
+            "stale fallback output was not regenerated"
+        );
+        assert!(refreshed.contains("HloModule train_step"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,438 @@
+//! Reference HLO-text emitters: the Rust-side artifact fallback.
+//!
+//! `python/compile/aot.py` is the primary artifact producer (real JAX +
+//! Pallas, run via `make artifacts`). This module emits functionally
+//! equivalent HLO text for the same three artifacts — `train_step`,
+//! `predict`, `kernel_fwd` — straight from the [`Geometry`] constants, so
+//! a cold checkout with **no Python and no pre-built artifacts** can still
+//! light up the full `Trainer` loop through the vendored mini-HLO
+//! interpreter (`xla::eval`).
+//!
+//! The train-step graph is the hand-lowered forward + backward + SGD of
+//! `python/compile/model.py`: two 3×3 pad-1 convolutions with ReLU (and
+//! measured ReLU-output sparsity, the paper's dynamic-sparsity signal),
+//! global average pool, a fully-connected layer, numerically stable
+//! softmax cross-entropy, and one SGD update. The input-gradient
+//! convolution is expressed as `reverse` + `dim_labels=bf01_io01->bf01`;
+//! the weight-gradient convolutions contract the batch dimension via
+//! `dim_labels=fb01_io01->bf01` with the activation spatial extent as the
+//! window. The backward graph is finite-difference-verified in
+//! `rust/tests/e2e_train.rs`.
+
+use super::artifacts::geometry;
+use std::fmt::Write;
+
+/// Training-problem geometry an emitted module is specialized to (AOT —
+/// shapes are baked into the text, exactly like the JAX lowering).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Geometry {
+    /// Batch size.
+    pub n: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Input spatial size (H = W).
+    pub hw: usize,
+    /// conv1 / conv2 output channels.
+    pub c1: usize,
+    pub c2: usize,
+    /// Label classes.
+    pub classes: usize,
+    /// SGD learning rate baked into the train-step graph.
+    pub lr: f32,
+}
+
+impl Geometry {
+    /// The artifact geometry (`runtime::artifacts::geometry`, kept in sync
+    /// with `python/compile/model.py`).
+    pub fn paper() -> Geometry {
+        Geometry {
+            n: geometry::N,
+            c_in: geometry::C_IN,
+            hw: geometry::HW,
+            c1: geometry::C1,
+            c2: geometry::C2,
+            classes: geometry::CLASSES,
+            lr: geometry::LR,
+        }
+    }
+
+    /// A reduced geometry for fast interpreter tests (finite-difference
+    /// gradient checks, parser fuzzing).
+    pub fn tiny() -> Geometry {
+        Geometry { n: 4, c_in: 4, hw: 6, c1: 4, c2: 4, classes: 3, lr: 0.2 }
+    }
+}
+
+/// `f32[a,b,...]` shape text.
+fn sh(dims: &[usize]) -> String {
+    let mut s = String::from("f32[");
+    for (i, d) in dims.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{d}");
+    }
+    s.push(']');
+    s
+}
+
+/// `pred[a,b,...]` shape text.
+fn shp(dims: &[usize]) -> String {
+    format!("pred{}", &sh(dims)[3..])
+}
+
+/// Shortest-roundtrip f32 text (`{:?}` prints e.g. `0.2`, `7.6293945e-6`,
+/// `-inf` — all exactly re-parsed by the interpreter's `str::parse::<f32>`).
+fn f32_text(v: f32) -> String {
+    format!("{v:?}")
+}
+
+/// First-line marker stamped on every emitted fallback artifact (the
+/// parser skips `//` comment lines). `ArtifactSet::write_fallback` uses it
+/// to tell its own output apart from real lowerings: files carrying the
+/// prefix with a *different* fingerprint are stale fallback output and get
+/// refreshed; files without it are real artifacts and are never touched.
+pub const FALLBACK_PREFIX: &str = "// sparsetrain-offline-fallback";
+
+/// Bump when the emitted graphs change without a geometry change, so
+/// existing fallback artifacts regenerate.
+pub const FALLBACK_VERSION: u32 = 1;
+
+/// The exact marker line for `g` (version + full geometry fingerprint).
+pub fn fallback_marker(g: &Geometry) -> String {
+    format!("{FALLBACK_PREFIX} v{FALLBACK_VERSION} {g:?}")
+}
+
+const SCALAR_COMPS: &str = "%add_f32 {\n\
+\x20 %p0 = f32[] parameter(0)\n\
+\x20 %p1 = f32[] parameter(1)\n\
+\x20 ROOT %add = f32[] add(%p0, %p1)\n\
+}\n\
+\n\
+%max_f32 {\n\
+\x20 %p0 = f32[] parameter(0)\n\
+\x20 %p1 = f32[] parameter(1)\n\
+\x20 ROOT %max = f32[] maximum(%p0, %p1)\n\
+}\n";
+
+/// Emit the shared forward pass: parameters 0-4 (`w1 w2 wfc bfc x`),
+/// `%zero`, conv1/ReLU (`%z1`/`%a1`), conv2/ReLU (`%z2`/`%a2`), optional
+/// ReLU-sparsity scalars (`%s1`/`%s2`), global average pool (`%pooled`,
+/// plus `%inv_hw_b` which the backward pass reuses) and `%logits`.
+fn emit_forward(out: &mut String, g: &Geometry, with_sparsity: bool) {
+    let Geometry { n, c_in, hw, c1, c2, classes: cl, .. } = *g;
+    let s4_1 = sh(&[n, c1, hw, hw]);
+    let s4_2 = sh(&[n, c2, hw, hw]);
+    let snl = sh(&[n, cl]);
+    let a = |out: &mut String, line: String| {
+        out.push_str("  ");
+        out.push_str(&line);
+        out.push('\n');
+    };
+    a(out, format!("%w1 = {} parameter(0)", sh(&[c1, c_in, 3, 3])));
+    a(out, format!("%w2 = {} parameter(1)", sh(&[c2, c1, 3, 3])));
+    a(out, format!("%wfc = {} parameter(2)", sh(&[cl, c2])));
+    a(out, format!("%bfc = {} parameter(3)", sh(&[cl])));
+    a(out, format!("%x = {} parameter(4)", sh(&[n, c_in, hw, hw])));
+    a(out, "%zero = f32[] constant(0)".to_string());
+    // conv1 + ReLU
+    a(
+        out,
+        format!(
+            "%z1 = {s4_1} convolution(%x, %w1), window={{size=3x3 pad=1_1x1_1}}, \
+             dim_labels=bf01_oi01->bf01"
+        ),
+    );
+    a(out, format!("%zeros1 = {s4_1} broadcast(%zero), dimensions={{}}"));
+    a(out, format!("%a1 = {s4_1} maximum(%z1, %zeros1)"));
+    // conv2 + ReLU
+    a(
+        out,
+        format!(
+            "%z2 = {s4_2} convolution(%a1, %w2), window={{size=3x3 pad=1_1x1_1}}, \
+             dim_labels=bf01_oi01->bf01"
+        ),
+    );
+    a(out, format!("%zeros2 = {s4_2} broadcast(%zero), dimensions={{}}"));
+    a(out, format!("%a2 = {s4_2} maximum(%z2, %zeros2)"));
+    if with_sparsity {
+        // measured ReLU-output sparsity: mean(a == 0)
+        a(out, format!("%a1_is0 = {} compare(%a1, %zeros1), direction=EQ", shp(&[n, c1, hw, hw])));
+        a(out, format!("%a1_is0f = {s4_1} convert(%a1_is0)"));
+        a(
+            out,
+            "%s1_sum = f32[] reduce(%a1_is0f, %zero), dimensions={0,1,2,3}, to_apply=%add_f32"
+                .to_string(),
+        );
+        a(out, format!("%inv_e1 = f32[] constant({})", f32_text(1.0 / (n * c1 * hw * hw) as f32)));
+        a(out, "%s1 = f32[] multiply(%s1_sum, %inv_e1)".to_string());
+        a(out, format!("%a2_is0 = {} compare(%a2, %zeros2), direction=EQ", shp(&[n, c2, hw, hw])));
+        a(out, format!("%a2_is0f = {s4_2} convert(%a2_is0)"));
+        a(
+            out,
+            "%s2_sum = f32[] reduce(%a2_is0f, %zero), dimensions={0,1,2,3}, to_apply=%add_f32"
+                .to_string(),
+        );
+        a(out, format!("%inv_e2 = f32[] constant({})", f32_text(1.0 / (n * c2 * hw * hw) as f32)));
+        a(out, "%s2 = f32[] multiply(%s2_sum, %inv_e2)".to_string());
+    }
+    // global average pool → FC
+    a(
+        out,
+        format!(
+            "%pool_sum = {} reduce(%a2, %zero), dimensions={{2,3}}, to_apply=%add_f32",
+            sh(&[n, c2])
+        ),
+    );
+    a(out, format!("%inv_hw = f32[] constant({})", f32_text(1.0 / (hw * hw) as f32)));
+    a(out, format!("%inv_hw_b = {} broadcast(%inv_hw), dimensions={{}}", sh(&[n, c2])));
+    a(out, format!("%pooled = {} multiply(%pool_sum, %inv_hw_b)", sh(&[n, c2])));
+    a(
+        out,
+        format!(
+            "%logits0 = {snl} dot(%pooled, %wfc), lhs_contracting_dims={{1}}, \
+             rhs_contracting_dims={{1}}"
+        ),
+    );
+    a(out, format!("%bfc_b = {snl} broadcast(%bfc), dimensions={{1}}"));
+    a(out, format!("%logits = {snl} add(%logits0, %bfc_b)"));
+}
+
+/// The full train-step module: forward + softmax-cross-entropy loss +
+/// hand-lowered backward + SGD. Returns the 7-output tuple contract the
+/// trainer expects: `(w1', w2', wfc', bfc', loss, s1, s2)`.
+pub fn train_step_hlo(g: &Geometry) -> String {
+    let Geometry { n, c_in, hw, c1, c2, classes: cl, lr } = *g;
+    let s4_1 = sh(&[n, c1, hw, hw]);
+    let s4_2 = sh(&[n, c2, hw, hw]);
+    let p4_1 = shp(&[n, c1, hw, hw]);
+    let p4_2 = shp(&[n, c2, hw, hw]);
+    let snl = sh(&[n, cl]);
+    let pnl = shp(&[n, cl]);
+
+    let mut out = String::with_capacity(8192);
+    out.push_str(&fallback_marker(g));
+    out.push_str("\nHloModule train_step\n\n");
+    out.push_str(SCALAR_COMPS);
+    out.push_str("\nENTRY %train_step {\n");
+    emit_forward(&mut out, g, true);
+    let a = |out: &mut String, line: String| {
+        out.push_str("  ");
+        out.push_str(&line);
+        out.push('\n');
+    };
+    a(&mut out, format!("%labels = s32[{n}] parameter(5)"));
+    a(&mut out, "%neg_inf = f32[] constant(-inf)".to_string());
+    // numerically stable log-softmax + probabilities
+    a(
+        &mut out,
+        format!(
+            "%row_max = {} reduce(%logits, %neg_inf), dimensions={{1}}, to_apply=%max_f32",
+            sh(&[n])
+        ),
+    );
+    a(&mut out, format!("%row_max_b = {snl} broadcast(%row_max), dimensions={{0}}"));
+    a(&mut out, format!("%centered = {snl} subtract(%logits, %row_max_b)"));
+    a(&mut out, format!("%exp_c = {snl} exponential(%centered)"));
+    a(
+        &mut out,
+        format!(
+            "%sum_exp = {} reduce(%exp_c, %zero), dimensions={{1}}, to_apply=%add_f32",
+            sh(&[n])
+        ),
+    );
+    a(&mut out, format!("%log_sum = {} log(%sum_exp)", sh(&[n])));
+    a(&mut out, format!("%log_sum_b = {snl} broadcast(%log_sum), dimensions={{0}}"));
+    a(&mut out, format!("%logp = {snl} subtract(%centered, %log_sum_b)"));
+    a(&mut out, format!("%sum_exp_b = {snl} broadcast(%sum_exp), dimensions={{0}}"));
+    a(&mut out, format!("%probs = {snl} divide(%exp_c, %sum_exp_b)"));
+    // one-hot labels via iota + compare
+    a(&mut out, format!("%iota_cl = s32[{n},{cl}] iota(), iota_dimension=1"));
+    a(&mut out, format!("%labels_b = s32[{n},{cl}] broadcast(%labels), dimensions={{0}}"));
+    a(&mut out, format!("%onehot_p = {pnl} compare(%labels_b, %iota_cl), direction=EQ"));
+    a(&mut out, format!("%onehot = {snl} convert(%onehot_p)"));
+    // loss = -(1/N) * Σ onehot ⊙ logp
+    a(&mut out, format!("%picked = {snl} multiply(%onehot, %logp)"));
+    a(
+        &mut out,
+        "%picked_sum = f32[] reduce(%picked, %zero), dimensions={0,1}, to_apply=%add_f32"
+            .to_string(),
+    );
+    a(&mut out, format!("%neg_inv_n = f32[] constant({})", f32_text(-1.0 / n as f32)));
+    a(&mut out, "%loss = f32[] multiply(%picked_sum, %neg_inv_n)".to_string());
+    // backward: softmax-cross-entropy → dlogits = (probs - onehot)/N
+    a(&mut out, format!("%pdiff = {snl} subtract(%probs, %onehot)"));
+    a(&mut out, format!("%inv_n = f32[] constant({})", f32_text(1.0 / n as f32)));
+    a(&mut out, format!("%inv_n_b = {snl} broadcast(%inv_n), dimensions={{}}"));
+    a(&mut out, format!("%dlogits = {snl} multiply(%pdiff, %inv_n_b)"));
+    // FC gradients
+    a(
+        &mut out,
+        format!(
+            "%g_bfc = {} reduce(%dlogits, %zero), dimensions={{0}}, to_apply=%add_f32",
+            sh(&[cl])
+        ),
+    );
+    a(
+        &mut out,
+        format!(
+            "%g_wfc = {} dot(%dlogits, %pooled), lhs_contracting_dims={{0}}, \
+             rhs_contracting_dims={{0}}",
+            sh(&[cl, c2])
+        ),
+    );
+    a(
+        &mut out,
+        format!(
+            "%d_pooled = {} dot(%dlogits, %wfc), lhs_contracting_dims={{1}}, \
+             rhs_contracting_dims={{0}}",
+            sh(&[n, c2])
+        ),
+    );
+    // backward through the mean pool
+    a(&mut out, format!("%d_pool_scaled = {} multiply(%d_pooled, %inv_hw_b)", sh(&[n, c2])));
+    a(&mut out, format!("%d_a2 = {s4_2} broadcast(%d_pool_scaled), dimensions={{0,1}}"));
+    // ReLU2 mask
+    a(&mut out, format!("%m2 = {p4_2} compare(%z2, %zeros2), direction=GT"));
+    a(&mut out, format!("%d_z2 = {s4_2} select(%m2, %d_a2, %zeros2)"));
+    // conv2 gradients: weight grad contracts batch (fb01_io01->bf01),
+    // input grad is reverse(w) with io01 labels
+    a(
+        &mut out,
+        format!(
+            "%g_w2_t = {} convolution(%a1, %d_z2), window={{size={hw}x{hw} pad=1_1x1_1}}, \
+             dim_labels=fb01_io01->bf01",
+            sh(&[c1, c2, 3, 3])
+        ),
+    );
+    a(&mut out, format!("%g_w2 = {} transpose(%g_w2_t), dimensions={{1,0,2,3}}", sh(&[c2, c1, 3, 3])));
+    a(&mut out, format!("%w2_r = {} reverse(%w2), dimensions={{2,3}}", sh(&[c2, c1, 3, 3])));
+    a(
+        &mut out,
+        format!(
+            "%d_a1 = {s4_1} convolution(%d_z2, %w2_r), window={{size=3x3 pad=1_1x1_1}}, \
+             dim_labels=bf01_io01->bf01"
+        ),
+    );
+    // ReLU1 mask + conv1 weight gradient
+    a(&mut out, format!("%m1 = {p4_1} compare(%z1, %zeros1), direction=GT"));
+    a(&mut out, format!("%d_z1 = {s4_1} select(%m1, %d_a1, %zeros1)"));
+    a(
+        &mut out,
+        format!(
+            "%g_w1_t = {} convolution(%x, %d_z1), window={{size={hw}x{hw} pad=1_1x1_1}}, \
+             dim_labels=fb01_io01->bf01",
+            sh(&[c_in, c1, 3, 3])
+        ),
+    );
+    a(&mut out, format!("%g_w1 = {} transpose(%g_w1_t), dimensions={{1,0,2,3}}", sh(&[c1, c_in, 3, 3])));
+    // SGD: p' = p - lr * g
+    a(&mut out, format!("%lr = f32[] constant({})", f32_text(lr)));
+    for (nm, dims) in [
+        ("w1", vec![c1, c_in, 3, 3]),
+        ("w2", vec![c2, c1, 3, 3]),
+        ("wfc", vec![cl, c2]),
+        ("bfc", vec![cl]),
+    ] {
+        let s = sh(&dims);
+        a(&mut out, format!("%lr_{nm} = {s} broadcast(%lr), dimensions={{}}"));
+        a(&mut out, format!("%step_{nm} = {s} multiply(%lr_{nm}, %g_{nm})"));
+        a(&mut out, format!("%new_{nm} = {s} subtract(%{nm}, %step_{nm})"));
+    }
+    a(
+        &mut out,
+        format!(
+            "ROOT %out = ({}, {}, {}, {}, f32[], f32[], f32[]) \
+             tuple(%new_w1, %new_w2, %new_wfc, %new_bfc, %loss, %s1, %s2)",
+            sh(&[c1, c_in, 3, 3]),
+            sh(&[c2, c1, 3, 3]),
+            sh(&[cl, c2]),
+            sh(&[cl]),
+        ),
+    );
+    out.push_str("}\n");
+    out
+}
+
+/// The predict module: forward only, `(logits,)`.
+pub fn predict_hlo(g: &Geometry) -> String {
+    let mut out = String::with_capacity(2048);
+    out.push_str(&fallback_marker(g));
+    out.push_str("\nHloModule predict\n\n");
+    out.push_str(SCALAR_COMPS);
+    out.push_str("\nENTRY %predict {\n");
+    emit_forward(&mut out, g, false);
+    let _ = writeln!(out, "  ROOT %out = ({}) tuple(%logits)", sh(&[g.n, g.classes]));
+    out.push_str("}\n");
+    out
+}
+
+/// The single-convolution kernel module: `(conv2d(x, w, pad 1),)` — the L1
+/// kernel exposed for Rust-side validation (bit-compared against
+/// `kernels::reference::conv_fwd` in the e2e tests).
+pub fn kernel_fwd_hlo(g: &Geometry) -> String {
+    let Geometry { n, c_in, hw, c1, .. } = *g;
+    let mut out = String::with_capacity(512);
+    out.push_str(&fallback_marker(g));
+    out.push_str("\nHloModule kernel_fwd\n\nENTRY %kernel_fwd {\n");
+    let _ = writeln!(out, "  %x = {} parameter(0)", sh(&[n, c_in, hw, hw]));
+    let _ = writeln!(out, "  %w = {} parameter(1)", sh(&[c1, c_in, 3, 3]));
+    let _ = writeln!(
+        out,
+        "  %y = {} convolution(%x, %w), window={{size=3x3 pad=1_1x1_1}}, \
+         dim_labels=bf01_oi01->bf01",
+        sh(&[n, c1, hw, hw])
+    );
+    let _ = writeln!(out, "  ROOT %out = ({}) tuple(%y)", sh(&[n, c1, hw, hw]));
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every emitted module must parse and pass interpreter shape
+    /// inference, at the paper geometry and at reduced ones.
+    #[test]
+    fn emitted_modules_compile() {
+        for g in [Geometry::paper(), Geometry::tiny(), Geometry { n: 2, c_in: 3, hw: 5, c1: 4, c2: 6, classes: 2, lr: 0.1 }] {
+            for (name, text) in [
+                ("train_step", train_step_hlo(&g)),
+                ("predict", predict_hlo(&g)),
+                ("kernel_fwd", kernel_fwd_hlo(&g)),
+            ] {
+                assert!(
+                    text.starts_with(&fallback_marker(&g)),
+                    "{name} must carry the fallback fingerprint marker"
+                );
+                let module = xla::hlo::parse_module(&text)
+                    .unwrap_or_else(|e| panic!("{name} at {g:?} fails to parse: {e}"));
+                xla::eval::validate(&module)
+                    .unwrap_or_else(|e| panic!("{name} at {g:?} fails validation: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn miri_tiny_train_step_compiles() {
+        let text = train_step_hlo(&Geometry::tiny());
+        let module = xla::hlo::parse_module(&text).unwrap();
+        xla::eval::validate(&module).unwrap();
+        // 6 params, 7-output tuple root
+        let entry = &module.comps[module.entry];
+        assert_eq!(entry.params.len(), 6);
+        match &entry.instrs[entry.root].shape {
+            xla::hlo::ShapeDecl::Tuple(shapes) => assert_eq!(shapes.len(), 7),
+            other => panic!("root must be a tuple, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn f32_text_roundtrips_exactly() {
+        for v in [0.2f32, 1.0 / 131072.0, -0.0625, f32::NEG_INFINITY, 1.0 / 36.0] {
+            let parsed: f32 = f32_text(v).parse().unwrap();
+            assert_eq!(parsed.to_bits(), v.to_bits(), "{v} -> {}", f32_text(v));
+        }
+    }
+}

@@ -1,9 +1,16 @@
-//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO **text**, see
-//! DESIGN.md §2 and /opt/xla-example/README.md) and executes them on the
-//! CPU PJRT client. Python never runs on this path — `make artifacts`
-//! produces the `.hlo.txt` files once at build time.
+//! PJRT runtime: loads AOT-compiled train-step artifacts (HLO **text**)
+//! and executes them on the CPU PJRT client. Python never runs on this
+//! path — on a cold checkout the Rust-side reference emitter
+//! ([`hlo_builder`]) materializes the artifacts and the vendored `xla`
+//! crate's mini-HLO interpreter compiles and executes the text offline.
+//! Files already present (e.g. from `make artifacts`) take precedence and
+//! are never overwritten, but the offline interpreter only understands
+//! the reference HLO grammar/op subset — arbitrary XLA text dumps need
+//! the real `xla` crate linked in. Set `SPARSETRAIN_ARTIFACTS` to point
+//! the runtime at a different artifacts directory.
 
 pub mod artifacts;
+pub mod hlo_builder;
 pub mod pjrt;
 
 pub use artifacts::ArtifactSet;

@@ -1,0 +1,410 @@
+//! End-to-end trainer coverage through the mini-HLO interpreter — gating,
+//! cold-checkout, no Python, no pre-built artifacts.
+//!
+//! * the full `Trainer` loop runs and **learns** (`TrainReport::learned`)
+//!   with a monotone-ish loss drop at a fixed seed;
+//! * the `SparsityProfiler` series from the interpreted run is non-empty
+//!   with per-layer ReLU sparsity strictly inside (0, 1) — the paper's
+//!   dynamic-sparsity premise measured inside a real training loop;
+//! * interpreter `convolution` is bit-compared against
+//!   `kernels::reference::conv_fwd`;
+//! * `dot` / `reduce` / the softmax-cross-entropy subgraph match
+//!   hand-computed golden values;
+//! * the train-step backward pass is finite-difference-verified on a
+//!   reduced geometry;
+//! * the HLO parser survives `util::proptest` mangling of artifact text
+//!   (`Err`, never a panic).
+
+use sparsetrain::coordinator::trainer::{Trainer, TrainerConfig};
+use sparsetrain::kernels::{reference, ConvConfig};
+use sparsetrain::runtime::artifacts::{ArtifactSet, KERNEL_FWD, TRAIN_STEP};
+use sparsetrain::runtime::hlo_builder::{self, Geometry};
+use sparsetrain::runtime::pjrt::{literal_f32, literal_i32, Runtime};
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::proptest::{check, Config, UsizeIn, VecOfUsize};
+use sparsetrain::util::stats::mean;
+
+/// A unique scratch artifacts directory for tests that write custom
+/// (reduced-geometry) artifact files. Wiped on creation so pid reuse
+/// cannot resurrect files from an older run.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparsetrain-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn rand_vec(rng: &mut Xorshift, n: usize, bound: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-bound, bound)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// The headline E2E: cold checkout → fallback artifacts → learning run
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(miri, ignore)] // full-geometry interpreted training loop
+fn e2e_trainer_learns_on_cold_checkout() {
+    let arts = ArtifactSet::scratch_fallback("e2e-trainer").expect("offline fallback");
+    assert!(arts.complete(), "fallback must satisfy the manifest: {:?}", arts.missing());
+
+    let steps = 30;
+    let mut trainer =
+        Trainer::new(&arts, TrainerConfig { steps, seed: 1, log_every: 0 }).expect("trainer init");
+    let report = trainer.run().expect("interpreted training run");
+
+    assert_eq!(report.losses.len(), steps);
+    assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0), "{:?}", report.losses);
+    assert!(report.steps_per_sec > 0.0);
+    assert!(
+        report.learned(),
+        "loss did not drop ≥20% over {steps} interpreted steps: {:?}",
+        report.losses
+    );
+
+    // Monotone-ish: the mean loss of each third of the run strictly
+    // decreases (robust to per-step noise, strict about the trend).
+    let (a, b, c) = (
+        mean(&report.losses[..steps / 3]),
+        mean(&report.losses[steps / 3..2 * steps / 3]),
+        mean(&report.losses[2 * steps / 3..]),
+    );
+    assert!(b < a && c < b, "loss thirds must decrease: {a:.4} -> {b:.4} -> {c:.4}");
+
+    // E2E dynamic-sparsity signal: both ReLU layers report a non-empty
+    // series with every observation strictly inside (0, 1).
+    for layer in ["conv1_relu", "conv2_relu"] {
+        let series = report.profiler.series(layer).unwrap_or_else(|| panic!("{layer} missing"));
+        assert_eq!(series.len(), steps, "{layer} series must cover every step");
+        assert!(
+            series.iter().all(|&s| s > 0.0 && s < 1.0),
+            "{layer} sparsity left (0,1): {series:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden numerics: convolution bit-parity with kernels::reference
+// ---------------------------------------------------------------------------
+
+/// The interpreter's forward convolution accumulates in (c, s, r) order
+/// with plain multiply-then-add — exactly `reference::conv_fwd`'s loop —
+/// so the two must agree bit for bit, through the real artifact-load path.
+#[test]
+#[cfg_attr(miri, ignore)] // filesystem + a few hundred KFLOP
+fn interpreter_convolution_bit_matches_reference_kernel() {
+    let g = Geometry { n: 2, c_in: 3, hw: 7, c1: 4, c2: 4, classes: 3, lr: 0.1 };
+    let dir = scratch_dir("conv-golden");
+    std::fs::write(dir.join(format!("{KERNEL_FWD}.hlo.txt")), hlo_builder::kernel_fwd_hlo(&g))
+        .unwrap();
+
+    let mut rng = Xorshift::new(123);
+    let x = rand_vec(&mut rng, g.n * g.c_in * g.hw * g.hw, 1.0);
+    let w = rand_vec(&mut rng, g.c1 * g.c_in * 9, 0.5);
+
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load(KERNEL_FWD).unwrap();
+    let outs = exe
+        .run(&[
+            literal_f32(&x, &[g.n as i64, g.c_in as i64, g.hw as i64, g.hw as i64]).unwrap(),
+            literal_f32(&w, &[g.c1 as i64, g.c_in as i64, 3, 3]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    let got = outs[0].to_vec::<f32>().unwrap();
+
+    let cfg = ConvConfig::square(g.n, g.c_in, g.c1, g.hw, 3, 1);
+    let want = reference::conv_fwd(&cfg, &x, &w);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "element {i}: interpreter {a} vs reference {b}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Golden numerics: dot / reduce / softmax-cross-entropy
+// ---------------------------------------------------------------------------
+
+fn run_module(text: &str, inputs: &[xla::Literal]) -> Vec<xla::Literal> {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text(text).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let outs = exe.execute::<xla::Literal>(inputs).unwrap();
+    let lit = outs[0][0].to_literal_sync().unwrap();
+    match lit.clone().to_tuple() {
+        Ok(parts) => parts,
+        Err(_) => vec![lit],
+    }
+}
+
+#[test]
+fn dot_and_reduce_golden_values() {
+    let text = "HloModule golden\n\
+        %add_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %add = f32[] add(%p0, %p1)\n}\n\
+        ENTRY %m {\n\
+        \x20 %a = f32[2,3] parameter(0)\n\
+        \x20 %b = f32[3,2] parameter(1)\n\
+        \x20 %zero = f32[] constant(0)\n\
+        \x20 %d = f32[2,2] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n\
+        \x20 %rows = f32[2] reduce(%a, %zero), dimensions={1}, to_apply=%add_f32\n\
+        \x20 %all = f32[] reduce(%a, %zero), dimensions={0,1}, to_apply=%add_f32\n\
+        \x20 ROOT %out = (f32[2,2], f32[2], f32[]) tuple(%d, %rows, %all)\n}\n";
+    let a = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+    let b = literal_f32(&[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], &[3, 2]).unwrap();
+    let parts = run_module(text, &[a, b]);
+    // [[1,2,3],[4,5,6]] · [[1,0],[0,1],[1,1]] = [[4,5],[10,11]] (exact ints)
+    assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![4.0, 5.0, 10.0, 11.0]);
+    assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
+    assert_eq!(parts[2].to_vec::<f32>().unwrap(), vec![21.0]);
+}
+
+/// The exact softmax-cross-entropy subgraph the train-step artifact uses,
+/// against hand-computed values: logits [[0,0,0],[1,2,3]], labels [2,0]
+/// → loss = ((ln 3) + (2 + ln(e⁻² + e⁻¹ + 1))) / 2 ≈ 1.7531092.
+#[test]
+fn softmax_cross_entropy_subgraph_golden() {
+    let text = "HloModule xent\n\
+        %add_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %add = f32[] add(%p0, %p1)\n}\n\
+        %max_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %max = f32[] maximum(%p0, %p1)\n}\n\
+        ENTRY %m {\n\
+        \x20 %logits = f32[2,3] parameter(0)\n\
+        \x20 %labels = s32[2] parameter(1)\n\
+        \x20 %zero = f32[] constant(0)\n\
+        \x20 %neg_inf = f32[] constant(-inf)\n\
+        \x20 %row_max = f32[2] reduce(%logits, %neg_inf), dimensions={1}, to_apply=%max_f32\n\
+        \x20 %row_max_b = f32[2,3] broadcast(%row_max), dimensions={0}\n\
+        \x20 %centered = f32[2,3] subtract(%logits, %row_max_b)\n\
+        \x20 %exp_c = f32[2,3] exponential(%centered)\n\
+        \x20 %sum_exp = f32[2] reduce(%exp_c, %zero), dimensions={1}, to_apply=%add_f32\n\
+        \x20 %log_sum = f32[2] log(%sum_exp)\n\
+        \x20 %log_sum_b = f32[2,3] broadcast(%log_sum), dimensions={0}\n\
+        \x20 %logp = f32[2,3] subtract(%centered, %log_sum_b)\n\
+        \x20 %iota_cl = s32[2,3] iota(), iota_dimension=1\n\
+        \x20 %labels_b = s32[2,3] broadcast(%labels), dimensions={0}\n\
+        \x20 %onehot_p = pred[2,3] compare(%labels_b, %iota_cl), direction=EQ\n\
+        \x20 %onehot = f32[2,3] convert(%onehot_p)\n\
+        \x20 %picked = f32[2,3] multiply(%onehot, %logp)\n\
+        \x20 %picked_sum = f32[] reduce(%picked, %zero), dimensions={0,1}, to_apply=%add_f32\n\
+        \x20 %neg_inv_n = f32[] constant(-0.5)\n\
+        \x20 ROOT %loss = f32[] multiply(%picked_sum, %neg_inv_n)\n}\n";
+    let logits = literal_f32(&[0.0, 0.0, 0.0, 1.0, 2.0, 3.0], &[2, 3]).unwrap();
+    let labels = literal_i32(&[2, 0], &[2]).unwrap();
+    let parts = run_module(text, &[logits, labels]);
+    let loss = parts[0].to_vec::<f32>().unwrap()[0] as f64;
+    let want = 0.5 * (3.0f64.ln() + 2.0 + ((-2.0f64).exp() + (-1.0f64).exp() + 1.0).ln());
+    assert!((loss - want).abs() < 1e-6, "loss {loss} vs hand-computed {want}");
+    assert!((loss - 1.7531092).abs() < 1e-5);
+}
+
+// ---------------------------------------------------------------------------
+// Finite-difference verification of the hand-lowered backward pass
+// ---------------------------------------------------------------------------
+
+/// On a reduced geometry, the gradients implied by the SGD update
+/// (`g = (w - w') / lr`) must match central finite differences of the
+/// loss for every parameter tensor.
+#[test]
+#[cfg_attr(miri, ignore)] // dozens of interpreted train-step evaluations
+fn train_step_backward_matches_finite_differences() {
+    let g = Geometry::tiny();
+    let dir = scratch_dir("fd");
+    std::fs::write(dir.join(format!("{TRAIN_STEP}.hlo.txt")), hlo_builder::train_step_hlo(&g))
+        .unwrap();
+    let mut rt = Runtime::cpu(&dir).unwrap();
+
+    let mut rng = Xorshift::new(42);
+    let b1 = (2.0f32 / (g.c_in * 9) as f32).sqrt();
+    let b2 = (2.0f32 / (g.c1 * 9) as f32).sqrt();
+    let b3 = (1.0f32 / g.c2 as f32).sqrt();
+    let w1 = rand_vec(&mut rng, g.c1 * g.c_in * 9, b1);
+    let w2 = rand_vec(&mut rng, g.c2 * g.c1 * 9, b2);
+    let wfc = rand_vec(&mut rng, g.classes * g.c2, b3);
+    let bfc = vec![0.0f32; g.classes];
+    let x = rand_vec(&mut rng, g.n * g.c_in * g.hw * g.hw, 1.0);
+    let labels: Vec<i32> = (0..g.n).map(|_| rng.below(g.classes) as i32).collect();
+
+    let run = |rt: &mut Runtime, w1: &[f32], w2: &[f32], wfc: &[f32], bfc: &[f32]| {
+        let exe = rt.load(TRAIN_STEP).unwrap();
+        exe.run(&[
+            literal_f32(w1, &[g.c1 as i64, g.c_in as i64, 3, 3]).unwrap(),
+            literal_f32(w2, &[g.c2 as i64, g.c1 as i64, 3, 3]).unwrap(),
+            literal_f32(wfc, &[g.classes as i64, g.c2 as i64]).unwrap(),
+            literal_f32(bfc, &[g.classes as i64]).unwrap(),
+            literal_f32(&x, &[g.n as i64, g.c_in as i64, g.hw as i64, g.hw as i64]).unwrap(),
+            literal_i32(&labels, &[g.n as i64]).unwrap(),
+        ])
+        .unwrap()
+    };
+
+    let outs = run(&mut rt, &w1, &w2, &wfc, &bfc);
+    assert_eq!(outs.len(), 7, "train_step must keep the 7-output contract");
+    let grad = |new: &xla::Literal, old: &[f32]| -> Vec<f32> {
+        new.to_vec::<f32>()
+            .unwrap()
+            .iter()
+            .zip(old)
+            .map(|(n, o)| (o - n) / g.lr)
+            .collect()
+    };
+    let grads =
+        [grad(&outs[0], &w1), grad(&outs[1], &w2), grad(&outs[2], &wfc), grad(&outs[3], &bfc)];
+    let params: [&[f32]; 4] = [&w1, &w2, &wfc, &bfc];
+
+    let loss_with = |rt: &mut Runtime, which: usize, idx: usize, delta: f32| -> f64 {
+        let mut p: Vec<Vec<f32>> = params.iter().map(|p| p.to_vec()).collect();
+        p[which][idx] += delta;
+        let outs = run(rt, &p[0], &p[1], &p[2], &p[3]);
+        outs[4].to_vec::<f32>().unwrap()[0] as f64
+    };
+
+    let eps = 1e-3f32;
+    let mut coord_rng = Xorshift::new(7);
+    for which in 0..4 {
+        for _ in 0..4 {
+            let idx = coord_rng.below(params[which].len());
+            let fd = (loss_with(&mut rt, which, idx, eps) - loss_with(&mut rt, which, idx, -eps))
+                / (2.0 * eps as f64);
+            let analytic = grads[which][idx] as f64;
+            let denom = fd.abs().max(analytic.abs()).max(5e-3);
+            assert!(
+                ((fd - analytic) / denom).abs() < 0.1,
+                "param {which} coord {idx}: finite-diff {fd:+.6} vs analytic {analytic:+.6}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser robustness: mangled artifact text must error, never panic
+// ---------------------------------------------------------------------------
+
+/// Apply one deterministic mutation, selected and positioned by `m`.
+fn mangle(text: &str, m: usize) -> String {
+    let lines: Vec<&str> = text.lines().collect();
+    let kind = m % 5;
+    let pos = m / 5;
+    match kind {
+        // truncate at an arbitrary byte (ASCII text, so always a char edge)
+        0 => text[..pos % text.len().max(1)].to_string(),
+        // delete a line
+        1 => {
+            let drop = pos % lines.len().max(1);
+            lines
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != drop)
+                .map(|(_, l)| *l)
+                .collect::<Vec<_>>()
+                .join("\n")
+        }
+        // replace one byte with structural junk
+        2 => {
+            let junk = [b'}', b'{', b'(', b')', b',', b'=', b'[', b']', b'9', b'x'];
+            let mut bytes = text.as_bytes().to_vec();
+            if !bytes.is_empty() {
+                let at = pos % bytes.len();
+                bytes[at] = junk[m % junk.len()];
+            }
+            String::from_utf8_lossy(&bytes).into_owned()
+        }
+        // duplicate a line (duplicate instruction names, double ROOTs, ...)
+        3 => {
+            let dup = pos % lines.len().max(1);
+            let mut out = Vec::with_capacity(lines.len() + 1);
+            for (i, l) in lines.iter().enumerate() {
+                out.push(*l);
+                if i == dup {
+                    out.push(*l);
+                }
+            }
+            out.join("\n")
+        }
+        // inflate a digit run (oversized shapes must be rejected, not OOM)
+        _ => text.replacen(char::from_digit((pos % 10) as u32, 10).unwrap_or('1'), "987654321", 1),
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // hundreds of parse attempts over kilobyte texts
+fn hlo_parser_never_panics_on_mangled_artifact_text() {
+    let base = hlo_builder::train_step_hlo(&Geometry::tiny());
+    let gen = VecOfUsize { min_len: 1, max_len: 4, elem: UsizeIn { lo: 0, hi: 200_000 } };
+    check(Config { cases: 300, seed: 0xE2E, max_shrink_steps: 200 }, &gen, |muts| {
+        let mut text = base.clone();
+        for &m in muts {
+            text = mangle(&text, m);
+        }
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Ok(module) = xla::hlo::parse_module(&text) {
+                let _ = xla::eval::validate(&module);
+            }
+        }));
+        outcome.map_err(|_| format!("parser/validator panicked on mutations {muts:?}"))
+    });
+}
+
+/// The specific malformations the ISSUE calls out: truncated, structurally
+/// malformed, and shape-mismatched artifact text must all return `Err`
+/// from the compile path (and a valid artifact must still compile).
+#[test]
+fn malformed_artifact_text_is_rejected_with_errors() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let compile = |text: &str| {
+        xla::HloModuleProto::from_text(text)
+            .and_then(|p| client.compile(&xla::XlaComputation::from_proto(&p)))
+    };
+
+    let good = hlo_builder::train_step_hlo(&Geometry::tiny());
+    assert!(compile(&good).is_ok(), "the reference artifact must compile");
+
+    // truncation at many depths
+    for frac in [1, 3, 10, 30, 80] {
+        let cut = good.len() * frac / 100;
+        assert!(compile(&good[..cut]).is_err(), "truncation at {frac}% must fail");
+    }
+    // a shape edit that keeps the text well-formed but inconsistent
+    let lied = good.replacen("f32[4,4,3,3]", "f32[4,4,3,2]", 1);
+    assert_ne!(lied, good, "shape-edit target must exist");
+    assert!(compile(&lied).is_err(), "shape-mismatched text must fail validation");
+    // empty / junk
+    assert!(xla::HloModuleProto::from_text("").is_err());
+    assert!(compile("HloModule junk\n").is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Reduced-geometry emit→execute smoke
+// ---------------------------------------------------------------------------
+
+/// A tiny end-to-end emit → parse → validate → execute pass: a 1-batch
+/// 2-channel 3×3-input kernel_fwd artifact, checked against the scalar
+/// reference. (The Miri CI gate runs the equivalent lib-tree smokes in
+/// vendor/xla and runtime::hlo_builder; integration targets are not built
+/// under `miri test --lib`, so no `miri_` prefix here.)
+#[test]
+fn emit_parse_execute_kernel_smoke() {
+    let g = Geometry { n: 1, c_in: 2, hw: 3, c1: 2, c2: 2, classes: 2, lr: 0.1 };
+    let text = hlo_builder::kernel_fwd_hlo(&g);
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text(&text).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+
+    let mut rng = Xorshift::new(5);
+    let x = rand_vec(&mut rng, g.n * g.c_in * g.hw * g.hw, 1.0);
+    let w = rand_vec(&mut rng, g.c1 * g.c_in * 9, 0.5);
+    let outs = exe
+        .execute::<xla::Literal>(&[
+            literal_f32(&x, &[1, 2, 3, 3]).unwrap(),
+            literal_f32(&w, &[2, 2, 3, 3]).unwrap(),
+        ])
+        .unwrap();
+    let got = outs[0][0].to_literal_sync().unwrap().to_tuple().unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+    let cfg = ConvConfig::square(1, 2, 2, 3, 3, 1);
+    let want = reference::conv_fwd(&cfg, &x, &w);
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

@@ -414,26 +414,16 @@ fn five_by_five_same_band_as_three_by_three() {
     }
 }
 
-/// Artifact-gated: the three-layer stack trains and the measured ReLU
-/// sparsity lands in a plausible band.
+/// Gating since the mini-HLO interpreter landed: the three-layer stack
+/// trains on a cold checkout (offline artifact fallback into a scratch
+/// dir, independent of `./artifacts`) and the measured ReLU sparsity
+/// lands in a plausible band.
 #[test]
+#[cfg_attr(miri, ignore)] // full-geometry interpreted train steps
 fn pjrt_trainer_smoke() {
-    let arts = ArtifactSet::default_location();
-    if !arts.complete() {
-        eprintln!("skipping pjrt_trainer_smoke: run `make artifacts`");
-        return;
-    }
+    let arts = ArtifactSet::scratch_fallback("integration-smoke").expect("offline fallback");
     let mut t = Trainer::new(&arts, TrainerConfig { steps: 8, seed: 3, log_every: 0 }).unwrap();
-    let report = match t.run() {
-        Ok(r) => r,
-        Err(e) => {
-            // vendored xla stub cannot execute HLO — skip, don't fail
-            let msg = format!("{e:#}");
-            assert!(msg.contains("stub"), "non-stub training failure: {msg}");
-            eprintln!("skipping pjrt_trainer_smoke: PJRT execution stubbed");
-            return;
-        }
-    };
+    let report = t.run().expect("interpreted training run");
     assert_eq!(report.losses.len(), 8);
     assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0));
     for layer in ["conv1_relu", "conv2_relu"] {

@@ -1,0 +1,1119 @@
+//! Shape inference + evaluation for the mini-HLO interpreter.
+//!
+//! [`validate`] runs at `PjRtClient::compile` time: it re-derives every
+//! instruction's shape from its operands and rejects the module on any
+//! mismatch, so execution can trust declared shapes. [`execute`] evaluates
+//! the `ENTRY` computation over host [`Literal`]s.
+//!
+//! Numerics contract: convolution and dot accumulate in `f32` with plain
+//! multiply-then-add in a fixed loop order — for `dim_labels=bf01_oi01->bf01`
+//! the contraction order is (feature, ky, kx), which makes the forward
+//! convolution **bit-identical** to `kernels::reference::conv_fwd` on the
+//! sparsetrain side (pinned by a golden test there). Reductions fold
+//! elements in row-major operand order.
+
+use crate::hlo::{
+    BinKind, CmpDir, Computation, ConvSpec, ElemType, Instr, Module, Op, Shape, ShapeDecl,
+    UnaryKind, Window, MAX_ELEMENTS,
+};
+use crate::{Error, Literal, Payload, Result};
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Values
+// ---------------------------------------------------------------------------
+
+/// A typed host buffer (the interpreter's runtime value).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+/// A buffer plus its shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    pub shape: Shape,
+    pub buf: Buf,
+}
+
+impl Value {
+    fn f32s(&self) -> Result<&[f32]> {
+        match &self.buf {
+            Buf::F32(v) => Ok(v),
+            _ => Err(err("expected an f32 buffer")),
+        }
+    }
+
+    fn ty(&self) -> ElemType {
+        match self.buf {
+            Buf::F32(_) => ElemType::F32,
+            Buf::S32(_) => ElemType::S32,
+            Buf::Pred(_) => ElemType::Pred,
+        }
+    }
+}
+
+/// An evaluated instruction slot: array value or (for `tuple`) a list.
+enum Slot {
+    Single(Value),
+    Tuple(Vec<Value>),
+}
+
+impl Slot {
+    fn single(&self) -> Result<&Value> {
+        match self {
+            Slot::Single(v) => Ok(v),
+            Slot::Tuple(_) => Err(err("tuple value used as an array operand")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Index helpers
+// ---------------------------------------------------------------------------
+
+/// Row-major element strides for `dims`.
+fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Decompose the linear index `i` into `out` using row-major `strides`.
+fn decompose(mut i: usize, strides: &[usize], out: &mut [usize]) {
+    for (k, &s) in strides.iter().enumerate() {
+        out[k] = i / s;
+        i %= s;
+    }
+}
+
+/// `out[multi] = src[src_multi]` where `src_multi[k] = multi[map[k]]` —
+/// shared by broadcast (map = broadcast dimensions) and transpose
+/// (map = inverse permutation).
+fn gather_map<T: Copy>(src: &[T], src_dims: &[usize], map: &[usize], out_dims: &[usize]) -> Vec<T> {
+    let out_strides = strides_of(out_dims);
+    let src_strides = strides_of(src_dims);
+    let n: usize = out_dims.iter().product();
+    let mut mi = vec![0usize; out_dims.len()];
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        decompose(i, &out_strides, &mut mi);
+        let mut si = 0usize;
+        for (k, &m) in map.iter().enumerate() {
+            si += mi[m] * src_strides[k];
+        }
+        out.push(src[si]);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scalar computations (reduce bodies)
+// ---------------------------------------------------------------------------
+
+/// A reduce body compiled to a flat op list over an f32 value stack. Only
+/// scalar-f32 computations qualify (parameters, constants, unary/binary
+/// arithmetic) — which covers every `to_apply` the repo's graphs use.
+struct ScalarComp {
+    ops: Vec<SOp>,
+    root: usize,
+}
+
+enum SOp {
+    Param(usize),
+    Const(f32),
+    Bin(BinKind, usize, usize),
+    Un(UnaryKind, usize),
+}
+
+fn bin_f32(kind: BinKind, a: f32, b: f32) -> f32 {
+    match kind {
+        BinKind::Add => a + b,
+        BinKind::Sub => a - b,
+        BinKind::Mul => a * b,
+        BinKind::Div => a / b,
+        BinKind::Max => a.max(b),
+    }
+}
+
+fn un_f32(kind: UnaryKind, a: f32) -> f32 {
+    match kind {
+        UnaryKind::Neg => -a,
+        UnaryKind::Exp => a.exp(),
+        UnaryKind::Log => a.ln(),
+    }
+}
+
+impl ScalarComp {
+    fn compile(comp: &Computation) -> Result<ScalarComp> {
+        if comp.params.len() != 2 {
+            return Err(err(format!(
+                "reduce body %{} must take exactly 2 parameters",
+                comp.name
+            )));
+        }
+        let mut ops = Vec::with_capacity(comp.instrs.len());
+        for ins in &comp.instrs {
+            let scalar_f32 = matches!(&ins.shape, ShapeDecl::Single(s) if s.ty == ElemType::F32 && s.dims.is_empty());
+            if !scalar_f32 {
+                return Err(err(format!(
+                    "reduce body %{} must be scalar f32 throughout",
+                    comp.name
+                )));
+            }
+            let op = match &ins.op {
+                Op::Parameter(k) => {
+                    if *k >= 2 {
+                        return Err(err("reduce body parameter out of range"));
+                    }
+                    SOp::Param(*k)
+                }
+                Op::ConstantF32(v) => SOp::Const(*v),
+                Op::Binary(kind) => match ins.operands.as_slice() {
+                    &[a, b] => SOp::Bin(*kind, a, b),
+                    _ => return Err(err("binary op needs 2 operands")),
+                },
+                Op::Unary(kind) => match ins.operands.as_slice() {
+                    &[a] => SOp::Un(*kind, a),
+                    _ => return Err(err("unary op needs 1 operand")),
+                },
+                _ => {
+                    return Err(err(format!(
+                        "reduce body %{} may only use scalar arithmetic",
+                        comp.name
+                    )))
+                }
+            };
+            ops.push(op);
+        }
+        Ok(ScalarComp { ops, root: comp.root })
+    }
+
+    /// Apply to `(acc, elem)`; `stack` is reused scratch.
+    fn eval(&self, acc: f32, elem: f32, stack: &mut Vec<f32>) -> f32 {
+        stack.clear();
+        for op in &self.ops {
+            let v = match *op {
+                SOp::Param(0) => acc,
+                SOp::Param(_) => elem,
+                SOp::Const(c) => c,
+                SOp::Bin(kind, a, b) => bin_f32(kind, stack[a], stack[b]),
+                SOp::Un(kind, a) => un_f32(kind, stack[a]),
+            };
+            stack.push(v);
+        }
+        stack[self.root]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape inference / validation
+// ---------------------------------------------------------------------------
+
+fn single_shape(decl: &ShapeDecl) -> Result<&Shape> {
+    match decl {
+        ShapeDecl::Single(s) => Ok(s),
+        ShapeDecl::Tuple(_) => Err(err("tuple shape where an array was required")),
+    }
+}
+
+fn checked_elements(dims: &[usize]) -> Result<usize> {
+    let mut n: usize = 1;
+    for &d in dims {
+        n = n
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_ELEMENTS)
+            .ok_or_else(|| err("inferred shape exceeds the element bound"))?;
+    }
+    Ok(n)
+}
+
+/// Output spatial extent of one convolution window dimension.
+fn conv_out_dim(input: usize, pad_lo: usize, pad_hi: usize, k: usize, stride: usize) -> Result<usize> {
+    let padded = input + pad_lo + pad_hi;
+    if padded < k {
+        return Err(err(format!(
+            "convolution window {k} larger than padded input {padded}"
+        )));
+    }
+    Ok((padded - k) / stride + 1)
+}
+
+struct ConvDims {
+    batch: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    kout: usize,
+    kh: usize,
+    kw: usize,
+    oh: usize,
+    ow: usize,
+}
+
+fn conv_dims(window: &Window, spec: &ConvSpec, lhs: &Shape, rhs: &Shape) -> Result<ConvDims> {
+    if lhs.rank() != 4 || rhs.rank() != 4 {
+        return Err(err("convolution operands must be rank 4"));
+    }
+    if lhs.ty != ElemType::F32 || rhs.ty != ElemType::F32 {
+        return Err(err("convolution operands must be f32"));
+    }
+    let batch = lhs.dims[spec.lhs_b];
+    let cin = lhs.dims[spec.lhs_f];
+    let h = lhs.dims[spec.lhs_s[0]];
+    let w = lhs.dims[spec.lhs_s[1]];
+    let kin = rhs.dims[spec.rhs_i];
+    let kout = rhs.dims[spec.rhs_o];
+    let kh = rhs.dims[spec.rhs_s[0]];
+    let kw = rhs.dims[spec.rhs_s[1]];
+    if kin != cin {
+        return Err(err(format!(
+            "convolution feature mismatch: lhs has {cin}, rhs contracts {kin}"
+        )));
+    }
+    if [kh, kw] != window.size {
+        return Err(err(format!(
+            "window size {:?} does not match kernel spatial dims [{kh}, {kw}]",
+            window.size
+        )));
+    }
+    let oh = conv_out_dim(h, window.pad_lo[0], window.pad_hi[0], kh, window.stride[0])?;
+    let ow = conv_out_dim(w, window.pad_lo[1], window.pad_hi[1], kw, window.stride[1])?;
+    Ok(ConvDims { batch, cin, h, w, kout, kh, kw, oh, ow })
+}
+
+/// Infer the result shape of `instr` from its operands' declared shapes.
+fn infer_instr(module: &Module, comp: &Computation, instr: &Instr) -> Result<ShapeDecl> {
+    let opnd = |i: usize| -> Result<&Shape> {
+        let idx = *instr
+            .operands
+            .get(i)
+            .ok_or_else(|| err(format!("%{} is missing operand {i}", instr.name)))?;
+        single_shape(&comp.instrs[idx].shape)
+    };
+    let arity = |n: usize| -> Result<()> {
+        if instr.operands.len() == n {
+            Ok(())
+        } else {
+            Err(err(format!(
+                "%{} takes {n} operands, got {}",
+                instr.name,
+                instr.operands.len()
+            )))
+        }
+    };
+    let declared = single_shape(&instr.shape);
+
+    let inferred = match &instr.op {
+        Op::Parameter(_) => {
+            arity(0)?;
+            ShapeDecl::Single(declared?.clone())
+        }
+        Op::ConstantF32(_) => {
+            arity(0)?;
+            ShapeDecl::Single(Shape::scalar(ElemType::F32))
+        }
+        Op::ConstantS32(_) => {
+            arity(0)?;
+            ShapeDecl::Single(Shape::scalar(ElemType::S32))
+        }
+        Op::Binary(_) => {
+            arity(2)?;
+            let (a, b) = (opnd(0)?, opnd(1)?);
+            if a != b || a.ty != ElemType::F32 {
+                return Err(err(format!("%{}: binary ops need matching f32 shapes", instr.name)));
+            }
+            ShapeDecl::Single(a.clone())
+        }
+        Op::Unary(_) => {
+            arity(1)?;
+            let a = opnd(0)?;
+            if a.ty != ElemType::F32 {
+                return Err(err(format!("%{}: unary ops need f32", instr.name)));
+            }
+            ShapeDecl::Single(a.clone())
+        }
+        Op::Compare(_) => {
+            arity(2)?;
+            let (a, b) = (opnd(0)?, opnd(1)?);
+            if a != b || a.ty == ElemType::Pred {
+                return Err(err(format!(
+                    "%{}: compare needs matching f32/s32 shapes",
+                    instr.name
+                )));
+            }
+            ShapeDecl::Single(Shape { ty: ElemType::Pred, dims: a.dims.clone() })
+        }
+        Op::Select => {
+            arity(3)?;
+            let (p, t, f) = (opnd(0)?, opnd(1)?, opnd(2)?);
+            if p.ty != ElemType::Pred || p.dims != t.dims || t != f {
+                return Err(err(format!(
+                    "%{}: select needs pred + two matching operands",
+                    instr.name
+                )));
+            }
+            ShapeDecl::Single(t.clone())
+        }
+        Op::Convert => {
+            arity(1)?;
+            let a = opnd(0)?;
+            let to = declared?.ty;
+            if to == ElemType::Pred {
+                return Err(err(format!("%{}: convert to pred is unsupported", instr.name)));
+            }
+            ShapeDecl::Single(Shape { ty: to, dims: a.dims.clone() })
+        }
+        Op::Iota { dim } => {
+            arity(0)?;
+            let d = declared?;
+            if d.ty != ElemType::S32 {
+                return Err(err(format!("%{}: iota must be s32", instr.name)));
+            }
+            if *dim >= d.rank() {
+                return Err(err(format!("%{}: iota dimension out of range", instr.name)));
+            }
+            ShapeDecl::Single(d.clone())
+        }
+        Op::Broadcast { dims } => {
+            arity(1)?;
+            let a = opnd(0)?;
+            let d = declared?;
+            if dims.len() != a.rank() {
+                return Err(err(format!(
+                    "%{}: broadcast dimensions must map every operand dim",
+                    instr.name
+                )));
+            }
+            let mut prev: Option<usize> = None;
+            for (k, &m) in dims.iter().enumerate() {
+                if m >= d.rank() {
+                    return Err(err(format!("%{}: broadcast dim {m} out of range", instr.name)));
+                }
+                if prev.is_some_and(|p| m <= p) {
+                    return Err(err(format!(
+                        "%{}: broadcast dimensions must be increasing",
+                        instr.name
+                    )));
+                }
+                prev = Some(m);
+                if d.dims[m] != a.dims[k] {
+                    return Err(err(format!(
+                        "%{}: broadcast dim {k} size mismatch",
+                        instr.name
+                    )));
+                }
+            }
+            ShapeDecl::Single(Shape { ty: a.ty, dims: d.dims.clone() })
+        }
+        Op::Reshape => {
+            arity(1)?;
+            let a = opnd(0)?;
+            let d = declared?;
+            if checked_elements(&d.dims)? != a.elements() {
+                return Err(err(format!("%{}: reshape changes element count", instr.name)));
+            }
+            ShapeDecl::Single(Shape { ty: a.ty, dims: d.dims.clone() })
+        }
+        Op::Transpose { perm } => {
+            arity(1)?;
+            let a = opnd(0)?;
+            if perm.len() != a.rank() {
+                return Err(err(format!("%{}: transpose permutation rank mismatch", instr.name)));
+            }
+            let mut seen = vec![false; a.rank()];
+            let mut dims = Vec::with_capacity(a.rank());
+            for &p in perm {
+                if p >= a.rank() || seen[p] {
+                    return Err(err(format!("%{}: bad transpose permutation", instr.name)));
+                }
+                seen[p] = true;
+                dims.push(a.dims[p]);
+            }
+            ShapeDecl::Single(Shape { ty: a.ty, dims })
+        }
+        Op::Reverse { dims } => {
+            arity(1)?;
+            let a = opnd(0)?;
+            let mut seen = vec![false; a.rank()];
+            for &d in dims {
+                if d >= a.rank() || seen[d] {
+                    return Err(err(format!("%{}: bad reverse dimensions", instr.name)));
+                }
+                seen[d] = true;
+            }
+            ShapeDecl::Single(a.clone())
+        }
+        Op::Reduce { dims, to_apply } => {
+            arity(2)?;
+            let a = opnd(0)?;
+            let init = opnd(1)?;
+            if a.ty != ElemType::F32 || init.ty != ElemType::F32 || init.rank() != 0 {
+                return Err(err(format!(
+                    "%{}: reduce needs an f32 operand and a scalar f32 init",
+                    instr.name
+                )));
+            }
+            let mut reduced = vec![false; a.rank()];
+            for &d in dims {
+                if d >= a.rank() || reduced[d] {
+                    return Err(err(format!("%{}: bad reduce dimensions", instr.name)));
+                }
+                reduced[d] = true;
+            }
+            let body = module
+                .comps
+                .get(*to_apply)
+                .ok_or_else(|| err(format!("%{}: to_apply out of range", instr.name)))?;
+            ScalarComp::compile(body)?;
+            let dims_out: Vec<usize> = a
+                .dims
+                .iter()
+                .zip(&reduced)
+                .filter(|(_, &r)| !r)
+                .map(|(&d, _)| d)
+                .collect();
+            ShapeDecl::Single(Shape { ty: ElemType::F32, dims: dims_out })
+        }
+        Op::Dot { lhs_c, rhs_c } => {
+            arity(2)?;
+            let (a, b) = (opnd(0)?, opnd(1)?);
+            if a.ty != ElemType::F32 || b.ty != ElemType::F32 {
+                return Err(err(format!("%{}: dot needs f32 operands", instr.name)));
+            }
+            if a.rank() == 0 || a.rank() > 2 || b.rank() == 0 || b.rank() > 2 {
+                return Err(err(format!("%{}: dot supports rank 1-2 operands", instr.name)));
+            }
+            if *lhs_c >= a.rank() || *rhs_c >= b.rank() {
+                return Err(err(format!("%{}: contracting dim out of range", instr.name)));
+            }
+            if a.dims[*lhs_c] != b.dims[*rhs_c] {
+                return Err(err(format!("%{}: contracting dim size mismatch", instr.name)));
+            }
+            let mut dims = Vec::new();
+            for (d, &v) in a.dims.iter().enumerate() {
+                if d != *lhs_c {
+                    dims.push(v);
+                }
+            }
+            for (d, &v) in b.dims.iter().enumerate() {
+                if d != *rhs_c {
+                    dims.push(v);
+                }
+            }
+            checked_elements(&dims)?;
+            ShapeDecl::Single(Shape { ty: ElemType::F32, dims })
+        }
+        Op::Convolution { window, spec } => {
+            arity(2)?;
+            let cd = conv_dims(window, spec, opnd(0)?, opnd(1)?)?;
+            let mut dims = vec![0usize; 4];
+            dims[spec.out_b] = cd.batch;
+            dims[spec.out_f] = cd.kout;
+            dims[spec.out_s[0]] = cd.oh;
+            dims[spec.out_s[1]] = cd.ow;
+            checked_elements(&dims)?;
+            ShapeDecl::Single(Shape { ty: ElemType::F32, dims })
+        }
+        Op::Tuple => {
+            let mut shapes = Vec::with_capacity(instr.operands.len());
+            for i in 0..instr.operands.len() {
+                shapes.push(opnd(i)?.clone());
+            }
+            ShapeDecl::Tuple(shapes)
+        }
+    };
+    Ok(inferred)
+}
+
+/// Validate the whole module: every instruction's declared shape must match
+/// the shape inferred from its operands. Runs at compile time so execution
+/// can trust declarations.
+pub fn validate(module: &Module) -> Result<()> {
+    for comp in &module.comps {
+        for instr in &comp.instrs {
+            let inferred = infer_instr(module, comp, instr)?;
+            if inferred != instr.shape {
+                return Err(err(format!(
+                    "%{} in %{}: declared shape {:?} but inferred {:?}",
+                    instr.name, comp.name, instr.shape, inferred
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation
+// ---------------------------------------------------------------------------
+
+fn eval_binary(kind: BinKind, a: &Value, b: &Value) -> Result<Buf> {
+    let (x, y) = (a.f32s()?, b.f32s()?);
+    Ok(Buf::F32(x.iter().zip(y).map(|(&u, &v)| bin_f32(kind, u, v)).collect()))
+}
+
+fn eval_compare(dir: CmpDir, a: &Value, b: &Value) -> Result<Buf> {
+    fn cmp<T: PartialOrd>(dir: CmpDir, a: &[T], b: &[T]) -> Vec<bool> {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| match dir {
+                CmpDir::Eq => x == y,
+                CmpDir::Ne => x != y,
+                CmpDir::Lt => x < y,
+                CmpDir::Le => x <= y,
+                CmpDir::Gt => x > y,
+                CmpDir::Ge => x >= y,
+            })
+            .collect()
+    }
+    match (&a.buf, &b.buf) {
+        (Buf::F32(x), Buf::F32(y)) => Ok(Buf::Pred(cmp(dir, x, y))),
+        (Buf::S32(x), Buf::S32(y)) => Ok(Buf::Pred(cmp(dir, x, y))),
+        _ => Err(err("compare operand type mismatch")),
+    }
+}
+
+fn eval_select(p: &Value, t: &Value, f: &Value) -> Result<Buf> {
+    let Buf::Pred(pp) = &p.buf else {
+        return Err(err("select predicate must be pred"));
+    };
+    match (&t.buf, &f.buf) {
+        (Buf::F32(a), Buf::F32(b)) => Ok(Buf::F32(
+            pp.iter().zip(a.iter().zip(b)).map(|(&c, (&x, &y))| if c { x } else { y }).collect(),
+        )),
+        (Buf::S32(a), Buf::S32(b)) => Ok(Buf::S32(
+            pp.iter().zip(a.iter().zip(b)).map(|(&c, (&x, &y))| if c { x } else { y }).collect(),
+        )),
+        _ => Err(err("select branch type mismatch")),
+    }
+}
+
+fn eval_convert(src: &Value, to: ElemType) -> Result<Buf> {
+    Ok(match (&src.buf, to) {
+        (Buf::F32(v), ElemType::F32) => Buf::F32(v.clone()),
+        (Buf::S32(v), ElemType::S32) => Buf::S32(v.clone()),
+        (Buf::S32(v), ElemType::F32) => Buf::F32(v.iter().map(|&x| x as f32).collect()),
+        (Buf::Pred(v), ElemType::F32) => {
+            Buf::F32(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
+        }
+        (Buf::Pred(v), ElemType::S32) => {
+            Buf::S32(v.iter().map(|&x| i32::from(x)).collect())
+        }
+        (Buf::F32(v), ElemType::S32) => Buf::S32(v.iter().map(|&x| x as i32).collect()),
+        _ => return Err(err("unsupported convert")),
+    })
+}
+
+fn eval_broadcast(src: &Value, map: &[usize], out_dims: &[usize]) -> Buf {
+    match &src.buf {
+        Buf::F32(v) => Buf::F32(gather_map(v, &src.shape.dims, map, out_dims)),
+        Buf::S32(v) => Buf::S32(gather_map(v, &src.shape.dims, map, out_dims)),
+        Buf::Pred(v) => Buf::Pred(gather_map(v, &src.shape.dims, map, out_dims)),
+    }
+}
+
+fn eval_transpose(src: &Value, perm: &[usize], out_dims: &[usize]) -> Buf {
+    // gather_map wants `map[src_dim] = out_dim`; transpose declares
+    // `out_dim i <- src_dim perm[i]`, so invert the permutation.
+    let mut map = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        map[p] = i;
+    }
+    match &src.buf {
+        Buf::F32(v) => Buf::F32(gather_map(v, &src.shape.dims, &map, out_dims)),
+        Buf::S32(v) => Buf::S32(gather_map(v, &src.shape.dims, &map, out_dims)),
+        Buf::Pred(v) => Buf::Pred(gather_map(v, &src.shape.dims, &map, out_dims)),
+    }
+}
+
+fn eval_reverse(src: &Value, rev: &[usize]) -> Buf {
+    let dims = &src.shape.dims;
+    let strides = strides_of(dims);
+    let n = src.shape.elements();
+    let mut flip = vec![false; dims.len()];
+    for &d in rev {
+        flip[d] = true;
+    }
+    let mut mi = vec![0usize; dims.len()];
+    let mut idx = Vec::with_capacity(n);
+    for i in 0..n {
+        decompose(i, &strides, &mut mi);
+        let mut si = 0usize;
+        for k in 0..dims.len() {
+            let v = if flip[k] { dims[k] - 1 - mi[k] } else { mi[k] };
+            si += v * strides[k];
+        }
+        idx.push(si);
+    }
+    match &src.buf {
+        Buf::F32(v) => Buf::F32(idx.iter().map(|&i| v[i]).collect()),
+        Buf::S32(v) => Buf::S32(idx.iter().map(|&i| v[i]).collect()),
+        Buf::Pred(v) => Buf::Pred(idx.iter().map(|&i| v[i]).collect()),
+    }
+}
+
+fn eval_iota(dim: usize, dims: &[usize]) -> Buf {
+    let strides = strides_of(dims);
+    let n: usize = dims.iter().product();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(((i / strides[dim]) % dims[dim]) as i32);
+    }
+    Buf::S32(out)
+}
+
+fn eval_reduce(
+    module: &Module,
+    src: &Value,
+    init: &Value,
+    dims: &[usize],
+    to_apply: usize,
+) -> Result<Buf> {
+    let body = ScalarComp::compile(
+        module.comps.get(to_apply).ok_or_else(|| err("to_apply out of range"))?,
+    )?;
+    let init = match &init.buf {
+        Buf::F32(v) if v.len() == 1 => v[0],
+        _ => return Err(err("reduce init must be a scalar f32")),
+    };
+    let in_dims = &src.shape.dims;
+    let in_strides = strides_of(in_dims);
+    let mut reduced = vec![false; in_dims.len()];
+    for &d in dims {
+        reduced[d] = true;
+    }
+    let out_dims: Vec<usize> =
+        in_dims.iter().zip(&reduced).filter(|(_, &r)| !r).map(|(&d, _)| d).collect();
+    let out_strides = strides_of(&out_dims);
+    // Per input dim: the stride of its output position (0 when reduced).
+    let mut out_stride_by_in = vec![0usize; in_dims.len()];
+    let mut kept = 0usize;
+    for d in 0..in_dims.len() {
+        if !reduced[d] {
+            out_stride_by_in[d] = out_strides[kept];
+            kept += 1;
+        }
+    }
+    let n: usize = out_dims.iter().product();
+    let mut out = vec![init; n];
+    let vals = src.f32s()?;
+    let mut mi = vec![0usize; in_dims.len()];
+    let mut stack = Vec::new();
+    for (i, &v) in vals.iter().enumerate() {
+        decompose(i, &in_strides, &mut mi);
+        let mut oi = 0usize;
+        for d in 0..in_dims.len() {
+            oi += mi[d] * out_stride_by_in[d];
+        }
+        out[oi] = body.eval(out[oi], v, &mut stack);
+    }
+    Ok(Buf::F32(out))
+}
+
+fn eval_dot(lhs: &Value, rhs: &Value, lhs_c: usize, rhs_c: usize) -> Result<Buf> {
+    let (a, b) = (lhs.f32s()?, rhs.f32s()?);
+    let (ad, bd) = (&lhs.shape.dims, &rhs.shape.dims);
+    let (astr, bstr) = (strides_of(ad), strides_of(bd));
+    let lfree: Vec<usize> = (0..ad.len()).filter(|&d| d != lhs_c).collect();
+    let rfree: Vec<usize> = (0..bd.len()).filter(|&d| d != rhs_c).collect();
+    let m = lfree.first().map_or(1, |&d| ad[d]);
+    let ms = lfree.first().map_or(0, |&d| astr[d]);
+    let n = rfree.first().map_or(1, |&d| bd[d]);
+    let ns = rfree.first().map_or(0, |&d| bstr[d]);
+    let k = ad[lhs_c];
+    let (ks_a, ks_b) = (astr[lhs_c], bstr[rhs_c]);
+    let mut out = Vec::with_capacity(m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += a[i * ms + t * ks_a] * b[j * ns + t * ks_b];
+            }
+            out.push(acc);
+        }
+    }
+    Ok(Buf::F32(out))
+}
+
+/// Direct 7-loop convolution over permuted layouts. Contraction order is
+/// (feature, ky, kx) with plain multiply-then-add, matching
+/// `kernels::reference::conv_fwd` bit-for-bit on `bf01_oi01->bf01`.
+fn eval_conv(
+    window: &Window,
+    spec: &ConvSpec,
+    lhs: &Value,
+    rhs: &Value,
+    out_shape: &Shape,
+) -> Result<Buf> {
+    let cd = conv_dims(window, spec, &lhs.shape, &rhs.shape)?;
+    let lf = lhs.f32s()?;
+    let rf = rhs.f32s()?;
+    let ls = strides_of(&lhs.shape.dims);
+    let rs = strides_of(&rhs.shape.dims);
+    let os = strides_of(&out_shape.dims);
+    let mut out = vec![0.0f32; out_shape.elements()];
+    let (sy, sx) = (window.stride[0], window.stride[1]);
+    let (ply, plx) = (window.pad_lo[0] as isize, window.pad_lo[1] as isize);
+    for b in 0..cd.batch {
+        for o in 0..cd.kout {
+            for oy in 0..cd.oh {
+                for ox in 0..cd.ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..cd.cin {
+                        let lb = b * ls[spec.lhs_b] + ci * ls[spec.lhs_f];
+                        let rb = o * rs[spec.rhs_o] + ci * rs[spec.rhs_i];
+                        for ky in 0..cd.kh {
+                            let iy = (oy * sy + ky) as isize - ply;
+                            if iy < 0 || iy >= cd.h as isize {
+                                continue;
+                            }
+                            let lby = lb + iy as usize * ls[spec.lhs_s[0]];
+                            let rby = rb + ky * rs[spec.rhs_s[0]];
+                            for kx in 0..cd.kw {
+                                let ix = (ox * sx + kx) as isize - plx;
+                                if ix < 0 || ix >= cd.w as isize {
+                                    continue;
+                                }
+                                acc += lf[lby + ix as usize * ls[spec.lhs_s[1]]]
+                                    * rf[rby + kx * rs[spec.rhs_s[1]]];
+                            }
+                        }
+                    }
+                    out[b * os[spec.out_b]
+                        + o * os[spec.out_f]
+                        + oy * os[spec.out_s[0]]
+                        + ox * os[spec.out_s[1]]] = acc;
+                }
+            }
+        }
+    }
+    Ok(Buf::F32(out))
+}
+
+fn eval_instr(module: &Module, instr: &Instr, slots: &[Slot], args: &[Value]) -> Result<Slot> {
+    // Bounds-checked even though `validate` enforces arities, so `execute`
+    // stays panic-free if ever called on an unvalidated module.
+    let opnd = |i: usize| -> Result<&Value> {
+        let idx = *instr
+            .operands
+            .get(i)
+            .ok_or_else(|| err(format!("%{} is missing operand {i}", instr.name)))?;
+        slots.get(idx).ok_or_else(|| err("operand index out of range"))?.single()
+    };
+
+    // Parameter and tuple don't produce a fresh single-array buffer.
+    match &instr.op {
+        Op::Parameter(k) => {
+            let v = args
+                .get(*k)
+                .ok_or_else(|| err(format!("missing argument for parameter({k})")))?;
+            return Ok(Slot::Single(v.clone()));
+        }
+        Op::Tuple => {
+            let mut vals = Vec::with_capacity(instr.operands.len());
+            for i in 0..instr.operands.len() {
+                vals.push(opnd(i)?.clone());
+            }
+            return Ok(Slot::Tuple(vals));
+        }
+        _ => {}
+    }
+
+    let declared = single_shape(&instr.shape)?;
+    let buf = match &instr.op {
+        Op::ConstantF32(v) => Buf::F32(vec![*v]),
+        Op::ConstantS32(v) => Buf::S32(vec![*v]),
+        Op::Binary(kind) => eval_binary(*kind, opnd(0)?, opnd(1)?)?,
+        Op::Unary(kind) => {
+            Buf::F32(opnd(0)?.f32s()?.iter().map(|&v| un_f32(*kind, v)).collect())
+        }
+        Op::Compare(dir) => eval_compare(*dir, opnd(0)?, opnd(1)?)?,
+        Op::Select => eval_select(opnd(0)?, opnd(1)?, opnd(2)?)?,
+        Op::Convert => eval_convert(opnd(0)?, declared.ty)?,
+        Op::Iota { dim } => eval_iota(*dim, &declared.dims),
+        Op::Broadcast { dims } => eval_broadcast(opnd(0)?, dims, &declared.dims),
+        Op::Reshape => match &opnd(0)?.buf {
+            Buf::F32(v) => Buf::F32(v.clone()),
+            Buf::S32(v) => Buf::S32(v.clone()),
+            Buf::Pred(v) => Buf::Pred(v.clone()),
+        },
+        Op::Transpose { perm } => eval_transpose(opnd(0)?, perm, &declared.dims),
+        Op::Reverse { dims } => eval_reverse(opnd(0)?, dims),
+        Op::Reduce { dims, to_apply } => {
+            eval_reduce(module, opnd(0)?, opnd(1)?, dims, *to_apply)?
+        }
+        Op::Dot { lhs_c, rhs_c } => eval_dot(opnd(0)?, opnd(1)?, *lhs_c, *rhs_c)?,
+        Op::Convolution { window, spec } => {
+            eval_conv(window, spec, opnd(0)?, opnd(1)?, declared)?
+        }
+        Op::Parameter(_) | Op::Tuple => return Err(err("unreachable op dispatch")),
+    };
+    Ok(Slot::Single(Value { shape: declared.clone(), buf }))
+}
+
+fn eval_comp(module: &Module, comp: &Computation, args: &[Value]) -> Result<Slot> {
+    let mut slots = Vec::with_capacity(comp.instrs.len());
+    for instr in &comp.instrs {
+        let slot = eval_instr(module, instr, &slots, args)?;
+        slots.push(slot);
+    }
+    Ok(slots.swap_remove(comp.root))
+}
+
+// ---------------------------------------------------------------------------
+// Literal boundary
+// ---------------------------------------------------------------------------
+
+fn literal_to_value(lit: &Literal, want: &Shape, which: usize) -> Result<Value> {
+    let got_dims: Vec<usize> = lit
+        .dims()
+        .iter()
+        .map(|&d| usize::try_from(d).map_err(|_| err("negative literal dimension")))
+        .collect::<Result<_>>()?;
+    let buf = match &lit.payload {
+        Payload::F32(v) => Buf::F32(v.clone()),
+        Payload::I32(v) => Buf::S32(v.clone()),
+        Payload::Tuple(_) => return Err(err("tuple literals cannot be passed as inputs")),
+    };
+    let value = Value { shape: Shape { ty: value_ty(&buf), dims: got_dims }, buf };
+    if value.shape != *want {
+        return Err(err(format!(
+            "argument {which}: expected {}{:?}, got {}{:?}",
+            want.ty.name(),
+            want.dims,
+            value.ty().name(),
+            value.shape.dims
+        )));
+    }
+    Ok(value)
+}
+
+fn value_ty(buf: &Buf) -> ElemType {
+    match buf {
+        Buf::F32(_) => ElemType::F32,
+        Buf::S32(_) => ElemType::S32,
+        Buf::Pred(_) => ElemType::Pred,
+    }
+}
+
+fn value_to_literal(v: Value) -> Result<Literal> {
+    let dims: Vec<i64> = v.shape.dims.iter().map(|&d| d as i64).collect();
+    let payload = match v.buf {
+        Buf::F32(data) => Payload::F32(data),
+        Buf::S32(data) => Payload::I32(data),
+        Buf::Pred(_) => return Err(err("pred outputs cannot be returned as literals")),
+    };
+    Ok(Literal::from_parts(payload, dims))
+}
+
+/// Execute the module's `ENTRY` computation. The module is (re-)validated
+/// first — microseconds against milliseconds of evaluation — so this is
+/// total even for callers that skipped `compile`; inputs are checked
+/// against the declared parameter shapes. The result is the root value (a
+/// tuple literal when the root is `tuple(...)`).
+pub fn execute(module: &Module, inputs: &[Literal]) -> Result<Literal> {
+    validate(module)?;
+    let comp =
+        module.comps.get(module.entry).ok_or_else(|| err("entry computation out of range"))?;
+    if inputs.len() != comp.params.len() {
+        return Err(err(format!(
+            "entry takes {} arguments, got {}",
+            comp.params.len(),
+            inputs.len()
+        )));
+    }
+    let mut args = Vec::with_capacity(inputs.len());
+    for (k, lit) in inputs.iter().enumerate() {
+        let want = single_shape(&comp.instrs[comp.params[k]].shape)?;
+        args.push(literal_to_value(lit, want, k)?);
+    }
+    match eval_comp(module, comp, &args)? {
+        Slot::Single(v) => value_to_literal(v),
+        Slot::Tuple(vals) => {
+            let lits: Vec<Literal> = vals.into_iter().map(value_to_literal).collect::<Result<_>>()?;
+            Ok(Literal::tuple(lits))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parse_module;
+
+    fn run(text: &str, inputs: &[Literal]) -> Result<Literal> {
+        let module = parse_module(text)?;
+        validate(&module)?;
+        execute(&module, inputs)
+    }
+
+    const ADD: &str = "%add_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %add = f32[] add(%p0, %p1)\n}\n";
+
+    #[test]
+    fn miri_dot_golden() {
+        // [[1,2,3],[4,5,6]] . [[1,0],[0,1],[1,1]] = [[4,5],[10,11]]
+        let text = "HloModule dot\nENTRY %m {\n\
+            \x20 %a = f32[2,3] parameter(0)\n\
+            \x20 %b = f32[3,2] parameter(1)\n\
+            \x20 ROOT %d = f32[2,2] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let a = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        let b = Literal::vec1(&[1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]).reshape(&[3, 2]).unwrap();
+        let out = run(text, &[a, b]).unwrap();
+        assert_eq!(out.dims(), &[2, 2]);
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn miri_dot_contracts_leading_dims() {
+        // lhs_c=0, rhs_c=0: out[i,j] = sum_t a[t,i] * b[t,j] over f32[3,2]s
+        let text = "HloModule dot\nENTRY %m {\n\
+            \x20 %a = f32[3,2] parameter(0)\n\
+            \x20 %b = f32[3,2] parameter(1)\n\
+            \x20 ROOT %d = f32[2,2] dot(%a, %b), lhs_contracting_dims={0}, rhs_contracting_dims={0}\n}\n";
+        let a = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[3, 2]).unwrap();
+        let b = Literal::vec1(&[1.0f32, 1.0, 2.0, 0.0, 0.0, 3.0]).reshape(&[3, 2]).unwrap();
+        let out = run(text, &[a, b]).unwrap();
+        // out[0,0]=1+6+0=7  out[0,1]=1+0+15=16  out[1,0]=2+8+0=10  out[1,1]=2+0+18=20
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![7.0, 16.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn miri_reduce_golden_rows_and_all() {
+        let text = format!(
+            "HloModule r\n{ADD}ENTRY %m {{\n\
+             \x20 %x = f32[2,3] parameter(0)\n\
+             \x20 %zero = f32[] constant(0)\n\
+             \x20 %rows = f32[2] reduce(%x, %zero), dimensions={{1}}, to_apply=%add_f32\n\
+             \x20 %cols = f32[3] reduce(%x, %zero), dimensions={{0}}, to_apply=%add_f32\n\
+             \x20 %all = f32[] reduce(%x, %zero), dimensions={{0,1}}, to_apply=%add_f32\n\
+             \x20 ROOT %out = (f32[2], f32[3], f32[]) tuple(%rows, %cols, %all)\n}}\n"
+        );
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 10.0, 20.0, 30.0]).reshape(&[2, 3]).unwrap();
+        let parts = run(&text, &[x]).unwrap().to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![6.0, 60.0]);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![11.0, 22.0, 33.0]);
+        assert_eq!(parts[2].to_vec::<f32>().unwrap(), vec![66.0]);
+    }
+
+    #[test]
+    fn miri_elementwise_broadcast_select_convert_iota() {
+        let text = "HloModule e\nENTRY %m {\n\
+            \x20 %x = f32[2,2] parameter(0)\n\
+            \x20 %zero = f32[] constant(0)\n\
+            \x20 %zb = f32[2,2] broadcast(%zero), dimensions={}\n\
+            \x20 %mask = pred[2,2] compare(%x, %zb), direction=GT\n\
+            \x20 %relu = f32[2,2] select(%mask, %x, %zb)\n\
+            \x20 %maskf = f32[2,2] convert(%mask)\n\
+            \x20 %iot = s32[2,2] iota(), iota_dimension=1\n\
+            \x20 %iotf = f32[2,2] convert(%iot)\n\
+            \x20 %sum = f32[2,2] add(%relu, %iotf)\n\
+            \x20 ROOT %out = (f32[2,2], f32[2,2]) tuple(%sum, %maskf)\n}\n";
+        let x = Literal::vec1(&[-1.0f32, 2.0, 3.0, -4.0]).reshape(&[2, 2]).unwrap();
+        let parts = run(text, &[x]).unwrap().to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![0.0, 3.0, 3.0, 1.0]);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn miri_transpose_reverse_reshape() {
+        let text = "HloModule t\nENTRY %m {\n\
+            \x20 %x = f32[2,3] parameter(0)\n\
+            \x20 %t = f32[3,2] transpose(%x), dimensions={1,0}\n\
+            \x20 %r = f32[3,2] reverse(%t), dimensions={0}\n\
+            \x20 ROOT %flat = f32[6] reshape(%r)\n}\n";
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        let out = run(text, &[x]).unwrap();
+        // transpose: [[1,4],[2,5],[3,6]]; reverse dim0: [[3,6],[2,5],[1,4]]
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0, 6.0, 2.0, 5.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn miri_conv_identity_and_padding() {
+        // 1x1 kernel = identity; 2x2 input, pad 1: corner sums.
+        let text = "HloModule c\nENTRY %m {\n\
+            \x20 %x = f32[1,1,2,2] parameter(0)\n\
+            \x20 %w1 = f32[1,1,1,1] parameter(1)\n\
+            \x20 %w3 = f32[1,1,3,3] parameter(2)\n\
+            \x20 %id = f32[1,1,2,2] convolution(%x, %w1), window={size=1x1 pad=0_0x0_0}, dim_labels=bf01_oi01->bf01\n\
+            \x20 %sm = f32[1,1,2,2] convolution(%x, %w3), window={size=3x3 pad=1_1x1_1}, dim_labels=bf01_oi01->bf01\n\
+            \x20 ROOT %out = (f32[1,1,2,2], f32[1,1,2,2]) tuple(%id, %sm)\n}\n";
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[1, 1, 2, 2]).unwrap();
+        let w1 = Literal::vec1(&[1.0f32]).reshape(&[1, 1, 1, 1]).unwrap();
+        let w3 = Literal::vec1(&[1.0f32; 9]).reshape(&[1, 1, 3, 3]).unwrap();
+        let parts = run(text, &[x, w1, w3]).unwrap().to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        // all-ones 3x3 with pad 1 over a 2x2 image: every output sees all 4
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn miri_validate_rejects_shape_lies() {
+        // reduce output keeps the reduced dim
+        let bad_reduce = format!(
+            "HloModule v\n{ADD}ENTRY %m {{\n  %x = f32[2,3] parameter(0)\n  %z = f32[] constant(0)\n  ROOT %r = f32[2,3] reduce(%x, %z), dimensions={{1}}, to_apply=%add_f32\n}}\n"
+        );
+        let mut cases: Vec<&str> = vec![
+            // declared add shape is wrong
+            "HloModule v\nENTRY %m {\n  %x = f32[2] parameter(0)\n  ROOT %y = f32[3] add(%x, %x)\n}\n",
+            // convolution output spatial dims are wrong
+            "HloModule v\nENTRY %m {\n  %x = f32[1,1,4,4] parameter(0)\n  %w = f32[1,1,3,3] parameter(1)\n  ROOT %y = f32[1,1,4,4] convolution(%x, %w), window={size=3x3 pad=0_0x0_0}, dim_labels=bf01_oi01->bf01\n}\n",
+            // dot contracting sizes differ
+            "HloModule v\nENTRY %m {\n  %a = f32[2,3] parameter(0)\n  %b = f32[4,2] parameter(1)\n  ROOT %d = f32[2,2] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n",
+            // select over mismatched branches
+            "HloModule v\nENTRY %m {\n  %a = f32[2] parameter(0)\n  %b = f32[3] parameter(1)\n  %p = pred[2] compare(%a, %a), direction=EQ\n  ROOT %s = f32[2] select(%p, %a, %b)\n}\n",
+        ];
+        cases.push(bad_reduce.as_str());
+        for bad in cases {
+            let module = parse_module(bad).expect("these parse");
+            assert!(validate(&module).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn miri_execute_checks_argument_shapes() {
+        let text = "HloModule a\nENTRY %m {\n  ROOT %x = f32[2,2] parameter(0)\n}\n";
+        let module = parse_module(text).unwrap();
+        validate(&module).unwrap();
+        let wrong = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(execute(&module, &[wrong]).is_err());
+        assert!(execute(&module, &[]).is_err());
+        let right = Literal::vec1(&[1.0f32; 4]).reshape(&[2, 2]).unwrap();
+        assert_eq!(execute(&module, &[right]).unwrap().to_vec::<f32>().unwrap(), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn miri_log_softmax_subgraph_matches_hand_values() {
+        let text = "HloModule s\n\
+            %add_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %add = f32[] add(%p0, %p1)\n}\n\
+            %max_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %max = f32[] maximum(%p0, %p1)\n}\n\
+            ENTRY %m {\n\
+            \x20 %logits = f32[2,3] parameter(0)\n\
+            \x20 %neg_inf = f32[] constant(-inf)\n\
+            \x20 %zero = f32[] constant(0)\n\
+            \x20 %mx = f32[2] reduce(%logits, %neg_inf), dimensions={1}, to_apply=%max_f32\n\
+            \x20 %mxb = f32[2,3] broadcast(%mx), dimensions={0}\n\
+            \x20 %c = f32[2,3] subtract(%logits, %mxb)\n\
+            \x20 %e = f32[2,3] exponential(%c)\n\
+            \x20 %se = f32[2] reduce(%e, %zero), dimensions={1}, to_apply=%add_f32\n\
+            \x20 %ls = f32[2] log(%se)\n\
+            \x20 %lsb = f32[2,3] broadcast(%ls), dimensions={0}\n\
+            \x20 ROOT %logp = f32[2,3] subtract(%c, %lsb)\n}\n";
+        let logits =
+            Literal::vec1(&[0.0f32, 0.0, 0.0, 1.0, 2.0, 3.0]).reshape(&[2, 3]).unwrap();
+        let out = run(text, &[logits]).unwrap().to_vec::<f32>().unwrap();
+        let ln3 = 3.0f64.ln();
+        let lse = ((-2.0f64).exp() + (-1.0f64).exp() + 1.0).ln();
+        let expect = [-ln3, -ln3, -ln3, -2.0 - lse, -1.0 - lse, -lse];
+        for (got, want) in out.iter().zip(expect) {
+            assert!((*got as f64 - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+}

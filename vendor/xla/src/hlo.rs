@@ -1,0 +1,728 @@
+//! HLO-text AST + parser for the mini-HLO interpreter.
+//!
+//! Parses the textual HLO module format the repository's AOT pipeline
+//! emits (`python/compile/aot.py` with real JAX, or the Rust-side
+//! reference emitter in `sparsetrain::runtime::hlo_builder`): named
+//! computations of SSA instructions with declared shapes, operand lists
+//! and `key=value` attributes, one `ENTRY` computation per module.
+//!
+//! The parser is **total**: any input — truncated, mangled, shape-edited —
+//! produces `Err`, never a panic. This is fuzzed from the sparsetrain side
+//! (`util::proptest` over mutated artifact text) and is why shapes are
+//! bounded ([`MAX_ELEMENTS`]) at parse time: a corrupted dimension digit
+//! must not turn into a multi-gigabyte allocation downstream.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Upper bound on elements per array shape (and on any parsed dimension,
+/// window extent, stride or padding). 16M f32 elements = 64 MiB — far above
+/// every artifact this repo lowers, far below an OOM.
+pub const MAX_ELEMENTS: usize = 1 << 24;
+
+/// Array element types the interpreter supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl ElemType {
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F32 => "f32",
+            ElemType::S32 => "s32",
+            ElemType::Pred => "pred",
+        }
+    }
+}
+
+/// An array shape: element type + row-major dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape {
+    pub ty: ElemType,
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn scalar(ty: ElemType) -> Shape {
+        Shape { ty, dims: Vec::new() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count (1 for scalars). Bounded by [`MAX_ELEMENTS`]
+    /// at parse time, so this cannot overflow.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Declared result shape of an instruction: a single array, or — for the
+/// `tuple` root — a list of array shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShapeDecl {
+    Single(Shape),
+    Tuple(Vec<Shape>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryKind {
+    Neg,
+    Exp,
+    Log,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Convolution window: per-spatial-dim size, stride and low/high padding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub size: [usize; 2],
+    pub stride: [usize; 2],
+    pub pad_lo: [usize; 2],
+    pub pad_hi: [usize; 2],
+}
+
+/// Parsed `dim_labels` (e.g. `bf01_oi01->bf01`): which dimension of each
+/// operand/output plays the batch / feature / spatial roles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub lhs_b: usize,
+    pub lhs_f: usize,
+    pub lhs_s: [usize; 2],
+    pub rhs_i: usize,
+    pub rhs_o: usize,
+    pub rhs_s: [usize; 2],
+    pub out_b: usize,
+    pub out_f: usize,
+    pub out_s: [usize; 2],
+}
+
+/// The op set the interpreter evaluates — exactly what the repository's
+/// train-step / predict / kernel graphs lower to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Parameter(usize),
+    ConstantF32(f32),
+    ConstantS32(i32),
+    Binary(BinKind),
+    Unary(UnaryKind),
+    Compare(CmpDir),
+    Select,
+    Convert,
+    Iota { dim: usize },
+    Broadcast { dims: Vec<usize> },
+    Reshape,
+    Transpose { perm: Vec<usize> },
+    Reverse { dims: Vec<usize> },
+    Reduce { dims: Vec<usize>, to_apply: usize },
+    Dot { lhs_c: usize, rhs_c: usize },
+    Convolution { window: Window, spec: ConvSpec },
+    Tuple,
+}
+
+/// One SSA instruction.
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    pub shape: ShapeDecl,
+    pub op: Op,
+    /// Indices of operand instructions (always earlier in the computation).
+    pub operands: Vec<usize>,
+    pub is_root: bool,
+}
+
+/// A named computation: instruction list in SSA order plus its root and
+/// parameter table (`params[k]` = instruction index of `parameter(k)`).
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub root: usize,
+    pub params: Vec<usize>,
+}
+
+/// A parsed module: computations in definition order; `entry` indexes the
+/// `ENTRY` computation. `to_apply` references always point to earlier
+/// computations, so call graphs are acyclic by construction.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub comps: Vec<Computation>,
+    pub entry: usize,
+}
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+/// Split `s` on `sep` at brace/bracket depth zero (so `f32[2,3]` and
+/// `dimensions={0,1}` survive comma splitting intact).
+fn split_top(s: &str, sep: char) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth = depth.saturating_sub(1),
+            c if c == sep && depth == 0 => {
+                out.push(s[start..i].trim());
+                start = i + c.len_utf8();
+            }
+            _ => {}
+        }
+    }
+    out.push(s[start..].trim());
+    out
+}
+
+fn parse_bounded(s: &str, what: &str) -> Result<usize> {
+    let v: usize = s.trim().parse().map_err(|_| err(format!("bad {what} {s:?}")))?;
+    if v > MAX_ELEMENTS {
+        return Err(err(format!("{what} {v} exceeds the {MAX_ELEMENTS} bound")));
+    }
+    Ok(v)
+}
+
+/// Parse `f32[16,32]` / `s32[]` / `pred[2,3]`.
+pub fn parse_shape(s: &str) -> Result<Shape> {
+    let s = s.trim();
+    let (ty, body) = if let Some(b) = s.strip_prefix("f32[") {
+        (ElemType::F32, b)
+    } else if let Some(b) = s.strip_prefix("s32[") {
+        (ElemType::S32, b)
+    } else if let Some(b) = s.strip_prefix("pred[") {
+        (ElemType::Pred, b)
+    } else {
+        return Err(err(format!("bad shape {s:?}")));
+    };
+    let body = body.strip_suffix(']').ok_or_else(|| err(format!("unterminated shape {s:?}")))?;
+    let mut dims = Vec::new();
+    if !body.trim().is_empty() {
+        for d in body.split(',') {
+            dims.push(parse_bounded(d, "dimension")?);
+        }
+    }
+    if dims.len() > 8 {
+        return Err(err(format!("rank {} too high in {s:?}", dims.len())));
+    }
+    let mut n: usize = 1;
+    for &d in &dims {
+        n = n
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_ELEMENTS)
+            .ok_or_else(|| err(format!("shape {s:?} exceeds the element bound")))?;
+    }
+    Ok(Shape { ty, dims })
+}
+
+/// Parse `{0,1,2}` into a dimension list.
+fn parse_dim_list(v: &str) -> Result<Vec<usize>> {
+    let body = v
+        .trim()
+        .strip_prefix('{')
+        .and_then(|b| b.strip_suffix('}'))
+        .ok_or_else(|| err(format!("bad dimension list {v:?}")))?;
+    let mut dims = Vec::new();
+    if !body.trim().is_empty() {
+        for d in body.split(',') {
+            dims.push(parse_bounded(d, "dimension index")?);
+        }
+    }
+    Ok(dims)
+}
+
+fn parse_x2(v: &str, what: &str) -> Result<[usize; 2]> {
+    let (a, b) = v.split_once('x').ok_or_else(|| err(format!("bad {what} {v:?}")))?;
+    Ok([parse_bounded(a, what)?, parse_bounded(b, what)?])
+}
+
+/// Parse `{size=3x3 pad=1_1x1_1 stride=1x1}` (stride/pad optional).
+fn parse_window(v: &str) -> Result<Window> {
+    let body = v
+        .trim()
+        .strip_prefix('{')
+        .and_then(|b| b.strip_suffix('}'))
+        .ok_or_else(|| err(format!("bad window {v:?}")))?;
+    let mut size = None;
+    let mut stride = [1usize, 1];
+    let mut pad_lo = [0usize, 0];
+    let mut pad_hi = [0usize, 0];
+    for tok in body.split_whitespace() {
+        let (k, val) = tok.split_once('=').ok_or_else(|| err(format!("bad window token {tok:?}")))?;
+        match k {
+            "size" => size = Some(parse_x2(val, "window size")?),
+            "stride" => stride = parse_x2(val, "window stride")?,
+            "pad" => {
+                let mut parts = val.split('x');
+                for i in 0..2 {
+                    let p = parts.next().ok_or_else(|| err(format!("bad window pad {val:?}")))?;
+                    let (lo, hi) =
+                        p.split_once('_').ok_or_else(|| err(format!("bad window pad {val:?}")))?;
+                    pad_lo[i] = parse_bounded(lo, "padding")?;
+                    pad_hi[i] = parse_bounded(hi, "padding")?;
+                }
+                if parts.next().is_some() {
+                    return Err(err(format!("window pad {val:?} is not 2-d")));
+                }
+            }
+            other => return Err(err(format!("unknown window key {other:?}"))),
+        }
+    }
+    let size = size.ok_or_else(|| err("window is missing size="))?;
+    if stride[0] == 0 || stride[1] == 0 {
+        return Err(err("window stride must be positive"));
+    }
+    if size[0] == 0 || size[1] == 0 {
+        return Err(err("window size must be positive"));
+    }
+    Ok(Window { size, stride, pad_lo, pad_hi })
+}
+
+/// Parse one third of a `dim_labels` string: role chars `a`/`b` plus the
+/// spatial digits `0` and `1`, each exactly once.
+fn parse_label_part(s: &str, a: char, b: char) -> Result<(usize, usize, [usize; 2])> {
+    let mut pa = None;
+    let mut pb = None;
+    let mut s0 = None;
+    let mut s1 = None;
+    let mut count = 0usize;
+    for (i, ch) in s.chars().enumerate() {
+        count += 1;
+        let slot = if ch == a {
+            &mut pa
+        } else if ch == b {
+            &mut pb
+        } else if ch == '0' {
+            &mut s0
+        } else if ch == '1' {
+            &mut s1
+        } else {
+            return Err(err(format!("bad dim label char {ch:?} in {s:?}")));
+        };
+        if slot.is_some() {
+            return Err(err(format!("duplicate dim label {ch:?} in {s:?}")));
+        }
+        *slot = Some(i);
+    }
+    match (pa, pb, s0, s1, count) {
+        (Some(pa), Some(pb), Some(s0), Some(s1), 4) => Ok((pa, pb, [s0, s1])),
+        _ => Err(err(format!("dim labels {s:?} must name b/f and spatial 0,1 once each"))),
+    }
+}
+
+/// Parse `bf01_oi01->bf01`.
+fn parse_dim_labels(v: &str) -> Result<ConvSpec> {
+    let (lhs_rhs, out) = v.split_once("->").ok_or_else(|| err(format!("bad dim_labels {v:?}")))?;
+    let (lhs, rhs) = lhs_rhs.split_once('_').ok_or_else(|| err(format!("bad dim_labels {v:?}")))?;
+    let (lhs_b, lhs_f, lhs_s) = parse_label_part(lhs, 'b', 'f')?;
+    let (rhs_o, rhs_i, rhs_s) = parse_label_part(rhs, 'o', 'i')?;
+    let (out_b, out_f, out_s) = parse_label_part(out, 'b', 'f')?;
+    Ok(ConvSpec { lhs_b, lhs_f, lhs_s, rhs_i, rhs_o, rhs_s, out_b, out_f, out_s })
+}
+
+fn parse_cmp_dir(v: &str) -> Result<CmpDir> {
+    Ok(match v {
+        "EQ" => CmpDir::Eq,
+        "NE" => CmpDir::Ne,
+        "LT" => CmpDir::Lt,
+        "LE" => CmpDir::Le,
+        "GT" => CmpDir::Gt,
+        "GE" => CmpDir::Ge,
+        other => return Err(err(format!("unknown compare direction {other:?}"))),
+    })
+}
+
+/// `key=value` attributes after the operand list, in source order.
+struct Attrs<'a> {
+    kvs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Attrs<'a> {
+    fn get(&self, key: &str) -> Result<&'a str> {
+        self.kvs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| err(format!("missing attribute {key}=")))
+    }
+}
+
+fn parse_attrs(text: &str) -> Result<Attrs<'_>> {
+    let text = text.trim();
+    let mut kvs = Vec::new();
+    if !text.is_empty() {
+        let body = text
+            .strip_prefix(',')
+            .ok_or_else(|| err(format!("junk after operand list: {text:?}")))?;
+        for kv in split_top(body, ',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| err(format!("attribute {kv:?} is not key=value")))?;
+            kvs.push((k.trim(), v.trim()));
+        }
+    }
+    Ok(Attrs { kvs })
+}
+
+/// Parse one instruction line inside a computation body.
+fn parse_instr(
+    line: &str,
+    names: &HashMap<String, usize>,
+    comp_idx: &HashMap<String, usize>,
+) -> Result<Instr> {
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest.trim_start()),
+        None => (false, line),
+    };
+    let (lhs, rest) =
+        line.split_once(" = ").ok_or_else(|| err(format!("no `=` in instruction {line:?}")))?;
+    let name = lhs.trim().trim_start_matches('%');
+    if name.is_empty() || name.contains(char::is_whitespace) {
+        return Err(err(format!("bad instruction name {lhs:?}")));
+    }
+
+    // Declared shape: `(s, s, ...)` tuple or a single `ty[dims]` token.
+    let rest = rest.trim_start();
+    let (shape, rest) = if let Some(r) = rest.strip_prefix('(') {
+        let (body, tail) =
+            r.split_once(')').ok_or_else(|| err(format!("unterminated tuple shape in {line:?}")))?;
+        let mut shapes = Vec::new();
+        for part in split_top(body, ',') {
+            shapes.push(parse_shape(part)?);
+        }
+        (ShapeDecl::Tuple(shapes), tail.trim_start())
+    } else {
+        let (tok, tail) =
+            rest.split_once(' ').ok_or_else(|| err(format!("missing op in {line:?}")))?;
+        (ShapeDecl::Single(parse_shape(tok)?), tail.trim_start())
+    };
+
+    // `op(args)` + attributes. Operand names and constant/parameter payloads
+    // never contain parentheses, so the first `)` closes the list.
+    let (opname, after) =
+        rest.split_once('(').ok_or_else(|| err(format!("missing operand list in {line:?}")))?;
+    let opname = opname.trim();
+    let (args_text, attrs_text) =
+        after.split_once(')').ok_or_else(|| err(format!("unterminated operand list in {line:?}")))?;
+    let attrs = parse_attrs(attrs_text)?;
+
+    let operands: Vec<usize> = if matches!(opname, "constant" | "parameter") {
+        Vec::new()
+    } else {
+        let t = args_text.trim();
+        if t.is_empty() {
+            Vec::new()
+        } else {
+            let mut ops = Vec::new();
+            for o in t.split(',') {
+                let nm = o.trim().trim_start_matches('%');
+                ops.push(
+                    names
+                        .get(nm)
+                        .copied()
+                        .ok_or_else(|| err(format!("operand %{nm} is not defined before use")))?,
+                );
+            }
+            ops
+        }
+    };
+
+    let single_ty = match &shape {
+        ShapeDecl::Single(s) => Some(s.ty),
+        ShapeDecl::Tuple(_) => None,
+    };
+    let op = match opname {
+        "parameter" => Op::Parameter(parse_bounded(args_text, "parameter number")?),
+        "constant" => match single_ty {
+            Some(ElemType::F32) => Op::ConstantF32(
+                args_text
+                    .trim()
+                    .parse::<f32>()
+                    .map_err(|_| err(format!("bad f32 constant {args_text:?}")))?,
+            ),
+            Some(ElemType::S32) => Op::ConstantS32(
+                args_text
+                    .trim()
+                    .parse::<i32>()
+                    .map_err(|_| err(format!("bad s32 constant {args_text:?}")))?,
+            ),
+            _ => return Err(err(format!("constant must be f32 or s32 in {line:?}"))),
+        },
+        "add" => Op::Binary(BinKind::Add),
+        "subtract" => Op::Binary(BinKind::Sub),
+        "multiply" => Op::Binary(BinKind::Mul),
+        "divide" => Op::Binary(BinKind::Div),
+        "maximum" => Op::Binary(BinKind::Max),
+        "negate" => Op::Unary(UnaryKind::Neg),
+        "exponential" => Op::Unary(UnaryKind::Exp),
+        "log" => Op::Unary(UnaryKind::Log),
+        "compare" => Op::Compare(parse_cmp_dir(attrs.get("direction")?)?),
+        "select" => Op::Select,
+        "convert" => Op::Convert,
+        "iota" => Op::Iota { dim: parse_bounded(attrs.get("iota_dimension")?, "iota dimension")? },
+        "broadcast" => Op::Broadcast { dims: parse_dim_list(attrs.get("dimensions")?)? },
+        "reshape" => Op::Reshape,
+        "transpose" => Op::Transpose { perm: parse_dim_list(attrs.get("dimensions")?)? },
+        "reverse" => Op::Reverse { dims: parse_dim_list(attrs.get("dimensions")?)? },
+        "reduce" => {
+            let comp_name = attrs.get("to_apply")?.trim_start_matches('%');
+            let to_apply = comp_idx
+                .get(comp_name)
+                .copied()
+                .ok_or_else(|| err(format!("to_apply references unknown computation %{comp_name}")))?;
+            Op::Reduce { dims: parse_dim_list(attrs.get("dimensions")?)?, to_apply }
+        }
+        "dot" => {
+            let lhs = parse_dim_list(attrs.get("lhs_contracting_dims")?)?;
+            let rhs = parse_dim_list(attrs.get("rhs_contracting_dims")?)?;
+            match (lhs.as_slice(), rhs.as_slice()) {
+                (&[l], &[r]) => Op::Dot { lhs_c: l, rhs_c: r },
+                _ => return Err(err("dot supports exactly one contracting dim per side")),
+            }
+        }
+        "convolution" => Op::Convolution {
+            window: parse_window(attrs.get("window")?)?,
+            spec: parse_dim_labels(attrs.get("dim_labels")?)?,
+        },
+        "tuple" => Op::Tuple,
+        other => return Err(err(format!("unsupported op {other:?}"))),
+    };
+
+    Ok(Instr { name: name.to_string(), shape, op, operands, is_root })
+}
+
+/// Finish a computation body: resolve the root and the parameter table.
+fn finish_computation(name: String, instrs: Vec<Instr>) -> Result<Computation> {
+    let mut root = None;
+    for (i, ins) in instrs.iter().enumerate() {
+        if ins.is_root {
+            if root.is_some() {
+                return Err(err(format!("computation %{name} has multiple ROOTs")));
+            }
+            root = Some(i);
+        }
+    }
+    let root = root.ok_or_else(|| err(format!("computation %{name} has no ROOT")))?;
+
+    let mut by_number: Vec<Option<usize>> = Vec::new();
+    for (i, ins) in instrs.iter().enumerate() {
+        if let Op::Parameter(k) = ins.op {
+            // Each parameter is itself an instruction, so a valid number is
+            // always < instrs.len() — this bound (not MAX_ELEMENTS) keeps a
+            // corrupted digit from forcing a huge table allocation.
+            if k >= instrs.len() {
+                return Err(err(format!("parameter({k}) number out of range in %{name}")));
+            }
+            if by_number.len() <= k {
+                by_number.resize(k + 1, None);
+            }
+            if by_number[k].is_some() {
+                return Err(err(format!("duplicate parameter({k}) in %{name}")));
+            }
+            by_number[k] = Some(i);
+        }
+    }
+    let mut params = Vec::with_capacity(by_number.len());
+    for (k, slot) in by_number.into_iter().enumerate() {
+        params.push(slot.ok_or_else(|| err(format!("%{name} is missing parameter({k})")))?);
+    }
+    Ok(Computation { name, instrs, root, params })
+}
+
+/// Parse a full HLO-text module. Never panics; every malformed input is a
+/// descriptive `Err`.
+pub fn parse_module(text: &str) -> Result<Module> {
+    let mut module_name = String::new();
+    let mut saw_header = false;
+    let mut comps: Vec<Computation> = Vec::new();
+    let mut comp_idx: HashMap<String, usize> = HashMap::new();
+    let mut entry: Option<usize> = None;
+    // (name, is_entry, instrs, name -> instr index)
+    let mut cur: Option<(String, bool, Vec<Instr>, HashMap<String, usize>)> = None;
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if !saw_header {
+            let rest = line
+                .strip_prefix("HloModule")
+                .ok_or_else(|| err("expected `HloModule <name>` header"))?;
+            module_name = rest.trim().trim_end_matches(',').to_string();
+            saw_header = true;
+            continue;
+        }
+        if line == "}" {
+            let (name, is_entry, instrs, _) =
+                cur.take().ok_or_else(|| err("stray `}` outside a computation"))?;
+            let comp = finish_computation(name, instrs)?;
+            if comp_idx.contains_key(&comp.name) {
+                return Err(err(format!("duplicate computation %{}", comp.name)));
+            }
+            comp_idx.insert(comp.name.clone(), comps.len());
+            if is_entry {
+                if entry.is_some() {
+                    return Err(err("multiple ENTRY computations"));
+                }
+                entry = Some(comps.len());
+            }
+            comps.push(comp);
+            continue;
+        }
+        if !line.contains('=') {
+            if let Some(head) = line.strip_suffix('{') {
+                if cur.is_some() {
+                    return Err(err("nested computation"));
+                }
+                let head = head.trim();
+                let (is_entry, head) = match head.strip_prefix("ENTRY") {
+                    Some(h) => (true, h.trim()),
+                    None => (false, head),
+                };
+                let name = head.trim_start_matches('%');
+                if name.is_empty() || name.contains(char::is_whitespace) {
+                    return Err(err(format!("bad computation header {line:?}")));
+                }
+                cur = Some((name.to_string(), is_entry, Vec::new(), HashMap::new()));
+                continue;
+            }
+        }
+        let Some((_, _, instrs, names)) = cur.as_mut() else {
+            return Err(err(format!("instruction outside a computation: {line:?}")));
+        };
+        let instr = parse_instr(line, names, &comp_idx)?;
+        if names.contains_key(&instr.name) {
+            return Err(err(format!("duplicate instruction name %{}", instr.name)));
+        }
+        names.insert(instr.name.clone(), instrs.len());
+        instrs.push(instr);
+    }
+    if cur.is_some() {
+        return Err(err("unterminated computation (missing `}`)"));
+    }
+    let entry = entry.ok_or_else(|| err("module has no ENTRY computation"))?;
+    Ok(Module { name: module_name, comps, entry })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "HloModule tiny\n\
+        \n\
+        %add_f32 {\n\
+        \x20 %p0 = f32[] parameter(0)\n\
+        \x20 %p1 = f32[] parameter(1)\n\
+        \x20 ROOT %add = f32[] add(%p0, %p1)\n\
+        }\n\
+        \n\
+        ENTRY %main {\n\
+        \x20 %x = f32[2,3] parameter(0)\n\
+        \x20 %zero = f32[] constant(0)\n\
+        \x20 ROOT %sum = f32[2] reduce(%x, %zero), dimensions={1}, to_apply=%add_f32\n\
+        }\n";
+
+    #[test]
+    fn miri_parses_reduce_module() {
+        let m = parse_module(TINY).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.comps.len(), 2);
+        assert_eq!(m.entry, 1);
+        let main = &m.comps[1];
+        assert_eq!(main.params, vec![0]);
+        assert_eq!(main.root, 2);
+        match &main.instrs[2].op {
+            Op::Reduce { dims, to_apply } => {
+                assert_eq!(dims, &[1]);
+                assert_eq!(*to_apply, 0);
+            }
+            other => panic!("expected reduce, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn miri_parses_convolution_attrs() {
+        let text = "HloModule c\nENTRY %m {\n\
+            \x20 %x = f32[1,2,4,4] parameter(0)\n\
+            \x20 %w = f32[3,2,3,3] parameter(1)\n\
+            \x20 ROOT %y = f32[1,3,4,4] convolution(%x, %w), \
+            window={size=3x3 pad=1_1x1_1}, dim_labels=bf01_oi01->bf01\n}\n";
+        let m = parse_module(text).unwrap();
+        match &m.comps[0].instrs[2].op {
+            Op::Convolution { window, spec } => {
+                assert_eq!(window.size, [3, 3]);
+                assert_eq!(window.stride, [1, 1]);
+                assert_eq!(window.pad_lo, [1, 1]);
+                assert_eq!(window.pad_hi, [1, 1]);
+                assert_eq!((spec.lhs_b, spec.lhs_f), (0, 1));
+                assert_eq!((spec.rhs_o, spec.rhs_i), (0, 1));
+                assert_eq!(spec.out_s, [2, 3]);
+            }
+            other => panic!("expected convolution, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn miri_rejects_malformed_text() {
+        for bad in [
+            "",
+            "not hlo at all",
+            "HloModule m",                                      // no ENTRY
+            "HloModule m\nENTRY %e {\n  %p = f32[2 parameter(0)\n}\n", // unterminated shape
+            "HloModule m\nENTRY %e {\n  %p = f32[2] parameter(0)\n", // missing }
+            "HloModule m\nENTRY %e {\n  %p = f32[2] parameter(0)\n}\n", // no ROOT
+            "HloModule m\nENTRY %e {\n  ROOT %y = f32[2] add(%a, %b)\n}\n", // undefined operands
+            "HloModule m\nENTRY %e {\n  ROOT %p = f32[99999999999999] parameter(0)\n}\n",
+            "HloModule m\nENTRY %e {\n  ROOT %p = f32[4096,4096,4096] parameter(0)\n}\n",
+            "HloModule m\nENTRY %e {\n  ROOT %p = f32[] frobnicate()\n}\n",
+        ] {
+            assert!(parse_module(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn miri_constant_parsing_handles_inf_and_exponents() {
+        let text = "HloModule k\nENTRY %e {\n\
+            \x20 %a = f32[] constant(-inf)\n\
+            \x20 %b = f32[] constant(7.6293945e-6)\n\
+            \x20 %c = s32[] constant(-3)\n\
+            \x20 ROOT %r = f32[] add(%a, %b)\n}\n";
+        let m = parse_module(text).unwrap();
+        match m.comps[0].instrs[0].op {
+            Op::ConstantF32(v) => assert!(v.is_infinite() && v < 0.0),
+            ref other => panic!("{other:?}"),
+        }
+        match m.comps[0].instrs[1].op {
+            Op::ConstantF32(v) => assert_eq!(v, 7.629_394_5e-6),
+            ref other => panic!("{other:?}"),
+        }
+        match m.comps[0].instrs[2].op {
+            Op::ConstantS32(v) => assert_eq!(v, -3),
+            ref other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,20 +1,34 @@
-//! Offline stub of the `xla` crate (PJRT bindings).
+//! Offline substitute for the `xla` crate (PJRT bindings) with a built-in
+//! **mini-HLO interpreter**.
 //!
 //! The build environment cannot link the real PJRT runtime, so this crate
-//! implements the API surface `sparsetrain::runtime` uses with host-side
-//! behavior wherever possible:
+//! implements the API surface `sparsetrain::runtime` uses entirely on the
+//! host:
 //!
-//! * [`Literal`] packing/reshaping/unpacking is fully functional (it is
-//!   plain host memory), so literal round-trip tests run for real;
-//! * [`PjRtClient::cpu`] succeeds and reports a `cpu-stub` platform;
-//! * [`HloModuleProto::from_text_file`] reads the artifact file (missing
+//! * [`Literal`] packing/reshaping/unpacking is plain host memory;
+//! * [`PjRtClient::cpu`] succeeds and reports a `cpu-interp` platform;
+//! * [`HloModuleProto::from_text_file`] reads HLO-text artifacts (missing
 //!   artifacts produce real, descriptive errors);
-//! * [`PjRtClient::compile`] returns an error explaining that execution
-//!   requires the real PJRT plugin. All trainer/runtime tests that need to
-//!   *execute* artifacts are gated on artifact presence and skip cleanly.
+//! * [`PjRtClient::compile`] **parses and shape-checks** the HLO text
+//!   ([`hlo::parse_module`] + [`eval::validate`]) and returns a runnable
+//!   [`PjRtLoadedExecutable`]; [`PjRtLoadedExecutable::execute`] evaluates
+//!   the module's `ENTRY` computation with the [`eval`] interpreter.
+//!
+//! The supported op set is exactly what the repository's train-step /
+//! predict / kernel graphs lower to: `convolution` (arbitrary
+//! `dim_labels`, so the weight-gradient and input-gradient convolutions
+//! work), `dot`, `reduce` (with scalar `to_apply` bodies), elementwise
+//! arithmetic, `maximum`/`exponential`/`log`, `compare`/`select`/`convert`
+//! / `iota` (one-hot and ReLU masks), `broadcast`/`reshape`/`transpose`/
+//! `reverse`, and `tuple` roots. Malformed or shape-inconsistent text is
+//! rejected with `Err` at compile time — never a panic — which is fuzzed
+//! from the sparsetrain side.
 
 use std::fmt;
 use std::path::Path;
+
+pub mod eval;
+pub mod hlo;
 
 /// Stub error type.
 #[derive(Debug, Clone)]
@@ -31,7 +45,7 @@ impl std::error::Error for Error {}
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Internal element storage — public only because [`NativeType`] mentions
-/// it; not part of the stable stub surface.
+/// it; not part of the stable crate surface.
 #[doc(hidden)]
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
@@ -121,9 +135,20 @@ impl Literal {
             _ => Err(Error("literal is not a tuple".into())),
         }
     }
+
+    /// Build a tuple literal from element literals.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { payload: Payload::Tuple(elems), dims: Vec::new() }
+    }
+
+    /// Internal constructor for the interpreter.
+    pub(crate) fn from_parts(payload: Payload, dims: Vec<i64>) -> Literal {
+        Literal { payload, dims }
+    }
 }
 
-/// Parsed HLO module text (the stub only carries the raw text through).
+/// Raw HLO module text, read from an artifact file. Parsing and shape
+/// checking happen at [`PjRtClient::compile`] time.
 pub struct HloModuleProto {
     text: String,
 }
@@ -140,26 +165,36 @@ impl HloModuleProto {
         }
         Ok(HloModuleProto { text })
     }
+
+    /// Wrap in-memory HLO text (used by tests and the artifact fallback).
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        if text.trim().is_empty() {
+            return Err(Error("HLO text is empty".into()));
+        }
+        Ok(HloModuleProto { text: text.to_string() })
+    }
 }
 
-/// An XLA computation built from a parsed module.
+/// An XLA computation built from a parsed module (carries the HLO text;
+/// parsing happens at [`PjRtClient::compile`] time so parse errors surface
+/// as compile errors, matching the real crate's behavior).
 pub struct XlaComputation {
-    _text: String,
+    text: String,
 }
 
 impl XlaComputation {
     pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation { _text: proto.text.clone() }
+        XlaComputation { text: proto.text.clone() }
     }
 }
 
-/// A compiled executable. The stub can never construct one; the real crate
-/// is required for execution.
+/// A compiled (parsed + shape-checked) executable over the mini-HLO
+/// interpreter.
 pub struct PjRtLoadedExecutable {
-    _private: (),
+    module: hlo::Module,
 }
 
-/// A device buffer handle.
+/// A device buffer handle (host memory in this offline build).
 pub struct PjRtBuffer {
     lit: Literal,
 }
@@ -171,10 +206,17 @@ impl PjRtBuffer {
 }
 
 impl PjRtLoadedExecutable {
-    /// Execute with the given inputs. Unreachable in the stub (compile
-    /// always fails), but kept API-compatible.
-    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(Error("PJRT stub: execution requires the real xla crate".into()))
+    /// Execute the module's `ENTRY` computation with the given inputs.
+    /// Mirrors the real crate's nesting: one device, one result buffer
+    /// (holding the tuple when the root is a tuple).
+    pub fn execute<T>(&self, inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lit = eval::execute(&self.module, inputs)?;
+        Ok(vec![vec![PjRtBuffer { lit }]])
+    }
+
+    /// The parsed module (exposed for diagnostics and tests).
+    pub fn module(&self) -> &hlo::Module {
+        &self.module
     }
 }
 
@@ -184,24 +226,23 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
-    /// Create the CPU client (always succeeds in the stub).
+    /// Create the CPU client (always succeeds offline).
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { platform: "cpu-stub".to_string() })
+        Ok(PjRtClient { platform: "cpu-interp".to_string() })
     }
 
     pub fn platform_name(&self) -> String {
         self.platform.clone()
     }
 
-    /// HLO compilation is not available offline: the stub returns a
-    /// descriptive error so artifact-gated callers fail loudly instead of
-    /// producing wrong numerics.
-    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        Err(Error(
-            "PJRT stub: HLO compilation unavailable in the offline build; \
-             link the real `xla` crate to execute artifacts"
-                .into(),
-        ))
+    /// Parse and shape-check the HLO text, returning a runnable
+    /// executable. Malformed or shape-inconsistent modules are rejected
+    /// here (never a panic), so runtime callers fail loudly at load time
+    /// instead of producing wrong numerics.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let module = hlo::parse_module(&comp.text)?;
+        eval::validate(&module)?;
+        Ok(PjRtLoadedExecutable { module })
     }
 }
 
@@ -227,12 +268,32 @@ mod tests {
     }
 
     #[test]
-    fn client_up_compile_gated() {
+    fn miri_client_compiles_and_executes_valid_hlo() {
         let c = PjRtClient::cpu().unwrap();
         assert!(c.platform_name().contains("cpu"));
-        let proto = HloModuleProto { text: "HloModule m".into() };
-        let comp = XlaComputation::from_proto(&proto);
-        assert!(c.compile(&comp).is_err());
+        let proto = HloModuleProto {
+            text: "HloModule m\nENTRY %e {\n  %x = f32[3] parameter(0)\n  \
+                   ROOT %y = f32[3] add(%x, %x)\n}\n"
+                .into(),
+        };
+        let exe = c.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        let outs = exe.execute::<Literal>(&[x]).unwrap();
+        let lit = outs[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn miri_compile_rejects_invalid_hlo() {
+        let c = PjRtClient::cpu().unwrap();
+        for text in [
+            "HloModule m",                       // no ENTRY computation
+            "HloModule m\nENTRY %e {\n  %x = f32[3] parameter(0)\n  \
+             ROOT %y = f32[4] add(%x, %x)\n}\n", // shape lie
+        ] {
+            let proto = HloModuleProto { text: text.into() };
+            assert!(c.compile(&XlaComputation::from_proto(&proto)).is_err(), "{text:?}");
+        }
     }
 
     #[test]
