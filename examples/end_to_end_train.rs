@@ -33,12 +33,13 @@ use sparsetrain::util::stats::mean;
 /// artifacts` has run, the Rust-emitted reference HLO through the mini-HLO
 /// interpreter otherwise). Returns the measured (input, gradient) ReLU
 /// sparsities of conv2.
-fn pjrt_training_phase(steps: usize, seed: u64) -> (f64, f64) {
+fn pjrt_training_phase(steps: usize, seed: u64, threads: usize) -> (f64, f64) {
     let artifacts = ArtifactSet::bootstrap_offline().expect("materializing offline artifacts");
 
     println!("== end-to-end training: rust coordinator → PJRT → train-step artifact ==");
-    let mut trainer = Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20 })
-        .expect("trainer init");
+    let mut trainer =
+        Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20, threads })
+            .expect("trainer init");
     let report = trainer.run().unwrap_or_else(|e| {
         eprintln!(
             "training failed: {e:#}\n\
@@ -129,7 +130,9 @@ fn main() {
     let seed = args.get_usize("seed", 7).unwrap() as u64;
     let threads = args.get_usize("threads", 4).unwrap();
 
-    let (s_in, s_dy) = pjrt_training_phase(steps, seed);
+    // The same --threads width drives both the kernel-routed training
+    // phase and the explicit triad below.
+    let (s_in, s_dy) = pjrt_training_phase(steps, seed, threads);
 
     // Feed the measured sparsities into the Skylake-X model.
     let m = Machine::skylake_x();

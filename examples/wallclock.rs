@@ -92,4 +92,9 @@ fn main() {
     if let Some(s) = report.best_maskloop_speedup(0.9, 1) {
         println!("best 1-thread MaskLoop speedup vs dense direct at 90% sparsity: {s:.2}x");
     }
+    for &t in &wcfg.threads {
+        if let Some(s) = report.trainer_step_speedup(t) {
+            println!("kernel-routed trainer step at {t} threads: {s:.2}x vs naive interpreter");
+        }
+    }
 }

@@ -16,16 +16,36 @@
 //! * `speedup_vs_dense_same_threads` — Dense-mode time at the same thread
 //!   count ÷ row time: isolates the skip machinery's benefit from both
 //!   parallelism and loop-structure effects.
+//!
+//! Schema v2 (ISSUE 5) adds two row families:
+//! * `mode: "direct_pre"` (BWI only) — the dense baseline over the
+//!   pre-transposed filter copy, removing the per-tap gather that made the
+//!   original `direct` BWI unfairly slow;
+//! * `component: "trainer_step"` — median ns per **full train step** at
+//!   the paper geometry through the offline artifact, `naive-interp`
+//!   (interpreter-only) vs `kernel-routed` (SparseTrain executor) at each
+//!   thread count; `speedup_vs_direct1` on these rows is the speedup over
+//!   the naive interpreter, the trainer-level perf trajectory. (Release
+//!   builds only; `sparsity` is recorded as 0.0 — the routed step measures
+//!   its operand sparsity live per convolution.)
 
-use crate::bench::{bench, BenchConfig, BenchResult};
+use crate::bench::{bench, black_box, BenchConfig, BenchResult};
 use crate::coordinator::scheduler::Scheduler;
+use crate::kernels::layers::synthetic_batch;
 use crate::kernels::simd::{self, Backend};
 use crate::kernels::{direct, sparse_bwi, sparse_bww, sparse_fwd};
 use crate::kernels::{Component, ConvConfig, KernelStats, Scratch, SkipMode};
 use crate::nets::table2::{layer_by_name, NamedLayer};
+use crate::runtime::artifacts::{geometry, ArtifactSet, TRAIN_STEP};
+use crate::runtime::pjrt::{literal_f32, literal_i32, Runtime};
 use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::util::prng::Xorshift;
 use crate::V;
+
+/// The report schema version. v2 (ISSUE 5) adds the pre-transposed dense
+/// BWI baseline rows (`mode: "direct_pre"`) and the end-to-end
+/// `trainer_step` rows (naive-interp vs kernel-routed median ns/step).
+pub const SCHEMA: &str = "sparsetrain-wallclock-v2";
 
 /// Default Table-2 layer set: three 3×3 shapes (one strided) and one 1×1,
 /// small enough that a full sweep finishes in minutes, large enough that
@@ -284,6 +304,134 @@ fn time_cell(
     }
 }
 
+/// Whether the end-to-end `trainer_step` rows run: release builds by
+/// default, overridable either way with `SPARSETRAIN_TRAINER_BENCH`
+/// (`1`/`on` forces them into debug runs, `0`/`off` suppresses them) — an
+/// interpreted + kernel-routed train step in an unoptimized build is too
+/// slow to put in every `cargo test`, and debug timings must not enter
+/// the trajectory.
+pub fn trainer_rows_enabled() -> bool {
+    match std::env::var("SPARSETRAIN_TRAINER_BENCH") {
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "off" | "false"),
+        Err(_) => build_profile() == "release",
+    }
+}
+
+/// Median ns per full train step at the paper geometry, through the
+/// offline fallback artifact: `routed_threads = None` times the naive
+/// interpreter, `Some(t)` the kernel-routed runtime at `t` scheduler
+/// threads. `None` result = environment failure (scratch dir unwritable).
+fn time_trainer_step(routed_threads: Option<usize>, bcfg: &BenchConfig) -> Option<f64> {
+    use geometry::{CLASSES, C1, C2, C_IN, HW, N};
+    // A "kernel-routed" row must actually be kernel-routed: when the
+    // process-wide kill switch disables routing, cpu_with_threads would
+    // silently hand back a naive runtime and the trajectory would record
+    // mislabeled data — skip the routed rows instead.
+    if routed_threads.is_some() && !crate::runtime::executor::routing_enabled() {
+        return None;
+    }
+    let tag = match routed_threads {
+        None => "naive".to_string(),
+        Some(t) => format!("routed-t{t}"),
+    };
+    // Per-call unique scratch dir: scratch_fallback wipes on creation, and
+    // two tests in one process may time trainer steps concurrently.
+    static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let arts = ArtifactSet::scratch_fallback(&format!("wallclock-{tag}-{seq}")).ok()?;
+    let mut rt = match routed_threads {
+        None => Runtime::cpu_naive(&arts.dir).ok()?,
+        Some(t) => Runtime::cpu_with_threads(&arts.dir, t).ok()?,
+    };
+    let exe = rt.load(TRAIN_STEP).ok()?;
+
+    // One fixed batch + parameter set (same He init as the trainer), so
+    // every sample times identical work on both runtimes.
+    let mut rng = Xorshift::new(0xBE11);
+    let he = |rng: &mut Xorshift, n: usize, fan_in: usize| -> Vec<f32> {
+        let bound = (2.0 / fan_in as f32).sqrt();
+        (0..n).map(|_| rng.range_f32(-bound, bound)).collect()
+    };
+    let w1 = he(&mut rng, C1 * C_IN * 9, C_IN * 9);
+    let w2 = he(&mut rng, C2 * C1 * 9, C1 * 9);
+    let wfc = he(&mut rng, CLASSES * C2, C2);
+    let bfc = vec![0.0f32; CLASSES];
+    let (x, labels) = synthetic_batch(&mut rng, N, C_IN, HW, CLASSES);
+    let inputs = vec![
+        literal_f32(&w1, &[C1 as i64, C_IN as i64, 3, 3]).ok()?,
+        literal_f32(&w2, &[C2 as i64, C1 as i64, 3, 3]).ok()?,
+        literal_f32(&wfc, &[CLASSES as i64, C2 as i64]).ok()?,
+        literal_f32(&bfc, &[CLASSES as i64]).ok()?,
+        literal_f32(&x.to_nchw(), &[N as i64, C_IN as i64, HW as i64, HW as i64]).ok()?,
+        literal_i32(&labels.iter().map(|&l| l as i32).collect::<Vec<_>>(), &[N as i64]).ok()?,
+    ];
+    let r = bench(&format!("trainer_step {tag}"), bcfg, || {
+        black_box(exe.run(&inputs).expect("train step"));
+    });
+    let ns = r.ns();
+    let _ = std::fs::remove_dir_all(&arts.dir);
+    Some(ns)
+}
+
+/// Dense-equivalent FLOPs of one train step's five convolutions (conv1
+/// appears in FWD + its weight gradient, conv2 in FWD + input gradient +
+/// weight gradient) — the denominator for the trainer rows' GFLOP/s.
+fn trainer_step_flops() -> f64 {
+    use geometry::{C1, C2, C_IN, HW, N};
+    let conv1 = ConvConfig::square(N, C_IN, C1, HW, 3, 1);
+    let conv2 = ConvConfig::square(N, C1, C2, HW, 3, 1);
+    (2 * conv1.fwd_flops() + 3 * conv2.fwd_flops()) as f64
+}
+
+/// Append the end-to-end `trainer_step` rows: one naive-interpreter
+/// baseline plus one kernel-routed row per requested thread count.
+fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec<WallclockRecord>) {
+    let flops = trainer_step_flops();
+    let Some(naive_ns) = time_trainer_step(None, bcfg) else {
+        println!("trainer_step: scratch artifacts unavailable; rows skipped");
+        return;
+    };
+    println!(
+        "{:<12} trainer_step naive-interp   t=1  {:>12.0} ns  {:>7.2} GF/s",
+        "paper", naive_ns, flops / naive_ns
+    );
+    records.push(WallclockRecord {
+        layer: "paper".to_string(),
+        rs: 3,
+        component: "trainer_step",
+        mode: "naive-interp",
+        sparsity: 0.0,
+        threads: 1,
+        median_ns: naive_ns,
+        gflops: flops / naive_ns,
+        speedup_vs_direct1: 1.0,
+        speedup_vs_dense_same_threads: 1.0,
+    });
+    for &t in threads {
+        let Some(ns) = time_trainer_step(Some(t), bcfg) else { continue };
+        println!(
+            "{:<12} trainer_step kernel-routed  t={t}  {:>12.0} ns  {:>7.2} GF/s  \
+             {:>5.2}x vs naive",
+            "paper",
+            ns,
+            flops / ns,
+            naive_ns / ns
+        );
+        records.push(WallclockRecord {
+            layer: "paper".to_string(),
+            rs: 3,
+            component: "trainer_step",
+            mode: "kernel-routed",
+            sparsity: 0.0,
+            threads: t,
+            median_ns: ns,
+            gflops: flops / ns,
+            speedup_vs_direct1: naive_ns / ns,
+            speedup_vs_dense_same_threads: naive_ns / ns,
+        });
+    }
+}
+
 /// Run the full sweep and build the report. Prints one line per cell so
 /// long runs show progress.
 pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
@@ -313,6 +461,40 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                 speedup_vs_direct1: 1.0,
                 speedup_vs_dense_same_threads: 1.0,
             });
+
+            // Fair dense-BWI baseline (ISSUE 5 satellite): the
+            // pre-transposed filter copy, no per-tap gather.
+            if comp == Component::Bwi {
+                let cfg = dense_fx.cfg;
+                let mut st = KernelStats::new();
+                let pre_ns = {
+                    let (dy, gt, dd) = (&dense_fx.dy, &dense_fx.gt, &mut dense_fx.dd);
+                    bench(&format!("BWI direct_pre t1 {}", nl.name), &wcfg.bench, || {
+                        dd.fill_zero();
+                        direct::bwi_pre_with(&cfg, dy, gt, dd, bk, &mut st);
+                    })
+                    .ns()
+                };
+                println!(
+                    "{:<12} {} direct_pre        t=1  {:>12.0} ns  {:>7.2} GF/s",
+                    nl.name,
+                    comp.name(),
+                    pre_ns,
+                    flops / pre_ns
+                );
+                records.push(WallclockRecord {
+                    layer: nl.name.to_string(),
+                    rs: nl.cfg.r,
+                    component: comp.name(),
+                    mode: "direct_pre",
+                    sparsity: 0.0,
+                    threads: 1,
+                    median_ns: pre_ns,
+                    gflops: flops / pre_ns,
+                    speedup_vs_direct1: direct_ns / pre_ns,
+                    speedup_vs_dense_same_threads: 1.0,
+                });
+            }
 
             for &sparsity in &wcfg.sparsities {
                 let mut fx = Fixture::new(&nl.cfg, sparsity, wcfg.seed);
@@ -346,6 +528,11 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
             }
         }
     }
+    // End-to-end trainer-step rows (ISSUE 5 satellite): tie the perf
+    // trajectory to `Trainer`, not just isolated kernels.
+    if trainer_rows_enabled() {
+        trainer_step_records(&wcfg.threads, &wcfg.bench, &mut records);
+    }
     WallclockReport {
         backend: bk.name(),
         profile: build_profile(),
@@ -360,7 +547,7 @@ impl WallclockReport {
     pub fn to_json(&self) -> String {
         let mut out = String::with_capacity(4096 + self.records.len() * 256);
         out.push_str("{\n");
-        out.push_str("  \"schema\": \"sparsetrain-wallclock-v1\",\n");
+        out.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
         out.push_str(&format!("  \"backend\": \"{}\",\n", self.backend));
         out.push_str(&format!("  \"profile\": \"{}\",\n", self.profile));
         out.push_str(&format!("  \"v\": {V},\n"));
@@ -396,6 +583,19 @@ impl WallclockReport {
         std::fs::rename(&tmp, path)
     }
 
+    /// Kernel-routed trainer-step speedup over the naive interpreter at
+    /// the given thread count — the ISSUE 5 acceptance readout (≥ 2× at 2
+    /// threads on the paper geometry). `None` when the trainer rows were
+    /// not recorded (debug builds).
+    pub fn trainer_step_speedup(&self, threads: usize) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| {
+                r.component == "trainer_step" && r.mode == "kernel-routed" && r.threads == threads
+            })
+            .map(|r| r.speedup_vs_direct1)
+    }
+
     /// Best `speedup_vs_direct1` over MaskLoop rows of **3×3 layers** at
     /// the given sparsity and thread count — the acceptance-criterion
     /// readout (1×1 rows are excluded: the criterion names 3×3 layers).
@@ -423,16 +623,42 @@ mod tests {
         let wcfg = WallclockConfig::smoke();
         let report = run(&wcfg);
         // 3 components × (1 direct + 2 sparsities × 2 threads × 3 modes)
-        assert_eq!(report.records.len(), 3 * (1 + 2 * 2 * 3));
+        // + 1 direct_pre BWI baseline, + the trainer rows (1 naive + one
+        // per thread count) in release builds
+        let kernel_rows = 3 * (1 + 2 * 2 * 3) + 1;
+        let routed_rows = if crate::runtime::executor::routing_enabled() {
+            wcfg.threads.len()
+        } else {
+            0
+        };
+        let trainer_rows = if trainer_rows_enabled() { 1 + routed_rows } else { 0 };
+        assert_eq!(report.records.len(), kernel_rows + trainer_rows);
         assert!(report.records.iter().all(|r| r.median_ns > 0.0 && r.gflops > 0.0));
         assert!(report.records.iter().all(|r| r.speedup_vs_direct1 > 0.0));
         assert!(!report.backend.is_empty());
         assert!(report.best_maskloop_speedup(0.9, 1).is_some());
+        assert!(report
+            .records
+            .iter()
+            .any(|r| r.component == "BWI" && r.mode == "direct_pre" && r.threads == 1));
+        if trainer_rows_enabled() {
+            assert!(
+                report
+                    .records
+                    .iter()
+                    .any(|r| r.component == "trainer_step" && r.mode == "naive-interp"),
+                "trainer baseline row missing"
+            );
+            if crate::runtime::executor::routing_enabled() {
+                assert!(report.trainer_step_speedup(2).is_some(), "routed trainer rows missing");
+            }
+        }
 
         let json = report.to_json();
-        assert!(json.contains("\"schema\": \"sparsetrain-wallclock-v1\""));
+        assert!(json.contains(&format!("\"schema\": \"{SCHEMA}\"")));
         assert!(json.contains("\"backend\""));
         assert!(json.contains("MaskLoop"));
+        assert!(json.contains("direct_pre"));
         // structurally sound: balanced braces/brackets, one object per record
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
@@ -458,7 +684,7 @@ mod tests {
         let report = run(&WallclockConfig::smoke());
         report.write_json(&path).expect("write BENCH_kernels.json");
         let body = std::fs::read_to_string(&path).unwrap();
-        assert!(body.contains("sparsetrain-wallclock-v1"));
+        assert!(body.contains(SCHEMA));
         assert!(body.contains(&format!("\"profile\": \"{}\"", build_profile())));
     }
 }

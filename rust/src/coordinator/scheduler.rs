@@ -48,11 +48,17 @@
 //! thread count or chunk assignment. The per-sweep filter-footprint floor
 //! is applied once after the merge, mirroring the serial kernels.
 //!
-//! **Zero-alloc hot path.** Each run hoists the register plan, the sweep
-//! geometry / tap tables and the SIMD [`Backend`] out of the task bodies,
-//! and [`ThreadPool::for_chunk_slices_with`] gives every worker thread one
+//! **Zero-alloc hot path on persistent workers.** Each run hoists the
+//! register plan, the sweep geometry / tap tables and the SIMD
+//! [`Backend`] out of the task bodies, and
+//! [`ThreadPool::for_chunk_slices_with`] gives every worker thread one
 //! reusable [`Scratch`] accumulator — no task allocates, re-plans or
-//! re-detects CPU features. The backend is fixed at scheduler construction
+//! re-detects CPU features. Since ISSUE 5 the pool's workers are
+//! **persistent** (spawned once, parked on a condvar between launches), so
+//! repeated launches — e.g. the five convolutions of every kernel-routed
+//! trainer step — stop paying a thread spawn/join round trip per call;
+//! the scheduler itself still contains zero `unsafe` and runs under the
+//! Miri CI gate. The backend is fixed at scheduler construction
 //! ([`Scheduler::with_backend`] pins it for parity tests), and since every
 //! backend computes bit-identical fused multiply-adds, the serial-parity
 //! and cross-thread determinism guarantees above are backend-independent.

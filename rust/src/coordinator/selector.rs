@@ -3,7 +3,7 @@
 //! at intervals during training and then dynamically select the best
 //! implementation").
 
-use crate::kernels::{winograd, onebyone, Component, ConvConfig};
+use crate::kernels::{winograd, onebyone, Component, ConvConfig, SkipMode};
 use crate::sim::{Algorithm, Machine};
 use crate::sparsity::SparsityProfiler;
 use crate::tensor::ActTensor;
@@ -143,6 +143,19 @@ impl Selector {
         }
     }
 
+    /// Skip mode for a kernel-routed convolution launch (ISSUE 5): run the
+    /// combined policy at the measured operand sparsity — when the cost
+    /// model (at this selector's thread count) says the sparsity machinery
+    /// pays for itself, use the Algorithm-3 mask loop; otherwise run the
+    /// Dense loop, which is the same SIMD row-sweep without zero checks.
+    /// Either way the launch stays parallel and bit-deterministic.
+    pub fn skip_mode(&self, cfg: &ConvConfig, comp: Component, sparsity: f64) -> SkipMode {
+        match self.select(AlgoPolicy::Combined, cfg, comp, sparsity, true) {
+            Algorithm::SparseTrain => SkipMode::MaskLoop,
+            _ => SkipMode::Dense,
+        }
+    }
+
     /// Dynamic selection from live profiler data (recent-window sparsity),
     /// falling back to 0.5 (the ReLU prior) with no observations.
     pub fn select_dynamic(
@@ -210,6 +223,16 @@ mod tests {
         // unknown layer → prior 0.5 → winograd or sparse, but never im2col
         let alg2 = s.select_dynamic(&cfg, Component::Fwd, "unknown", &prof, true);
         assert_ne!(alg2, Algorithm::Im2col);
+    }
+
+    #[test]
+    fn skip_mode_tracks_sparsity() {
+        // High sparsity on a big 3x3 layer → the mask loop; a dense operand
+        // (sparsity 0) must never pick the skip machinery over Winograd.
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let s = sel();
+        assert_eq!(s.skip_mode(&cfg, Component::Fwd, 0.9), SkipMode::MaskLoop);
+        assert_eq!(s.skip_mode(&cfg, Component::Fwd, 0.0), SkipMode::Dense);
     }
 
     #[test]

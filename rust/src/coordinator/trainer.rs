@@ -5,6 +5,12 @@
 //! the vendored mini-HLO interpreter. Pre-built artifacts in the same
 //! reference grammar take precedence (see `runtime::artifacts` for the
 //! real-XLA caveat).
+//!
+//! Since ISSUE 5 the interpreter's convolutions are **kernel-routed**: the
+//! runtime installs `runtime::executor::ConvRouter`, so the train step's
+//! FWD/BWI/BWW convolutions run on the SparseTrain SIMD kernels through
+//! the persistent-thread-pool scheduler ([`TrainerConfig::threads`] wide),
+//! with the selector picking the skip mode from measured sparsity.
 
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::kernels::layers::synthetic_batch;
@@ -20,11 +26,15 @@ pub struct TrainerConfig {
     pub steps: usize,
     pub seed: u64,
     pub log_every: usize,
+    /// Worker threads for the kernel-routed convolution executor
+    /// (`0` = host parallelism). Ignored when conv routing is disabled
+    /// via `SPARSETRAIN_CONV_ROUTE=off`.
+    pub threads: usize,
 }
 
 impl Default for TrainerConfig {
     fn default() -> Self {
-        TrainerConfig { steps: 200, seed: 7, log_every: 25 }
+        TrainerConfig { steps: 200, seed: 7, log_every: 25, threads: 0 }
     }
 }
 
@@ -64,7 +74,12 @@ impl Trainer {
             "artifacts missing: {:?}; run `make artifacts` first",
             artifacts.missing()
         );
-        let runtime = Runtime::cpu(&artifacts.dir)?;
+        // Kernel-routed by default: the runtime installs the SparseTrain
+        // conv executor (persistent thread pool, selector-chosen skip
+        // mode), so every train step's five convolutions run
+        // multi-threaded and sparsity-exploiting instead of through the
+        // interpreter's naive loop.
+        let runtime = Runtime::cpu_with_threads(&artifacts.dir, cfg.threads)?;
         Ok(Trainer { runtime, cfg, metrics: MetricsRegistry::new() })
     }
 
@@ -183,7 +198,8 @@ mod tests {
         let arts = ArtifactSet::scratch_fallback("trainer-unit").unwrap();
         assert!(arts.complete(), "fallback must satisfy the manifest");
         let mut t =
-            Trainer::new(&arts, TrainerConfig { steps: 5, seed: 1, log_every: 0 }).unwrap();
+            Trainer::new(&arts, TrainerConfig { steps: 5, seed: 1, log_every: 0, threads: 2 })
+                .unwrap();
         let report = t.run().unwrap();
         assert_eq!(report.losses.len(), 5);
         assert!(report.losses.iter().all(|l| l.is_finite()));

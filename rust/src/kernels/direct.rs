@@ -284,6 +284,113 @@ pub fn bwi_with(
         stats.filter_bytes_per_sweep.max((cfg.r * plan.q * V * 4) as u64);
 }
 
+/// Dense direct BWI over a **pre-transposed** filter (ISSUE 5 satellite):
+/// `gt` is the channel-transposed copy ([`FilterTensor::transpose_channels`],
+/// the same tensor the sparse BWI kernel keeps), so the FMA memory operand
+/// is a contiguous C-vector straight from the tiled layout instead of the
+/// V-element gather [`bwi`] performs per tap. This is the *fair* dense
+/// baseline for BWI speedup numbers — the paper's tuned dense kernels also
+/// hold a transposed filter copy — and it is bit-identical to [`bwi`]
+/// (same FMAs, same order; only the operand addressing changes).
+pub fn bwi_pre(
+    cfg: &ConvConfig,
+    dy: &ActTensor,
+    gt: &FilterTensor,
+    dd: &mut ActTensor,
+    stats: &mut KernelStats,
+) {
+    bwi_pre_with(cfg, dy, gt, dd, simd::dispatch(), stats);
+}
+
+/// [`bwi_pre`] with an explicit backend (wallclock harness entry point).
+pub fn bwi_pre_with(
+    cfg: &ConvConfig,
+    dy: &ActTensor,
+    gt: &FilterTensor,
+    dd: &mut ActTensor,
+    bk: Backend,
+    stats: &mut KernelStats,
+) {
+    cfg.validate().expect("invalid conv config");
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    debug_assert_eq!((dy.n, dy.c, dy.h, dy.w), (cfg.n, cfg.k, oh, ow));
+    debug_assert_eq!((gt.k, gt.c, gt.s, gt.r), (cfg.c, cfg.k, cfg.s, cfg.r));
+    debug_assert_eq!((dd.n, dd.c, dd.h, dd.w), (cfg.n, cfg.c, cfg.h, cfg.w));
+
+    let plan = plan_fwd(cfg.c, cfg.r); // accumulators are C-vectors in BWI
+    let qv = plan.q / V;
+    let cq_count = cfg.c / plan.q;
+    let kb_count = cfg.k / V;
+
+    for i in 0..cfg.n {
+        for oy in 0..oh {
+            for s in 0..cfg.s {
+                let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+                if iy < 0 || iy >= cfg.h as isize {
+                    continue;
+                }
+                let iy = iy as usize;
+                for qb in 0..cq_count {
+                    for kb in 0..kb_count {
+                        for j in 0..qv {
+                            let cb = qb * qv + j;
+                            let ddoff = dd.vec_offset(i, cb, iy, 0);
+                            for ox in 0..ow {
+                                let dyvec = dy.vec(i, kb, oy, ox);
+                                for kv in 0..V {
+                                    let gval = dyvec[kv];
+                                    for r in 0..cfg.r {
+                                        let ix = ox as isize * cfg.stride_o as isize + r as isize
+                                            - cfg.pad_w as isize;
+                                        if ix < 0 || ix >= cfg.w as isize {
+                                            continue;
+                                        }
+                                        // pre-transposed: the C-vector is a
+                                        // contiguous slice of gt — no gather
+                                        let gvec = gt.vec(cb, kb, s, r, kv);
+                                        let ddrow = &mut dd.data_mut()
+                                            [ddoff + ix as usize * V..ddoff + ix as usize * V + V];
+                                        bk.axpy_v(ddrow, gval, gvec);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Same accounting as the gathering baseline: identical FMA/load/store
+    // counts, only the filter addressing differs.
+    let valid_rows: usize = (0..oh)
+        .map(|oy| {
+            (0..cfg.s)
+                .filter(|&s| {
+                    let iy = oy as isize * cfg.stride_p as isize + s as isize - cfg.pad_h as isize;
+                    iy >= 0 && iy < cfg.h as isize
+                })
+                .count()
+        })
+        .sum();
+    let sweeps = (cfg.n * valid_rows * cq_count * kb_count) as u64;
+    stats.sweeps += sweeps;
+    stats.loads_in += sweeps * ow as u64;
+    let mut taps_total = 0u64;
+    for ox in 0..ow {
+        for r in 0..cfg.r {
+            let ix = ox as isize * cfg.stride_o as isize + r as isize - cfg.pad_w as isize;
+            if ix >= 0 && ix < cfg.w as isize {
+                taps_total += 1;
+            }
+        }
+    }
+    stats.fma_vec += sweeps * taps_total * V as u64 * qv as u64;
+    stats.loads_out += (cfg.n * cfg.h * cq_count * cfg.w * qv) as u64;
+    stats.stores_out += (cfg.n * cfg.h * cq_count * cfg.w * qv) as u64;
+    stats.filter_bytes_per_sweep =
+        stats.filter_bytes_per_sweep.max((cfg.r * plan.q * V * 4) as u64);
+}
+
 /// Dense BWW inner lane (same code shape as the sparse kernel's lane body
 /// so the host baseline compiles to comparable SIMD).
 #[inline(always)]
@@ -479,6 +586,36 @@ mod tests {
                 allclose(&dd.to_nchw(), &ddref, 1e-4, 1e-5),
                 "stride={stride} mismatch"
             );
+        }
+    }
+
+    /// The pre-transposed dense BWI issues the same FMAs in the same order
+    /// as the gathering baseline — bit-identical outputs and identical
+    /// counters — while reading contiguous C-vectors.
+    #[test]
+    fn bwi_pre_bit_matches_gathering_baseline() {
+        for stride in [1, 2] {
+            let cfg = ConvConfig::square(2, 32, 16, 8, 3, stride);
+            let mut rng = Xorshift::new(29);
+            let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            dy.fill_uniform(&mut rng, -1.0, 1.0);
+            let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+            g.fill_uniform(&mut rng, -0.5, 0.5);
+            let gt = g.transpose_channels();
+
+            let mut dd_gather = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let mut st_gather = KernelStats::new();
+            bwi(&cfg, &dy, &g, &mut dd_gather, &mut st_gather);
+
+            let mut dd_pre = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+            let mut st_pre = KernelStats::new();
+            bwi_pre(&cfg, &dy, &gt, &mut dd_pre, &mut st_pre);
+
+            assert_eq!(dd_pre.data(), dd_gather.data(), "stride={stride}");
+            assert_eq!(st_pre, st_gather, "stride={stride}");
+
+            let ddref = reference::conv_bwi(&cfg, &dy.to_nchw(), &g.to_kcsr());
+            assert!(allclose(&dd_pre.to_nchw(), &ddref, 1e-4, 1e-5), "stride={stride}");
         }
     }
 

@@ -58,6 +58,22 @@
 //!   the full contract (who splits, who owns, why it's safe).
 //! * [`runtime`] — PJRT client wrapper that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them.
+//!
+//!   **Kernel-routed execution (ISSUE 5).** The offline interpreter is no
+//!   longer naive-only: [`runtime::executor::ConvRouter`] plugs into the
+//!   vendored crate's convolution hook and dispatches the three
+//!   SparseTrain-executable conv forms — FWD (`bf01_oi01->bf01`), BWI
+//!   (reversed-filter `bf01_io01->bf01`) and BWW (batch-contracting
+//!   `fb01_io01->bf01`) — to [`coordinator::Scheduler`] over the
+//!   explicit-SIMD sparse kernels, with the thread-count-aware
+//!   [`coordinator::Selector`] choosing the skip mode from measured
+//!   operand sparsity. Configs outside the envelope fall back to the
+//!   interpreter's reference loop bit-identically
+//!   (`rust/tests/conv_route_parity.rs` pins both halves), so
+//!   `cargo run --release -- train` is multi-threaded and
+//!   sparsity-exploiting end to end. The [`util::threadpool::ThreadPool`]
+//!   underneath keeps **persistent workers** parked between launches, so
+//!   small launches no longer pay per-call thread-spawn overhead.
 //! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`,
 //!   plus [`bench::wallclock`]: the real-kernel wall-clock sweep behind
 //!   `cargo run --release --example wallclock` → `BENCH_kernels.json`.

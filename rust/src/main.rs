@@ -29,6 +29,8 @@ COMMANDS
   table3             register-budget plans (Q/T/pipelining)
   sweep              one layer  [--layer NAME] [--csv]
   train              run the PJRT trainer  [--steps N] [--seed N]
+                     (--threads N sizes the kernel-routed conv executor;
+                      default 0 = host parallelism)
   plan               register plan  [--k N] [--r N]
 
 OPTIONS
@@ -122,6 +124,9 @@ fn main() {
         Some("train") => {
             let steps = args.get_usize("steps", 200).unwrap_or(200);
             let seed = args.get_usize("seed", 7).unwrap_or(7) as u64;
+            // For the trainer, --threads sizes the kernel-routed conv
+            // executor (default 0 = host parallelism), not the cost model.
+            let trainer_threads = args.get_usize("threads", 0).unwrap_or(0);
             // Use real artifacts when present; otherwise materialize the
             // Rust-emitted reference HLO so training works offline.
             let artifacts = match ArtifactSet::bootstrap_offline() {
@@ -131,7 +136,10 @@ fn main() {
                     std::process::exit(1);
                 }
             };
-            match Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20 }) {
+            match Trainer::new(
+                &artifacts,
+                TrainerConfig { steps, seed, log_every: 20, threads: trainer_threads },
+            ) {
                 Ok(mut t) => match t.run() {
                     Ok(report) => {
                         report.profiler.report().print();

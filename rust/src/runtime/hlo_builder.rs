@@ -388,6 +388,31 @@ pub fn kernel_fwd_hlo(g: &Geometry) -> String {
     out
 }
 
+/// A single-convolution probe module (no artifact marker — this is test
+/// plumbing, not a fallback artifact): `ROOT = convolution(lhs, rhs)` with
+/// the given shapes and raw `window=`/`dim_labels=` attribute text. Used
+/// by the conv-routing parity suite to drive the interpreter — naive and
+/// kernel-routed — over arbitrary geometries and label permutations.
+pub fn conv_module_hlo(
+    lhs: &[usize],
+    rhs: &[usize],
+    out: &[usize],
+    window: &str,
+    dim_labels: &str,
+) -> String {
+    let mut text = String::with_capacity(256);
+    text.push_str("HloModule conv_probe\n\nENTRY %conv_probe {\n");
+    let _ = writeln!(text, "  %lhs = {} parameter(0)", sh(lhs));
+    let _ = writeln!(text, "  %rhs = {} parameter(1)", sh(rhs));
+    let _ = writeln!(
+        text,
+        "  ROOT %out = {} convolution(%lhs, %rhs), window={window}, dim_labels={dim_labels}",
+        sh(out)
+    );
+    text.push_str("}\n");
+    text
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -425,6 +450,42 @@ mod tests {
         match &entry.instrs[entry.root].shape {
             xla::hlo::ShapeDecl::Tuple(shapes) => assert_eq!(shapes.len(), 7),
             other => panic!("root must be a tuple, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn miri_conv_probe_modules_compile_for_all_three_forms() {
+        // (lhs, rhs, out, window, labels) for FWD / BWI / BWW probes at a
+        // tiny geometry; each must parse and shape-check.
+        let cases: [(&[usize], &[usize], &[usize], &str, &str); 3] = [
+            (
+                &[2, 4, 5, 5],
+                &[4, 4, 3, 3],
+                &[2, 4, 5, 5],
+                "{size=3x3 pad=1_1x1_1}",
+                "bf01_oi01->bf01",
+            ),
+            (
+                &[2, 4, 5, 5],
+                &[4, 4, 3, 3],
+                &[2, 4, 5, 5],
+                "{size=3x3 pad=1_1x1_1}",
+                "bf01_io01->bf01",
+            ),
+            (
+                &[2, 4, 5, 5],
+                &[2, 4, 5, 5],
+                &[4, 4, 3, 3],
+                "{size=5x5 pad=1_1x1_1}",
+                "fb01_io01->bf01",
+            ),
+        ];
+        for (lhs, rhs, out, window, labels) in cases {
+            let text = conv_module_hlo(lhs, rhs, out, window, labels);
+            let module = xla::hlo::parse_module(&text)
+                .unwrap_or_else(|e| panic!("{labels} probe fails to parse: {e}"));
+            xla::eval::validate(&module)
+                .unwrap_or_else(|e| panic!("{labels} probe fails validation: {e}"));
         }
     }
 

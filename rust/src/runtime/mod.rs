@@ -8,10 +8,22 @@
 //! the reference HLO grammar/op subset — arbitrary XLA text dumps need
 //! the real `xla` crate linked in. Set `SPARSETRAIN_ARTIFACTS` to point
 //! the runtime at a different artifacts directory.
+//!
+//! **Kernel-routed convolutions (ISSUE 5).** The interpreter is no longer
+//! a naive-only evaluator on this path: [`executor::ConvRouter`] plugs
+//! into the vendored crate's convolution hook and dispatches the three
+//! SparseTrain-executable conv forms (FWD / BWI / BWW, as emitted by
+//! [`hlo_builder`]) to the explicit-SIMD sparse kernels running on the
+//! persistent-thread-pool scheduler, with the thread-count-aware selector
+//! picking the skip mode from the measured operand sparsity. Anything
+//! outside the envelope falls back to the naive loop bit-identically.
+//! `SPARSETRAIN_CONV_ROUTE=off` disables routing process-wide.
 
 pub mod artifacts;
+pub mod executor;
 pub mod hlo_builder;
 pub mod pjrt;
 
 pub use artifacts::ArtifactSet;
+pub use executor::ConvRouter;
 pub use pjrt::{Executable, Runtime};

@@ -1,9 +1,19 @@
 //! Thin wrapper over the `xla` crate: PJRT CPU client + compiled
 //! executables keyed by artifact name.
+//!
+//! By default the client is built with the kernel-routed convolution
+//! executor installed ([`super::executor::ConvRouter`]): every
+//! SparseTrain-executable `convolution` in a loaded artifact runs through
+//! the sparse kernels on the persistent-thread-pool scheduler instead of
+//! the interpreter's naive loop. `SPARSETRAIN_CONV_ROUTE=off` (or
+//! [`Runtime::cpu_naive`]) restores the all-interpreter behavior — the A/B
+//! lever the parity tests and the trainer-step wallclock rows use.
 
+use super::executor::{self, ConvRouter};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// A compiled HLO module ready to execute.
 pub struct Executable {
@@ -35,18 +45,56 @@ pub struct Runtime {
     dir: PathBuf,
     cache: HashMap<String, usize>,
     loaded: Vec<Executable>,
+    router: Option<Arc<ConvRouter>>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    /// Create a CPU PJRT client rooted at `artifacts_dir`, with the
+    /// kernel-routed convolution executor sized to the host parallelism
+    /// (unless `SPARSETRAIN_CONV_ROUTE=off`).
     pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+        Self::cpu_with_threads(artifacts_dir, 0)
+    }
+
+    /// [`Runtime::cpu`] with an explicit scheduler width (`0` = host
+    /// parallelism). The router — and with it one persistent thread pool —
+    /// lives as long as the runtime.
+    pub fn cpu_with_threads<P: AsRef<Path>>(artifacts_dir: P, threads: usize) -> Result<Runtime> {
+        let mut client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let router = if executor::routing_enabled() {
+            let router = Arc::new(ConvRouter::new(threads));
+            client.set_conv_executor(executor::hook(Arc::clone(&router)));
+            Some(router)
+        } else {
+            None
+        };
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+            loaded: Vec::new(),
+            router,
+        })
+    }
+
+    /// A runtime with **no** convolution routing: every conv runs the
+    /// interpreter's naive reference loop. Baseline for parity tests and
+    /// the `trainer_step` wallclock rows.
+    pub fn cpu_naive<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
             client,
             dir: artifacts_dir.as_ref().to_path_buf(),
             cache: HashMap::new(),
             loaded: Vec::new(),
+            router: None,
         })
+    }
+
+    /// The installed convolution router, if any (for introspection:
+    /// routed/fallback call counts, thread width).
+    pub fn conv_router(&self) -> Option<&ConvRouter> {
+        self.router.as_deref()
     }
 
     pub fn platform(&self) -> String {
@@ -109,6 +157,12 @@ mod tests {
     fn cpu_client_comes_up() {
         let rt = Runtime::cpu("artifacts").unwrap();
         assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        // default runtime carries a conv router (unless env-disabled)
+        if super::executor::routing_enabled() {
+            assert!(rt.conv_router().is_some());
+            assert!(rt.conv_router().unwrap().threads() >= 1);
+        }
+        assert!(Runtime::cpu_naive("artifacts").unwrap().conv_router().is_none());
     }
 
     #[test]

@@ -1,48 +1,111 @@
 //! A work-stealing-free thread pool (offline substitute for `rayon`), used
 //! by the coordinator's row-sweep scheduler.
 //!
-//! Two primitives:
+//! **Persistent workers (ISSUE 5).** Earlier revisions ran the parallel-for
+//! primitives on `std::thread::scope`, spawning fresh OS threads per call.
+//! That was safe and simple but charged every scheduler launch a
+//! thread-spawn/join round trip — measurable on small layers, and paid five
+//! times per kernel-routed trainer step. All primitives now run on one set
+//! of persistent worker threads, spawned lazily on first use and **parked
+//! on a condvar between launches**; a launch hands the parked workers a
+//! borrowed job through a [`Launch`] handoff cell and blocks until every
+//! participant has finished, so the borrow can never outlive the call.
+//!
+//! Primitives:
 //!
 //! * [`ThreadPool::submit`] / [`ThreadPool::wait_idle`] — fire-and-forget
-//!   `'static` tasks on persistent worker threads (a mutex+condvar injector
-//!   queue). Worker threads wrap each task in `catch_unwind`, so a
-//!   panicking task can neither kill a worker nor wedge `wait_idle`; the
-//!   panic count is available via [`ThreadPool::panicked_tasks`].
+//!   `'static` tasks (a mutex+condvar injector queue). Worker threads wrap
+//!   each task in `catch_unwind`, so a panicking task can neither kill a
+//!   worker nor wedge `wait_idle`; the panic count is available via
+//!   [`ThreadPool::panicked_tasks`].
 //! * [`ThreadPool::for_chunks`] — a plain parallel-for: split `0..n` into
 //!   chunks and run a borrowed closure per chunk, blocking until all
-//!   complete. Built on `std::thread::scope`, which (a) lets the closure
-//!   borrow from the caller's stack *safely* (no lifetime transmutes — the
-//!   scope guarantees the threads are joined before the borrow ends) and
-//!   (b) propagates a panic from any chunk to the caller instead of
-//!   deadlocking a completion counter. Chunks are handed out through a
-//!   shared atomic cursor, so at most [`ThreadPool::threads`] chunks run
-//!   concurrently and early-finishing workers pick up the remaining ones
-//!   (the paper's dynamic row-sweep scheduling, §3.2.2).
+//!   complete. Chunks are handed out through a shared atomic cursor, so at
+//!   most [`ThreadPool::threads`] chunks run concurrently and
+//!   early-finishing workers pick up the remaining ones (the paper's
+//!   dynamic row-sweep scheduling, §3.2.2). A panic in any chunk
+//!   propagates to the caller after the remaining in-flight chunks finish,
+//!   and the pool stays usable.
 //! * [`ThreadPool::for_chunk_slices`] — the ownership-passing variant the
 //!   kernel scheduler uses: the caller brings a `&mut [T]` of per-task
 //!   items (e.g. disjoint tensor views) and each chunk worker receives an
-//!   **exclusive `&mut` sub-slice** of it, carved with `split_at_mut`
-//!   before any thread starts. Exclusivity is enforced by the borrow
-//!   checker — no `unsafe`, no aliased `&mut`, nothing for Miri to object
-//!   to. Same cursor-based dynamic chunk assignment and panic propagation
-//!   as [`ThreadPool::for_chunks`].
+//!   **exclusive `&mut` sub-slice** of it, carved with `chunks_mut` before
+//!   any thread starts. Exclusivity is enforced by the borrow checker — no
+//!   aliased `&mut`, nothing for Miri to object to.
 //! * [`ThreadPool::for_chunk_slices_with`] — the same, plus a per-worker
-//!   state value (`init()` once per participating thread, `&mut S` into
-//!   every chunk that worker runs): the zero-alloc-hot-path hook the kernel
-//!   scheduler uses to hand each worker one reusable scratch accumulator.
+//!   state value (`init()` at most once per participating thread, `&mut S`
+//!   into every chunk that worker runs): the zero-alloc-hot-path hook the
+//!   kernel scheduler uses to hand each worker one reusable scratch
+//!   accumulator.
+//!
+//! ## Safety of the borrowed-job handoff
+//!
+//! The *scheduler* stays zero-`unsafe`: disjointness of tensor writes is
+//! still proved by the borrow checker through the carved sub-slices. The
+//! one `unsafe` in this module is the lifetime erasure that lets parked
+//! `'static` worker threads call a stack-borrowed closure: [`broadcast`]
+//! stores `&(dyn Fn() + Sync)` as a raw pointer in an `Arc<Launch>` and
+//! **does not return until every claimed participation has finished**
+//! (tracked by a mutex-guarded count and condvar), so the pointee strictly
+//! outlives every dereference. Publication of the pointer to workers and
+//! the completion signal back to the caller both travel through mutexes,
+//! giving the necessary happens-before edges — the whole module runs under
+//! the Miri CI gate (`util::threadpool` is in the miri filter), which is
+//! exactly the referee for this kind of construction.
+//!
+//! [`broadcast`]: ThreadPool::broadcast
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
+/// Lifetime-erased pointer to a launch's borrowed job closure. Sound to
+/// send across threads because [`ThreadPool::broadcast`] blocks until every
+/// participation finished — see the module docs.
+struct JobPtr(*const (dyn Fn() + Sync));
+
+// SAFETY: the pointee is a `&(dyn Fn() + Sync)` borrowed from the
+// broadcasting caller's stack; `broadcast` does not return (or unwind past
+// its wait loop) until `Launch::pending` reaches zero, i.e. until no worker
+// can dereference the pointer anymore. `Sync` on the pointee makes calling
+// it from several threads at once sound.
+unsafe impl Send for JobPtr {}
+unsafe impl Sync for JobPtr {}
+
+/// One borrowed parallel launch: the job pointer plus completion tracking.
+struct Launch {
+    job: JobPtr,
+    /// Participations handed to workers that have not finished yet.
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload from any worker participation.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// A queued launch with the number of worker participations still to hand
+/// out. Workers claim participations one at a time; the entry leaves the
+/// queue when none remain.
+struct LaunchTicket {
+    state: Arc<Launch>,
+    starts_left: usize,
+}
+
+/// Worker-visible pool state: the submit queue and the launch queue behind
+/// one mutex (no lock-order hazards), plus the shutdown flag.
+struct Inner {
+    queue: std::collections::VecDeque<Task>,
+    launches: std::collections::VecDeque<LaunchTicket>,
+    shutdown: bool,
+}
+
 struct Shared {
-    queue: Mutex<std::collections::VecDeque<Task>>,
+    inner: Mutex<Inner>,
     cv: Condvar,
-    shutdown: AtomicBool,
-    /// Tasks submitted but not yet finished (for `wait_idle`).
+    /// Submitted fire-and-forget tasks not yet finished (for `wait_idle`).
     inflight: AtomicUsize,
     /// Submitted tasks that panicked (they still count as finished).
     panicked: AtomicUsize,
@@ -50,10 +113,26 @@ struct Shared {
     idle_mx: Mutex<()>,
 }
 
-/// Fixed-size thread pool. Persistent workers are spawned lazily on the
-/// first [`ThreadPool::submit`]: the `for_chunks` path uses scoped threads
-/// instead, so schedulers that never submit fire-and-forget work don't
-/// hold idle OS threads parked on the queue condvar.
+enum Work {
+    Task(Task),
+    Launch(Arc<Launch>),
+}
+
+thread_local! {
+    /// Identity of the pool whose worker loop is running on this thread
+    /// (0 = not a worker). Lets [`ThreadPool::broadcast`] detect reentrant
+    /// launches — a parallel-for issued from inside one of this pool's own
+    /// tasks — and run them inline instead of deadlocking on workers that
+    /// can never become free (the scoped-thread implementation this
+    /// replaced spawned fresh threads and so allowed that pattern).
+    static CURRENT_POOL: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Fixed-size thread pool with persistent workers. The workers are spawned
+/// lazily on the first call that needs them ([`ThreadPool::submit`] or any
+/// multi-thread parallel-for) and then **parked between launches** on the
+/// pool condvar — repeated scheduler launches reuse the same OS threads
+/// instead of paying a spawn/join per call.
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Mutex<Vec<JoinHandle<()>>>,
@@ -65,9 +144,12 @@ impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         let n = n.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(std::collections::VecDeque::new()),
+            inner: Mutex::new(Inner {
+                queue: std::collections::VecDeque::new(),
+                launches: std::collections::VecDeque::new(),
+                shutdown: false,
+            }),
             cv: Condvar::new(),
-            shutdown: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
             panicked: AtomicUsize::new(0),
             idle_cv: Condvar::new(),
@@ -108,8 +190,8 @@ impl ThreadPool {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.ensure_workers();
         self.shared.inflight.fetch_add(1, Ordering::SeqCst);
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(Box::new(f));
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.queue.push_back(Box::new(f));
         self.shared.cv.notify_one();
     }
 
@@ -125,6 +207,61 @@ impl ThreadPool {
     /// Number of submitted tasks that panicked since pool creation.
     pub fn panicked_tasks(&self) -> usize {
         self.shared.panicked.load(Ordering::SeqCst)
+    }
+
+    /// Run `work` once on the calling thread and once per `extra` parked
+    /// worker threads, blocking until every invocation has returned. This
+    /// is the core the parallel-for primitives are built on: `work` is the
+    /// per-participant chunk-claiming loop, borrowed from the caller's
+    /// stack.
+    ///
+    /// Panic contract: if any invocation panics, the first payload is
+    /// re-raised on the caller *after* all other invocations finished (a
+    /// panic on the caller's own invocation wins), and the pool stays
+    /// usable afterwards.
+    fn broadcast(&self, extra: usize, work: &(dyn Fn() + Sync)) {
+        // Reentrant launch from one of this pool's own workers: every
+        // other worker may be busy (possibly blocked on *this* call's
+        // siblings), so waiting for them could deadlock. Run the whole
+        // claim loop inline — correct, just not parallel.
+        let reentrant =
+            CURRENT_POOL.with(|c| c.get()) == Arc::as_ptr(&self.shared) as usize;
+        if extra == 0 || reentrant {
+            // Single participant: run inline; a panic unwinds directly.
+            work();
+            return;
+        }
+        self.ensure_workers();
+        let launch = Arc::new(Launch {
+            job: JobPtr(work as *const (dyn Fn() + Sync)),
+            pending: Mutex::new(extra),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner
+                .launches
+                .push_back(LaunchTicket { state: Arc::clone(&launch), starts_left: extra });
+            self.shared.cv.notify_all();
+        }
+        // The caller participates too (so `threads == 1` still makes
+        // progress and small launches don't context-switch).
+        let mine = catch_unwind(AssertUnwindSafe(|| work()));
+        // Do not return — and do not let `work`'s borrow end — before every
+        // worker participation has finished with the job pointer.
+        {
+            let mut pending = launch.pending.lock().unwrap();
+            while *pending != 0 {
+                pending = launch.done.wait(pending).unwrap();
+            }
+        }
+        if let Err(payload) = mine {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = launch.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
     }
 
     /// Parallel-for over `0..n` in up to `chunks` contiguous chunks.
@@ -150,7 +287,7 @@ impl ThreadPool {
         let workers = self.n_threads.min(n_chunks);
         let cursor = AtomicUsize::new(0);
 
-        let run_chunks = |cursor: &AtomicUsize, f: &F| loop {
+        let run = || loop {
             let ci = cursor.fetch_add(1, Ordering::Relaxed);
             if ci >= n_chunks {
                 break;
@@ -159,16 +296,7 @@ impl ThreadPool {
             let end = (start + chunk_len).min(n);
             f(ci, start, end);
         };
-
-        // `scope` joins every spawned thread before returning, which makes
-        // borrowing `f` and `cursor` from this stack frame sound, and
-        // resumes the panic of any panicked chunk in the caller.
-        std::thread::scope(|s| {
-            for _ in 1..workers {
-                s.spawn(|| run_chunks(&cursor, &f));
-            }
-            run_chunks(&cursor, &f);
-        });
+        self.broadcast(workers - 1, &run);
     }
 
     /// Parallel-for over a slice of per-task items, handing each chunk
@@ -176,15 +304,15 @@ impl ThreadPool {
     ///
     /// `f(chunk_idx, start, chunk_items)` runs once per non-empty chunk;
     /// `start` is the index of `chunk_items[0]` within `items`. The
-    /// sub-slices are produced by repeated `split_at_mut` *before* any
-    /// worker starts, so every `&mut [T]` a worker sees is disjoint by
-    /// construction and checked by the compiler — this is the primitive
-    /// that lets the kernel scheduler pass owned tensor views into tasks
-    /// without any `unsafe` pointer sharing.
+    /// sub-slices are produced by `chunks_mut` *before* any worker starts,
+    /// so every `&mut [T]` a worker sees is disjoint by construction and
+    /// checked by the compiler — this is the primitive that lets the kernel
+    /// scheduler pass owned tensor views into tasks without any raw-pointer
+    /// sharing of tensor data.
     ///
     /// Chunk → worker assignment is dynamic (shared atomic cursor), so
     /// early-finishing workers pick up remaining chunks. A panic inside
-    /// `f` propagates to the caller once the scope joins, and the pool
+    /// `f` propagates to the caller once the launch drains, and the pool
     /// stays usable afterwards.
     pub fn for_chunk_slices<T, F>(&self, items: &mut [T], chunks: usize, f: F)
     where
@@ -195,10 +323,10 @@ impl ThreadPool {
     }
 
     /// [`ThreadPool::for_chunk_slices`] with **per-worker state**: each
-    /// participating worker thread calls `init()` exactly once before
-    /// claiming chunks and passes the resulting `&mut S` to every chunk it
-    /// runs. This is how the kernel scheduler gives each worker one
-    /// reusable [`crate::kernels::Scratch`] accumulator — tasks stop
+    /// participating thread calls `init()` at most once (lazily, before its
+    /// first claimed chunk) and passes the resulting `&mut S` to every
+    /// chunk it runs. This is how the kernel scheduler gives each worker
+    /// one reusable [`crate::kernels::Scratch`] accumulator — tasks stop
     /// allocating per-task buffers while the state never crosses threads
     /// (so `S` needs no `Send`/`Sync`).
     ///
@@ -229,8 +357,10 @@ impl ThreadPool {
         let workers = self.n_threads.min(n_chunks);
         let cursor = AtomicUsize::new(0);
 
-        let run_chunks = |cursor: &AtomicUsize, init: &I, f: &F| {
-            let mut state = init();
+        let run = || {
+            // Per-participant state, created lazily so a participant that
+            // claims no chunk (everything already taken) never inits.
+            let mut state: Option<S> = None;
             loop {
                 let ci = cursor.fetch_add(1, Ordering::Relaxed);
                 if ci >= n_chunks {
@@ -238,48 +368,78 @@ impl ThreadPool {
                 }
                 let (chunk_start, chunk_items) =
                     parts[ci].lock().unwrap().take().expect("chunk claimed exactly once");
-                f(ci, chunk_start, chunk_items, &mut state);
+                let st = state.get_or_insert_with(&init);
+                f(ci, chunk_start, chunk_items, st);
             }
         };
-
-        std::thread::scope(|s| {
-            for _ in 1..workers {
-                s.spawn(|| run_chunks(&cursor, &init, &f));
-            }
-            run_chunks(&cursor, &init, &f);
-        });
+        self.broadcast(workers - 1, &run);
     }
 }
 
 fn worker_loop(sh: Arc<Shared>) {
+    CURRENT_POOL.with(|c| c.set(Arc::as_ptr(&sh) as usize));
     loop {
-        let task = {
-            let mut q = sh.queue.lock().unwrap();
+        let work = {
+            let mut inner = sh.inner.lock().unwrap();
             loop {
-                if let Some(t) = q.pop_front() {
-                    break t;
+                // Launches first: parallel-for callers are blocked on them.
+                if let Some(ticket) = inner.launches.front_mut() {
+                    ticket.starts_left -= 1;
+                    let state = Arc::clone(&ticket.state);
+                    if ticket.starts_left == 0 {
+                        inner.launches.pop_front();
+                    }
+                    break Work::Launch(state);
                 }
-                if sh.shutdown.load(Ordering::SeqCst) {
+                if let Some(t) = inner.queue.pop_front() {
+                    break Work::Task(t);
+                }
+                if inner.shutdown {
                     return;
                 }
-                q = sh.cv.wait(q).unwrap();
+                // Park until the next submit/launch/shutdown.
+                inner = sh.cv.wait(inner).unwrap();
             }
         };
-        // A panicking task must not kill the worker or leak an inflight
-        // count (which would deadlock `wait_idle` forever).
-        if catch_unwind(AssertUnwindSafe(task)).is_err() {
-            sh.panicked.fetch_add(1, Ordering::SeqCst);
-        }
-        if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
-            let _g = sh.idle_mx.lock().unwrap();
-            sh.idle_cv.notify_all();
+        match work {
+            Work::Task(task) => {
+                // A panicking task must not kill the worker or leak an
+                // inflight count (which would deadlock `wait_idle`).
+                if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                    sh.panicked.fetch_add(1, Ordering::SeqCst);
+                }
+                if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = sh.idle_mx.lock().unwrap();
+                    sh.idle_cv.notify_all();
+                }
+            }
+            Work::Launch(launch) => {
+                // SAFETY: the broadcasting caller blocks until this
+                // participation decrements `pending` below, so the borrowed
+                // closure behind the pointer is still alive here.
+                let job: &(dyn Fn() + Sync) = unsafe { &*launch.job.0 };
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                    let mut slot = launch.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                let mut pending = launch.pending.lock().unwrap();
+                *pending -= 1;
+                if *pending == 0 {
+                    launch.done.notify_all();
+                }
+            }
         }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.shutdown = true;
+        }
         self.shared.cv.notify_all();
         for w in self.workers.lock().unwrap().drain(..) {
             let _ = w.join();
@@ -434,12 +594,11 @@ mod tests {
         assert_eq!(small, vec![1, 1, 1]);
     }
 
-    /// Stress test (ISSUE 2 satellite): a task that panics mid-chunk must
-    /// propagate the panic to the caller — no deadlock, no poisoned pool —
-    /// under *repeated* invocations of both parallel-for primitives. This
-    /// is regression cover for the PR 1 `std::thread::scope` rebuild: the
-    /// pre-rebuild completion-counter design deadlocked on the first
-    /// panicking chunk and the old pool was unusable afterwards.
+    /// Stress test (ISSUE 2 satellite, re-pinned for the persistent pool):
+    /// a task that panics mid-chunk must propagate the panic to the caller
+    /// — no deadlock, no poisoned pool — under *repeated* invocations of
+    /// both parallel-for primitives, with the same parked workers serving
+    /// every round.
     #[test]
     fn repeated_panics_propagate_without_poisoning_the_pool() {
         let pool = ThreadPool::new(4);
@@ -507,14 +666,98 @@ mod tests {
         assert_eq!(pool.panicked_tasks(), 1);
     }
 
+    /// ISSUE 5 tentpole pin: the parallel-for primitives run on the
+    /// persistent worker set — spawned once on the first multi-thread
+    /// launch, **reused** (not respawned) across launches, and shared with
+    /// the submit queue.
     #[test]
-    fn for_chunks_needs_no_persistent_workers() {
-        let pool = ThreadPool::new(4);
-        pool.for_chunks(100, 8, |_, _, _| {});
-        assert!(pool.workers.lock().unwrap().is_empty(), "scoped path must not spawn workers");
-        pool.submit(|| {});
+    fn miri_for_chunks_reuses_persistent_workers() {
+        let pool = ThreadPool::new(3);
+        assert!(pool.workers.lock().unwrap().is_empty(), "workers spawn lazily");
+        let launches = if cfg!(miri) { 3 } else { 25 };
+        for round in 0..launches {
+            let sum = AtomicU64::new(0);
+            pool.for_chunks(30, 6, |_ci, s, e| {
+                for i in s..e {
+                    sum.fetch_add(i as u64, Ordering::SeqCst);
+                }
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), (0..30u64).sum(), "round {round}");
+            // same worker set every round: parked between launches, never
+            // respawned
+            assert_eq!(pool.workers.lock().unwrap().len(), 3, "round {round}");
+        }
+        // the same workers serve the fire-and-forget queue
+        let c = Arc::new(AtomicU64::new(0));
+        let cc = Arc::clone(&c);
+        pool.submit(move || {
+            cc.fetch_add(1, Ordering::SeqCst);
+        });
         pool.wait_idle();
-        assert_eq!(pool.workers.lock().unwrap().len(), 4, "submit spawns the full worker set");
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.workers.lock().unwrap().len(), 3);
+    }
+
+    /// Park/unpark smoke for the Miri gate: alternating slice launches and
+    /// panicking launches over the same parked workers — the persistent
+    /// hand-off must stay UB-free and recover from panics repeatedly.
+    #[test]
+    fn miri_persistent_pool_park_unpark_and_panic_recovery() {
+        let pool = ThreadPool::new(2);
+        for round in 0..3 {
+            let mut items = vec![0u32; 16];
+            pool.for_chunk_slices_with(
+                &mut items,
+                4,
+                || 1u32,
+                |_ci, _start, chunk, one| {
+                    for item in chunk.iter_mut() {
+                        *item += *one;
+                    }
+                },
+            );
+            assert!(items.iter().all(|&v| v == 1), "round {round}");
+
+            let boomed = catch_unwind(AssertUnwindSafe(|| {
+                pool.for_chunks(8, 4, |ci, _s, _e| {
+                    if ci == round % 2 {
+                        panic!("park/unpark boom");
+                    }
+                });
+            }));
+            assert!(boomed.is_err(), "round {round}: panic must propagate");
+        }
+    }
+
+    /// A parallel-for issued from inside one of the pool's own tasks must
+    /// complete (inline on that worker) instead of deadlocking on workers
+    /// that can never become free — the capability the scoped-thread
+    /// implementation had, preserved across the persistent-pool rewrite.
+    #[test]
+    fn miri_nested_parallel_for_from_pool_task_does_not_deadlock() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let sum = Arc::new(AtomicU64::new(0));
+        for _ in 0..2 {
+            let (p, s) = (Arc::clone(&pool), Arc::clone(&sum));
+            pool.submit(move || {
+                p.for_chunks(10, 4, |_ci, lo, hi| {
+                    for i in lo..hi {
+                        s.fetch_add(i as u64, Ordering::SeqCst);
+                    }
+                });
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::SeqCst), 2 * 45);
+
+        // ...and the outer-caller path still parallelizes afterwards.
+        let outer = AtomicU64::new(0);
+        pool.for_chunks(10, 4, |_ci, lo, hi| {
+            for i in lo..hi {
+                outer.fetch_add(i as u64, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(outer.load(Ordering::SeqCst), 45);
     }
 
     #[test]

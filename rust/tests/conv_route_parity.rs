@@ -1,0 +1,401 @@
+//! Parity suite for the kernel-routed convolution executor (ISSUE 5).
+//!
+//! Drives the mini-HLO interpreter twice over single-convolution probe
+//! modules — once naive (no hook) and once with the SparseTrain
+//! [`ConvRouter`] installed — across randomized geometries, `dim_labels`
+//! and paddings, and pins the routing contract:
+//!
+//! * **In-envelope** calls must actually route (counter-checked), be
+//!   **bit-identical to the serial sparse kernel** at the same packing
+//!   (the scheduler's serial-parity + the skip modes' mutual bit-equality
+//!   make the kernel stack's answer unique), and agree with the naive
+//!   evaluator within tight reassociation tolerance — the kernels sum the
+//!   same products in row-sweep order with fused multiply-adds, so exact
+//!   bit-equality with the naive (feature, ky, kx) multiply-then-add loop
+//!   is not a meaningful target, but anything beyond last-bits is a bug.
+//! * **Out-of-envelope** calls (channels not multiples of V, strided
+//!   backward labels, asymmetric padding, exotic label permutations) must
+//!   fall back to the naive loop **bit-identically** — the fallback IS the
+//!   reference evaluator.
+//! * The full `train_step` graph at the paper geometry routes all five
+//!   convolutions and matches the naive run within tolerance end to end.
+
+use sparsetrain::kernels::{reference, sparse_bwi, sparse_bww, sparse_fwd};
+use sparsetrain::kernels::{ConvConfig, KernelStats, SkipMode};
+use sparsetrain::runtime::executor::{self, ConvRouter};
+use sparsetrain::runtime::hlo_builder::{self, conv_module_hlo, Geometry};
+use sparsetrain::runtime::pjrt::{literal_f32, literal_i32, Runtime};
+use sparsetrain::tensor::{allclose, ActTensor, BatchTiledTensor, FilterTensor};
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::proptest::{check, Config as PropConfig, UsizeIn};
+use sparsetrain::V;
+use std::sync::Arc;
+
+/// Compile + execute one probe module, optionally with a router installed.
+fn run_probe(text: &str, inputs: &[xla::Literal], router: Option<Arc<ConvRouter>>) -> Vec<f32> {
+    let mut client = xla::PjRtClient::cpu().unwrap();
+    if let Some(r) = router {
+        client.set_conv_executor(executor::hook(r));
+    }
+    let proto = xla::HloModuleProto::from_text(text).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let outs = exe.execute::<xla::Literal>(inputs).unwrap();
+    outs[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap()
+}
+
+fn window_text(s: usize, r: usize, pad: usize, stride: usize) -> String {
+    format!("{{size={s}x{r} pad={pad}_{pad}x{pad}_{pad} stride={stride}x{stride}}}")
+}
+
+/// Both runs of one probe: (naive, routed, routed-call count).
+fn probe_pair(
+    text: &str,
+    inputs: &[xla::Literal],
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, usize) {
+    let naive = run_probe(text, inputs, None);
+    let router = Arc::new(ConvRouter::new(threads));
+    let routed = run_probe(text, inputs, Some(Arc::clone(&router)));
+    (naive, routed, router.routed_calls())
+}
+
+// ---------------------------------------------------------------------------
+// FWD form: bf01_oi01->bf01
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_routed_fwd_matches_naive_and_is_bitexact_vs_serial_kernel() {
+    let gen = UsizeIn { lo: 0, hi: 11 };
+    check(PropConfig { cases: 12, seed: 0x51, max_shrink_steps: 16 }, &gen, |&case| {
+        let hw = 4 + case % 4; // 4..=7
+        let stride = 1 + case % 2;
+        let c = V * (1 + case % 2);
+        let k = V * (1 + (case / 2) % 2);
+        let threads = 1 + case % 3;
+        let sparsity = [0.0, 0.5, 0.9][case % 3];
+        let cfg = ConvConfig::square(2, c, k, hw, 3, stride);
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+
+        let mut rng = Xorshift::new(100 + case as u64);
+        let mut d = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        d.fill_relu_sparse(&mut rng, sparsity);
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+        let (lhs, rhs) = (d.to_nchw(), g.to_kcsr());
+
+        let lhs_dims = [cfg.n, cfg.c, cfg.h, cfg.w];
+        let rhs_dims = [cfg.k, cfg.c, cfg.s, cfg.r];
+        let out_dims = [cfg.n, cfg.k, cfg.out_h(), cfg.out_w()];
+        let text = conv_module_hlo(
+            &lhs_dims,
+            &rhs_dims,
+            &out_dims,
+            &window_text(3, 3, 1, stride),
+            "bf01_oi01->bf01",
+        );
+        let inputs = [
+            literal_f32(&lhs, &lhs_dims.map(|d| d as i64)).unwrap(),
+            literal_f32(&rhs, &rhs_dims.map(|d| d as i64)).unwrap(),
+        ];
+        let (naive, routed, routed_calls) = probe_pair(&text, &inputs, threads);
+        if routed_calls != 1 {
+            return Err(format!("in-envelope FWD case {case} did not route"));
+        }
+        if !allclose(&routed, &naive, 1e-4, 1e-4) {
+            return Err(format!("FWD case {case}: routed vs naive diverged"));
+        }
+        // Bit-exact against the serial sparse kernel (any mode: the skip
+        // modes are mutually bit-identical).
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let mut st = KernelStats::new();
+        sparse_fwd::fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop, &mut st);
+        if routed != y.to_nchw() {
+            return Err(format!("FWD case {case}: routed vs serial kernel not bit-equal"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// BWI form: reversed filter + bf01_io01->bf01
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_routed_bwi_matches_naive_and_is_bitexact_vs_serial_kernel() {
+    let gen = UsizeIn { lo: 0, hi: 7 };
+    check(PropConfig { cases: 8, seed: 0x52, max_shrink_steps: 16 }, &gen, |&case| {
+        let hw = 4 + case % 4;
+        let c = V * (1 + case % 2); // forward input channels
+        let k = V; // forward output channels (= contracted dim)
+        let threads = 1 + case % 3;
+        let cfg = ConvConfig::square(2, c, k, hw, 3, 1);
+
+        let mut rng = Xorshift::new(200 + case as u64);
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_relu_sparse(&mut rng, 0.5);
+        for v in dy.data_mut().iter_mut() {
+            if *v != 0.0 && rng.bernoulli(0.5) {
+                *v = -*v;
+            }
+        }
+        let mut g = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        g.fill_uniform(&mut rng, -0.5, 0.5);
+
+        // rhs = spatially reversed forward filter, [K][C][S][R] with `io`
+        // labels — exactly what the train-step graph's %w_r feeds the
+        // input-gradient convolution.
+        let mut rhs = vec![0.0f32; cfg.k * cfg.c * cfg.s * cfg.r];
+        for ki in 0..cfg.k {
+            for ci in 0..cfg.c {
+                for s in 0..cfg.s {
+                    for r in 0..cfg.r {
+                        rhs[((ki * cfg.c + ci) * cfg.s + s) * cfg.r + r] =
+                            g.get(ki, ci, cfg.s - 1 - s, cfg.r - 1 - r);
+                    }
+                }
+            }
+        }
+        let lhs = dy.to_nchw();
+        let lhs_dims = [cfg.n, cfg.k, cfg.out_h(), cfg.out_w()];
+        let rhs_dims = [cfg.k, cfg.c, cfg.s, cfg.r];
+        let out_dims = [cfg.n, cfg.c, cfg.h, cfg.w];
+        let text = conv_module_hlo(
+            &lhs_dims,
+            &rhs_dims,
+            &out_dims,
+            &window_text(3, 3, 1, 1),
+            "bf01_io01->bf01",
+        );
+        let inputs = [
+            literal_f32(&lhs, &lhs_dims.map(|d| d as i64)).unwrap(),
+            literal_f32(&rhs, &rhs_dims.map(|d| d as i64)).unwrap(),
+        ];
+        let (naive, routed, routed_calls) = probe_pair(&text, &inputs, threads);
+        if routed_calls != 1 {
+            return Err(format!("in-envelope BWI case {case} did not route"));
+        }
+        if !allclose(&routed, &naive, 1e-4, 1e-4) {
+            return Err(format!("BWI case {case}: routed vs naive diverged"));
+        }
+        // Bit-exact vs the serial BWI kernel over the equivalent packing.
+        let gt = g.transpose_channels();
+        let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        let mut st = KernelStats::new();
+        sparse_bwi::bwi(&cfg, &dy, &gt, &mut dd, SkipMode::MaskLoop, &mut st);
+        if routed != dd.to_nchw() {
+            return Err(format!("BWI case {case}: routed vs serial kernel not bit-equal"));
+        }
+        // ... and sane against the scalar reference.
+        let ddref = reference::conv_bwi(&cfg, &dy.to_nchw(), &g.to_kcsr());
+        if !allclose(&routed, &ddref, 1e-4, 1e-4) {
+            return Err(format!("BWI case {case}: routed vs reference diverged"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// BWW form: batch-contracting fb01_io01->bf01
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_routed_bww_matches_naive_and_is_bitexact_vs_serial_kernel() {
+    let gen = UsizeIn { lo: 0, hi: 5 };
+    check(PropConfig { cases: 6, seed: 0x53, max_shrink_steps: 16 }, &gen, |&case| {
+        let hw = 4 + case % 3;
+        let c = V;
+        let k = V * (1 + case % 2);
+        let threads = 1 + case % 3;
+        let cfg = ConvConfig::square(V, c, k, hw, 3, 1); // n = V for BWW
+
+        let mut rng = Xorshift::new(300 + case as u64);
+        let mut x = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
+        x.fill_relu_sparse(&mut rng, 0.5);
+        let mut dy = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        dy.fill_uniform(&mut rng, -1.0, 1.0);
+
+        let lhs = x.to_nchw();
+        let rhs = dy.to_nchw();
+        let lhs_dims = [cfg.n, cfg.c, cfg.h, cfg.w];
+        let rhs_dims = [cfg.n, cfg.k, cfg.out_h(), cfg.out_w()];
+        let out_dims = [cfg.c, cfg.k, cfg.s, cfg.r];
+        let text = conv_module_hlo(
+            &lhs_dims,
+            &rhs_dims,
+            &out_dims,
+            &window_text(cfg.out_h(), cfg.out_w(), 1, 1),
+            "fb01_io01->bf01",
+        );
+        let inputs = [
+            literal_f32(&lhs, &lhs_dims.map(|d| d as i64)).unwrap(),
+            literal_f32(&rhs, &rhs_dims.map(|d| d as i64)).unwrap(),
+        ];
+        let (naive, routed, routed_calls) = probe_pair(&text, &inputs, threads);
+        if routed_calls != 1 {
+            return Err(format!("in-envelope BWW case {case} did not route"));
+        }
+        if !allclose(&routed, &naive, 1e-3, 1e-4) {
+            return Err(format!("BWW case {case}: routed vs naive diverged"));
+        }
+        // Bit-exact vs the serial BWW kernel, transposed to [C,K,S,R].
+        let dt = BatchTiledTensor::from_act(&x);
+        let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
+        let mut st = KernelStats::new();
+        sparse_bww::bww(&cfg, &dt, &dy, &mut dg, SkipMode::MaskLoop, &mut st);
+        let mut want = vec![0.0f32; routed.len()];
+        for ci in 0..cfg.c {
+            for ki in 0..cfg.k {
+                for s in 0..cfg.s {
+                    for r in 0..cfg.r {
+                        want[((ci * cfg.k + ki) * cfg.s + s) * cfg.r + r] = dg.get(ki, ci, s, r);
+                    }
+                }
+            }
+        }
+        if routed != want {
+            return Err(format!("BWW case {case}: routed vs serial kernel not bit-equal"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fallback: out-of-envelope configs must be bit-identical to the naive loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_unsupported_configs_fall_back_bit_identically() {
+    // Each class deliberately breaks one envelope condition; shapes stay
+    // consistent with the interpreter's shape inference so the module
+    // compiles and the *router* is what declines.
+    let gen = UsizeIn { lo: 0, hi: 19 };
+    check(PropConfig { cases: 20, seed: 0x54, max_shrink_steps: 8 }, &gen, |&case| {
+        let mut rng = Xorshift::new(400 + case as u64);
+        let hw = 4 + case % 3;
+        let (s, r) = (3usize, 3usize);
+        // (lhs_dims, rhs_dims, out_batch, out_feat, labels, stride, pad)
+        let (lhs_dims, rhs_dims, ob, of, labels, stride, pad) = match case % 5 {
+            // channels not multiples of V
+            0 => {
+                let c = 3 + case % 4;
+                ([2, c, hw, hw], [8, c, s, r], 2, 8, "bf01_oi01->bf01", 1, 1)
+            }
+            // K below the V tile
+            1 => ([2, V, hw, hw], [8, V, s, r], 2, 8, "bf01_oi01->bf01", 1, 1),
+            // strided backward labels (needs dilation → must decline)
+            2 => ([2, V, hw, hw], [V, V, s, r], 2, V, "bf01_io01->bf01", 2, 1),
+            // label permutation outside the canonical three: fb lhs with an
+            // oi filter — contracted dim is lhs dim0
+            3 => ([V, 2, hw, hw], [8, V, s, r], 2, 8, "fb01_oi01->bf01", 1, 1),
+            // oversized pad for the BWI pad identity (pad > S-1)
+            _ => ([2, V, hw, hw], [V, V, s, r], 2, V, "bf01_io01->bf01", 1, 3),
+        };
+        let padded = hw + 2 * pad;
+        if padded < s {
+            return Ok(());
+        }
+        let oh = (padded - s) / stride + 1;
+        let out_dims = [ob, of, oh, oh];
+        let text = conv_module_hlo(
+            &lhs_dims,
+            &rhs_dims,
+            &out_dims,
+            &window_text(s, r, pad, stride),
+            labels,
+        );
+        let n_lhs: usize = lhs_dims.iter().product();
+        let n_rhs: usize = rhs_dims.iter().product();
+        let lhs: Vec<f32> = (0..n_lhs).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let rhs: Vec<f32> = (0..n_rhs).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let inputs = [
+            literal_f32(&lhs, &lhs_dims.map(|d| d as i64)).unwrap(),
+            literal_f32(&rhs, &rhs_dims.map(|d| d as i64)).unwrap(),
+        ];
+        let (naive, routed, routed_calls) = probe_pair(&text, &inputs, 2);
+        if routed_calls != 0 {
+            return Err(format!("case {case} ({labels}) must not route"));
+        }
+        // Fallback is the naive loop itself: bit-identical, not allclose.
+        if naive.len() != routed.len()
+            || naive
+                .iter()
+                .zip(&routed)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(format!("case {case} ({labels}): fallback not bit-identical"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Full train step: naive vs kernel-routed, paper geometry
+// ---------------------------------------------------------------------------
+
+/// All five convolutions of the paper-geometry train step must route, and
+/// the complete 7-output contract (updated params, loss, sparsities) must
+/// agree with the naive interpreter within reassociation tolerance.
+#[test]
+fn train_step_kernel_routed_matches_naive_end_to_end() {
+    let g = Geometry::paper();
+    let dir = std::env::temp_dir()
+        .join(format!("sparsetrain-routeparity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("train_step.hlo.txt"),
+        hlo_builder::train_step_hlo(&g),
+    )
+    .unwrap();
+
+    let mut rng = Xorshift::new(77);
+    let bound = |fan: usize| (2.0f32 / fan as f32).sqrt();
+    let w1: Vec<f32> =
+        (0..g.c1 * g.c_in * 9).map(|_| rng.range_f32(-bound(g.c_in * 9), bound(g.c_in * 9))).collect();
+    let w2: Vec<f32> =
+        (0..g.c2 * g.c1 * 9).map(|_| rng.range_f32(-bound(g.c1 * 9), bound(g.c1 * 9))).collect();
+    let wfc: Vec<f32> =
+        (0..g.classes * g.c2).map(|_| rng.range_f32(-bound(g.c2), bound(g.c2))).collect();
+    let bfc = vec![0.0f32; g.classes];
+    let x: Vec<f32> =
+        (0..g.n * g.c_in * g.hw * g.hw).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let labels: Vec<i32> = (0..g.n).map(|_| rng.below(g.classes) as i32).collect();
+    let inputs = vec![
+        literal_f32(&w1, &[g.c1 as i64, g.c_in as i64, 3, 3]).unwrap(),
+        literal_f32(&w2, &[g.c2 as i64, g.c1 as i64, 3, 3]).unwrap(),
+        literal_f32(&wfc, &[g.classes as i64, g.c2 as i64]).unwrap(),
+        literal_f32(&bfc, &[g.classes as i64]).unwrap(),
+        literal_f32(&x, &[g.n as i64, g.c_in as i64, g.hw as i64, g.hw as i64]).unwrap(),
+        literal_i32(&labels, &[g.n as i64]).unwrap(),
+    ];
+
+    let mut naive_rt = Runtime::cpu_naive(&dir).unwrap();
+    let naive = naive_rt.load("train_step").unwrap().run(&inputs).unwrap();
+
+    let mut routed_rt = Runtime::cpu_with_threads(&dir, 2).unwrap();
+    let routed = routed_rt.load("train_step").unwrap().run(&inputs).unwrap();
+
+    assert_eq!(naive.len(), 7);
+    assert_eq!(routed.len(), 7);
+    if executor::routing_enabled() {
+        let router = routed_rt.conv_router().expect("router installed");
+        assert_eq!(
+            router.routed_calls(),
+            5,
+            "all five train-step convolutions must route at the paper geometry \
+             (fallbacks: {})",
+            router.fallback_calls()
+        );
+        assert_eq!(router.fallback_calls(), 0);
+    }
+    for (i, (a, b)) in naive.iter().zip(&routed).enumerate() {
+        let (av, bv) = (a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        assert!(
+            allclose(&bv, &av, 1e-3, 1e-4),
+            "train_step output {i} diverged between naive and kernel-routed"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

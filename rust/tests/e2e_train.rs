@@ -50,7 +50,8 @@ fn e2e_trainer_learns_on_cold_checkout() {
 
     let steps = 30;
     let mut trainer =
-        Trainer::new(&arts, TrainerConfig { steps, seed: 1, log_every: 0 }).expect("trainer init");
+        Trainer::new(&arts, TrainerConfig { steps, seed: 1, log_every: 0, threads: 2 })
+            .expect("trainer init");
     let report = trainer.run().expect("interpreted training run");
 
     assert_eq!(report.losses.len(), steps);

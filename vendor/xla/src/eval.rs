@@ -11,12 +11,20 @@
 //! convolution **bit-identical** to `kernels::reference::conv_fwd` on the
 //! sparsetrain side (pinned by a golden test there). Reductions fold
 //! elements in row-major operand order.
+//!
+//! **Pluggable convolutions (ISSUE 5).** [`execute_with_hook`] threads an
+//! optional [`ConvExecutor`] down to every `convolution` instruction: the
+//! hook sees the operand buffers plus the parsed window/`dim_labels` and
+//! may return the result itself (the SparseTrain kernel/scheduler stack on
+//! the host side) or decline with `None`, in which case the naive loop
+//! below runs — so any config outside the external executor's envelope
+//! keeps the reference numerics above, bit for bit.
 
 use crate::hlo::{
     BinKind, CmpDir, Computation, ConvSpec, ElemType, Instr, Module, Op, Shape, ShapeDecl,
     UnaryKind, Window, MAX_ELEMENTS,
 };
-use crate::{Error, Literal, Payload, Result};
+use crate::{ConvCall, ConvExecutor, Error, Literal, Payload, Result};
 
 fn err(msg: impl Into<String>) -> Error {
     Error(msg.into())
@@ -798,7 +806,52 @@ fn eval_conv(
     Ok(Buf::F32(out))
 }
 
-fn eval_instr(module: &Module, instr: &Instr, slots: &[Slot], args: &[Value]) -> Result<Slot> {
+/// Consult the external convolution executor for one instruction; `None`
+/// when no hook is installed or the hook declines. A hook result with the
+/// wrong element count is a contract violation and surfaces as `Err`.
+fn hooked_conv(
+    hook: Option<&ConvExecutor>,
+    window: &Window,
+    spec: &ConvSpec,
+    lhs: &Value,
+    rhs: &Value,
+    out_shape: &Shape,
+) -> Result<Option<Buf>> {
+    let Some(hook) = hook else {
+        return Ok(None);
+    };
+    // Only f32 arrays are routable (validate guarantees this for conv
+    // operands, but stay total for unvalidated callers).
+    let (Buf::F32(lf), Buf::F32(rf)) = (&lhs.buf, &rhs.buf) else {
+        return Ok(None);
+    };
+    let call = ConvCall {
+        window,
+        spec,
+        lhs: lf,
+        lhs_dims: &lhs.shape.dims,
+        rhs: rf,
+        rhs_dims: &rhs.shape.dims,
+        out_dims: &out_shape.dims,
+    };
+    match hook(&call) {
+        None => Ok(None),
+        Some(out) if out.len() == out_shape.elements() => Ok(Some(Buf::F32(out))),
+        Some(out) => Err(err(format!(
+            "convolution executor returned {} elements for shape {:?}",
+            out.len(),
+            out_shape.dims
+        ))),
+    }
+}
+
+fn eval_instr(
+    module: &Module,
+    instr: &Instr,
+    slots: &[Slot],
+    args: &[Value],
+    hook: Option<&ConvExecutor>,
+) -> Result<Slot> {
     // Bounds-checked even though `validate` enforces arities, so `execute`
     // stays panic-free if ever called on an unvalidated module.
     let opnd = |i: usize| -> Result<&Value> {
@@ -852,17 +905,26 @@ fn eval_instr(module: &Module, instr: &Instr, slots: &[Slot], args: &[Value]) ->
         }
         Op::Dot { lhs_c, rhs_c } => eval_dot(opnd(0)?, opnd(1)?, *lhs_c, *rhs_c)?,
         Op::Convolution { window, spec } => {
-            eval_conv(window, spec, opnd(0)?, opnd(1)?, declared)?
+            let (lhs, rhs) = (opnd(0)?, opnd(1)?);
+            match hooked_conv(hook, window, spec, lhs, rhs, declared)? {
+                Some(buf) => buf,
+                None => eval_conv(window, spec, lhs, rhs, declared)?,
+            }
         }
         Op::Parameter(_) | Op::Tuple => return Err(err("unreachable op dispatch")),
     };
     Ok(Slot::Single(Value { shape: declared.clone(), buf }))
 }
 
-fn eval_comp(module: &Module, comp: &Computation, args: &[Value]) -> Result<Slot> {
+fn eval_comp(
+    module: &Module,
+    comp: &Computation,
+    args: &[Value],
+    hook: Option<&ConvExecutor>,
+) -> Result<Slot> {
     let mut slots = Vec::with_capacity(comp.instrs.len());
     for instr in &comp.instrs {
-        let slot = eval_instr(module, instr, &slots, args)?;
+        let slot = eval_instr(module, instr, &slots, args, hook)?;
         slots.push(slot);
     }
     Ok(slots.swap_remove(comp.root))
@@ -914,12 +976,24 @@ fn value_to_literal(v: Value) -> Result<Literal> {
     Ok(Literal::from_parts(payload, dims))
 }
 
+/// Execute the module's `ENTRY` computation with the built-in evaluators
+/// only (no external convolution executor).
+pub fn execute(module: &Module, inputs: &[Literal]) -> Result<Literal> {
+    execute_with_hook(module, inputs, None)
+}
+
 /// Execute the module's `ENTRY` computation. The module is (re-)validated
 /// first — microseconds against milliseconds of evaluation — so this is
 /// total even for callers that skipped `compile`; inputs are checked
 /// against the declared parameter shapes. The result is the root value (a
-/// tuple literal when the root is `tuple(...)`).
-pub fn execute(module: &Module, inputs: &[Literal]) -> Result<Literal> {
+/// tuple literal when the root is `tuple(...)`). When `hook` is given,
+/// every `convolution` consults it before the naive loop (see the module
+/// docs).
+pub fn execute_with_hook(
+    module: &Module,
+    inputs: &[Literal],
+    hook: Option<&ConvExecutor>,
+) -> Result<Literal> {
     validate(module)?;
     let comp =
         module.comps.get(module.entry).ok_or_else(|| err("entry computation out of range"))?;
@@ -935,7 +1009,7 @@ pub fn execute(module: &Module, inputs: &[Literal]) -> Result<Literal> {
         let want = single_shape(&comp.instrs[comp.params[k]].shape)?;
         args.push(literal_to_value(lit, want, k)?);
     }
-    match eval_comp(module, comp, &args)? {
+    match eval_comp(module, comp, &args, hook)? {
         Slot::Single(v) => value_to_literal(v),
         Slot::Tuple(vals) => {
             let lits: Vec<Literal> = vals.into_iter().map(value_to_literal).collect::<Result<_>>()?;
@@ -1087,6 +1161,40 @@ mod tests {
         assert!(execute(&module, &[]).is_err());
         let right = Literal::vec1(&[1.0f32; 4]).reshape(&[2, 2]).unwrap();
         assert_eq!(execute(&module, &[right]).unwrap().to_vec::<f32>().unwrap(), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn miri_conv_hook_overrides_declines_and_is_length_checked() {
+        let text = "HloModule h\nENTRY %m {\n\
+            \x20 %x = f32[1,1,2,2] parameter(0)\n\
+            \x20 %w = f32[1,1,1,1] parameter(1)\n\
+            \x20 ROOT %y = f32[1,1,2,2] convolution(%x, %w), window={size=1x1 pad=0_0x0_0}, dim_labels=bf01_oi01->bf01\n}\n";
+        let module = parse_module(text).unwrap();
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[1, 1, 2, 2]).unwrap();
+        let w = Literal::vec1(&[2.0f32]).reshape(&[1, 1, 1, 1]).unwrap();
+        let inputs = [x, w];
+
+        // A hook that handles the call: its buffer IS the result.
+        let take: Box<ConvExecutor> = Box::new(|call: &ConvCall<'_>| {
+            assert_eq!(call.lhs_dims, &[1, 1, 2, 2][..]);
+            assert_eq!(call.rhs_dims, &[1, 1, 1, 1][..]);
+            assert_eq!(call.out_dims, &[1, 1, 2, 2][..]);
+            assert_eq!(call.window.size, [1, 1]);
+            Some(vec![9.0; 4])
+        });
+        let out = execute_with_hook(&module, &inputs, Some(&*take)).unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![9.0; 4]);
+
+        // A declining hook falls back to the naive loop, bit-identically.
+        let decline: Box<ConvExecutor> = Box::new(|_| None);
+        let naive = execute(&module, &inputs).unwrap();
+        let routed = execute_with_hook(&module, &inputs, Some(&*decline)).unwrap();
+        assert_eq!(routed.to_vec::<f32>().unwrap(), naive.to_vec::<f32>().unwrap());
+        assert_eq!(naive.to_vec::<f32>().unwrap(), vec![2.0, 4.0, 6.0, 8.0]);
+
+        // A hook returning the wrong element count is an Err, not a panic.
+        let wrong: Box<ConvExecutor> = Box::new(|_| Some(vec![0.0; 3]));
+        assert!(execute_with_hook(&module, &inputs, Some(&*wrong)).is_err());
     }
 
     #[test]

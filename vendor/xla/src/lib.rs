@@ -26,9 +26,32 @@
 
 use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 pub mod eval;
 pub mod hlo;
+
+/// One convolution call site, handed to an external [`ConvExecutor`] before
+/// the interpreter falls back to its own naive 7-loop evaluator. All
+/// buffers are row-major host `f32` slices with their dimensions attached;
+/// `window`/`spec` are the instruction's parsed attributes.
+pub struct ConvCall<'a> {
+    pub window: &'a hlo::Window,
+    pub spec: &'a hlo::ConvSpec,
+    pub lhs: &'a [f32],
+    pub lhs_dims: &'a [usize],
+    pub rhs: &'a [f32],
+    pub rhs_dims: &'a [usize],
+    pub out_dims: &'a [usize],
+}
+
+/// A pluggable convolution executor (the SparseTrain kernel/scheduler
+/// stack on the host side). Returning `Some(buffer)` — which must have
+/// exactly `out_dims` elements, row-major — replaces the naive evaluation
+/// of that instruction; returning `None` falls back to the built-in loop.
+/// The hook must not panic: it runs inside `execute`, whose contract is
+/// `Err`, never a panic.
+pub type ConvExecutor = dyn for<'a> Fn(&ConvCall<'a>) -> Option<Vec<f32>> + Send + Sync;
 
 /// Stub error type.
 #[derive(Debug, Clone)]
@@ -189,9 +212,11 @@ impl XlaComputation {
 }
 
 /// A compiled (parsed + shape-checked) executable over the mini-HLO
-/// interpreter.
+/// interpreter. Carries the client's convolution executor (if any) so
+/// every `execute` consults it before the naive loop.
 pub struct PjRtLoadedExecutable {
     module: hlo::Module,
+    conv_exec: Option<Arc<ConvExecutor>>,
 }
 
 /// A device buffer handle (host memory in this offline build).
@@ -208,9 +233,10 @@ impl PjRtBuffer {
 impl PjRtLoadedExecutable {
     /// Execute the module's `ENTRY` computation with the given inputs.
     /// Mirrors the real crate's nesting: one device, one result buffer
-    /// (holding the tuple when the root is a tuple).
+    /// (holding the tuple when the root is a tuple). Convolutions go
+    /// through the client's [`ConvExecutor`] when one is installed.
     pub fn execute<T>(&self, inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        let lit = eval::execute(&self.module, inputs)?;
+        let lit = eval::execute_with_hook(&self.module, inputs, self.conv_exec.as_deref())?;
         Ok(vec![vec![PjRtBuffer { lit }]])
     }
 
@@ -223,16 +249,24 @@ impl PjRtLoadedExecutable {
 /// A PJRT client.
 pub struct PjRtClient {
     platform: String,
+    conv_exec: Option<Arc<ConvExecutor>>,
 }
 
 impl PjRtClient {
     /// Create the CPU client (always succeeds offline).
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { platform: "cpu-interp".to_string() })
+        Ok(PjRtClient { platform: "cpu-interp".to_string(), conv_exec: None })
     }
 
     pub fn platform_name(&self) -> String {
         self.platform.clone()
+    }
+
+    /// Install a pluggable convolution executor. Every executable compiled
+    /// *after* this call routes its `convolution` instructions through the
+    /// hook (with fallback to the naive loop on `None`).
+    pub fn set_conv_executor(&mut self, exec: Arc<ConvExecutor>) {
+        self.conv_exec = Some(exec);
     }
 
     /// Parse and shape-check the HLO text, returning a runnable
@@ -242,7 +276,7 @@ impl PjRtClient {
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         let module = hlo::parse_module(&comp.text)?;
         eval::validate(&module)?;
-        Ok(PjRtLoadedExecutable { module })
+        Ok(PjRtLoadedExecutable { module, conv_exec: self.conv_exec.clone() })
     }
 }
 
