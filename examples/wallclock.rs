@@ -26,6 +26,10 @@ OPTIONS
   --sparsities 0,0.9 comma-separated sparsity levels (default: 0.0,0.5,0.9)
   --out PATH         output JSON path (default: BENCH_kernels.json)
   --smoke            tiny layer, seconds-scale run (CI emitter check)
+  --min-trainer-speedup X
+                     fail (exit 1) unless the kernel-routed trainer step at
+                     2 threads is at least X times the naive interpreter
+                     (the CI perf floor; 0 = no gate)
 
 Set SPARSETRAIN_BENCH_FAST=1 for shorter measurements and
 SPARSETRAIN_BACKEND=scalar|avx2|avx512|neon to force a backend.";
@@ -43,11 +47,14 @@ fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> Vec<T> {
 }
 
 fn main() {
-    let args = Args::from_env(&["layers", "threads", "sparsities", "out"], &["smoke"])
-        .unwrap_or_else(|e| {
-            eprintln!("error: {e}\n\n{USAGE}");
-            std::process::exit(2);
-        });
+    let args = Args::from_env(
+        &["layers", "threads", "sparsities", "out", "min-trainer-speedup"],
+        &["smoke"],
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    });
 
     let mut wcfg = if args.flag("smoke") {
         WallclockConfig::smoke()
@@ -95,6 +102,35 @@ fn main() {
     for &t in &wcfg.threads {
         if let Some(s) = report.trainer_step_speedup(t) {
             println!("kernel-routed trainer step at {t} threads: {s:.2}x vs naive interpreter");
+        }
+    }
+
+    // Perf floor gate (CI): the routed trainer step at 2 threads must beat
+    // the naive interpreter by at least the requested factor.
+    let floor = args.get_f64("min-trainer-speedup", 0.0).unwrap_or_else(|e| {
+        eprintln!("error: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    });
+    if floor > 0.0 {
+        match report.trainer_step_speedup(2) {
+            Some(s) if s < floor => {
+                eprintln!(
+                    "FAIL: kernel-routed trainer step at 2 threads is {s:.2}x vs naive, \
+                     below the {floor:.2}x floor"
+                );
+                std::process::exit(1);
+            }
+            Some(s) => {
+                println!("trainer-step perf floor passed: {s:.2}x >= {floor:.2}x at 2 threads");
+            }
+            None => {
+                eprintln!(
+                    "FAIL: --min-trainer-speedup {floor} given but no trainer_step rows were \
+                     recorded (need both naive-interp and kernel-routed at 2 threads; \
+                     release build with routing enabled and 2 in --threads)"
+                );
+                std::process::exit(1);
+            }
         }
     }
 }

@@ -28,6 +28,13 @@
 //!   the naive interpreter, the trainer-level perf trajectory. (Release
 //!   builds only; `sparsity` is recorded as 0.0 — the routed step measures
 //!   its operand sparsity live per convolution.)
+//!
+//! Since ISSUE 6 the `kernel-routed` rows measure the **whole-graph op
+//! router**: convolutions on the sparse kernels, `dot` on the blocked
+//! parallel GEMM, and recognized elementwise chains fused — the row
+//! structure is unchanged, so the schema stays v2. The PR 5 floor
+//! (routed ≥ 2× naive at 2 threads) is CI-enforced via the example's
+//! `--min-trainer-speedup` flag; the ISSUE 6 target is ≥ 5×.
 
 use crate::bench::{bench, black_box, BenchConfig, BenchResult};
 use crate::coordinator::scheduler::Scheduler;
@@ -327,7 +334,10 @@ fn time_trainer_step(routed_threads: Option<usize>, bcfg: &BenchConfig) -> Optio
     // process-wide kill switch disables routing, cpu_with_threads would
     // silently hand back a naive runtime and the trajectory would record
     // mislabeled data — skip the routed rows instead.
-    if routed_threads.is_some() && !crate::runtime::executor::routing_enabled() {
+    if routed_threads.is_some()
+        && !(crate::runtime::executor::routing_enabled()
+            || crate::runtime::executor::op_routing_enabled())
+    {
         return None;
     }
     let tag = match routed_threads {
@@ -584,16 +594,24 @@ impl WallclockReport {
     }
 
     /// Kernel-routed trainer-step speedup over the naive interpreter at
-    /// the given thread count — the ISSUE 5 acceptance readout (≥ 2× at 2
-    /// threads on the paper geometry). `None` when the trainer rows were
-    /// not recorded (debug builds).
+    /// the given thread count — the trainer-level acceptance readout
+    /// (PR 5 floor ≥ 2×, ISSUE 6 target ≥ 5×, at 2 threads on the paper
+    /// geometry). Recomputed from the two rows' medians rather than
+    /// trusting a stored ratio, and `None` whenever **either** row is
+    /// missing or has a non-positive median — a report with routed rows
+    /// but no `naive-interp` baseline (e.g. filtered or partially
+    /// recorded) must not yield a garbage ratio.
     pub fn trainer_step_speedup(&self, threads: usize) -> Option<f64> {
-        self.records
-            .iter()
-            .find(|r| {
-                r.component == "trainer_step" && r.mode == "kernel-routed" && r.threads == threads
-            })
-            .map(|r| r.speedup_vs_direct1)
+        let naive = self.records.iter().find(|r| {
+            r.component == "trainer_step" && r.mode == "naive-interp" && r.median_ns > 0.0
+        })?;
+        let routed = self.records.iter().find(|r| {
+            r.component == "trainer_step"
+                && r.mode == "kernel-routed"
+                && r.threads == threads
+                && r.median_ns > 0.0
+        })?;
+        Some(naive.median_ns / routed.median_ns)
     }
 
     /// Best `speedup_vs_direct1` over MaskLoop rows of **3×3 layers** at
@@ -617,6 +635,56 @@ impl WallclockReport {
 mod tests {
     use super::*;
 
+    fn trainer_row(mode: &'static str, threads: usize, median_ns: f64) -> WallclockRecord {
+        WallclockRecord {
+            layer: "paper".to_string(),
+            rs: 3,
+            component: "trainer_step",
+            mode,
+            sparsity: 0.0,
+            threads,
+            median_ns,
+            gflops: 1.0,
+            speedup_vs_direct1: 1.0,
+            speedup_vs_dense_same_threads: 1.0,
+        }
+    }
+
+    /// Partial reports must never yield a garbage ratio: no rows → `None`,
+    /// routed-only (no `naive-interp` baseline) → `None`, and only with
+    /// both rows present does the speedup come back — recomputed from the
+    /// medians, not a stored field.
+    #[test]
+    fn trainer_step_speedup_tolerates_partial_reports() {
+        let mk = |records: Vec<WallclockRecord>| WallclockReport {
+            backend: "scalar",
+            profile: "debug",
+            threads_available: 1,
+            records,
+        };
+        assert_eq!(mk(Vec::new()).trainer_step_speedup(2), None);
+        // routed rows without the naive baseline: the ISSUE 6 bugfix case
+        assert_eq!(
+            mk(vec![trainer_row("kernel-routed", 2, 100.0)]).trainer_step_speedup(2),
+            None
+        );
+        // naive baseline without a routed row at the requested width
+        assert_eq!(
+            mk(vec![trainer_row("naive-interp", 1, 800.0), trainer_row("kernel-routed", 4, 100.0)])
+                .trainer_step_speedup(2),
+            None
+        );
+        // zeroed medians must not divide through
+        assert_eq!(
+            mk(vec![trainer_row("naive-interp", 1, 0.0), trainer_row("kernel-routed", 2, 100.0)])
+                .trainer_step_speedup(2),
+            None
+        );
+        let full =
+            mk(vec![trainer_row("naive-interp", 1, 800.0), trainer_row("kernel-routed", 2, 100.0)]);
+        assert_eq!(full.trainer_step_speedup(2), Some(8.0));
+    }
+
     #[test]
     #[cfg_attr(miri, ignore = "wall-clock timing is meaningless under the interpreter")]
     fn smoke_sweep_produces_complete_report() {
@@ -626,7 +694,9 @@ mod tests {
         // + 1 direct_pre BWI baseline, + the trainer rows (1 naive + one
         // per thread count) in release builds
         let kernel_rows = 3 * (1 + 2 * 2 * 3) + 1;
-        let routed_rows = if crate::runtime::executor::routing_enabled() {
+        let routed_rows = if crate::runtime::executor::routing_enabled()
+            || crate::runtime::executor::op_routing_enabled()
+        {
             wcfg.threads.len()
         } else {
             0
@@ -649,7 +719,9 @@ mod tests {
                     .any(|r| r.component == "trainer_step" && r.mode == "naive-interp"),
                 "trainer baseline row missing"
             );
-            if crate::runtime::executor::routing_enabled() {
+            if crate::runtime::executor::routing_enabled()
+                || crate::runtime::executor::op_routing_enabled()
+            {
                 assert!(report.trainer_step_speedup(2).is_some(), "routed trainer rows missing");
             }
         }

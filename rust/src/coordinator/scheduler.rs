@@ -120,6 +120,13 @@ impl Scheduler {
         self.backend
     }
 
+    /// The persistent worker pool — shared with the op router's GEMM so
+    /// routed `dot` instructions reuse the same parked workers as the
+    /// sparse conv kernels.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
     /// Number of parallel FWD tasks for a config (§3.2.2: `N·H'·K/Q`).
     pub fn fwd_task_count(cfg: &ConvConfig) -> usize {
         let plan = plan_fwd(cfg.k, cfg.r);

@@ -6,11 +6,14 @@
 //! reference grammar take precedence (see `runtime::artifacts` for the
 //! real-XLA caveat).
 //!
-//! Since ISSUE 5 the interpreter's convolutions are **kernel-routed**: the
-//! runtime installs `runtime::executor::ConvRouter`, so the train step's
-//! FWD/BWI/BWW convolutions run on the SparseTrain SIMD kernels through
-//! the persistent-thread-pool scheduler ([`TrainerConfig::threads`] wide),
-//! with the selector picking the skip mode from measured sparsity.
+//! Since ISSUE 5 the interpreter's convolutions are **kernel-routed**, and
+//! since ISSUE 6 the whole graph is: the runtime installs
+//! `runtime::executor::OpRouter`, so the train step's FWD/BWI/BWW
+//! convolutions run on the SparseTrain SIMD kernels, its `dot`s on the
+//! blocked parallel GEMM, and its recognized elementwise chains as fused
+//! single passes — all through the persistent-thread-pool scheduler
+//! ([`TrainerConfig::threads`] wide), with the selector picking the conv
+//! skip mode from measured sparsity.
 
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::kernels::layers::synthetic_batch;
@@ -26,9 +29,9 @@ pub struct TrainerConfig {
     pub steps: usize,
     pub seed: u64,
     pub log_every: usize,
-    /// Worker threads for the kernel-routed convolution executor
-    /// (`0` = host parallelism). Ignored when conv routing is disabled
-    /// via `SPARSETRAIN_CONV_ROUTE=off`.
+    /// Worker threads for the op router's kernel/GEMM executor
+    /// (`0` = host parallelism). Ignored when routing is disabled via
+    /// `SPARSETRAIN_CONV_ROUTE=off` + `SPARSETRAIN_OP_ROUTE=off`.
     pub threads: usize,
 }
 
@@ -75,12 +78,18 @@ impl Trainer {
             artifacts.missing()
         );
         // Kernel-routed by default: the runtime installs the SparseTrain
-        // conv executor (persistent thread pool, selector-chosen skip
-        // mode), so every train step's five convolutions run
-        // multi-threaded and sparsity-exploiting instead of through the
-        // interpreter's naive loop.
+        // op router (persistent thread pool, selector-chosen conv skip
+        // mode), so every train step's five convolutions, three dots, and
+        // recognized elementwise chains run multi-threaded / fused instead
+        // of through the interpreter's naive loop.
         let runtime = Runtime::cpu_with_threads(&artifacts.dir, cfg.threads)?;
         Ok(Trainer { runtime, cfg, metrics: MetricsRegistry::new() })
+    }
+
+    /// The runtime's installed op router, if routing is enabled — exposes
+    /// per-op-kind routed/fallback/fused counters for CLI reporting.
+    pub fn op_router(&self) -> Option<&crate::runtime::OpRouter> {
+        self.runtime.op_router()
     }
 
     /// He-style uniform init for a conv weight [k][c][s][r].

@@ -1,0 +1,210 @@
+//! Blocked, SIMD-dispatched, optionally multi-threaded GEMM.
+//!
+//! Promoted out of `im2col.rs` (ISSUE 6) so the op router can serve
+//! `Op::Dot` with the same kernel the im2col baseline uses. Layout is
+//! row-major throughout: `c[m][n] += a[m][k] · b[k][n]`.
+//!
+//! Structure: the output rows are split into `MB`-row panels; within a
+//! panel the contraction dimension is walked in `KB`-sized blocks so the
+//! streamed `b` panel stays in cache across the panel's rows, and the
+//! inner kernel is j-vectorized through [`simd::Backend::axpy_v`]
+//! (contiguous in `b` and `c`) with an `a == 0.0` skip — the paper's
+//! dynamic-sparsity short-circuit applies to GEMM operands too.
+//!
+//! Determinism contract: for every output row the contraction is
+//! accumulated in strictly ascending `p` order, *independent of how rows
+//! are grouped into panels or distributed over threads*. A serial run
+//! ([`gemm_with`]) and a parallel run ([`gemm_parallel`]) over any thread
+//! count are therefore **bit-identical** — pinned by
+//! `miri_gemm_parallel_matches_serial_bitwise` and the `op_route_parity`
+//! proptests. Against the naive triple loop the result is allclose, not
+//! bit-equal: `axpy_v` contracts multiply-add to a single-rounding FMA.
+
+use super::simd::{self, Backend};
+use crate::util::threadpool::ThreadPool;
+use crate::V;
+
+/// Rows per output panel (both the serial blocking factor and the unit of
+/// parallel work distribution).
+pub const MB: usize = 32;
+
+/// Contraction-dimension block: `KB` rows of `b` (`KB · n` floats) are
+/// re-streamed across one panel's rows before moving on.
+const KB: usize = 128;
+
+/// The panel kernel: accumulate `rows` (output rows `row0..row0+rows.len()`
+/// of `c`) against the full contraction dimension. Per-row `p` order is
+/// globally ascending — see the module docs' determinism contract.
+fn gemm_panel_rows(
+    bk: Backend,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    row0: usize,
+    rows: &mut [&mut [f32]],
+) {
+    for p0 in (0..k).step_by(KB.max(1)) {
+        let p1 = (p0 + KB).min(k);
+        for (r, crow) in rows.iter_mut().enumerate() {
+            let arow = &a[(row0 + r) * k..(row0 + r + 1) * k];
+            for (p, &av) in arow.iter().enumerate().take(p1).skip(p0) {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                let mut j = 0;
+                while j + V <= n {
+                    bk.axpy_v(&mut crow[j..j + V], av, &brow[j..j + V]);
+                    j += V;
+                }
+                while j < n {
+                    crow[j] = brow[j].mul_add(av, crow[j]);
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Serial blocked GEMM with the process-wide dispatched backend — the
+/// drop-in replacement for the old `im2col::gemm` (accumulates into `c`).
+pub fn gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_with(simd::dispatch(), m, n, k, a, b, c);
+}
+
+/// Serial blocked GEMM with an explicit backend — the pinned reference the
+/// parallel path must match bit for bit.
+pub fn gemm_with(bk: Backend, m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut rows: Vec<&mut [f32]> = c.chunks_mut(n).collect();
+    for (pi, panel) in rows.chunks_mut(MB).enumerate() {
+        gemm_panel_rows(bk, n, k, a, b, pi * MB, panel);
+    }
+}
+
+/// Parallel blocked GEMM: `MB`-row panels are distributed over the
+/// persistent pool's workers (dynamic work-stealing cursor, deterministic
+/// panel boundaries). Bit-identical to [`gemm_with`] with the same backend
+/// at any thread count.
+pub fn gemm_parallel(
+    pool: &ThreadPool,
+    bk: Backend,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut rows: Vec<&mut [f32]> = c.chunks_mut(n).collect();
+    let chunks = m.div_ceil(MB);
+    pool.for_chunk_slices(&mut rows, chunks, |_ci, start, chunk| {
+        gemm_panel_rows(bk, n, k, a, b, start, chunk);
+    });
+}
+
+/// Pack the transpose: `out[c][r] = src[r][c]` for a row-major
+/// `rows × cols` matrix. The op router uses this to normalize `dot`
+/// contraction layouts onto the row-major `a[m][k] · b[k][n]` kernel.
+pub fn pack_transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(src.len(), rows * cols);
+    let mut out = vec![0.0f32; src.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::allclose;
+    use crate::util::prng::Xorshift;
+
+    fn fill(rng: &mut Xorshift, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn gemm_matches_naive_triple_loop() {
+        let (m, n, k) = (7, 33, 19);
+        let mut rng = Xorshift::new(3);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        gemm(m, n, k, &a, &b, &mut c);
+        let mut cref = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    cref[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        assert!(allclose(&c, &cref, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let mut rng = Xorshift::new(5);
+        let a = fill(&mut rng, 2 * 3);
+        let b = fill(&mut rng, 3 * 4);
+        let mut once = vec![0.0f32; 2 * 4];
+        gemm(2, 4, 3, &a, &b, &mut once);
+        let mut twice = once.clone();
+        gemm(2, 4, 3, &a, &b, &mut twice);
+        for (t, o) in twice.iter().zip(&once) {
+            assert!((t - 2.0 * o).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn miri_gemm_parallel_matches_serial_bitwise() {
+        // Reduced geometry; n = 17 exercises the scalar tail, m spans
+        // several panel/chunk boundary cases relative to the pool width.
+        let bk = Backend::scalar();
+        let pool = ThreadPool::new(2);
+        let mut rng = Xorshift::new(11);
+        for m in [1usize, 2, 5, 8] {
+            let (n, k) = (17usize, 9usize);
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let mut serial = vec![0.0f32; m * n];
+            gemm_with(bk, m, n, k, &a, &b, &mut serial);
+            let mut par = vec![0.0f32; m * n];
+            gemm_parallel(&pool, bk, m, n, k, &a, &b, &mut par);
+            let sb: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = par.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, pb, "m={m}");
+        }
+    }
+
+    #[test]
+    fn pack_transpose_roundtrip() {
+        let src: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let t = pack_transpose(&src, 2, 3); // 2x3 -> 3x2
+        assert_eq!(t, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(pack_transpose(&t, 3, 2), src);
+    }
+
+    #[test]
+    fn zero_sized_gemm_is_a_no_op() {
+        let mut c: Vec<f32> = Vec::new();
+        gemm(0, 4, 3, &[], &[0.0; 12], &mut []);
+        gemm(2, 0, 3, &[0.0; 6], &[], &mut c);
+    }
+}

@@ -9,37 +9,9 @@ use super::{ConvConfig, KernelStats};
 use crate::tensor::{ActTensor, FilterTensor};
 use crate::V;
 
-/// Blocked single-threaded GEMM: `c[m][n] += a[m][k] · b[k][n]`, row-major.
-///
-/// The inner kernel is j-vectorized (contiguous in `b` and `c`), blocked to
-/// keep the `b` panel in cache — a stand-in for the MKL sgemm the paper's
-/// im2col path calls.
-pub fn gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    const MB: usize = 32;
-    const KB: usize = 128;
-    for i0 in (0..m).step_by(MB) {
-        let i1 = (i0 + MB).min(m);
-        for p0 in (0..k).step_by(KB) {
-            let p1 = (p0 + KB).min(k);
-            for i in i0..i1 {
-                let crow = &mut c[i * n..(i + 1) * n];
-                for p in p0..p1 {
-                    let av = a[i * k + p];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[p * n..(p + 1) * n];
-                    for j in 0..n {
-                        crow[j] += av * brow[j];
-                    }
-                }
-            }
-        }
-    }
-}
+// The blocked GEMM itself was promoted into `kernels::gemm` (ISSUE 6) so
+// the op router can share it; re-exported here for the existing callers.
+pub use super::gemm::gemm;
 
 /// GEMM cost accounting (dense): `m·k·n` MACs vectorized over `n`.
 pub fn gemm_stats(m: usize, n: usize, k: usize, stats: &mut KernelStats) {

@@ -15,6 +15,7 @@
 //! | [`sparse_fwd`] | SparseTrain FWD (Alg. 2+3) | sparse forward |
 //! | [`sparse_bwi`] | SparseTrain BWI (§3.3) | sparse backward-by-input |
 //! | [`sparse_bww`] | SparseTrain BWW (Alg. 5) | sparse backward-by-weights |
+//! | [`gemm`] | §5.1 sgemm | blocked, threaded, SIMD-dispatched GEMM (im2col + op-router `dot`) |
 //! | [`im2col`] | `im2col` | lowering + GEMM baseline |
 //! | [`winograd`] | `winograd` | F(2×2, 3×3) baseline (3×3, stride 1) |
 //! | [`onebyone`] | `1x1` | specialized reduction kernel for 1×1 layers |
@@ -32,6 +33,7 @@
 //! wall-clock.
 
 pub mod direct;
+pub mod gemm;
 pub mod im2col;
 pub mod layers;
 pub mod onebyone;

@@ -59,21 +59,32 @@
 //! * [`runtime`] — PJRT client wrapper that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them.
 //!
-//!   **Kernel-routed execution (ISSUE 5).** The offline interpreter is no
-//!   longer naive-only: [`runtime::executor::ConvRouter`] plugs into the
-//!   vendored crate's convolution hook and dispatches the three
-//!   SparseTrain-executable conv forms — FWD (`bf01_oi01->bf01`), BWI
+//!   **Whole-graph op routing (ISSUE 5 convs, ISSUE 6 everything else).**
+//!   The offline interpreter is no longer naive-only:
+//!   [`runtime::executor::OpRouter`] is installed as the vendored crate's
+//!   per-instruction [`xla::OpExecutor`] hook. Convolutions in the three
+//!   SparseTrain-executable forms — FWD (`bf01_oi01->bf01`), BWI
 //!   (reversed-filter `bf01_io01->bf01`) and BWW (batch-contracting
-//!   `fb01_io01->bf01`) — to [`coordinator::Scheduler`] over the
+//!   `fb01_io01->bf01`) — dispatch to [`coordinator::Scheduler`] over the
 //!   explicit-SIMD sparse kernels, with the thread-count-aware
 //!   [`coordinator::Selector`] choosing the skip mode from measured
-//!   operand sparsity. Configs outside the envelope fall back to the
-//!   interpreter's reference loop bit-identically
-//!   (`rust/tests/conv_route_parity.rs` pins both halves), so
-//!   `cargo run --release -- train` is multi-threaded and
-//!   sparsity-exploiting end to end. The [`util::threadpool::ThreadPool`]
-//!   underneath keeps **persistent workers** parked between launches, so
-//!   small launches no longer pay per-call thread-spawn overhead.
+//!   operand sparsity; rank-2 `dot`s run the blocked, panel-parallel
+//!   [`kernels::gemm`] on the same pool; and recognized elementwise
+//!   chains (bias+ReLU, SGD `w - lr·g`, log-softmax row ops, ReLU-backward
+//!   select) collapse into single fused passes that reproduce the naive
+//!   arithmetic bit for bit. *Buffer ownership*: the evaluator owns
+//!   allocation — it hands the hook an arena-recycled output buffer
+//!   ([`xla::Arena`], per-executable scratch keyed by output size with
+//!   last-use recycling), and the hook either fills it completely or
+//!   declines untouched. *Fallback contract*: anything outside the
+//!   envelope runs the interpreter's reference loop **bit-identically**
+//!   (`rust/tests/conv_route_parity.rs` and `op_route_parity.rs` pin both
+//!   halves), so `cargo run --release -- train` is multi-threaded and
+//!   sparsity-exploiting end to end. `SPARSETRAIN_CONV_ROUTE=off` /
+//!   `SPARSETRAIN_OP_ROUTE=off` kill the two routing classes. The
+//!   [`util::threadpool::ThreadPool`] underneath keeps **persistent
+//!   workers** parked between launches, so small launches no longer pay
+//!   per-call thread-spawn overhead.
 //! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`,
 //!   plus [`bench::wallclock`]: the real-kernel wall-clock sweep behind
 //!   `cargo run --release --example wallclock` → `BENCH_kernels.json`.

@@ -29,8 +29,11 @@ COMMANDS
   table3             register-budget plans (Q/T/pipelining)
   sweep              one layer  [--layer NAME] [--csv]
   train              run the PJRT trainer  [--steps N] [--seed N]
-                     (--threads N sizes the kernel-routed conv executor;
-                      default 0 = host parallelism)
+                     (--threads N sizes the op router's kernel/GEMM
+                      executor; default 0 = host parallelism. Prints
+                      per-op-kind routed/fallback/fused counters;
+                      SPARSETRAIN_CONV_ROUTE=off / SPARSETRAIN_OP_ROUTE=off
+                      disable routing classes.)
   plan               register plan  [--k N] [--r N]
 
 OPTIONS
@@ -124,7 +127,7 @@ fn main() {
         Some("train") => {
             let steps = args.get_usize("steps", 200).unwrap_or(200);
             let seed = args.get_usize("seed", 7).unwrap_or(7) as u64;
-            // For the trainer, --threads sizes the kernel-routed conv
+            // For the trainer, --threads sizes the op router's kernel/GEMM
             // executor (default 0 = host parallelism), not the cost model.
             let trainer_threads = args.get_usize("threads", 0).unwrap_or(0);
             // Use real artifacts when present; otherwise materialize the
@@ -143,6 +146,24 @@ fn main() {
                 Ok(mut t) => match t.run() {
                     Ok(report) => {
                         report.profiler.report().print();
+                        if let Some(router) = t.op_router() {
+                            let s = router.stats();
+                            println!(
+                                "op-router: conv {}/{} routed, dot {}/{} routed, \
+                                 {} chains fused, elementwise {}/{} routed \
+                                 (routed/attempted; {} threads)",
+                                s.conv_routed,
+                                s.conv_routed + s.conv_fallback,
+                                s.dot_routed,
+                                s.dot_routed + s.dot_fallback,
+                                s.fused,
+                                s.ew_routed,
+                                s.ew_routed + s.ew_fallback,
+                                router.threads()
+                            );
+                        } else {
+                            println!("op-router: disabled (naive interpreter)");
+                        }
                         println!(
                             "done: {} steps, {:.1} steps/s, learned={}",
                             report.losses.len(),

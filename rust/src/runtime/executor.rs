@@ -1,15 +1,22 @@
-//! Kernel-routed convolution executor: the bridge between the mini-HLO
-//! interpreter and the SparseTrain kernel/scheduler stack (ISSUE 5).
+//! Whole-graph op router: the bridge between the mini-HLO interpreter and
+//! the SparseTrain kernel/scheduler stack (ISSUE 5 convs, ISSUE 6
+//! everything else).
 //!
-//! The interpreter's naive single-threaded 7-loop convolution is what made
-//! trainer steps cost ~0.3 s at the paper geometry while the explicit-SIMD
-//! sparse kernels (PR 3) and the Miri-clean parallel scheduler (PR 1/2)
-//! sat idle. [`ConvRouter`] closes that gap: installed as the vendored
-//! crate's [`xla::ConvExecutor`] hook, it pattern-matches every
-//! `convolution` instruction against the three SparseTrain-executable
-//! forms the reference lowering (`runtime::hlo_builder`) emits and runs
-//! them through [`Scheduler::run_fwd`] / [`Scheduler::run_bwi`] /
-//! [`Scheduler::run_bww`] on the persistent thread pool:
+//! [`OpRouter`] is installed as the vendored crate's [`xla::OpExecutor`]
+//! hook, so the evaluator consults it for **every** f32 instruction. Per
+//! op kind it serves:
+//!
+//! | op | route | numerics vs naive |
+//! |---|---|---|
+//! | `convolution` (the three train forms below) | sparse kernels on the scheduler pool | allclose (FMA + sweep order) |
+//! | `dot` (rank-2 × rank-2, any contracting dims) | [`crate::kernels::gemm`] — blocked, SIMD-dispatched, panel-parallel | allclose (FMA) |
+//! | `broadcast` (scalar / rank-1 into rank-2 / rank-2 into rank-4) | fill / `copy_from_slice` passes, no per-element index decompose | **bit-identical** |
+//! | binary with a broadcast operand (bias add, ReLU `max(x, 0)`, scale, log-softmax subtract/divide) | single fused pass reading the scalar/vector directly | **bit-identical** |
+//! | SGD `subtract(w, multiply(splat(lr), g))` | single fused pass, mul-then-sub roundings preserved | **bit-identical** |
+//! | `select(compare(z, splat, GT), t, splat)` (ReLU backward) | single fused pass | **bit-identical** |
+//! | `reduce` with a `bin(p0, p1)` body (sums, max) | row-major fold without index decompose | **bit-identical** |
+//!
+//! The three convolution forms (unchanged from ISSUE 5):
 //!
 //! | `dim_labels` | training role | kernel entry |
 //! |---|---|---|
@@ -17,26 +24,30 @@
 //! | `bf01_io01->bf01` (reversed filter) | input gradient (BWI) | `run_bwi` |
 //! | `fb01_io01->bf01` (batch-contracting) | weight gradient (BWW) | `run_bww` |
 //!
-//! The thread-count-aware [`Selector`] picks the [`SkipMode`] per call
-//! from the measured sparsity of the checked operand — dense layers run
-//! the Dense loop, ReLU-sparse layers the Algorithm-3 mask loop — so the
-//! trainer exploits exactly the dynamic sparsity the paper's Table 2
-//! measures, at trainer-step granularity.
+//! The thread-count-aware [`Selector`] picks the [`SkipMode`] per conv
+//! call from the measured sparsity of the checked operand, so the trainer
+//! exploits exactly the dynamic sparsity the paper's Table 2 measures.
 //!
-//! **Fallback envelope.** Any call outside the supported envelope (labels
-//! not one of the three forms, channels not multiples of `V`, asymmetric
-//! padding, strided backward forms, filter too wide for the register
-//! planner, …) returns `None` and the interpreter's naive loop runs —
-//! bit-parity with the reference evaluator guaranteed, pinned by
-//! `rust/tests/conv_route_parity.rs`. On the kernel path the results are
-//! the sparse kernels' numerics: the same sums in the row-sweep order with
-//! fused multiply-adds, deterministic across thread counts and backends
-//! (scheduler bit-exactness), and equal to the naive evaluator within
-//! tight floating-point reassociation tolerance (also pinned by the
-//! parity suite).
+//! **Fallback contract.** Any instruction outside the envelope above —
+//! non-f32 dots, rank-1 dots, elementwise chains the fusion matcher does
+//! not recognize, convolutions with labels/tiling/padding outside the
+//! three forms — is declined (`route_op` returns `false`) and the
+//! interpreter's naive evaluator runs instead, **bit-identically**: the
+//! router either fills the whole output buffer or touches nothing. Pinned
+//! by `rust/tests/op_route_parity.rs` and `conv_route_parity.rs`. Routed
+//! convs and dots carry kernel numerics (single-rounding FMAs,
+//! deterministic across thread counts); every other routed path reproduces
+//! the naive arithmetic bit for bit, as tabulated above.
+//!
+//! **Kill switches.** `SPARSETRAIN_CONV_ROUTE=off` disables conv routing,
+//! `SPARSETRAIN_OP_ROUTE=off` disables everything else (both read at
+//! router construction); [`OpRouter::stats`] exposes per-kind
+//! routed/fallback/fused counters so silent fallback regressions show up
+//! in the `train` CLI output.
 
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::selector::Selector;
+use crate::kernels::gemm;
 use crate::kernels::regalloc::REG_BUDGET;
 use crate::kernels::{Component, ConvConfig, SkipMode};
 use crate::sim::Machine;
@@ -44,6 +55,8 @@ use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::V;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use xla::eval::bin_f32;
+use xla::hlo::{BinKind, CmpDir, Op};
 
 /// The three SparseTrain-executable convolution forms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -86,34 +99,86 @@ fn cfg_in_envelope(cfg: &ConvConfig) -> bool {
         && cfg.validate().is_ok()
 }
 
-/// A convolution executor over the SparseTrain kernel/scheduler stack.
-///
-/// Owns one [`Scheduler`] (and therefore one persistent thread pool) for
-/// the lifetime of the runtime — every routed convolution reuses the same
-/// parked workers — plus a thread-count-aware [`Selector`] for the
-/// per-call skip-mode decision.
-pub struct ConvRouter {
-    sched: Scheduler,
-    selector: Selector,
-    /// Calls served by the kernel stack (introspection for tests/metrics).
-    routed: AtomicUsize,
-    /// Calls declined to the interpreter's naive loop.
-    fallback: AtomicUsize,
+/// Per-op-kind routing counters (cumulative since router construction).
+/// Surfaced at the end of a `train` CLI run so a silent fallback
+/// regression — an op kind that used to route suddenly declining — is
+/// visible without a profiler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RouteStats {
+    /// Convolutions served by the sparse kernel stack.
+    pub conv_routed: usize,
+    /// Convolutions declined to the naive 7-loop.
+    pub conv_fallback: usize,
+    /// `dot` instructions served by the blocked GEMM.
+    pub dot_routed: usize,
+    /// `dot` instructions declined (non-rank-2, stale operands, …).
+    pub dot_fallback: usize,
+    /// Elementwise chains collapsed into a single fused pass.
+    pub fused: usize,
+    /// Broadcast/reduce fast paths served (unfused but routed).
+    pub ew_routed: usize,
+    /// Attempted elementwise/broadcast/reduce ops declined to the naive
+    /// evaluator (op kinds the router never attempts are not counted).
+    pub ew_fallback: usize,
 }
 
-impl ConvRouter {
+/// How one instruction was served (internal tri-state behind the
+/// elementwise counters).
+enum Served {
+    /// A recognized chain collapsed into one pass.
+    Fused,
+    /// A fast path ran (no chain collapse, still bit-identical).
+    Routed,
+    /// Outside the envelope; the naive evaluator runs.
+    Declined,
+}
+
+/// A whole-graph op executor over the SparseTrain kernel/scheduler stack.
+///
+/// Owns one [`Scheduler`] (and therefore one persistent thread pool) for
+/// the lifetime of the runtime — every routed convolution *and* every
+/// panel-parallel GEMM reuses the same parked workers — plus a
+/// thread-count-aware [`Selector`] for the per-conv skip-mode decision.
+pub struct OpRouter {
+    sched: Scheduler,
+    selector: Selector,
+    /// `SPARSETRAIN_CONV_ROUTE` at construction: route convolutions?
+    route_convs: bool,
+    /// `SPARSETRAIN_OP_ROUTE` at construction: route everything else?
+    route_ops: bool,
+    /// Convolutions served by the kernel stack (legacy counter pair —
+    /// conv-only, kept distinct from the [`RouteStats`] fields so ISSUE 5
+    /// introspection keeps meaning "convolutions").
+    routed: AtomicUsize,
+    /// Convolutions declined to the interpreter's naive loop.
+    fallback: AtomicUsize,
+    dot_routed: AtomicUsize,
+    dot_fallback: AtomicUsize,
+    fused: AtomicUsize,
+    ew_routed: AtomicUsize,
+    ew_fallback: AtomicUsize,
+}
+
+impl OpRouter {
     /// A router running `threads` workers (`0` = host parallelism).
-    pub fn new(threads: usize) -> ConvRouter {
+    pub fn new(threads: usize) -> OpRouter {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
-        ConvRouter {
+        OpRouter {
             sched: Scheduler::new(threads),
             selector: Selector::with_threads(Machine::skylake_x(), threads),
+            route_convs: routing_enabled(),
+            route_ops: op_routing_enabled(),
             routed: AtomicUsize::new(0),
             fallback: AtomicUsize::new(0),
+            dot_routed: AtomicUsize::new(0),
+            dot_fallback: AtomicUsize::new(0),
+            fused: AtomicUsize::new(0),
+            ew_routed: AtomicUsize::new(0),
+            ew_fallback: AtomicUsize::new(0),
         }
     }
 
@@ -129,6 +194,256 @@ impl ConvRouter {
     /// Convolutions declined to the naive interpreter loop so far.
     pub fn fallback_calls(&self) -> usize {
         self.fallback.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of all per-kind routing counters.
+    pub fn stats(&self) -> RouteStats {
+        RouteStats {
+            conv_routed: self.routed.load(Ordering::Relaxed),
+            conv_fallback: self.fallback.load(Ordering::Relaxed),
+            dot_routed: self.dot_routed.load(Ordering::Relaxed),
+            dot_fallback: self.dot_fallback.load(Ordering::Relaxed),
+            fused: self.fused.load(Ordering::Relaxed),
+            ew_routed: self.ew_routed.load(Ordering::Relaxed),
+            ew_fallback: self.ew_fallback.load(Ordering::Relaxed),
+        }
+    }
+
+    fn bump(&self, counter: &AtomicUsize) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn tally_ew(&self, served: Served) -> bool {
+        match served {
+            Served::Fused => {
+                self.bump(&self.fused);
+                true
+            }
+            Served::Routed => {
+                self.bump(&self.ew_routed);
+                true
+            }
+            Served::Declined => {
+                self.bump(&self.ew_fallback);
+                false
+            }
+        }
+    }
+
+    /// The [`xla::OpExecutor`] entry point: either fill `out` completely
+    /// and return `true`, or return `false` having written nothing the
+    /// evaluator will read (the arena recycles the buffer). Never panics —
+    /// every kernel precondition is checked before any buffer is touched.
+    pub fn route_op(&self, call: &xla::OpCall<'_>, out: &mut [f32]) -> bool {
+        match call.op() {
+            Op::Convolution { window, spec } => {
+                if !self.route_convs {
+                    return false;
+                }
+                let (Some((lhs, lhs_dims)), Some((rhs, rhs_dims))) =
+                    (call.operand_f32(0), call.operand_f32(1))
+                else {
+                    return false;
+                };
+                let conv = xla::ConvCall {
+                    window,
+                    spec,
+                    lhs,
+                    lhs_dims,
+                    rhs,
+                    rhs_dims,
+                    out_dims: call.out_dims(),
+                };
+                match self.route(&conv) {
+                    Some(buf) if buf.len() == out.len() => {
+                        out.copy_from_slice(&buf);
+                        true
+                    }
+                    _ => false,
+                }
+            }
+            _ if !self.route_ops => false,
+            Op::Dot { lhs_c, rhs_c } => {
+                let ok = self.route_dot(call, *lhs_c, *rhs_c, out);
+                self.bump(if ok { &self.dot_routed } else { &self.dot_fallback });
+                ok
+            }
+            Op::Binary(kind) => self.tally_ew(self.route_binary(call, *kind, out)),
+            Op::Select => self.tally_ew(self.route_select(call, out)),
+            Op::Broadcast { dims } => self.tally_ew(route_broadcast(call, dims, out)),
+            Op::Reduce { dims, to_apply } => {
+                self.tally_ew(route_reduce(call, dims, *to_apply, out))
+            }
+            _ => false,
+        }
+    }
+
+    /// `dot` → the blocked GEMM. Rank-2 × rank-2 only; either contracting
+    /// layout is normalized onto the row-major `a[m][k] · b[k][n]` kernel
+    /// by packing a transpose. Output is the naive evaluator's row-major
+    /// `m × n` (allclose, not bit-equal: the kernel contracts with FMAs).
+    fn route_dot(&self, call: &xla::OpCall<'_>, lhs_c: usize, rhs_c: usize, out: &mut [f32]) -> bool {
+        let (Some((a, ad)), Some((b, bd))) = (call.operand_f32(0), call.operand_f32(1)) else {
+            return false;
+        };
+        if ad.len() != 2 || bd.len() != 2 || lhs_c > 1 || rhs_c > 1 {
+            return false;
+        }
+        let (m, k) = if lhs_c == 1 { (ad[0], ad[1]) } else { (ad[1], ad[0]) };
+        let (k2, n) = if rhs_c == 0 { (bd[0], bd[1]) } else { (bd[1], bd[0]) };
+        if k2 != k || out.len() != m * n {
+            return false;
+        }
+        let a_packed: Vec<f32>;
+        let a_ref: &[f32] = if lhs_c == 1 {
+            a
+        } else {
+            a_packed = gemm::pack_transpose(a, ad[0], ad[1]);
+            &a_packed
+        };
+        let b_packed: Vec<f32>;
+        let b_ref: &[f32] = if rhs_c == 0 {
+            b
+        } else {
+            b_packed = gemm::pack_transpose(b, bd[0], bd[1]);
+            &b_packed
+        };
+        out.fill(0.0);
+        let bk = self.sched.backend();
+        if m <= gemm::MB {
+            // One panel: the parallel path would enqueue a single task —
+            // pay the pool handoff only when there is work to spread.
+            gemm::gemm_with(bk, m, n, k, a_ref, b_ref, out);
+        } else {
+            gemm::gemm_parallel(self.sched.pool(), bk, m, n, k, a_ref, b_ref, out);
+        }
+        true
+    }
+
+    /// Elementwise binaries: fuse broadcast operands (bias add, ReLU max,
+    /// scalar scale, log-softmax row ops) and the SGD `w - lr·g` chain
+    /// into single passes. All fused forms reproduce the unfused evaluator
+    /// bit for bit — same per-element operations, same rounding count.
+    fn route_binary(&self, call: &xla::OpCall<'_>, kind: BinKind, out: &mut [f32]) -> Served {
+        let (Some((x, _)), Some((y, _))) = (call.operand_f32(0), call.operand_f32(1)) else {
+            return Served::Declined;
+        };
+
+        // SGD update: subtract(w, multiply(splat(lr), g)) — read through
+        // the multiply so the pass runs on `w` and `g` directly.
+        if kind == BinKind::Sub && x.len() == out.len() {
+            if let Some((s, g)) = scaled_operand(call, 1) {
+                if g.len() == out.len() {
+                    for ((o, &w), &gv) in out.iter_mut().zip(x).zip(g) {
+                        // mul-round then sub-round, exactly like the
+                        // unfused evaluator — deliberately NOT mul_add
+                        *o = w - s * gv;
+                    }
+                    return Served::Fused;
+                }
+            }
+        }
+
+        // A scalar splat on either side: one pass, scalar in a register.
+        if let Some(s) = splat_scalar(call, 1) {
+            if x.len() == out.len() {
+                for (o, &u) in out.iter_mut().zip(x) {
+                    *o = bin_f32(kind, u, s);
+                }
+                return Served::Fused;
+            }
+        }
+        if let Some(s) = splat_scalar(call, 0) {
+            if y.len() == out.len() {
+                for (o, &v) in out.iter_mut().zip(y) {
+                    *o = bin_f32(kind, s, v);
+                }
+                return Served::Fused;
+            }
+        }
+
+        // Rank-2 row/column vector broadcasts (bias add, log-softmax
+        // subtract/divide): read the rank-1 vector instead of the
+        // materialized broadcast.
+        let od = call.out_dims();
+        if od.len() == 2 && od[1] > 0 && out.len() == od[0] * od[1] {
+            let c = od[1];
+            if x.len() == out.len() {
+                if let Some((bdim, v)) = vec_broadcast(call, 1) {
+                    if bdim == 0 && v.len() == od[0] {
+                        for ((orow, xrow), &s) in out.chunks_mut(c).zip(x.chunks(c)).zip(v) {
+                            for (o, &u) in orow.iter_mut().zip(xrow) {
+                                *o = bin_f32(kind, u, s);
+                            }
+                        }
+                        return Served::Fused;
+                    }
+                    if bdim == 1 && v.len() == c {
+                        for (orow, xrow) in out.chunks_mut(c).zip(x.chunks(c)) {
+                            for ((o, &u), &s) in orow.iter_mut().zip(xrow).zip(v) {
+                                *o = bin_f32(kind, u, s);
+                            }
+                        }
+                        return Served::Fused;
+                    }
+                }
+            }
+            if y.len() == out.len() {
+                if let Some((bdim, v)) = vec_broadcast(call, 0) {
+                    if bdim == 0 && v.len() == od[0] {
+                        for ((orow, yrow), &s) in out.chunks_mut(c).zip(y.chunks(c)).zip(v) {
+                            for (o, &u) in orow.iter_mut().zip(yrow) {
+                                *o = bin_f32(kind, s, u);
+                            }
+                        }
+                        return Served::Fused;
+                    }
+                    if bdim == 1 && v.len() == c {
+                        for (orow, yrow) in out.chunks_mut(c).zip(y.chunks(c)) {
+                            for ((o, &u), &s) in orow.iter_mut().zip(yrow).zip(v) {
+                                *o = bin_f32(kind, s, u);
+                            }
+                        }
+                        return Served::Fused;
+                    }
+                }
+            }
+        }
+        Served::Declined
+    }
+
+    /// The ReLU-backward chain `select(compare(z, splat, GT), t, splat)`
+    /// as one pass. Same compare + select semantics as the naive pair —
+    /// bit-identical.
+    fn route_select(&self, call: &xla::OpCall<'_>, out: &mut [f32]) -> Served {
+        let Some(pred) = call.operand_instr(0) else {
+            return Served::Declined;
+        };
+        let Op::Compare(CmpDir::Gt) = &pred.op else {
+            return Served::Declined;
+        };
+        let [z_idx, thr_idx] = pred.operands[..] else {
+            return Served::Declined;
+        };
+        let Some(threshold) = splat_scalar_at(call, thr_idx) else {
+            return Served::Declined;
+        };
+        let Some((z, _)) = call.value_f32(z_idx) else {
+            return Served::Declined;
+        };
+        let Some((t, _)) = call.operand_f32(1) else {
+            return Served::Declined;
+        };
+        let Some(on_false) = splat_scalar(call, 2) else {
+            return Served::Declined;
+        };
+        if z.len() != out.len() || t.len() != out.len() {
+            return Served::Declined;
+        }
+        for ((o, &zv), &tv) in out.iter_mut().zip(z).zip(t) {
+            *o = if zv > threshold { tv } else { on_false };
+        }
+        Served::Fused
     }
 
     /// Skip mode for one call: the thread-count-aware selector's combined
@@ -325,17 +640,194 @@ impl ConvRouter {
     }
 }
 
-/// Wrap a router as the vendored crate's hook type, ready for
-/// [`xla::PjRtClient::set_conv_executor`].
-pub fn hook(router: Arc<ConvRouter>) -> Arc<xla::ConvExecutor> {
-    Arc::new(move |call: &xla::ConvCall<'_>| router.route(call))
+/// The splat scalar behind instruction `idx`: `broadcast(s), dimensions={}`
+/// of a live scalar f32 value.
+fn splat_scalar_at(call: &xla::OpCall<'_>, idx: usize) -> Option<f32> {
+    let instr = call.instr_at(idx)?;
+    let Op::Broadcast { dims } = &instr.op else {
+        return None;
+    };
+    if !dims.is_empty() {
+        return None;
+    }
+    let src = *instr.operands.first()?;
+    let (v, d) = call.value_f32(src)?;
+    if d.is_empty() && v.len() == 1 {
+        Some(v[0])
+    } else {
+        None
+    }
 }
 
-/// `SPARSETRAIN_CONV_ROUTE=off|0` disables kernel routing process-wide
-/// (the naive interpreter loop runs everywhere) — the A/B switch for
-/// debugging and for the wallclock harness's naive baseline rows.
+/// [`splat_scalar_at`] for the `k`-th operand of the current instruction.
+fn splat_scalar(call: &xla::OpCall<'_>, k: usize) -> Option<f32> {
+    splat_scalar_at(call, call.operand_idx(k)?)
+}
+
+/// When operand `k` is `broadcast(v), dimensions={d}` of a live rank-1
+/// vector, return `(d, v)`.
+fn vec_broadcast<'a>(call: &xla::OpCall<'a>, k: usize) -> Option<(usize, &'a [f32])> {
+    let instr = call.operand_instr(k)?;
+    let Op::Broadcast { dims } = &instr.op else {
+        return None;
+    };
+    let [bdim] = dims.as_slice() else {
+        return None;
+    };
+    let src = *instr.operands.first()?;
+    let (v, d) = call.value_f32(src)?;
+    if d.len() == 1 {
+        Some((*bdim, v))
+    } else {
+        None
+    }
+}
+
+/// When operand `k` is `multiply(splat(s), g)` (either factor order) of
+/// live f32 values, return `(s, g)` — the SGD chain's scaled gradient.
+fn scaled_operand<'a>(call: &xla::OpCall<'a>, k: usize) -> Option<(f32, &'a [f32])> {
+    let instr = call.operand_instr(k)?;
+    if !matches!(instr.op, Op::Binary(BinKind::Mul)) {
+        return None;
+    }
+    let [fa, fb] = instr.operands[..] else {
+        return None;
+    };
+    if let Some(s) = splat_scalar_at(call, fa) {
+        return Some((s, call.value_f32(fb)?.0));
+    }
+    if let Some(s) = splat_scalar_at(call, fb) {
+        return Some((s, call.value_f32(fa)?.0));
+    }
+    None
+}
+
+/// Broadcast fast paths: plain fills and row copies instead of the naive
+/// evaluator's per-element index decomposition. Exact copies of the naive
+/// gather — bit-identical by construction.
+fn route_broadcast(call: &xla::OpCall<'_>, dims: &[usize], out: &mut [f32]) -> Served {
+    let Some((src, sd)) = call.operand_f32(0) else {
+        return Served::Declined;
+    };
+    let od = call.out_dims();
+    match dims {
+        // scalar → any rank
+        [] if src.len() == 1 => {
+            out.fill(src[0]);
+            Served::Routed
+        }
+        // rank-1 [n] → [n, c]: replicate each element across its row
+        [0] if od.len() == 2 && od[1] > 0 && sd == [od[0]] && out.len() == od[0] * od[1] => {
+            for (row, &v) in out.chunks_mut(od[1]).zip(src) {
+                row.fill(v);
+            }
+            Served::Routed
+        }
+        // rank-1 [c] → [n, c]: copy the vector into every row
+        [1] if od.len() == 2 && od[1] > 0 && sd == [od[1]] && out.len() == od[0] * od[1] => {
+            for row in out.chunks_mut(od[1]) {
+                row.copy_from_slice(src);
+            }
+            Served::Routed
+        }
+        // rank-2 [n, c] → [n, c, h, w]: fill each spatial block
+        [0, 1]
+            if od.len() == 4
+                && od[2] * od[3] > 0
+                && sd == [od[0], od[1]]
+                && out.len() == src.len() * od[2] * od[3] =>
+        {
+            for (block, &v) in out.chunks_mut(od[2] * od[3]).zip(src) {
+                block.fill(v);
+            }
+            Served::Routed
+        }
+        _ => Served::Declined,
+    }
+}
+
+/// Reduce fast paths for plain `bin(p0, p1)` fold bodies: the naive
+/// evaluator's row-major fold order reproduced without the per-element
+/// index decomposition — bit-identical.
+fn route_reduce(call: &xla::OpCall<'_>, dims: &[usize], to_apply: usize, out: &mut [f32]) -> Served {
+    let Some(kind) = call.reduce_body_kind(to_apply) else {
+        return Served::Declined;
+    };
+    let (Some((src, sd)), Some((init_v, init_d))) = (call.operand_f32(0), call.operand_f32(1))
+    else {
+        return Served::Declined;
+    };
+    if !init_d.is_empty() || init_v.len() != 1 {
+        return Served::Declined;
+    }
+    let init = init_v[0];
+    // Full reduction over every dimension → a scalar fold.
+    if dims.len() == sd.len() && dims.iter().copied().eq(0..sd.len()) && out.len() == 1 {
+        let mut acc = init;
+        for &v in src {
+            acc = bin_f32(kind, acc, v);
+        }
+        out[0] = acc;
+        return Served::Routed;
+    }
+    match (sd.len(), dims) {
+        // [n, c] over dim 0 → [c]: column accumulators, rows in order
+        (2, [0]) if sd[1] > 0 && out.len() == sd[1] => {
+            out.fill(init);
+            for row in src.chunks(sd[1]) {
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = bin_f32(kind, *o, v);
+                }
+            }
+            Served::Routed
+        }
+        // [n, c] over dim 1 → [n]: one fold per row
+        (2, [1]) if sd[1] > 0 && out.len() == sd[0] => {
+            for (o, row) in out.iter_mut().zip(src.chunks(sd[1])) {
+                let mut acc = init;
+                for &v in row {
+                    acc = bin_f32(kind, acc, v);
+                }
+                *o = acc;
+            }
+            Served::Routed
+        }
+        // [n, k, h, w] over the spatial dims → [n, k]: one fold per block
+        (4, [2, 3]) if sd[2] * sd[3] > 0 && out.len() == sd[0] * sd[1] => {
+            for (o, block) in out.iter_mut().zip(src.chunks(sd[2] * sd[3])) {
+                let mut acc = init;
+                for &v in block {
+                    acc = bin_f32(kind, acc, v);
+                }
+                *o = acc;
+            }
+            Served::Routed
+        }
+        _ => Served::Declined,
+    }
+}
+
+/// Wrap a router as the vendored crate's hook type, ready for
+/// [`xla::PjRtClient::set_op_executor`].
+pub fn hook(router: Arc<OpRouter>) -> Arc<xla::OpExecutor> {
+    Arc::new(move |call: &xla::OpCall<'_>, out: &mut [f32]| router.route_op(call, out))
+}
+
+/// `SPARSETRAIN_CONV_ROUTE=off|0` disables *convolution* kernel routing
+/// process-wide (the naive 7-loop runs for every conv) — the A/B switch
+/// for debugging and for the wallclock harness's naive baseline rows.
 pub fn routing_enabled() -> bool {
     match std::env::var("SPARSETRAIN_CONV_ROUTE") {
+        Ok(v) => !matches!(v.as_str(), "off" | "0" | "false"),
+        Err(_) => true,
+    }
+}
+
+/// `SPARSETRAIN_OP_ROUTE=off|0` disables every non-convolution route
+/// (GEMM, fused elementwise chains, broadcast/reduce fast paths) — the
+/// mirror kill switch of [`routing_enabled`], read at router construction.
+pub fn op_routing_enabled() -> bool {
+    match std::env::var("SPARSETRAIN_OP_ROUTE") {
         Ok(v) => !matches!(v.as_str(), "off" | "0" | "false"),
         Err(_) => true,
     }
@@ -400,7 +892,7 @@ mod tests {
 
         let window = Window { size: [3, 3], stride: [1, 1], pad_lo: [1, 1], pad_hi: [1, 1] };
         let sp = spec("bf01_oi01->bf01");
-        let router = ConvRouter::new(2);
+        let router = OpRouter::new(2);
         let out = router
             .route(&xla::ConvCall {
                 window: &window,
@@ -431,7 +923,7 @@ mod tests {
     fn miri_out_of_envelope_declines() {
         let window = Window { size: [1, 1], stride: [1, 1], pad_lo: [0, 0], pad_hi: [0, 0] };
         let sp = spec("bf01_oi01->bf01");
-        let router = ConvRouter::new(1);
+        let router = OpRouter::new(1);
         let lhs = vec![1.0f32; 12]; // [1,3,2,2]: C=3 is not a multiple of V
         let rhs = vec![1.0f32; 4 * 3];
         let out = router.route(&xla::ConvCall {

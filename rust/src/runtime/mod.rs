@@ -9,15 +9,38 @@
 //! the real `xla` crate linked in. Set `SPARSETRAIN_ARTIFACTS` to point
 //! the runtime at a different artifacts directory.
 //!
-//! **Kernel-routed convolutions (ISSUE 5).** The interpreter is no longer
-//! a naive-only evaluator on this path: [`executor::ConvRouter`] plugs
-//! into the vendored crate's convolution hook and dispatches the three
-//! SparseTrain-executable conv forms (FWD / BWI / BWW, as emitted by
-//! [`hlo_builder`]) to the explicit-SIMD sparse kernels running on the
-//! persistent-thread-pool scheduler, with the thread-count-aware selector
-//! picking the skip mode from the measured operand sparsity. Anything
-//! outside the envelope falls back to the naive loop bit-identically.
-//! `SPARSETRAIN_CONV_ROUTE=off` disables routing process-wide.
+//! **Whole-graph op routing (ISSUE 6, generalizing ISSUE 5's conv-only
+//! hook).** The interpreter is no longer a naive-only evaluator on this
+//! path: [`executor::OpRouter`] plugs into the vendored crate's
+//! per-instruction [`xla::OpExecutor`] hook and serves three op classes:
+//!
+//! - **Convolutions** — the three SparseTrain-executable forms
+//!   (FWD / BWI / BWW, as emitted by [`hlo_builder`]) dispatch to the
+//!   explicit-SIMD sparse kernels on the persistent-thread-pool
+//!   scheduler, with the thread-count-aware selector picking the skip
+//!   mode from measured operand sparsity.
+//! - **`dot`** — rank-2 × rank-2 f32 contractions run the blocked,
+//!   SIMD-dispatched GEMM ([`crate::kernels::gemm`]), panel-parallel on
+//!   the same pool once the output exceeds one row panel.
+//! - **Elementwise chains** — recognized patterns (scalar-splat
+//!   binaries, bias-style vector broadcasts, SGD `w - lr*g`, fused
+//!   compare+select ReLU masks, common broadcast/reduce shapes) collapse
+//!   into single fused passes, bit-identical to the unfused evaluator.
+//!
+//! *Buffer ownership*: the evaluator owns allocation. It hands the hook
+//! an arena-recycled output buffer of exactly the declared element
+//! count; the hook either fills it completely and returns `true`, or
+//! returns `false` untouched and the arena reclaims it.
+//!
+//! *Fallback contract*: anything outside the envelope — non-f32 dots,
+//! unrecognized chains, odd ranks — declines and runs the interpreter's
+//! naive reference loop **bit-identically** (proven by
+//! `rust/tests/op_route_parity.rs` and `conv_route_parity.rs`).
+//!
+//! Kill switches: `SPARSETRAIN_CONV_ROUTE=off` disables conv routing;
+//! `SPARSETRAIN_OP_ROUTE=off` disables dot routing and fusion. Either
+//! alone leaves the other class active; both together restore the
+//! all-naive interpreter.
 
 pub mod artifacts;
 pub mod executor;
@@ -25,5 +48,5 @@ pub mod hlo_builder;
 pub mod pjrt;
 
 pub use artifacts::ArtifactSet;
-pub use executor::ConvRouter;
+pub use executor::{OpRouter, RouteStats};
 pub use pjrt::{Executable, Runtime};

@@ -1,15 +1,16 @@
 //! Thin wrapper over the `xla` crate: PJRT CPU client + compiled
 //! executables keyed by artifact name.
 //!
-//! By default the client is built with the kernel-routed convolution
-//! executor installed ([`super::executor::ConvRouter`]): every
-//! SparseTrain-executable `convolution` in a loaded artifact runs through
-//! the sparse kernels on the persistent-thread-pool scheduler instead of
-//! the interpreter's naive loop. `SPARSETRAIN_CONV_ROUTE=off` (or
-//! [`Runtime::cpu_naive`]) restores the all-interpreter behavior — the A/B
-//! lever the parity tests and the trainer-step wallclock rows use.
+//! By default the client is built with the whole-graph op router installed
+//! ([`super::executor::OpRouter`]): convolutions run through the sparse
+//! kernels, `dot` through the blocked parallel GEMM, and recognized
+//! elementwise chains as fused single passes — all on the
+//! persistent-thread-pool scheduler instead of the interpreter's naive
+//! evaluator. `SPARSETRAIN_CONV_ROUTE=off` / `SPARSETRAIN_OP_ROUTE=off`
+//! (or [`Runtime::cpu_naive`]) restore the all-interpreter behavior — the
+//! A/B levers the parity tests and the trainer-step wallclock rows use.
 
-use super::executor::{self, ConvRouter};
+use super::executor::{self, OpRouter};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -45,25 +46,27 @@ pub struct Runtime {
     dir: PathBuf,
     cache: HashMap<String, usize>,
     loaded: Vec<Executable>,
-    router: Option<Arc<ConvRouter>>,
+    router: Option<Arc<OpRouter>>,
 }
 
 impl Runtime {
     /// Create a CPU PJRT client rooted at `artifacts_dir`, with the
-    /// kernel-routed convolution executor sized to the host parallelism
-    /// (unless `SPARSETRAIN_CONV_ROUTE=off`).
+    /// whole-graph op router sized to the host parallelism (unless both
+    /// `SPARSETRAIN_CONV_ROUTE=off` and `SPARSETRAIN_OP_ROUTE=off`).
     pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
         Self::cpu_with_threads(artifacts_dir, 0)
     }
 
     /// [`Runtime::cpu`] with an explicit scheduler width (`0` = host
     /// parallelism). The router — and with it one persistent thread pool —
-    /// lives as long as the runtime.
+    /// lives as long as the runtime. It is installed when either routing
+    /// class is enabled; the per-class kill switches are honored inside
+    /// [`OpRouter::route_op`].
     pub fn cpu_with_threads<P: AsRef<Path>>(artifacts_dir: P, threads: usize) -> Result<Runtime> {
         let mut client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let router = if executor::routing_enabled() {
-            let router = Arc::new(ConvRouter::new(threads));
-            client.set_conv_executor(executor::hook(Arc::clone(&router)));
+        let router = if executor::routing_enabled() || executor::op_routing_enabled() {
+            let router = Arc::new(OpRouter::new(threads));
+            client.set_op_executor(executor::hook(Arc::clone(&router)));
             Some(router)
         } else {
             None
@@ -77,9 +80,9 @@ impl Runtime {
         })
     }
 
-    /// A runtime with **no** convolution routing: every conv runs the
-    /// interpreter's naive reference loop. Baseline for parity tests and
-    /// the `trainer_step` wallclock rows.
+    /// A runtime with **no** routing at all: every instruction runs the
+    /// interpreter's naive reference evaluator. Baseline for parity tests
+    /// and the `trainer_step` wallclock rows.
     pub fn cpu_naive<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
@@ -91,9 +94,9 @@ impl Runtime {
         })
     }
 
-    /// The installed convolution router, if any (for introspection:
-    /// routed/fallback call counts, thread width).
-    pub fn conv_router(&self) -> Option<&ConvRouter> {
+    /// The installed op router, if any (for introspection: per-op-kind
+    /// routed/fallback/fused call counts, thread width).
+    pub fn op_router(&self) -> Option<&OpRouter> {
         self.router.as_deref()
     }
 
@@ -157,12 +160,12 @@ mod tests {
     fn cpu_client_comes_up() {
         let rt = Runtime::cpu("artifacts").unwrap();
         assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
-        // default runtime carries a conv router (unless env-disabled)
-        if super::executor::routing_enabled() {
-            assert!(rt.conv_router().is_some());
-            assert!(rt.conv_router().unwrap().threads() >= 1);
+        // default runtime carries an op router (unless env-disabled)
+        if super::executor::routing_enabled() || super::executor::op_routing_enabled() {
+            assert!(rt.op_router().is_some());
+            assert!(rt.op_router().unwrap().threads() >= 1);
         }
-        assert!(Runtime::cpu_naive("artifacts").unwrap().conv_router().is_none());
+        assert!(Runtime::cpu_naive("artifacts").unwrap().op_router().is_none());
     }
 
     #[test]

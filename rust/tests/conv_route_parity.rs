@@ -2,7 +2,7 @@
 //!
 //! Drives the mini-HLO interpreter twice over single-convolution probe
 //! modules — once naive (no hook) and once with the SparseTrain
-//! [`ConvRouter`] installed — across randomized geometries, `dim_labels`
+//! [`OpRouter`] installed — across randomized geometries, `dim_labels`
 //! and paddings, and pins the routing contract:
 //!
 //! * **In-envelope** calls must actually route (counter-checked), be
@@ -22,7 +22,7 @@
 
 use sparsetrain::kernels::{reference, sparse_bwi, sparse_bww, sparse_fwd};
 use sparsetrain::kernels::{ConvConfig, KernelStats, SkipMode};
-use sparsetrain::runtime::executor::{self, ConvRouter};
+use sparsetrain::runtime::executor::{self, OpRouter};
 use sparsetrain::runtime::hlo_builder::{self, conv_module_hlo, Geometry};
 use sparsetrain::runtime::pjrt::{literal_f32, literal_i32, Runtime};
 use sparsetrain::tensor::{allclose, ActTensor, BatchTiledTensor, FilterTensor};
@@ -32,10 +32,10 @@ use sparsetrain::V;
 use std::sync::Arc;
 
 /// Compile + execute one probe module, optionally with a router installed.
-fn run_probe(text: &str, inputs: &[xla::Literal], router: Option<Arc<ConvRouter>>) -> Vec<f32> {
+fn run_probe(text: &str, inputs: &[xla::Literal], router: Option<Arc<OpRouter>>) -> Vec<f32> {
     let mut client = xla::PjRtClient::cpu().unwrap();
     if let Some(r) = router {
-        client.set_conv_executor(executor::hook(r));
+        client.set_op_executor(executor::hook(r));
     }
     let proto = xla::HloModuleProto::from_text(text).unwrap();
     let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
@@ -54,7 +54,7 @@ fn probe_pair(
     threads: usize,
 ) -> (Vec<f32>, Vec<f32>, usize) {
     let naive = run_probe(text, inputs, None);
-    let router = Arc::new(ConvRouter::new(threads));
+    let router = Arc::new(OpRouter::new(threads));
     let routed = run_probe(text, inputs, Some(Arc::clone(&router)));
     (naive, routed, router.routed_calls())
 }
@@ -380,7 +380,7 @@ fn train_step_kernel_routed_matches_naive_end_to_end() {
     assert_eq!(naive.len(), 7);
     assert_eq!(routed.len(), 7);
     if executor::routing_enabled() {
-        let router = routed_rt.conv_router().expect("router installed");
+        let router = routed_rt.op_router().expect("router installed");
         assert_eq!(
             router.routed_calls(),
             5,

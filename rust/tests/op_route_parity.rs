@@ -1,0 +1,486 @@
+//! Parity suite for the whole-graph op router (ISSUE 6): the blocked
+//! parallel GEMM behind `dot`, the fused elementwise chains, the
+//! broadcast/reduce fast paths, and the arena-backed evaluator.
+//!
+//! Contract pinned here (extending `conv_route_parity.rs`, which owns the
+//! convolution half):
+//!
+//! * The **parallel GEMM is bit-exact vs the pinned serial blocked
+//!   kernel** at any thread count and shape — per-C-row accumulation is
+//!   p-ascending regardless of panel grouping — and allclose vs a naive
+//!   triple loop (the kernel contracts with FMAs, so bit-equality with
+//!   multiply-then-add is not a meaningful target).
+//! * **Routed `dot` instructions** match the naive `Op::Dot` evaluator
+//!   within tight tolerance across all four contracting-dim layouts and
+//!   across thread counts, and actually route (counter-checked).
+//! * **Fused elementwise chains** (bias add, ReLU max, SGD `w - lr·g`,
+//!   log-softmax row subtract, ReLU-backward select) and the
+//!   broadcast/reduce fast paths are **bit-identical** to the unfused
+//!   naive evaluator — same per-element ops, same rounding count, same
+//!   fold order.
+//! * **Arena reuse** across repeated executions of one compiled
+//!   executable is bit-identical to fresh-allocation runs.
+//! * **Out-of-envelope ops** (rank-1 dots, plain tensor-tensor binaries,
+//!   unrecognized reduce shapes) decline and fall back to the naive
+//!   evaluator **bit-identically**, with the fallback counters showing
+//!   the decline.
+//! * The full `train_step` graph at the paper geometry routes all five
+//!   convolutions and all three dots, fuses chains, and matches the
+//!   naive interpreter end to end.
+
+use sparsetrain::kernels::gemm::{gemm_parallel, gemm_with, pack_transpose, MB};
+use sparsetrain::kernels::simd;
+use sparsetrain::runtime::executor::{self, OpRouter};
+use sparsetrain::runtime::hlo_builder::{self, Geometry};
+use sparsetrain::runtime::pjrt::{literal_f32, literal_i32, Runtime};
+use sparsetrain::tensor::allclose;
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::proptest::{check, Config as PropConfig, UsizeIn};
+use sparsetrain::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Compile + execute one probe module, optionally with a router installed;
+/// returns the flattened root (tuple roots are concatenated in order).
+fn run_probe(text: &str, inputs: &[xla::Literal], router: Option<Arc<OpRouter>>) -> Vec<Vec<f32>> {
+    let mut client = xla::PjRtClient::cpu().unwrap();
+    if let Some(r) = router {
+        client.set_op_executor(executor::hook(r));
+    }
+    let proto = xla::HloModuleProto::from_text(text).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let outs = exe.execute::<xla::Literal>(inputs).unwrap();
+    let lit = outs[0][0].to_literal_sync().unwrap();
+    match lit.clone().to_tuple() {
+        Ok(parts) => parts.iter().map(|p| p.to_vec::<f32>().unwrap()).collect(),
+        Err(_) => vec![lit.to_vec::<f32>().unwrap()],
+    }
+}
+
+/// Naive row-major triple loop: the reassociation-free reference.
+fn naive_matmul(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+// ---------------------------------------------------------------------------
+// GEMM kernel: serial blocked vs parallel, and vs the naive triple loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_gemm_parallel_is_bitexact_vs_serial_across_shapes_and_threads() {
+    let bk = simd::dispatch();
+    let gen = UsizeIn { lo: 0, hi: 15 };
+    check(PropConfig { cases: 16, seed: 0x61, max_shrink_steps: 16 }, &gen, |&case| {
+        let mut rng = Xorshift::new(500 + case as u64);
+        // Cross panel boundaries (MB = 32) and the V-wide column tail.
+        let m = [1, 3, MB - 1, MB, MB + 1, 2 * MB + 5][case % 6];
+        let n = [1, 7, 17, 33][case / 4];
+        let k = 1 + case % 9;
+        let threads = 1 + case % 4;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        let mut serial = vec![0.0f32; m * n];
+        gemm_with(bk, m, n, k, &a, &b, &mut serial);
+        let pool = ThreadPool::new(threads);
+        let mut par = vec![0.0f32; m * n];
+        gemm_parallel(&pool, bk, m, n, k, &a, &b, &mut par);
+        if bits(&serial) != bits(&par) {
+            return Err(format!(
+                "case {case}: gemm_parallel not bit-equal to serial (m={m} n={n} k={k} t={threads})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_gemm_matches_naive_triple_loop() {
+    let bk = simd::dispatch();
+    let gen = UsizeIn { lo: 0, hi: 9 };
+    check(PropConfig { cases: 10, seed: 0x62, max_shrink_steps: 16 }, &gen, |&case| {
+        let mut rng = Xorshift::new(600 + case as u64);
+        let m = 1 + case * 7 % 40;
+        let n = 1 + case * 5 % 23;
+        let k = 1 + case * 3 % 17;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let want = naive_matmul(m, n, k, &a, &b);
+        let mut got = vec![0.0f32; m * n];
+        gemm_with(bk, m, n, k, &a, &b, &mut got);
+        if !allclose(&got, &want, 1e-4, 1e-4) {
+            return Err(format!("case {case}: gemm diverged from naive (m={m} n={n} k={k})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pack_transpose_is_an_exact_gather() {
+    let mut rng = Xorshift::new(7);
+    let (r, c) = (5, 9);
+    let src: Vec<f32> = (0..r * c).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let t = pack_transpose(&src, r, c);
+    for i in 0..r {
+        for j in 0..c {
+            assert_eq!(t[j * r + i].to_bits(), src[i * c + j].to_bits());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routed dot vs the naive Op::Dot evaluator, all four contracting layouts
+// ---------------------------------------------------------------------------
+
+fn dot_module(ld: [usize; 2], rd: [usize; 2], od: [usize; 2], lc: usize, rc: usize) -> String {
+    format!(
+        "HloModule dot_probe\n\nENTRY %dot_probe {{\n  \
+         %lhs = f32[{},{}] parameter(0)\n  \
+         %rhs = f32[{},{}] parameter(1)\n  \
+         ROOT %out = f32[{},{}] dot(%lhs, %rhs), \
+         lhs_contracting_dims={{{lc}}}, rhs_contracting_dims={{{rc}}}\n}}\n",
+        ld[0], ld[1], rd[0], rd[1], od[0], od[1]
+    )
+}
+
+#[test]
+fn property_routed_dot_matches_naive_evaluator_all_layouts() {
+    let gen = UsizeIn { lo: 0, hi: 15 };
+    check(PropConfig { cases: 16, seed: 0x63, max_shrink_steps: 16 }, &gen, |&case| {
+        let mut rng = Xorshift::new(700 + case as u64);
+        // Both sides of the serial/parallel cutover (m <= MB stays serial).
+        let m = [3, 16, MB + 3, 2 * MB][case % 4];
+        let n = [5, 17][(case / 4) % 2];
+        let k = 2 + case % 7;
+        let threads = 1 + case % 3;
+        let (lc, rc) = [(1, 0), (0, 0), (1, 1), (0, 1)][case % 4];
+        let ld = if lc == 1 { [m, k] } else { [k, m] };
+        let rd = if rc == 0 { [k, n] } else { [n, k] };
+        let text = dot_module(ld, rd, [m, n], lc, rc);
+        let lhs: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let rhs: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let inputs = [
+            literal_f32(&lhs, &ld.map(|d| d as i64)).unwrap(),
+            literal_f32(&rhs, &rd.map(|d| d as i64)).unwrap(),
+        ];
+        let naive = run_probe(&text, &inputs, None);
+        let router = Arc::new(OpRouter::new(threads));
+        let routed = run_probe(&text, &inputs, Some(Arc::clone(&router)));
+        let stats = router.stats();
+        if stats.dot_routed != 1 || stats.dot_fallback != 0 {
+            return Err(format!(
+                "case {case} (lc={lc} rc={rc}): dot did not route ({stats:?})"
+            ));
+        }
+        if !allclose(&routed[0], &naive[0], 1e-4, 1e-4) {
+            return Err(format!("case {case} (lc={lc} rc={rc}): routed dot diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// The routed dot is deterministic across thread counts: the GEMM's
+/// per-row accumulation order is p-ascending regardless of panel split.
+#[test]
+fn routed_dot_is_bit_identical_across_thread_counts() {
+    let (m, n, k) = (2 * MB + 7, 17, 9);
+    let mut rng = Xorshift::new(42);
+    let lhs: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let rhs: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let text = dot_module([m, k], [k, n], [m, n], 1, 0);
+    let inputs = [
+        literal_f32(&lhs, &[m as i64, k as i64]).unwrap(),
+        literal_f32(&rhs, &[k as i64, n as i64]).unwrap(),
+    ];
+    let reference = run_probe(&text, &inputs, Some(Arc::new(OpRouter::new(1))));
+    for threads in [2, 3, 4] {
+        let got = run_probe(&text, &inputs, Some(Arc::new(OpRouter::new(threads))));
+        assert_eq!(
+            bits(&reference[0]),
+            bits(&got[0]),
+            "routed dot differs between 1 and {threads} threads"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused elementwise chains + broadcast/reduce fast paths: bit-identical
+// ---------------------------------------------------------------------------
+
+/// One module exercising every fused/fast-path form the router recognizes:
+/// bias add (dim-1 vector broadcast), ReLU max vs a zero splat, the
+/// ReLU-backward compare+select chain, the SGD `w - lr·g` chain, the
+/// log-softmax-style row subtract (dim-0 vector broadcast), and row /
+/// column / full reductions.
+fn fused_chain_module(n: usize, c: usize) -> String {
+    let s2 = format!("f32[{n},{c}]");
+    let p2 = format!("pred[{n},{c}]");
+    format!(
+        "HloModule fused_probe\n\n\
+         %add_f32 {{\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  \
+         ROOT %s = f32[] add(%p0, %p1)\n}}\n\n\
+         %max_f32 {{\n  %q0 = f32[] parameter(0)\n  %q1 = f32[] parameter(1)\n  \
+         ROOT %m = f32[] maximum(%q0, %q1)\n}}\n\n\
+         ENTRY %fused_probe {{\n  \
+         %x = {s2} parameter(0)\n  \
+         %b = f32[{c}] parameter(1)\n  \
+         %g = {s2} parameter(2)\n  \
+         %zero = f32[] constant(0)\n  \
+         %zb = {s2} broadcast(%zero), dimensions={{}}\n  \
+         %bb = {s2} broadcast(%b), dimensions={{1}}\n  \
+         %biased = {s2} add(%x, %bb)\n  \
+         %relu = {s2} maximum(%biased, %zb)\n  \
+         %mask = {p2} compare(%biased, %zb), direction=GT\n  \
+         %dz = {s2} select(%mask, %g, %zb)\n  \
+         %lr = f32[] constant(0.25)\n  \
+         %lrb = {s2} broadcast(%lr), dimensions={{}}\n  \
+         %step = {s2} multiply(%lrb, %dz)\n  \
+         %new_x = {s2} subtract(%x, %step)\n  \
+         %rows = f32[{n}] reduce(%relu, %zero), dimensions={{1}}, to_apply=%add_f32\n  \
+         %rows_b = {s2} broadcast(%rows), dimensions={{0}}\n  \
+         %centered = {s2} subtract(%relu, %rows_b)\n  \
+         %cols = f32[{c}] reduce(%centered, %zero), dimensions={{0}}, to_apply=%add_f32\n  \
+         %peak = f32[] reduce(%centered, %zero), dimensions={{0,1}}, to_apply=%max_f32\n  \
+         ROOT %t = ({s2}, {s2}, f32[{n}], f32[{c}], f32[]) \
+         tuple(%new_x, %centered, %rows, %cols, %peak)\n}}\n"
+    )
+}
+
+#[test]
+fn fused_chains_are_bit_identical_to_the_unfused_evaluator() {
+    let (n, c) = (5, 7);
+    let mut rng = Xorshift::new(11);
+    let x: Vec<f32> = (0..n * c).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..c).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+    let g: Vec<f32> = (0..n * c).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let inputs = [
+        literal_f32(&x, &[n as i64, c as i64]).unwrap(),
+        literal_f32(&b, &[c as i64]).unwrap(),
+        literal_f32(&g, &[n as i64, c as i64]).unwrap(),
+    ];
+    let text = fused_chain_module(n, c);
+    let naive = run_probe(&text, &inputs, None);
+    let router = Arc::new(OpRouter::new(2));
+    let routed = run_probe(&text, &inputs, Some(Arc::clone(&router)));
+    assert_eq!(naive.len(), routed.len());
+    for (i, (a, r)) in naive.iter().zip(&routed).enumerate() {
+        assert_eq!(bits(a), bits(r), "fused output {i} not bit-identical to unfused");
+    }
+    let stats = router.stats();
+    // bias add, ReLU max, select, SGD subtract, row-centering subtract
+    assert!(stats.fused >= 5, "expected >= 5 fused chains, got {stats:?}");
+    // splat/vector broadcasts + the three reduces take the fast paths
+    assert!(stats.ew_routed >= 4, "expected broadcast/reduce fast paths, got {stats:?}");
+    assert_eq!(stats.dot_routed + stats.dot_fallback, 0, "no dots in this module");
+}
+
+// ---------------------------------------------------------------------------
+// Arena reuse across repeated executions of one compiled executable
+// ---------------------------------------------------------------------------
+
+#[test]
+fn arena_reuse_across_executions_is_bit_identical() {
+    let (n, c) = (6, 9);
+    let text = fused_chain_module(n, c);
+    let mut rng = Xorshift::new(23);
+    let x: Vec<f32> = (0..n * c).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..c).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+    let g: Vec<f32> = (0..n * c).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let inputs = [
+        literal_f32(&x, &[n as i64, c as i64]).unwrap(),
+        literal_f32(&b, &[c as i64]).unwrap(),
+        literal_f32(&g, &[n as i64, c as i64]).unwrap(),
+    ];
+
+    // Fresh client per run: every execution allocates from an empty arena.
+    let fresh = run_probe(&text, &inputs, Some(Arc::new(OpRouter::new(2))));
+
+    // One client, one executable, repeated runs: later executions recycle
+    // the earlier runs' buffers through the persistent arena.
+    let mut client = xla::PjRtClient::cpu().unwrap();
+    client.set_op_executor(executor::hook(Arc::new(OpRouter::new(2))));
+    let proto = xla::HloModuleProto::from_text(&text).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    for round in 0..3 {
+        let outs = exe.execute::<xla::Literal>(&inputs).unwrap();
+        let parts = outs[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        for (i, (f, p)) in fresh.iter().zip(&parts).enumerate() {
+            assert_eq!(
+                bits(f),
+                bits(&p.to_vec::<f32>().unwrap()),
+                "round {round} output {i}: arena reuse changed the result"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-envelope ops: decline, count the fallback, stay bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rank1_dot_falls_back_bit_identically() {
+    let k = 13;
+    let text = format!(
+        "HloModule r1dot\n\nENTRY %r1dot {{\n  \
+         %lhs = f32[{k}] parameter(0)\n  \
+         %rhs = f32[{k}] parameter(1)\n  \
+         ROOT %out = f32[] dot(%lhs, %rhs), \
+         lhs_contracting_dims={{0}}, rhs_contracting_dims={{0}}\n}}\n"
+    );
+    let mut rng = Xorshift::new(31);
+    let a: Vec<f32> = (0..k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let inputs = [
+        literal_f32(&a, &[k as i64]).unwrap(),
+        literal_f32(&b, &[k as i64]).unwrap(),
+    ];
+    let naive = run_probe(&text, &inputs, None);
+    let router = Arc::new(OpRouter::new(2));
+    let routed = run_probe(&text, &inputs, Some(Arc::clone(&router)));
+    let stats = router.stats();
+    assert_eq!(stats.dot_routed, 0, "rank-1 dot must not route");
+    assert_eq!(stats.dot_fallback, 1, "rank-1 dot must count as a dot fallback");
+    assert_eq!(bits(&naive[0]), bits(&routed[0]), "fallback not bit-identical");
+}
+
+#[test]
+fn unrecognized_elementwise_and_reduce_shapes_fall_back_bit_identically() {
+    // A plain tensor - tensor subtract (no broadcast operand: outside the
+    // fusion envelope) and a rank-3 reduce over a middle dim (no fast
+    // path). Both must decline, count, and reproduce the naive bits.
+    let (a, b, c) = (3, 4, 5);
+    let text = format!(
+        "HloModule oov\n\n\
+         %add_f32 {{\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  \
+         ROOT %s = f32[] add(%p0, %p1)\n}}\n\n\
+         ENTRY %oov {{\n  \
+         %x = f32[{a},{b},{c}] parameter(0)\n  \
+         %y = f32[{a},{b},{c}] parameter(1)\n  \
+         %zero = f32[] constant(0)\n  \
+         %diff = f32[{a},{b},{c}] subtract(%x, %y)\n  \
+         %mid = f32[{a},{c}] reduce(%diff, %zero), dimensions={{1}}, to_apply=%add_f32\n  \
+         ROOT %t = (f32[{a},{b},{c}], f32[{a},{c}]) tuple(%diff, %mid)\n}}\n"
+    );
+    let n = a * b * c;
+    let mut rng = Xorshift::new(37);
+    let xv: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let yv: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let inputs = [
+        literal_f32(&xv, &[a as i64, b as i64, c as i64]).unwrap(),
+        literal_f32(&yv, &[a as i64, b as i64, c as i64]).unwrap(),
+    ];
+    let naive = run_probe(&text, &inputs, None);
+    let router = Arc::new(OpRouter::new(2));
+    let routed = run_probe(&text, &inputs, Some(Arc::clone(&router)));
+    let stats = router.stats();
+    assert!(stats.ew_fallback >= 2, "subtract + rank-3 reduce must both decline: {stats:?}");
+    assert_eq!(stats.fused, 0, "nothing in this module is fusable: {stats:?}");
+    for (i, (av, rv)) in naive.iter().zip(&routed).enumerate() {
+        assert_eq!(bits(av), bits(rv), "fallback output {i} not bit-identical");
+    }
+}
+
+/// The kill switch works per class: a router built with
+/// `SPARSETRAIN_OP_ROUTE=off` semantics never touches non-conv ops. (The
+/// env var itself is read at construction; `route_op`'s envelope tests
+/// above cover the on state, and `conv_route_parity` covers convs.)
+#[test]
+fn op_route_kill_switch_counts_nothing_when_disabled() {
+    if executor::op_routing_enabled() {
+        return; // only meaningful when the suite runs with the switch off
+    }
+    let text = dot_module([4, 3], [3, 5], [4, 5], 1, 0);
+    let mut rng = Xorshift::new(41);
+    let a: Vec<f32> = (0..12).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..15).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let inputs =
+        [literal_f32(&a, &[4, 3]).unwrap(), literal_f32(&b, &[3, 5]).unwrap()];
+    let naive = run_probe(&text, &inputs, None);
+    let router = Arc::new(OpRouter::new(1));
+    let routed = run_probe(&text, &inputs, Some(Arc::clone(&router)));
+    let stats = router.stats();
+    assert_eq!(stats.dot_routed + stats.dot_fallback + stats.fused + stats.ew_routed, 0);
+    assert_eq!(bits(&naive[0]), bits(&routed[0]));
+}
+
+// ---------------------------------------------------------------------------
+// Full train step: routed vs naive, paper geometry, all counters
+// ---------------------------------------------------------------------------
+
+/// The paper-geometry train step must route all five convolutions AND all
+/// three dots, fuse elementwise chains, and agree with the naive
+/// interpreter across the complete 7-output contract.
+#[test]
+fn train_step_op_routed_matches_naive_end_to_end() {
+    let g = Geometry::paper();
+    let dir = std::env::temp_dir()
+        .join(format!("sparsetrain-oprouteparity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("train_step.hlo.txt"), hlo_builder::train_step_hlo(&g)).unwrap();
+
+    let mut rng = Xorshift::new(99);
+    let bound = |fan: usize| (2.0f32 / fan as f32).sqrt();
+    let w1: Vec<f32> = (0..g.c1 * g.c_in * 9)
+        .map(|_| rng.range_f32(-bound(g.c_in * 9), bound(g.c_in * 9)))
+        .collect();
+    let w2: Vec<f32> =
+        (0..g.c2 * g.c1 * 9).map(|_| rng.range_f32(-bound(g.c1 * 9), bound(g.c1 * 9))).collect();
+    let wfc: Vec<f32> =
+        (0..g.classes * g.c2).map(|_| rng.range_f32(-bound(g.c2), bound(g.c2))).collect();
+    let bfc = vec![0.0f32; g.classes];
+    let x: Vec<f32> = (0..g.n * g.c_in * g.hw * g.hw).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let labels: Vec<i32> = (0..g.n).map(|_| rng.below(g.classes) as i32).collect();
+    let inputs = vec![
+        literal_f32(&w1, &[g.c1 as i64, g.c_in as i64, 3, 3]).unwrap(),
+        literal_f32(&w2, &[g.c2 as i64, g.c1 as i64, 3, 3]).unwrap(),
+        literal_f32(&wfc, &[g.classes as i64, g.c2 as i64]).unwrap(),
+        literal_f32(&bfc, &[g.classes as i64]).unwrap(),
+        literal_f32(&x, &[g.n as i64, g.c_in as i64, g.hw as i64, g.hw as i64]).unwrap(),
+        literal_i32(&labels, &[g.n as i64]).unwrap(),
+    ];
+
+    let mut naive_rt = Runtime::cpu_naive(&dir).unwrap();
+    let naive = naive_rt.load("train_step").unwrap().run(&inputs).unwrap();
+
+    let mut routed_rt = Runtime::cpu_with_threads(&dir, 2).unwrap();
+    let routed = routed_rt.load("train_step").unwrap().run(&inputs).unwrap();
+
+    assert_eq!(naive.len(), 7);
+    assert_eq!(routed.len(), 7);
+    if let Some(router) = routed_rt.op_router() {
+        let stats = router.stats();
+        if executor::routing_enabled() {
+            assert_eq!(stats.conv_routed, 5, "all five convolutions must route: {stats:?}");
+            assert_eq!(stats.conv_fallback, 0, "{stats:?}");
+        }
+        if executor::op_routing_enabled() {
+            assert_eq!(stats.dot_routed, 3, "all three dots must route: {stats:?}");
+            assert_eq!(stats.dot_fallback, 0, "{stats:?}");
+            assert!(stats.fused > 0, "the train step must fuse chains: {stats:?}");
+            assert!(stats.ew_routed > 0, "broadcast/reduce fast paths must run: {stats:?}");
+        }
+    }
+    for (i, (a, b)) in naive.iter().zip(&routed).enumerate() {
+        let (av, bv) = (a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        assert!(
+            allclose(&bv, &av, 1e-3, 1e-4),
+            "train_step output {i} diverged between naive and op-routed"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

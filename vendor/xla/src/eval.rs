@@ -12,19 +12,30 @@
 //! sparsetrain side (pinned by a golden test there). Reductions fold
 //! elements in row-major operand order.
 //!
-//! **Pluggable convolutions (ISSUE 5).** [`execute_with_hook`] threads an
-//! optional [`ConvExecutor`] down to every `convolution` instruction: the
-//! hook sees the operand buffers plus the parsed window/`dim_labels` and
-//! may return the result itself (the SparseTrain kernel/scheduler stack on
-//! the host side) or decline with `None`, in which case the naive loop
-//! below runs — so any config outside the external executor's envelope
-//! keeps the reference numerics above, bit for bit.
+//! **Pluggable op execution (ISSUE 6).** [`execute_with_hook`] threads an
+//! optional [`OpExecutor`] down to every f32 array-producing instruction:
+//! the hook sees the instruction and its operand buffers — plus, for
+//! fusion decisions, the defining ops of those operands — through an
+//! [`OpCall`], and either fills the caller-provided output buffer
+//! completely (returning `true`) or declines (`false`), in which case the
+//! built-in evaluator below runs — so anything outside the external
+//! executor's envelope keeps the reference numerics above, bit for bit.
+//!
+//! **Arena allocation (ISSUE 6).** Intermediate f32 buffers come from an
+//! [`Arena`]: a pool keyed by element count, refilled by last-use
+//! recycling (a buffer returns to the pool right after the instruction
+//! that reads it last, with [`FUSION_READ_DEPTH`] levels of slack for the
+//! hook's operand-chain reads). Every op fully overwrites its output
+//! buffer, which makes an arena-reusing run bit-identical to a
+//! fresh-allocation run ([`Arena::disabled`]) — pinned by
+//! `miri_arena_reuse_is_bit_identical_to_fresh_alloc`.
 
 use crate::hlo::{
     BinKind, CmpDir, Computation, ConvSpec, ElemType, Instr, Module, Op, Shape, ShapeDecl,
     UnaryKind, Window, MAX_ELEMENTS,
 };
-use crate::{ConvCall, ConvExecutor, Error, Literal, Payload, Result};
+use crate::{Error, Literal, OpExecutor, Payload, Result};
+use std::collections::HashMap;
 
 fn err(msg: impl Into<String>) -> Error {
     Error(msg.into())
@@ -82,6 +93,178 @@ impl Slot {
 }
 
 // ---------------------------------------------------------------------------
+// Arena allocator
+// ---------------------------------------------------------------------------
+
+/// How many operand-chain levels an [`OpExecutor`] may read through when
+/// recognizing fusible patterns (e.g. `select → compare → broadcast →
+/// scalar`). Last-use recycling keeps a buffer alive this many consumer
+/// levels past its direct readers, so [`OpCall::value_f32`] on a fusion
+/// chain never observes a retired buffer.
+pub const FUSION_READ_DEPTH: usize = 3;
+
+/// An f32 buffer pool keyed by element count. [`execute_with_hook_in`]
+/// draws every intermediate f32 buffer from it and returns each buffer as
+/// soon as its last (transitive, [`FUSION_READ_DEPTH`]-deep) reader has
+/// run, so steady-state execution of the same module stops allocating.
+/// Recycled buffers carry **unspecified contents**; every evaluator path
+/// (and every hook that returns `true`) fully overwrites its output, which
+/// keeps reuse bit-identical to fresh allocation.
+#[derive(Debug, Default)]
+pub struct Arena {
+    pools: HashMap<usize, Vec<Vec<f32>>>,
+    disabled: bool,
+}
+
+impl Arena {
+    /// Recycled buffers kept per element-count class; beyond this they are
+    /// dropped (bounds memory on modules with many same-shape dead values).
+    const MAX_PER_CLASS: usize = 8;
+
+    /// A fresh, recycling arena.
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// An arena that never recycles: every take is a fresh zeroed
+    /// allocation and every give is dropped — the reference allocator the
+    /// reuse path must match bit for bit.
+    pub fn disabled() -> Arena {
+        Arena { pools: HashMap::new(), disabled: true }
+    }
+
+    /// Whether this arena recycles buffers.
+    pub fn enabled(&self) -> bool {
+        !self.disabled
+    }
+
+    /// A buffer of exactly `n` elements with unspecified contents (stale
+    /// values from a retired instruction when recycled): the caller must
+    /// fully overwrite it.
+    fn take_uninit(&mut self, n: usize) -> Vec<f32> {
+        if !self.disabled {
+            if let Some(buf) = self.pools.get_mut(&n).and_then(|pool| pool.pop()) {
+                return buf;
+            }
+        }
+        vec![0.0; n]
+    }
+
+    /// Return a buffer to the pool for reuse by a later same-size output.
+    fn give(&mut self, buf: Vec<f32>) {
+        if self.disabled || buf.is_empty() {
+            return;
+        }
+        let pool = self.pools.entry(buf.len()).or_default();
+        if pool.len() < Self::MAX_PER_CLASS {
+            pool.push(buf);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op-executor call sites
+// ---------------------------------------------------------------------------
+
+/// One instruction call site, handed to an external [`OpExecutor`] before
+/// the built-in evaluator runs. Exposes the instruction, its output shape,
+/// its operand buffers, and — for fusion decisions — the defining
+/// instructions and buffers of values up to [`FUSION_READ_DEPTH`] operand
+/// levels away. All buffers are row-major host `f32` slices.
+pub struct OpCall<'a> {
+    module: &'a Module,
+    comp: &'a Computation,
+    instr: &'a Instr,
+    slots: &'a [Slot],
+    out_shape: &'a Shape,
+}
+
+impl<'a> OpCall<'a> {
+    /// The instruction being evaluated.
+    pub fn instr(&self) -> &'a Instr {
+        self.instr
+    }
+
+    /// The instruction's opcode (with attributes).
+    pub fn op(&self) -> &'a Op {
+        &self.instr.op
+    }
+
+    /// The declared output dimensions (row-major).
+    pub fn out_dims(&self) -> &'a [usize] {
+        &self.out_shape.dims
+    }
+
+    /// The output element count — the length of the hook's `out` buffer.
+    pub fn out_elements(&self) -> usize {
+        self.out_shape.elements()
+    }
+
+    /// The instruction index of the `k`-th operand.
+    pub fn operand_idx(&self, k: usize) -> Option<usize> {
+        self.instr.operands.get(k).copied()
+    }
+
+    /// The instruction at `idx` in the enclosing computation — use to walk
+    /// the defining ops of operands when recognizing fusible chains.
+    pub fn instr_at(&self, idx: usize) -> Option<&'a Instr> {
+        self.comp.instrs.get(idx)
+    }
+
+    /// The defining instruction of the `k`-th operand.
+    pub fn operand_instr(&self, k: usize) -> Option<&'a Instr> {
+        self.instr_at(self.operand_idx(k)?)
+    }
+
+    /// The live f32 buffer (and dims) of the value at instruction `idx`.
+    /// `None` for non-f32 values, tuples, and retired (arena-recycled)
+    /// slots — the latter cannot occur within [`FUSION_READ_DEPTH`] operand
+    /// levels of the current instruction, but the check keeps this total.
+    pub fn value_f32(&self, idx: usize) -> Option<(&'a [f32], &'a [usize])> {
+        let Slot::Single(v) = self.slots.get(idx)? else {
+            return None;
+        };
+        let Buf::F32(buf) = &v.buf else {
+            return None;
+        };
+        if buf.len() != v.shape.elements() {
+            return None;
+        }
+        Some((buf.as_slice(), v.shape.dims.as_slice()))
+    }
+
+    /// The f32 buffer (and dims) of the `k`-th operand.
+    pub fn operand_f32(&self, k: usize) -> Option<(&'a [f32], &'a [usize])> {
+        self.value_f32(self.operand_idx(k)?)
+    }
+
+    /// When computation `to_apply` is a plain two-parameter binary fold
+    /// body — `root = bin(param0, param1)` exactly, matching the fold
+    /// `acc = bin(acc, elem)` the interpreter applies in row-major operand
+    /// order — return its operator. `None` for anything more elaborate.
+    pub fn reduce_body_kind(&self, to_apply: usize) -> Option<BinKind> {
+        let comp = self.module.comps.get(to_apply)?;
+        let root = comp.instrs.get(comp.root)?;
+        let Op::Binary(kind) = root.op else {
+            return None;
+        };
+        let [a, b] = root.operands[..] else {
+            return None;
+        };
+        let scalar_f32 = |i: &Instr| {
+            matches!(&i.shape, ShapeDecl::Single(s) if s.ty == ElemType::F32 && s.dims.is_empty())
+        };
+        if !scalar_f32(root)
+            || !matches!(comp.instrs.get(a)?.op, Op::Parameter(0))
+            || !matches!(comp.instrs.get(b)?.op, Op::Parameter(1))
+        {
+            return None;
+        }
+        Some(kind)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Index helpers
 // ---------------------------------------------------------------------------
 
@@ -122,6 +305,28 @@ fn gather_map<T: Copy>(src: &[T], src_dims: &[usize], map: &[usize], out_dims: &
     out
 }
 
+/// [`gather_map`] writing into a caller-provided (arena) buffer, which must
+/// have exactly `out_dims` elements.
+fn gather_map_into<T: Copy>(
+    src: &[T],
+    src_dims: &[usize],
+    map: &[usize],
+    out_dims: &[usize],
+    out: &mut [T],
+) {
+    let out_strides = strides_of(out_dims);
+    let src_strides = strides_of(src_dims);
+    let mut mi = vec![0usize; out_dims.len()];
+    for (i, o) in out.iter_mut().enumerate() {
+        decompose(i, &out_strides, &mut mi);
+        let mut si = 0usize;
+        for (k, &m) in map.iter().enumerate() {
+            si += mi[m] * src_strides[k];
+        }
+        *o = src[si];
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Scalar computations (reduce bodies)
 // ---------------------------------------------------------------------------
@@ -141,7 +346,9 @@ enum SOp {
     Un(UnaryKind, usize),
 }
 
-fn bin_f32(kind: BinKind, a: f32, b: f32) -> f32 {
+/// The interpreter's elementwise binary semantics — public so an external
+/// [`OpExecutor`] fusing binary chains can reproduce them bit for bit.
+pub fn bin_f32(kind: BinKind, a: f32, b: f32) -> f32 {
     match kind {
         BinKind::Add => a + b,
         BinKind::Sub => a - b,
@@ -563,11 +770,6 @@ pub fn validate(module: &Module) -> Result<()> {
 // Evaluation
 // ---------------------------------------------------------------------------
 
-fn eval_binary(kind: BinKind, a: &Value, b: &Value) -> Result<Buf> {
-    let (x, y) = (a.f32s()?, b.f32s()?);
-    Ok(Buf::F32(x.iter().zip(y).map(|(&u, &v)| bin_f32(kind, u, v)).collect()))
-}
-
 fn eval_compare(dir: CmpDir, a: &Value, b: &Value) -> Result<Buf> {
     fn cmp<T: PartialOrd>(dir: CmpDir, a: &[T], b: &[T]) -> Vec<bool> {
         a.iter()
@@ -684,6 +886,7 @@ fn eval_reduce(
     init: &Value,
     dims: &[usize],
     to_apply: usize,
+    arena: &mut Arena,
 ) -> Result<Buf> {
     let body = ScalarComp::compile(
         module.comps.get(to_apply).ok_or_else(|| err("to_apply out of range"))?,
@@ -711,7 +914,8 @@ fn eval_reduce(
         }
     }
     let n: usize = out_dims.iter().product();
-    let mut out = vec![init; n];
+    let mut out = arena.take_uninit(n);
+    out.fill(init);
     let vals = src.f32s()?;
     let mut mi = vec![0usize; in_dims.len()];
     let mut stack = Vec::new();
@@ -726,7 +930,13 @@ fn eval_reduce(
     Ok(Buf::F32(out))
 }
 
-fn eval_dot(lhs: &Value, rhs: &Value, lhs_c: usize, rhs_c: usize) -> Result<Buf> {
+fn eval_dot(
+    lhs: &Value,
+    rhs: &Value,
+    lhs_c: usize,
+    rhs_c: usize,
+    arena: &mut Arena,
+) -> Result<Buf> {
     let (a, b) = (lhs.f32s()?, rhs.f32s()?);
     let (ad, bd) = (&lhs.shape.dims, &rhs.shape.dims);
     let (astr, bstr) = (strides_of(ad), strides_of(bd));
@@ -738,14 +948,16 @@ fn eval_dot(lhs: &Value, rhs: &Value, lhs_c: usize, rhs_c: usize) -> Result<Buf>
     let ns = rfree.first().map_or(0, |&d| bstr[d]);
     let k = ad[lhs_c];
     let (ks_a, ks_b) = (astr[lhs_c], bstr[rhs_c]);
-    let mut out = Vec::with_capacity(m * n);
+    // Every output element is assigned below, so a stale recycled buffer
+    // is fully overwritten.
+    let mut out = arena.take_uninit(m * n);
     for i in 0..m {
         for j in 0..n {
             let mut acc = 0.0f32;
             for t in 0..k {
                 acc += a[i * ms + t * ks_a] * b[j * ns + t * ks_b];
             }
-            out.push(acc);
+            out[i * n + j] = acc;
         }
     }
     Ok(Buf::F32(out))
@@ -760,6 +972,7 @@ fn eval_conv(
     lhs: &Value,
     rhs: &Value,
     out_shape: &Shape,
+    arena: &mut Arena,
 ) -> Result<Buf> {
     let cd = conv_dims(window, spec, &lhs.shape, &rhs.shape)?;
     let lf = lhs.f32s()?;
@@ -767,7 +980,9 @@ fn eval_conv(
     let ls = strides_of(&lhs.shape.dims);
     let rs = strides_of(&rhs.shape.dims);
     let os = strides_of(&out_shape.dims);
-    let mut out = vec![0.0f32; out_shape.elements()];
+    // The (b, o, oy, ox) loops below assign every output element, so a
+    // stale recycled buffer is fully overwritten.
+    let mut out = arena.take_uninit(out_shape.elements());
     let (sy, sx) = (window.stride[0], window.stride[1]);
     let (ply, plx) = (window.pad_lo[0] as isize, window.pad_lo[1] as isize);
     for b in 0..cd.batch {
@@ -806,51 +1021,14 @@ fn eval_conv(
     Ok(Buf::F32(out))
 }
 
-/// Consult the external convolution executor for one instruction; `None`
-/// when no hook is installed or the hook declines. A hook result with the
-/// wrong element count is a contract violation and surfaces as `Err`.
-fn hooked_conv(
-    hook: Option<&ConvExecutor>,
-    window: &Window,
-    spec: &ConvSpec,
-    lhs: &Value,
-    rhs: &Value,
-    out_shape: &Shape,
-) -> Result<Option<Buf>> {
-    let Some(hook) = hook else {
-        return Ok(None);
-    };
-    // Only f32 arrays are routable (validate guarantees this for conv
-    // operands, but stay total for unvalidated callers).
-    let (Buf::F32(lf), Buf::F32(rf)) = (&lhs.buf, &rhs.buf) else {
-        return Ok(None);
-    };
-    let call = ConvCall {
-        window,
-        spec,
-        lhs: lf,
-        lhs_dims: &lhs.shape.dims,
-        rhs: rf,
-        rhs_dims: &rhs.shape.dims,
-        out_dims: &out_shape.dims,
-    };
-    match hook(&call) {
-        None => Ok(None),
-        Some(out) if out.len() == out_shape.elements() => Ok(Some(Buf::F32(out))),
-        Some(out) => Err(err(format!(
-            "convolution executor returned {} elements for shape {:?}",
-            out.len(),
-            out_shape.dims
-        ))),
-    }
-}
-
 fn eval_instr(
     module: &Module,
+    comp: &Computation,
     instr: &Instr,
     slots: &[Slot],
     args: &[Value],
-    hook: Option<&ConvExecutor>,
+    hook: Option<&OpExecutor>,
+    arena: &mut Arena,
 ) -> Result<Slot> {
     // Bounds-checked even though `validate` enforces arities, so `execute`
     // stays panic-free if ever called on an unvalidated module.
@@ -881,51 +1059,191 @@ fn eval_instr(
     }
 
     let declared = single_shape(&instr.shape)?;
+
+    // Consult the external op executor first: any f32 array-producing
+    // instruction may be taken over (constants are never worth routing).
+    // The hook gets a buffer of exactly the declared element count; `true`
+    // means it filled the buffer completely, `false` falls through to the
+    // built-in evaluator below.
+    if let Some(hook) = hook {
+        if declared.ty == ElemType::F32 && !matches!(instr.op, Op::ConstantF32(_)) {
+            let call = OpCall { module, comp, instr, slots, out_shape: declared };
+            let mut out = arena.take_uninit(declared.elements());
+            if hook(&call, &mut out) {
+                return Ok(Slot::Single(Value { shape: declared.clone(), buf: Buf::F32(out) }));
+            }
+            arena.give(out);
+        }
+    }
+
     let buf = match &instr.op {
         Op::ConstantF32(v) => Buf::F32(vec![*v]),
         Op::ConstantS32(v) => Buf::S32(vec![*v]),
-        Op::Binary(kind) => eval_binary(*kind, opnd(0)?, opnd(1)?)?,
+        Op::Binary(kind) => {
+            let (x, y) = (opnd(0)?.f32s()?, opnd(1)?.f32s()?);
+            let mut out = arena.take_uninit(x.len());
+            for ((o, &u), &v) in out.iter_mut().zip(x).zip(y) {
+                *o = bin_f32(*kind, u, v);
+            }
+            Buf::F32(out)
+        }
         Op::Unary(kind) => {
-            Buf::F32(opnd(0)?.f32s()?.iter().map(|&v| un_f32(*kind, v)).collect())
+            let x = opnd(0)?.f32s()?;
+            let mut out = arena.take_uninit(x.len());
+            for (o, &u) in out.iter_mut().zip(x) {
+                *o = un_f32(*kind, u);
+            }
+            Buf::F32(out)
         }
         Op::Compare(dir) => eval_compare(*dir, opnd(0)?, opnd(1)?)?,
-        Op::Select => eval_select(opnd(0)?, opnd(1)?, opnd(2)?)?,
-        Op::Convert => eval_convert(opnd(0)?, declared.ty)?,
+        Op::Select => {
+            let (p, t, f) = (opnd(0)?, opnd(1)?, opnd(2)?);
+            if let (Buf::Pred(pp), Buf::F32(a), Buf::F32(b)) = (&p.buf, &t.buf, &f.buf) {
+                let mut out = arena.take_uninit(a.len());
+                for (o, ((&c, &x), &y)) in out.iter_mut().zip(pp.iter().zip(a).zip(b)) {
+                    *o = if c { x } else { y };
+                }
+                Buf::F32(out)
+            } else {
+                eval_select(p, t, f)?
+            }
+        }
+        Op::Convert => {
+            let src = opnd(0)?;
+            match (&src.buf, declared.ty) {
+                (Buf::F32(v), ElemType::F32) => {
+                    let mut out = arena.take_uninit(v.len());
+                    out.copy_from_slice(v);
+                    Buf::F32(out)
+                }
+                (Buf::S32(v), ElemType::F32) => {
+                    let mut out = arena.take_uninit(v.len());
+                    for (o, &x) in out.iter_mut().zip(v) {
+                        *o = x as f32;
+                    }
+                    Buf::F32(out)
+                }
+                (Buf::Pred(v), ElemType::F32) => {
+                    let mut out = arena.take_uninit(v.len());
+                    for (o, &x) in out.iter_mut().zip(v) {
+                        *o = if x { 1.0 } else { 0.0 };
+                    }
+                    Buf::F32(out)
+                }
+                _ => eval_convert(src, declared.ty)?,
+            }
+        }
         Op::Iota { dim } => eval_iota(*dim, &declared.dims),
-        Op::Broadcast { dims } => eval_broadcast(opnd(0)?, dims, &declared.dims),
+        Op::Broadcast { dims } => {
+            let src = opnd(0)?;
+            if let Buf::F32(v) = &src.buf {
+                let mut out = arena.take_uninit(declared.elements());
+                gather_map_into(v, &src.shape.dims, dims, &declared.dims, &mut out);
+                Buf::F32(out)
+            } else {
+                eval_broadcast(src, dims, &declared.dims)
+            }
+        }
         Op::Reshape => match &opnd(0)?.buf {
-            Buf::F32(v) => Buf::F32(v.clone()),
+            Buf::F32(v) => {
+                let mut out = arena.take_uninit(v.len());
+                out.copy_from_slice(v);
+                Buf::F32(out)
+            }
             Buf::S32(v) => Buf::S32(v.clone()),
             Buf::Pred(v) => Buf::Pred(v.clone()),
         },
-        Op::Transpose { perm } => eval_transpose(opnd(0)?, perm, &declared.dims),
+        Op::Transpose { perm } => {
+            let src = opnd(0)?;
+            if let Buf::F32(v) = &src.buf {
+                // gather_map wants `map[src_dim] = out_dim`; transpose
+                // declares `out_dim i <- src_dim perm[i]`, so invert.
+                let mut map = vec![0usize; perm.len()];
+                for (i, &p) in perm.iter().enumerate() {
+                    map[p] = i;
+                }
+                let mut out = arena.take_uninit(declared.elements());
+                gather_map_into(v, &src.shape.dims, &map, &declared.dims, &mut out);
+                Buf::F32(out)
+            } else {
+                eval_transpose(src, perm, &declared.dims)
+            }
+        }
         Op::Reverse { dims } => eval_reverse(opnd(0)?, dims),
         Op::Reduce { dims, to_apply } => {
-            eval_reduce(module, opnd(0)?, opnd(1)?, dims, *to_apply)?
+            eval_reduce(module, opnd(0)?, opnd(1)?, dims, *to_apply, arena)?
         }
-        Op::Dot { lhs_c, rhs_c } => eval_dot(opnd(0)?, opnd(1)?, *lhs_c, *rhs_c)?,
+        Op::Dot { lhs_c, rhs_c } => eval_dot(opnd(0)?, opnd(1)?, *lhs_c, *rhs_c, arena)?,
         Op::Convolution { window, spec } => {
-            let (lhs, rhs) = (opnd(0)?, opnd(1)?);
-            match hooked_conv(hook, window, spec, lhs, rhs, declared)? {
-                Some(buf) => buf,
-                None => eval_conv(window, spec, lhs, rhs, declared)?,
-            }
+            eval_conv(window, spec, opnd(0)?, opnd(1)?, declared, arena)?
         }
         Op::Parameter(_) | Op::Tuple => return Err(err("unreachable op dispatch")),
     };
     Ok(Slot::Single(Value { shape: declared.clone(), buf }))
 }
 
+/// Compute, per instruction index `j`, the list of earlier instructions
+/// whose f32 buffers can be retired into the arena once `j` has executed.
+///
+/// "Last use" is deliberately conservative: an instruction counts as live
+/// not only for its direct consumers but for `FUSION_READ_DEPTH` levels of
+/// transitive consumers, because a fused op executor may reach *through*
+/// its operands (e.g. a fused select reads the compare's operands, and the
+/// compare's broadcast operand's scalar). The root is never retired.
+fn retire_schedule(comp: &Computation, enabled: bool) -> Vec<Vec<usize>> {
+    let n = comp.instrs.len();
+    let mut retire_at = vec![Vec::new(); n];
+    if !enabled || n == 0 {
+        return retire_at;
+    }
+    // last[i] = highest instruction index that may still read instr i.
+    let mut last: Vec<usize> = (0..n).collect();
+    for (j, instr) in comp.instrs.iter().enumerate() {
+        let mut frontier: Vec<usize> = instr.operands.clone();
+        for _ in 0..FUSION_READ_DEPTH {
+            let mut next = Vec::new();
+            for &o in &frontier {
+                last[o] = j;
+                next.extend_from_slice(&comp.instrs[o].operands);
+            }
+            frontier = next;
+            if frontier.is_empty() {
+                break;
+            }
+        }
+    }
+    for (i, &l) in last.iter().enumerate() {
+        if i != comp.root {
+            retire_at[l].push(i);
+        }
+    }
+    retire_at
+}
+
 fn eval_comp(
     module: &Module,
     comp: &Computation,
     args: &[Value],
-    hook: Option<&ConvExecutor>,
+    hook: Option<&OpExecutor>,
+    arena: &mut Arena,
 ) -> Result<Slot> {
+    let retire_at = retire_schedule(comp, arena.enabled());
     let mut slots = Vec::with_capacity(comp.instrs.len());
-    for instr in &comp.instrs {
-        let slot = eval_instr(module, instr, &slots, args, hook)?;
+    for (j, instr) in comp.instrs.iter().enumerate() {
+        let slot = eval_instr(module, comp, instr, &slots, args, hook, arena)?;
         slots.push(slot);
+        // Recycle buffers whose last (possibly transitive) reader was `j`.
+        // The retired slot keeps its shape but loses its data; nothing may
+        // read it again, which `OpCall::value_f32` double-checks.
+        for &o in &retire_at[j] {
+            if let Slot::Single(v) = &mut slots[o] {
+                if let Buf::F32(buf) = &mut v.buf {
+                    if !buf.is_empty() {
+                        arena.give(std::mem::take(buf));
+                    }
+                }
+            }
+        }
     }
     Ok(slots.swap_remove(comp.root))
 }
@@ -977,9 +1295,20 @@ fn value_to_literal(v: Value) -> Result<Literal> {
 }
 
 /// Execute the module's `ENTRY` computation with the built-in evaluators
-/// only (no external convolution executor).
+/// only (no external op executor) and a throwaway arena.
 pub fn execute(module: &Module, inputs: &[Literal]) -> Result<Literal> {
     execute_with_hook(module, inputs, None)
+}
+
+/// Like [`execute_with_hook_in`] with a fresh arena per call (no buffer
+/// reuse across calls; reuse still happens within the call).
+pub fn execute_with_hook(
+    module: &Module,
+    inputs: &[Literal],
+    hook: Option<&OpExecutor>,
+) -> Result<Literal> {
+    let mut arena = Arena::new();
+    execute_with_hook_in(module, inputs, hook, &mut arena)
 }
 
 /// Execute the module's `ENTRY` computation. The module is (re-)validated
@@ -987,12 +1316,16 @@ pub fn execute(module: &Module, inputs: &[Literal]) -> Result<Literal> {
 /// total even for callers that skipped `compile`; inputs are checked
 /// against the declared parameter shapes. The result is the root value (a
 /// tuple literal when the root is `tuple(...)`). When `hook` is given,
-/// every `convolution` consults it before the naive loop (see the module
-/// docs).
-pub fn execute_with_hook(
+/// every f32 array-producing instruction consults it before the naive
+/// evaluators (see the module docs). `arena` supplies (and receives back)
+/// f32 scratch buffers; pass a persistent [`Arena`] to amortize
+/// allocations across repeated executions, or [`Arena::disabled`] to force
+/// fresh allocation for every op.
+pub fn execute_with_hook_in(
     module: &Module,
     inputs: &[Literal],
-    hook: Option<&ConvExecutor>,
+    hook: Option<&OpExecutor>,
+    arena: &mut Arena,
 ) -> Result<Literal> {
     validate(module)?;
     let comp =
@@ -1009,7 +1342,7 @@ pub fn execute_with_hook(
         let want = single_shape(&comp.instrs[comp.params[k]].shape)?;
         args.push(literal_to_value(lit, want, k)?);
     }
-    match eval_comp(module, comp, &args, hook)? {
+    match eval_comp(module, comp, &args, hook, arena)? {
         Slot::Single(v) => value_to_literal(v),
         Slot::Tuple(vals) => {
             let lits: Vec<Literal> = vals.into_iter().map(value_to_literal).collect::<Result<_>>()?;
@@ -1164,7 +1497,7 @@ mod tests {
     }
 
     #[test]
-    fn miri_conv_hook_overrides_declines_and_is_length_checked() {
+    fn miri_op_hook_overrides_declines_and_falls_back() {
         let text = "HloModule h\nENTRY %m {\n\
             \x20 %x = f32[1,1,2,2] parameter(0)\n\
             \x20 %w = f32[1,1,1,1] parameter(1)\n\
@@ -1174,27 +1507,77 @@ mod tests {
         let w = Literal::vec1(&[2.0f32]).reshape(&[1, 1, 1, 1]).unwrap();
         let inputs = [x, w];
 
-        // A hook that handles the call: its buffer IS the result.
-        let take: Box<ConvExecutor> = Box::new(|call: &ConvCall<'_>| {
-            assert_eq!(call.lhs_dims, &[1, 1, 2, 2][..]);
-            assert_eq!(call.rhs_dims, &[1, 1, 1, 1][..]);
-            assert_eq!(call.out_dims, &[1, 1, 2, 2][..]);
-            assert_eq!(call.window.size, [1, 1]);
-            Some(vec![9.0; 4])
+        // A hook that takes the convolution: it fills the provided buffer
+        // and that buffer IS the result. Other ops are declined.
+        let take: Box<OpExecutor> = Box::new(|call: &OpCall<'_>, out: &mut [f32]| {
+            if !matches!(call.op(), Op::Convolution { .. }) {
+                return false;
+            }
+            let (lhs, lhs_dims) = call.operand_f32(0).unwrap();
+            assert_eq!(lhs, &[1.0, 2.0, 3.0, 4.0][..]);
+            assert_eq!(lhs_dims, &[1, 1, 2, 2][..]);
+            assert_eq!(call.operand_f32(1).unwrap().1, &[1, 1, 1, 1][..]);
+            assert_eq!(call.out_dims(), &[1, 1, 2, 2][..]);
+            assert_eq!(out.len(), call.out_elements());
+            out.fill(9.0);
+            true
         });
         let out = execute_with_hook(&module, &inputs, Some(&*take)).unwrap();
         assert_eq!(out.to_vec::<f32>().unwrap(), vec![9.0; 4]);
 
         // A declining hook falls back to the naive loop, bit-identically.
-        let decline: Box<ConvExecutor> = Box::new(|_| None);
+        let decline: Box<OpExecutor> = Box::new(|_, _| false);
         let naive = execute(&module, &inputs).unwrap();
         let routed = execute_with_hook(&module, &inputs, Some(&*decline)).unwrap();
         assert_eq!(routed.to_vec::<f32>().unwrap(), naive.to_vec::<f32>().unwrap());
         assert_eq!(naive.to_vec::<f32>().unwrap(), vec![2.0, 4.0, 6.0, 8.0]);
+    }
 
-        // A hook returning the wrong element count is an Err, not a panic.
-        let wrong: Box<ConvExecutor> = Box::new(|_| Some(vec![0.0; 3]));
-        assert!(execute_with_hook(&module, &inputs, Some(&*wrong)).is_err());
+    #[test]
+    fn miri_arena_reuse_is_bit_identical_to_fresh_alloc() {
+        // Exercises every arena-backed evaluator arm that the train step
+        // uses (broadcast, compare, select, unary, reduce, broadcast-back,
+        // binary, dot, tuple root) and re-runs with a persistent arena so
+        // buffers recycled from earlier rounds carry stale contents.
+        let text = "HloModule a\n\
+            %add_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %add = f32[] add(%p0, %p1)\n}\n\
+            ENTRY %m {\n\
+            \x20 %x = f32[3,4] parameter(0)\n\
+            \x20 %w = f32[4,2] parameter(1)\n\
+            \x20 %zero = f32[] constant(0)\n\
+            \x20 %zb = f32[3,4] broadcast(%zero), dimensions={}\n\
+            \x20 %mask = pred[3,4] compare(%x, %zb), direction=GT\n\
+            \x20 %relu = f32[3,4] select(%mask, %x, %zb)\n\
+            \x20 %e = f32[3,4] exponential(%relu)\n\
+            \x20 %rows = f32[3] reduce(%e, %zero), dimensions={1}, to_apply=%add_f32\n\
+            \x20 %rb = f32[3,4] broadcast(%rows), dimensions={0}\n\
+            \x20 %nrm = f32[3,4] divide(%e, %rb)\n\
+            \x20 %d = f32[3,2] dot(%nrm, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n\
+            \x20 ROOT %t = (f32[3,2], f32[3]) tuple(%d, %rows)\n}\n";
+        let module = parse_module(text).unwrap();
+        let xs: Vec<f32> = (0..12).map(|i| (i as f32) - 5.5).collect();
+        let ws: Vec<f32> = (0..8).map(|i| 0.25 * (i as f32) - 1.0).collect();
+        let inputs = [
+            Literal::vec1(&xs).reshape(&[3, 4]).unwrap(),
+            Literal::vec1(&ws).reshape(&[4, 2]).unwrap(),
+        ];
+        let bits = |lit: &Literal| -> Vec<Vec<u32>> {
+            lit.clone()
+                .to_tuple()
+                .unwrap()
+                .iter()
+                .map(|e| e.to_vec::<f32>().unwrap().iter().map(|v| v.to_bits()).collect())
+                .collect()
+        };
+
+        let mut off = Arena::disabled();
+        let reference = bits(&execute_with_hook_in(&module, &inputs, None, &mut off).unwrap());
+
+        let mut arena = Arena::new();
+        for round in 0..3 {
+            let got = execute_with_hook_in(&module, &inputs, None, &mut arena).unwrap();
+            assert_eq!(bits(&got), reference, "round {round}");
+        }
     }
 
     #[test]

@@ -26,13 +26,15 @@
 
 use std::fmt;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 pub mod eval;
 pub mod hlo;
 
-/// One convolution call site, handed to an external [`ConvExecutor`] before
-/// the interpreter falls back to its own naive 7-loop evaluator. All
+pub use eval::{Arena, OpCall};
+
+/// One convolution call site, flattened from an [`OpCall`] by the op
+/// router before it hands the instruction to the sparse conv kernels. All
 /// buffers are row-major host `f32` slices with their dimensions attached;
 /// `window`/`spec` are the instruction's parsed attributes.
 pub struct ConvCall<'a> {
@@ -45,13 +47,17 @@ pub struct ConvCall<'a> {
     pub out_dims: &'a [usize],
 }
 
-/// A pluggable convolution executor (the SparseTrain kernel/scheduler
-/// stack on the host side). Returning `Some(buffer)` — which must have
-/// exactly `out_dims` elements, row-major — replaces the naive evaluation
-/// of that instruction; returning `None` falls back to the built-in loop.
-/// The hook must not panic: it runs inside `execute`, whose contract is
-/// `Err`, never a panic.
-pub type ConvExecutor = dyn for<'a> Fn(&ConvCall<'a>) -> Option<Vec<f32>> + Send + Sync;
+/// A pluggable per-instruction op executor (the SparseTrain kernel /
+/// scheduler stack on the host side). The evaluator consults it for every
+/// instruction whose declared type is `f32` (parameters, tuples and
+/// constants excepted), handing it an [`OpCall`] describing the
+/// instruction plus an output buffer of exactly `out_elements()` floats.
+/// Returning `true` means the hook filled the whole buffer and that buffer
+/// IS the instruction's result; returning `false` declines, the buffer is
+/// recycled, and the built-in evaluator produces a bit-identical naive
+/// result. The hook must not panic: it runs inside `execute`, whose
+/// contract is `Err`, never a panic.
+pub type OpExecutor = dyn for<'a> Fn(&eval::OpCall<'a>, &mut [f32]) -> bool + Send + Sync;
 
 /// Stub error type.
 #[derive(Debug, Clone)]
@@ -212,11 +218,14 @@ impl XlaComputation {
 }
 
 /// A compiled (parsed + shape-checked) executable over the mini-HLO
-/// interpreter. Carries the client's convolution executor (if any) so
-/// every `execute` consults it before the naive loop.
+/// interpreter. Carries the client's op executor (if any) so every
+/// `execute` consults it per instruction, plus a private buffer arena so
+/// repeated executions of the same module recycle their f32 scratch
+/// instead of re-allocating per op.
 pub struct PjRtLoadedExecutable {
     module: hlo::Module,
-    conv_exec: Option<Arc<ConvExecutor>>,
+    op_exec: Option<Arc<OpExecutor>>,
+    arena: Mutex<eval::Arena>,
 }
 
 /// A device buffer handle (host memory in this offline build).
@@ -233,10 +242,21 @@ impl PjRtBuffer {
 impl PjRtLoadedExecutable {
     /// Execute the module's `ENTRY` computation with the given inputs.
     /// Mirrors the real crate's nesting: one device, one result buffer
-    /// (holding the tuple when the root is a tuple). Convolutions go
-    /// through the client's [`ConvExecutor`] when one is installed.
+    /// (holding the tuple when the root is a tuple). Instructions go
+    /// through the client's [`OpExecutor`] when one is installed. The
+    /// executable's arena is reused across calls; if another caller
+    /// poisoned the lock, we fall back to a throwaway arena rather than
+    /// propagate the poison (results are identical either way).
     pub fn execute<T>(&self, inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        let lit = eval::execute_with_hook(&self.module, inputs, self.conv_exec.as_deref())?;
+        let lit = match self.arena.lock() {
+            Ok(mut guard) => {
+                eval::execute_with_hook_in(&self.module, inputs, self.op_exec.as_deref(), &mut guard)?
+            }
+            Err(_) => {
+                let mut arena = eval::Arena::new();
+                eval::execute_with_hook_in(&self.module, inputs, self.op_exec.as_deref(), &mut arena)?
+            }
+        };
         Ok(vec![vec![PjRtBuffer { lit }]])
     }
 
@@ -249,24 +269,24 @@ impl PjRtLoadedExecutable {
 /// A PJRT client.
 pub struct PjRtClient {
     platform: String,
-    conv_exec: Option<Arc<ConvExecutor>>,
+    op_exec: Option<Arc<OpExecutor>>,
 }
 
 impl PjRtClient {
     /// Create the CPU client (always succeeds offline).
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { platform: "cpu-interp".to_string(), conv_exec: None })
+        Ok(PjRtClient { platform: "cpu-interp".to_string(), op_exec: None })
     }
 
     pub fn platform_name(&self) -> String {
         self.platform.clone()
     }
 
-    /// Install a pluggable convolution executor. Every executable compiled
-    /// *after* this call routes its `convolution` instructions through the
-    /// hook (with fallback to the naive loop on `None`).
-    pub fn set_conv_executor(&mut self, exec: Arc<ConvExecutor>) {
-        self.conv_exec = Some(exec);
+    /// Install a pluggable op executor. Every executable compiled *after*
+    /// this call consults the hook per f32 instruction (with bit-identical
+    /// fallback to the naive evaluators on `false`).
+    pub fn set_op_executor(&mut self, exec: Arc<OpExecutor>) {
+        self.op_exec = Some(exec);
     }
 
     /// Parse and shape-check the HLO text, returning a runnable
@@ -276,7 +296,11 @@ impl PjRtClient {
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         let module = hlo::parse_module(&comp.text)?;
         eval::validate(&module)?;
-        Ok(PjRtLoadedExecutable { module, conv_exec: self.conv_exec.clone() })
+        Ok(PjRtLoadedExecutable {
+            module,
+            op_exec: self.op_exec.clone(),
+            arena: Mutex::new(eval::Arena::new()),
+        })
     }
 }
 
