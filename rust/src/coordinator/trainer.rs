@@ -17,7 +17,9 @@
 
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::kernels::layers::synthetic_batch;
+use crate::nets::{Network, Scale};
 use crate::runtime::artifacts::{geometry, ArtifactSet, TRAIN_STEP};
+use crate::runtime::hlo_builder::{self, NetModel, NetTrainPlan};
 use crate::runtime::pjrt::{literal_f32, literal_i32, Runtime};
 use crate::sparsity::SparsityProfiler;
 use crate::util::prng::Xorshift;
@@ -63,11 +65,22 @@ impl TrainReport {
     }
 }
 
+/// A prepared zoo-network run: which artifact to load and the emission
+/// manifest describing its feeds and outputs.
+#[derive(Debug, Clone)]
+struct NetRun {
+    artifact: String,
+    plan: NetTrainPlan,
+}
+
 /// Trainer over the AOT train-step artifact.
 pub struct Trainer {
     runtime: Runtime,
     cfg: TrainerConfig,
     pub metrics: MetricsRegistry,
+    /// `Some` when this trainer runs an emitted zoo network
+    /// ([`Trainer::new_net`]) instead of the classic paper geometry.
+    net: Option<NetRun>,
 }
 
 impl Trainer {
@@ -83,7 +96,45 @@ impl Trainer {
         // recognized elementwise chains run multi-threaded / fused instead
         // of through the interpreter's naive loop.
         let runtime = Runtime::cpu_with_threads(&artifacts.dir, cfg.threads)?;
-        Ok(Trainer { runtime, cfg, metrics: MetricsRegistry::new() })
+        Ok(Trainer { runtime, cfg, metrics: MetricsRegistry::new(), net: None })
+    }
+
+    /// A trainer over an emitted `nets::zoo` inventory at the given scale:
+    /// the multi-layer train-step graph is emitted, published into the
+    /// artifact directory under `train_step_<net>_<scale>` (same
+    /// stale-marker/no-clobber contract as the classic fallback trio),
+    /// and driven by the same kernel-routed runtime. Each step feeds the
+    /// per-layer measured sparsity back into the router's selector.
+    pub fn new_net(
+        artifacts: &ArtifactSet,
+        network: Network,
+        scale: Scale,
+        cfg: TrainerConfig,
+    ) -> Result<Trainer> {
+        let model = NetModel::new(network, scale);
+        let (train_name, predict_name) = hlo_builder::net_artifact_names(&model);
+        let (text, plan) = hlo_builder::net_train_step_hlo(&model)
+            .map_err(|e| anyhow::anyhow!("emitting {train_name}: {e}"))?;
+        artifacts
+            .publish_fallback_text(&train_name, &text)
+            .with_context(|| format!("publishing {train_name}"))?;
+        let predict = hlo_builder::net_predict_hlo(&model)
+            .map_err(|e| anyhow::anyhow!("emitting {predict_name}: {e}"))?;
+        artifacts
+            .publish_fallback_text(&predict_name, &predict)
+            .with_context(|| format!("publishing {predict_name}"))?;
+        let runtime = Runtime::cpu_with_threads(&artifacts.dir, cfg.threads)?;
+        Ok(Trainer {
+            runtime,
+            cfg,
+            metrics: MetricsRegistry::new(),
+            net: Some(NetRun { artifact: train_name, plan }),
+        })
+    }
+
+    /// The emission manifest, when this trainer drives a zoo network.
+    pub fn net_plan(&self) -> Option<&NetTrainPlan> {
+        self.net.as_ref().map(|n| &n.plan)
     }
 
     /// The runtime's installed op router, if routing is enabled — exposes
@@ -99,8 +150,124 @@ impl Trainer {
         (0..k * c * s * r).map(|_| rng.range_f32(-bound, bound)).collect()
     }
 
-    /// Run the training loop.
+    /// Run the training loop (classic paper geometry or the emitted zoo
+    /// network, depending on the constructor).
     pub fn run(&mut self) -> Result<TrainReport> {
+        if self.net.is_some() {
+            self.run_net()
+        } else {
+            self.run_classic()
+        }
+    }
+
+    /// Parameter init by rank: conv weights He-uniform, FC weights
+    /// `±sqrt(1/fan_in)`, biases zero — the shapes come straight from the
+    /// emission manifest.
+    fn init_param(rng: &mut Xorshift, dims: &[usize]) -> Result<Vec<f32>> {
+        Ok(match dims {
+            [k, c, s, r] => Self::init_conv(rng, *k, *c, *s, *r),
+            [rows, cols] => {
+                let bound = (1.0 / *cols as f32).sqrt();
+                (0..rows * cols).map(|_| rng.range_f32(-bound, bound)).collect()
+            }
+            [len] => vec![0.0f32; *len],
+            other => anyhow::bail!("unsupported parameter rank {}", other.len()),
+        })
+    }
+
+    /// The zoo-network loop: same ownership story as the classic loop
+    /// (Rust holds the parameters, the artifact does the numerics), but
+    /// parameter inventory, output arity, and sparsity series all come
+    /// from the [`NetTrainPlan`] — and each step pushes the recent-mean
+    /// measured sparsity of every conv's feed series into the op router,
+    /// so the selector plans with profiled sparsity instead of live
+    /// operand zero counts.
+    fn run_net(&mut self) -> Result<TrainReport> {
+        let NetRun { artifact, plan } = self.net.clone().expect("run_net requires new_net");
+        let mut rng = Xorshift::new(self.cfg.seed);
+        let mut params: Vec<Vec<f32>> = Vec::with_capacity(plan.params.len());
+        for (_, dims) in &plan.params {
+            params.push(Self::init_param(&mut rng, dims)?);
+        }
+
+        let [n, c_in, hw, _] = plan.input_dims;
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut profiler = SparsityProfiler::new();
+        let t0 = std::time::Instant::now();
+
+        // The router handle must be cloned out *before* `load`: the
+        // returned `&Executable` holds the runtime borrow for the whole
+        // loop.
+        let router = self.runtime.op_router_arc();
+        let exe = self.runtime.load(&artifact)?;
+
+        for step in 0..self.cfg.steps {
+            if let Some(rt) = &router {
+                rt.set_profiled_sparsity(plan.sparsity_feeds.iter().filter_map(
+                    |(instr, series)| {
+                        profiler.recent_mean(series, 16).map(|m| (instr.clone(), m))
+                    },
+                ));
+            }
+
+            let (x, labels) = synthetic_batch(&mut rng, n, c_in, hw, plan.classes);
+            let mut inputs = Vec::with_capacity(plan.params.len() + 2);
+            for (vals, (_, dims)) in params.iter().zip(&plan.params) {
+                let d64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                inputs.push(literal_f32(vals, &d64)?);
+            }
+            inputs.push(literal_f32(&x.to_nchw(), &[n as i64, c_in as i64, hw as i64, hw as i64])?);
+            inputs.push(literal_i32(
+                &labels.iter().map(|&l| l as i32).collect::<Vec<_>>(),
+                &[n as i64],
+            )?);
+
+            let outs = exe.run(&inputs).context("net train step")?;
+            anyhow::ensure!(
+                outs.len() == plan.n_outputs(),
+                "train step must return {} outputs, got {}",
+                plan.n_outputs(),
+                outs.len()
+            );
+            for (p, o) in params.iter_mut().zip(&outs) {
+                *p = o.to_vec::<f32>()?;
+            }
+            let np = params.len();
+            let loss = outs[np].to_vec::<f32>()?[0] as f64;
+            losses.push(loss);
+
+            let mut relu_sum = 0.0;
+            for (j, key) in plan.relu_keys.iter().enumerate() {
+                let s = outs[np + 1 + j].to_vec::<f32>()?[0] as f64;
+                relu_sum += s;
+                profiler.observe_value(key, s.clamp(0.0, 1.0));
+            }
+            for (j, key) in plan.dz_keys.iter().enumerate() {
+                let s = outs[np + 1 + plan.relu_keys.len() + j].to_vec::<f32>()?[0] as f64;
+                profiler.observe_value(key, s.clamp(0.0, 1.0));
+            }
+            self.metrics.push("loss", loss);
+            self.metrics.inc("steps", 1);
+
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                let mean_sp = relu_sum / plan.relu_keys.len().max(1) as f64;
+                println!(
+                    "step {step:>5}  loss {loss:>8.4}  mean relu sparsity {mean_sp:.3}  \
+                     ({} layers)",
+                    plan.relu_keys.len()
+                );
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            losses,
+            steps_per_sec: self.cfg.steps as f64 / dt.max(1e-9),
+            profiler,
+        })
+    }
+
+    /// The original hard-coded paper-geometry loop (two convs + FC).
+    fn run_classic(&mut self) -> Result<TrainReport> {
         use geometry::*;
         let mut rng = Xorshift::new(self.cfg.seed);
 

@@ -12,6 +12,7 @@ use sparsetrain::coordinator::trainer::{Trainer, TrainerConfig};
 use sparsetrain::kernels::regalloc::{plan_bww, plan_fwd};
 use sparsetrain::kernels::Component;
 use sparsetrain::nets::table2::layer_by_name;
+use sparsetrain::nets::{Network, Scale};
 use sparsetrain::runtime::artifacts::ArtifactSet;
 use sparsetrain::sim::{Algorithm, Machine};
 use sparsetrain::util::cli::Args;
@@ -29,9 +30,17 @@ COMMANDS
   table3             register-budget plans (Q/T/pipelining)
   sweep              one layer  [--layer NAME] [--csv]
   train              run the PJRT trainer  [--steps N] [--seed N]
-                     (--threads N sizes the op router's kernel/GEMM
-                      executor; default 0 = host parallelism. Prints
-                      per-op-kind routed/fallback/fused counters;
+                     [--net vgg16|resnet34|resnet50|fixup_resnet50]
+                     [--scale small|medium|full]
+                     (--net emits and trains the full multi-layer zoo
+                      inventory — residual blocks, strided downsamples,
+                      BN-position-aware ReLUs — instead of the classic
+                      two-conv paper geometry; --scale shrinks spatial
+                      extent and stage depth so deep nets run quickly,
+                      default small. --threads N sizes the op router's
+                      kernel/GEMM executor; default 0 = host parallelism.
+                      Prints per-op-kind and, with --net, per-layer
+                      routed/fallback counters;
                       SPARSETRAIN_CONV_ROUTE=off / SPARSETRAIN_OP_ROUTE=off
                       disable routing classes.)
   plan               register plan  [--k N] [--r N]
@@ -41,9 +50,19 @@ OPTIONS
 
 All experiment outputs are also produced by `cargo bench` and the examples.";
 
+/// Parse-or-die for numeric options: every malformed value is a usage
+/// error (exit 2), matching the analytics path — no silent fallback to
+/// the default.
+fn usize_opt(args: &Args, name: &str, default: usize) -> usize {
+    args.get_usize(name, default).unwrap_or_else(|e| {
+        eprintln!("error: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    })
+}
+
 fn main() {
     let args = Args::from_env(
-        &["layer", "steps", "seed", "epochs", "k", "r", "threads"],
+        &["layer", "steps", "seed", "epochs", "k", "r", "threads", "net", "scale"],
         &["csv", "detail"],
     )
     .unwrap_or_else(|e| {
@@ -51,10 +70,7 @@ fn main() {
         std::process::exit(2);
     });
     let base = Machine::skylake_x();
-    let threads = args.get_usize("threads", base.cores).unwrap_or_else(|e| {
-        eprintln!("error: {e}\n\n{USAGE}");
-        std::process::exit(2);
-    });
+    let threads = usize_opt(&args, "threads", base.cores);
     let m = experiments::machine_with_threads(&base, threads);
     match args.subcommand() {
         Some("fig1") | Some("table4") => {
@@ -79,7 +95,7 @@ fn main() {
             }
         }
         Some("fig4") | Some("table6") => {
-            let epochs = args.get_usize("epochs", 100).unwrap_or(100);
+            let epochs = usize_opt(&args, "epochs", 100);
             let (_, fig, tab) = experiments::fig4_table6(&m, epochs);
             fig.print();
             tab.print();
@@ -94,8 +110,8 @@ fn main() {
             }
         }
         Some("plan") => {
-            let k = args.get_usize("k", 256).unwrap_or(256);
-            let r = args.get_usize("r", 3).unwrap_or(3);
+            let k = usize_opt(&args, "k", 256);
+            let r = usize_opt(&args, "r", 3);
             let f = plan_fwd(k, r);
             let b = plan_bww(k, r);
             println!("FWD/BWI: {f:?}");
@@ -125,11 +141,28 @@ fn main() {
             }
         }
         Some("train") => {
-            let steps = args.get_usize("steps", 200).unwrap_or(200);
-            let seed = args.get_usize("seed", 7).unwrap_or(7) as u64;
+            let steps = usize_opt(&args, "steps", 200);
+            let seed = usize_opt(&args, "seed", 7) as u64;
             // For the trainer, --threads sizes the op router's kernel/GEMM
             // executor (default 0 = host parallelism), not the cost model.
-            let trainer_threads = args.get_usize("threads", 0).unwrap_or(0);
+            let trainer_threads = usize_opt(&args, "threads", 0);
+            let net = args.get("net").map(|v| {
+                Network::parse(v).unwrap_or_else(|| {
+                    eprintln!("error: unknown --net '{v}'\n\n{USAGE}");
+                    std::process::exit(2);
+                })
+            });
+            let scale = match args.get("scale") {
+                Some(v) => Scale::parse(v).unwrap_or_else(|| {
+                    eprintln!("error: unknown --scale '{v}'\n\n{USAGE}");
+                    std::process::exit(2);
+                }),
+                None => Scale::Small,
+            };
+            if net.is_none() && args.get("scale").is_some() {
+                eprintln!("error: --scale requires --net\n\n{USAGE}");
+                std::process::exit(2);
+            }
             // Use real artifacts when present; otherwise materialize the
             // Rust-emitted reference HLO so training works offline.
             let artifacts = match ArtifactSet::bootstrap_offline() {
@@ -139,10 +172,12 @@ fn main() {
                     std::process::exit(1);
                 }
             };
-            match Trainer::new(
-                &artifacts,
-                TrainerConfig { steps, seed, log_every: 20, threads: trainer_threads },
-            ) {
+            let cfg = TrainerConfig { steps, seed, log_every: 20, threads: trainer_threads };
+            let built = match net {
+                Some(network) => Trainer::new_net(&artifacts, network, scale, cfg),
+                None => Trainer::new(&artifacts, cfg),
+            };
+            match built {
                 Ok(mut t) => match t.run() {
                     Ok(report) => {
                         report.profiler.report().print();
@@ -161,6 +196,14 @@ fn main() {
                                 s.ew_routed + s.ew_fallback,
                                 router.threads()
                             );
+                            let per_layer = router.conv_layer_stats();
+                            if !per_layer.is_empty() {
+                                println!("per-conv routing (instr: routed/fallback):");
+                                for (nm, routed, fb) in per_layer {
+                                    let flag = if fb > 0 { "  <- fallback!" } else { "" };
+                                    println!("  {nm}: {routed}/{fb}{flag}");
+                                }
+                            }
                         } else {
                             println!("op-router: disabled (naive interpreter)");
                         }

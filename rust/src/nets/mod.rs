@@ -5,4 +5,4 @@ pub mod table2;
 pub mod zoo;
 
 pub use table2::{layer_by_name, resnet_layers, table2_layers, vgg_layers, NamedLayer};
-pub use zoo::{NetSpec, NetLayer, Network};
+pub use zoo::{NetSpec, NetLayer, Network, Scale};

@@ -15,6 +15,10 @@ use crate::kernels::ConvConfig;
 pub struct NetLayer {
     pub name: String,
     pub cfg: ConvConfig,
+    /// Real input-channel count. Equal to `cfg.c` everywhere except the
+    /// first conv, whose 3 image channels are padded to V=16 in `cfg` for
+    /// the tiled layout; FLOP accounting must use this field, not `cfg.c`.
+    pub real_c: usize,
     /// First conv of the network: input is a zero-free image → SparseTrain
     /// inapplicable; the paper charges it as constant `direct` overhead.
     pub is_first: bool,
@@ -22,6 +26,16 @@ pub struct NetLayer {
     pub has_bn: bool,
     /// This conv's ReLU follows a residual-shortcut add (lower sparsity).
     pub after_shortcut: bool,
+}
+
+impl NetLayer {
+    /// Dense forward FLOPs charged at the real channel count (the padded
+    /// `cfg.c` would overcount the first layer 16/3 ≈ 5.3×).
+    pub fn real_fwd_flops(&self) -> u64 {
+        let mut cfg = self.cfg;
+        cfg.c = self.real_c;
+        cfg.fwd_flops()
+    }
 }
 
 /// The four evaluated networks.
@@ -46,6 +60,21 @@ impl Network {
         }
     }
 
+    /// Identifier-safe key, used for artifact names and `--net` parsing.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Network::Vgg16 => "vgg16",
+            Network::ResNet34 => "resnet34",
+            Network::ResNet50 => "resnet50",
+            Network::FixupResNet50 => "fixup_resnet50",
+        }
+    }
+
+    /// Parse a `--net` argument (accepts the `key()` spellings).
+    pub fn parse(s: &str) -> Option<Network> {
+        Network::ALL.into_iter().find(|n| n.key() == s)
+    }
+
     /// Trajectory-model parameters for this network (Fig 3).
     pub fn trajectory(&self) -> crate::sparsity::TrajectoryParams {
         use crate::sparsity::TrajectoryParams as P;
@@ -55,6 +84,70 @@ impl Network {
             Network::ResNet50 => P::resnet50(),
             Network::FixupResNet50 => P::fixup_resnet50(),
         }
+    }
+}
+
+/// Spatial/depth preset for building a network inventory. `Full` is the
+/// paper's ImageNet geometry; `Small`/`Medium` shrink input extent, channel
+/// widths and stage depths so a real multi-layer train loop fits the
+/// vendored mini-HLO interpreter (and `cargo test`) while keeping every
+/// structural feature — strided convs, projection shortcuts, BN placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scale {
+    /// 32×32 input, channels ÷4, one residual block per stage.
+    Small,
+    /// 64×64 input, channels ÷2, two residual blocks per stage.
+    Medium,
+    /// 224×224 input, the real inventory (projection/emission only: train
+    /// graphs at this extent exceed the mini interpreter's tensor budget).
+    Full,
+}
+
+impl Scale {
+    pub const ALL: [Scale; 3] = [Scale::Small, Scale::Medium, Scale::Full];
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            Scale::Small => "small",
+            Scale::Medium => "medium",
+            Scale::Full => "full",
+        }
+    }
+
+    /// Parse a `--scale` argument.
+    pub fn parse(s: &str) -> Option<Scale> {
+        Scale::ALL.into_iter().find(|x| x.key() == s)
+    }
+
+    /// Network input spatial extent (H = W).
+    pub fn input_hw(&self) -> usize {
+        match self {
+            Scale::Small => 32,
+            Scale::Medium => 64,
+            Scale::Full => 224,
+        }
+    }
+
+    /// Channel-width divisor (keeps every width a multiple of V=16).
+    fn chdiv(&self) -> usize {
+        match self {
+            Scale::Small => 4,
+            Scale::Medium => 2,
+            Scale::Full => 1,
+        }
+    }
+
+    /// Residual blocks per stage.
+    fn depths(&self) -> [usize; 4] {
+        match self {
+            Scale::Small => [1, 1, 1, 1],
+            Scale::Medium => [2, 2, 2, 2],
+            Scale::Full => [3, 4, 6, 3],
+        }
+    }
+
+    fn ch(&self, c: usize) -> usize {
+        (c / self.chdiv()).max(crate::V)
     }
 }
 
@@ -79,6 +172,7 @@ fn conv(
     NetLayer {
         name,
         cfg: ConvConfig::square(BATCH, c, k, hw, rs, stride),
+        real_c: c,
         is_first: false,
         has_bn,
         after_shortcut: false,
@@ -87,20 +181,31 @@ fn conv(
 
 /// The first conv: 3 input channels, padded to V=16 for the tiled layout
 /// (cost model approximation; the paper charges this layer as constant
-/// `direct` overhead either way).
+/// `direct` overhead either way). `real_c` stays 3 so FLOP accounting is
+/// honest about the actual image.
 fn first_conv(name: &str, k: usize, hw: usize, rs: usize, stride: usize, has_bn: bool) -> NetLayer {
     let mut l = conv(name.to_string(), 16, k, hw, rs, stride, has_bn);
+    l.real_c = 3;
     l.is_first = true;
     l
 }
 
 impl NetSpec {
     pub fn build(network: Network) -> NetSpec {
+        NetSpec::build_scaled(network, Scale::Full)
+    }
+
+    /// Build the inventory at a given [`Scale`] preset. `Scale::Full` is the
+    /// paper inventory; smaller presets keep the same structure (and layer
+    /// naming scheme) with reduced extent/width/depth.
+    pub fn build_scaled(network: Network, scale: Scale) -> NetSpec {
         match network {
-            Network::Vgg16 => NetSpec { network, layers: vgg16_layers() },
-            Network::ResNet34 => NetSpec { network, layers: resnet34_layers(true) },
-            Network::ResNet50 => NetSpec { network, layers: resnet50_layers(true) },
-            Network::FixupResNet50 => NetSpec { network, layers: resnet50_layers(false) },
+            Network::Vgg16 => NetSpec { network, layers: vgg16_layers(scale) },
+            Network::ResNet34 => NetSpec { network, layers: resnet34_layers(true, scale) },
+            Network::ResNet50 => NetSpec { network, layers: resnet50_layers(true, scale) },
+            Network::FixupResNet50 => {
+                NetSpec { network, layers: resnet50_layers(false, scale) }
+            }
         }
     }
 
@@ -109,52 +214,63 @@ impl NetSpec {
         self.layers.iter().filter(|l| !l.is_first)
     }
 
-    /// Total dense forward FLOPs of all conv layers.
+    /// Total dense forward FLOPs of all conv layers, charged at real
+    /// channel counts (the first conv reads 3 image channels, not the
+    /// padded 16).
     pub fn total_fwd_flops(&self) -> u64 {
-        self.layers.iter().map(|l| l.cfg.fwd_flops()).sum()
+        self.layers.iter().map(|l| l.real_fwd_flops()).sum()
     }
 }
 
-fn vgg16_layers() -> Vec<NetLayer> {
+fn vgg16_layers(scale: Scale) -> Vec<NetLayer> {
+    // (real in channels, out channels, spatial divisor vs the input extent)
     let spec: [(usize, usize, usize); 13] = [
-        (3, 64, 224), // conv1_1 (first)
-        (64, 64, 224),
-        (64, 128, 112),
-        (128, 128, 112),
-        (128, 256, 56),
-        (256, 256, 56),
-        (256, 256, 56),
-        (256, 512, 28),
-        (512, 512, 28),
-        (512, 512, 28),
-        (512, 512, 14),
-        (512, 512, 14),
-        (512, 512, 14),
+        (3, 64, 1), // conv1_1 (first)
+        (64, 64, 1),
+        (64, 128, 2),
+        (128, 128, 2),
+        (128, 256, 4),
+        (256, 256, 4),
+        (256, 256, 4),
+        (256, 512, 8),
+        (512, 512, 8),
+        (512, 512, 8),
+        (512, 512, 16),
+        (512, 512, 16),
+        (512, 512, 16),
     ];
+    let hw0 = scale.input_hw();
     spec.iter()
         .enumerate()
-        .map(|(i, &(c, k, hw))| {
+        .map(|(i, &(c, k, div))| {
+            let hw = hw0 / div;
             if i == 0 {
-                first_conv("conv1_1", k, hw, 3, 1, false)
+                first_conv("conv1_1", scale.ch(k), hw, 3, 1, false)
             } else {
-                conv(format!("conv{}", i + 1), c, k, hw, 3, 1, false)
+                conv(format!("conv{}", i + 1), scale.ch(c), scale.ch(k), hw, 3, 1, false)
             }
         })
         .collect()
 }
 
-/// ResNet-34: basic blocks [3, 4, 6, 3], channels [64, 128, 256, 512].
-fn resnet34_layers(has_bn: bool) -> Vec<NetLayer> {
-    let mut layers = vec![first_conv("conv1", 64, 224, 7, 2, has_bn)];
-    let stages: [(usize, usize, usize); 4] =
-        [(64, 56, 3), (128, 28, 4), (256, 14, 6), (512, 7, 3)];
-    let mut in_c = 64;
-    for (si, &(ch, hw, blocks)) in stages.iter().enumerate() {
-        for b in 0..blocks {
+/// ResNet stage table: (base width, output spatial divisor vs input extent).
+/// Stage spatial = input/4 at stage 2 (stem /2, maxpool /2), halving after.
+const RESNET_STAGES: [(usize, usize); 4] = [(64, 4), (128, 8), (256, 16), (512, 32)];
+
+/// ResNet-34: basic blocks, channels [64, 128, 256, 512] (scaled).
+fn resnet34_layers(has_bn: bool, scale: Scale) -> Vec<NetLayer> {
+    let hw0 = scale.input_hw();
+    let depths = scale.depths();
+    let mut layers = vec![first_conv("conv1", scale.ch(64), hw0, 7, 2, has_bn)];
+    let mut in_c = scale.ch(64);
+    for (si, &(w, div)) in RESNET_STAGES.iter().enumerate() {
+        let ch = scale.ch(w);
+        let hw = hw0 / div;
+        for b in 0..depths[si] {
             let downsample = si > 0 && b == 0;
             let stride = if downsample { 2 } else { 1 };
             let in_hw = if downsample { hw * 2 } else { hw };
-            let mut l1 = conv(
+            let l1 = conv(
                 format!("s{}b{}_conv1", si + 2, b + 1),
                 in_c,
                 ch,
@@ -165,7 +281,6 @@ fn resnet34_layers(has_bn: bool) -> Vec<NetLayer> {
             );
             let mut l2 = conv(format!("s{}b{}_conv2", si + 2, b + 1), ch, ch, hw, 3, 1, has_bn);
             l2.after_shortcut = true; // its ReLU follows the shortcut add
-            let _ = &mut l1;
             layers.push(l1);
             layers.push(l2);
             if downsample {
@@ -189,16 +304,18 @@ fn resnet34_layers(has_bn: bool) -> Vec<NetLayer> {
     layers
 }
 
-/// ResNet-50: bottleneck blocks [3, 4, 6, 3], widths [64, 128, 256, 512]
-/// (output 4× wider). `has_bn = false` gives the Fixup variant.
-fn resnet50_layers(has_bn: bool) -> Vec<NetLayer> {
-    let mut layers = vec![first_conv("conv1", 64, 224, 7, 2, has_bn)];
-    let stages: [(usize, usize, usize); 4] =
-        [(64, 56, 3), (128, 28, 4), (256, 14, 6), (512, 7, 3)];
-    let mut in_c = 64;
-    for (si, &(w, hw, blocks)) in stages.iter().enumerate() {
+/// ResNet-50: bottleneck blocks, widths [64, 128, 256, 512] (scaled;
+/// output 4× wider). `has_bn = false` gives the Fixup variant.
+fn resnet50_layers(has_bn: bool, scale: Scale) -> Vec<NetLayer> {
+    let hw0 = scale.input_hw();
+    let depths = scale.depths();
+    let mut layers = vec![first_conv("conv1", scale.ch(64), hw0, 7, 2, has_bn)];
+    let mut in_c = scale.ch(64);
+    for (si, &(base, div)) in RESNET_STAGES.iter().enumerate() {
+        let w = scale.ch(base);
         let out_c = w * 4;
-        for b in 0..blocks {
+        let hw = hw0 / div;
+        for b in 0..depths[si] {
             let downsample = b == 0; // every stage's first block projects
             let stride = if si > 0 && b == 0 { 2 } else { 1 };
             let in_hw = if stride == 2 { hw * 2 } else { hw };
@@ -317,5 +434,74 @@ mod tests {
         let net = NetSpec::build(Network::ResNet34);
         let marked = net.layers.iter().filter(|l| l.after_shortcut).count();
         assert_eq!(marked, 16); // one per basic block
+    }
+
+    #[test]
+    fn first_conv_carries_real_channel_count() {
+        for net in Network::ALL {
+            let spec = NetSpec::build(net);
+            let first = &spec.layers[0];
+            assert!(first.is_first);
+            assert_eq!(first.cfg.c, 16, "{}: tiled layout pads to V", net.name());
+            assert_eq!(first.real_c, 3, "{}: images have 3 channels", net.name());
+            assert!(spec.layers[1..].iter().all(|l| l.real_c == l.cfg.c));
+        }
+    }
+
+    /// Pin per-image conv GFLOPs (2 FLOPs per MAC) against the published
+    /// figures: VGG16 ≈ 30.7, ResNet-50 (v1.5) ≈ 8.2. The padded-first-conv
+    /// bug charged conv1 at 16 input channels, inflating VGG16 to ~31.4 and
+    /// ResNet-50 to ~9.2 — both outside these bands.
+    #[test]
+    fn flops_pinned_to_published_figures() {
+        let per_image = |n: Network| {
+            NetSpec::build(n).total_fwd_flops() as f64 / BATCH as f64 / 1e9
+        };
+        let vgg = per_image(Network::Vgg16);
+        assert!((30.4..31.0).contains(&vgg), "VGG16 GFLOPs/image = {vgg}");
+        let r50 = per_image(Network::ResNet50);
+        assert!((8.0..8.4).contains(&r50), "ResNet-50 GFLOPs/image = {r50}");
+    }
+
+    #[test]
+    fn scaled_specs_are_valid_and_structural() {
+        for net in Network::ALL {
+            for scale in Scale::ALL {
+                let spec = NetSpec::build_scaled(net, scale);
+                for l in &spec.layers {
+                    l.cfg.validate().unwrap_or_else(|e| {
+                        panic!("{} {} {}: {e}", net.name(), scale.key(), l.name)
+                    });
+                }
+                // same layer count and naming at every scale
+                assert_eq!(
+                    spec.layers.len(),
+                    match (net, scale) {
+                        (Network::Vgg16, _) => 13,
+                        (Network::ResNet34, Scale::Small) => 1 + 2 + 3 * 3,
+                        (Network::ResNet34, Scale::Medium) => 1 + 2 * 8 + 3,
+                        (Network::ResNet34, Scale::Full) => 36,
+                        (_, Scale::Small) => 1 + 3 * 4 + 4,
+                        (_, Scale::Medium) => 1 + 3 * 8 + 4,
+                        (_, Scale::Full) => 53,
+                    },
+                    "{} {}",
+                    net.name(),
+                    scale.key()
+                );
+                // strided convs survive scaling (stem + stage transitions)
+                let strided = spec.layers.iter().filter(|l| l.cfg.stride_p == 2).count();
+                if net != Network::Vgg16 {
+                    assert!(strided >= 4, "{} {}: {strided} strided", net.name(), scale.key());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_resnet34_chains_to_1x1() {
+        let spec = NetSpec::build_scaled(Network::ResNet34, Scale::Small);
+        let last = spec.layers.iter().find(|l| l.name == "s5b1_conv2").unwrap();
+        assert_eq!((last.cfg.c, last.cfg.k, last.cfg.h), (128, 128, 1));
     }
 }

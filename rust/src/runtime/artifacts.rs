@@ -101,48 +101,62 @@ impl ArtifactSet {
     /// and fails (rather than replaces) when the target already exists.
     pub fn write_fallback(&self) -> io::Result<()> {
         use super::hlo_builder;
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        static SEQ: AtomicUsize = AtomicUsize::new(0);
-
-        std::fs::create_dir_all(&self.dir)?;
         let g = hlo_builder::Geometry::paper();
-        let marker = hlo_builder::fallback_marker(&g);
         for (name, text) in [
             (TRAIN_STEP, hlo_builder::train_step_hlo(&g)),
             (PREDICT, hlo_builder::predict_hlo(&g)),
             (KERNEL_FWD, hlo_builder::kernel_fwd_hlo(&g)),
         ] {
-            let path = self.path_of(name);
-            let stale = match std::fs::read_to_string(&path) {
-                Ok(existing) => {
-                    let first = existing.lines().next().unwrap_or("");
-                    if !first.starts_with(hlo_builder::FALLBACK_PREFIX) || first == marker {
-                        continue; // a real artifact, or our current output
-                    }
-                    true
-                }
-                Err(_) => false,
-            };
-            let seq = SEQ.fetch_add(1, Ordering::Relaxed);
-            let tmp = self.dir.join(format!(".{name}.{}.{seq}.tmp", std::process::id()));
-            std::fs::write(&tmp, text)?;
-            if stale {
-                // Our own outdated output: unlink it, then publish through
-                // the same no-clobber hard_link below — if a real lowering
-                // lands in the window, AlreadyExists lets it win.
-                let _ = std::fs::remove_file(&path);
-            }
-            let publish = std::fs::hard_link(&tmp, &path);
-            let cleanup = std::fs::remove_file(&tmp);
-            match publish {
-                Ok(()) => {}
-                // someone else (another test binary, `make artifacts`)
-                // provided the artifact first — theirs wins
-                Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {}
-                Err(e) => return Err(e),
-            }
-            cleanup?;
+            self.publish_fallback_text(name, &text)?;
         }
+        Ok(())
+    }
+
+    /// Publish one piece of emitted fallback HLO under `name`, using the
+    /// text's first line as its marker (every `hlo_builder` fallback
+    /// emitter stamps one). Skips real artifacts and current fallback
+    /// output; refreshes stale fallback output; races resolve in favour of
+    /// whoever publishes a real file first (atomic `hard_link`, no
+    /// clobber). Also the publishing path for the per-net emitters
+    /// (`train_step_<net>_<scale>` / `predict_<net>_<scale>`).
+    pub fn publish_fallback_text(&self, name: &str, text: &str) -> io::Result<()> {
+        use super::hlo_builder;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+
+        std::fs::create_dir_all(&self.dir)?;
+        let marker = text.lines().next().unwrap_or("");
+        debug_assert!(marker.starts_with(hlo_builder::FALLBACK_PREFIX));
+        let path = self.path_of(name);
+        let stale = match std::fs::read_to_string(&path) {
+            Ok(existing) => {
+                let first = existing.lines().next().unwrap_or("");
+                if !first.starts_with(hlo_builder::FALLBACK_PREFIX) || first == marker {
+                    return Ok(()); // a real artifact, or our current output
+                }
+                true
+            }
+            Err(_) => false,
+        };
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = self.dir.join(format!(".{name}.{}.{seq}.tmp", std::process::id()));
+        std::fs::write(&tmp, text)?;
+        if stale {
+            // Our own outdated output: unlink it, then publish through
+            // the same no-clobber hard_link below — if a real lowering
+            // lands in the window, AlreadyExists lets it win.
+            let _ = std::fs::remove_file(&path);
+        }
+        let publish = std::fs::hard_link(&tmp, &path);
+        let cleanup = std::fs::remove_file(&tmp);
+        match publish {
+            Ok(()) => {}
+            // someone else (another test binary, `make artifacts`)
+            // provided the artifact first — theirs wins
+            Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {}
+            Err(e) => return Err(e),
+        }
+        cleanup?;
         Ok(())
     }
 

@@ -53,8 +53,9 @@ use crate::kernels::{Component, ConvConfig, SkipMode};
 use crate::sim::Machine;
 use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::V;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use xla::eval::bin_f32;
 use xla::hlo::{BinKind, CmpDir, Op};
 
@@ -157,6 +158,16 @@ pub struct OpRouter {
     fused: AtomicUsize,
     ew_routed: AtomicUsize,
     ew_fallback: AtomicUsize,
+    /// Per-conv-instruction (routed, fallback) counters, keyed by HLO
+    /// instruction name (`z_s3b1_conv1`, `bww_conv1_2`, …). The
+    /// per-layer breakdown the `train` CLI prints so a single layer
+    /// silently falling back is visible, not averaged away.
+    conv_by_instr: Mutex<BTreeMap<String, (usize, usize)>>,
+    /// Profiler-measured sparsity per conv instruction name, fed each
+    /// step by the trainer ([`OpRouter::set_profiled_sparsity`]). When a
+    /// conv has an entry, the selector sees this instead of the checked
+    /// operand's live zero count.
+    profiled: Mutex<BTreeMap<String, f64>>,
 }
 
 impl OpRouter {
@@ -179,6 +190,8 @@ impl OpRouter {
             fused: AtomicUsize::new(0),
             ew_routed: AtomicUsize::new(0),
             ew_fallback: AtomicUsize::new(0),
+            conv_by_instr: Mutex::new(BTreeMap::new()),
+            profiled: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -207,6 +220,46 @@ impl OpRouter {
             ew_routed: self.ew_routed.load(Ordering::Relaxed),
             ew_fallback: self.ew_fallback.load(Ordering::Relaxed),
         }
+    }
+
+    /// Per-conv-instruction `(name, routed, fallback)` rows, sorted by
+    /// instruction name. Empty until a conv reaches the router through the
+    /// evaluator hook (the name comes from the HLO instruction).
+    pub fn conv_layer_stats(&self) -> Vec<(String, usize, usize)> {
+        self.conv_by_instr
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(nm, &(r, f))| (nm.clone(), r, f))
+            .collect()
+    }
+
+    /// Install profiler-measured sparsities for conv instructions (name →
+    /// expected checked-operand sparsity, clamped to `[0, 1]`). Replaces
+    /// prior values for the given keys only; the trainer calls this every
+    /// step with the recent-mean of each conv's feed series so the
+    /// selector's skip-mode choice tracks the measured dynamic sparsity
+    /// instead of each call's instantaneous zero count.
+    pub fn set_profiled_sparsity<I>(&self, feeds: I)
+    where
+        I: IntoIterator<Item = (String, f64)>,
+    {
+        let mut map = self.profiled.lock().unwrap();
+        for (nm, s) in feeds {
+            map.insert(nm, s.clamp(0.0, 1.0));
+        }
+    }
+
+    /// The sparsity the selector should plan with for conv `instr`: the
+    /// profiled value when the trainer installed one, else the live
+    /// operand measurement.
+    fn sparsity_for(&self, instr: Option<&str>, live: f64) -> f64 {
+        if let Some(nm) = instr {
+            if let Some(&s) = self.profiled.lock().unwrap().get(nm) {
+                return s;
+            }
+        }
+        live
     }
 
     fn bump(&self, counter: &AtomicUsize) {
@@ -254,7 +307,7 @@ impl OpRouter {
                     rhs_dims,
                     out_dims: call.out_dims(),
                 };
-                match self.route(&conv) {
+                match self.route_named(&conv, Some(&call.instr().name)) {
                     Some(buf) if buf.len() == out.len() => {
                         out.copy_from_slice(&buf);
                         true
@@ -459,16 +512,32 @@ impl OpRouter {
     /// loop. Never panics: every precondition of the kernels is checked
     /// here first.
     pub fn route(&self, call: &xla::ConvCall<'_>) -> Option<Vec<f32>> {
-        let out = self.try_route(call);
+        self.route_named(call, None)
+    }
+
+    /// [`OpRouter::route`] with the conv's HLO instruction name attached:
+    /// tallies the per-instruction routed/fallback counter and lets the
+    /// selector use the trainer's profiled sparsity for this instruction.
+    pub fn route_named(&self, call: &xla::ConvCall<'_>, instr: Option<&str>) -> Option<Vec<f32>> {
+        let out = self.try_route(call, instr);
         if out.is_some() {
             self.routed.fetch_add(1, Ordering::Relaxed);
         } else {
             self.fallback.fetch_add(1, Ordering::Relaxed);
         }
+        if let Some(nm) = instr {
+            let mut map = self.conv_by_instr.lock().unwrap();
+            let e = map.entry(nm.to_string()).or_insert((0, 0));
+            if out.is_some() {
+                e.0 += 1;
+            } else {
+                e.1 += 1;
+            }
+        }
         out
     }
 
-    fn try_route(&self, call: &xla::ConvCall<'_>) -> Option<Vec<f32>> {
+    fn try_route(&self, call: &xla::ConvCall<'_>, instr: Option<&str>) -> Option<Vec<f32>> {
         if call.lhs_dims.len() != 4 || call.rhs_dims.len() != 4 || call.out_dims.len() != 4 {
             return None;
         }
@@ -486,16 +555,16 @@ impl OpRouter {
             return None;
         }
         match classify(call.spec)? {
-            Form::Fwd => self.route_fwd(call),
-            Form::Bwi => self.route_bwi(call),
-            Form::Bww => self.route_bww(call),
+            Form::Fwd => self.route_fwd(call, instr),
+            Form::Bwi => self.route_bwi(call, instr),
+            Form::Bww => self.route_bww(call, instr),
         }
     }
 
     /// `bf01_oi01->bf01`: lhs `[N,C,H,W]`, rhs `[K,C,S,R]`, out
     /// `[N,K,H',W']` — exactly [`Scheduler::run_fwd`]'s contract after
     /// packing into the tiled layouts.
-    fn route_fwd(&self, call: &xla::ConvCall<'_>) -> Option<Vec<f32>> {
+    fn route_fwd(&self, call: &xla::ConvCall<'_>, instr: Option<&str>) -> Option<Vec<f32>> {
         let (l, r, w) = (call.lhs_dims, call.rhs_dims, call.window);
         let cfg = ConvConfig {
             n: l[0],
@@ -518,7 +587,7 @@ impl OpRouter {
         let d = ActTensor::from_nchw(cfg.n, cfg.c, cfg.h, cfg.w, call.lhs);
         let g = FilterTensor::from_kcsr(cfg.k, cfg.c, cfg.s, cfg.r, call.rhs);
         let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
-        let mode = self.skip_mode(&cfg, Component::Fwd, d.sparsity());
+        let mode = self.skip_mode(&cfg, Component::Fwd, self.sparsity_for(instr, d.sparsity()));
         self.sched.run_fwd(&cfg, &d, &g, &mut y, mode);
         Some(y.to_nchw())
     }
@@ -531,7 +600,7 @@ impl OpRouter {
     /// packing the BWI kernel's channel-transposed filter recovers the
     /// forward filter's taps, and the pad identity `pad_fwd = S-1-pad_conv`
     /// makes the scatter geometry line up (checked below).
-    fn route_bwi(&self, call: &xla::ConvCall<'_>) -> Option<Vec<f32>> {
+    fn route_bwi(&self, call: &xla::ConvCall<'_>, instr: Option<&str>) -> Option<Vec<f32>> {
         let (l, r, o, w) = (call.lhs_dims, call.rhs_dims, call.out_dims, call.window);
         if w.stride != [1, 1] {
             return None; // strided BWI needs window dilation — not emitted
@@ -577,7 +646,7 @@ impl OpRouter {
             }
         }
         let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
-        let mode = self.skip_mode(&cfg, Component::Bwi, dy.sparsity());
+        let mode = self.skip_mode(&cfg, Component::Bwi, self.sparsity_for(instr, dy.sparsity()));
         self.sched.run_bwi(&cfg, &dy, &gt, &mut dd, mode);
         Some(dd.to_nchw())
     }
@@ -588,7 +657,7 @@ impl OpRouter {
     /// contracted dim, rhs = ∂L/∂Z `[N,K,H',W']`), and the conv's output
     /// spatial extent is the filter tap grid — so this is exactly
     /// [`Scheduler::run_bww`] with the output transposed to `[C,K,S,R]`.
-    fn route_bww(&self, call: &xla::ConvCall<'_>) -> Option<Vec<f32>> {
+    fn route_bww(&self, call: &xla::ConvCall<'_>, instr: Option<&str>) -> Option<Vec<f32>> {
         let (l, r, o, w) = (call.lhs_dims, call.rhs_dims, call.out_dims, call.window);
         if w.stride != [1, 1] {
             return None; // strided-forward BWW needs rhs dilation
@@ -621,7 +690,7 @@ impl OpRouter {
         let d = BatchTiledTensor::from_act(&d_act);
         let dy = ActTensor::from_nchw(cfg.n, cfg.k, w.size[0], w.size[1], call.rhs);
         let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
-        let mode = self.skip_mode(&cfg, Component::Bww, d.sparsity());
+        let mode = self.skip_mode(&cfg, Component::Bww, self.sparsity_for(instr, d.sparsity()));
         self.sched.run_bww(&cfg, &d, &dy, &mut dg, mode);
 
         // Unpack dG[k,c,s,r] into the conv's [C,K,S,R] output layout.
@@ -938,6 +1007,38 @@ mod tests {
         assert!(out.is_none());
         assert_eq!(router.fallback_calls(), 1);
         assert_eq!(router.routed_calls(), 0);
+    }
+
+    /// Per-instruction counters attribute routed/fallback to the HLO name,
+    /// and profiled sparsity overrides the live measurement (clamped).
+    #[test]
+    fn miri_per_instr_counters_and_profiled_sparsity() {
+        let window = Window { size: [1, 1], stride: [1, 1], pad_lo: [0, 0], pad_hi: [0, 0] };
+        let sp = spec("bf01_oi01->bf01");
+        let router = OpRouter::new(1);
+        let lhs = vec![1.0f32; 12]; // [1,3,2,2]: C=3 declines (not a V multiple)
+        let rhs = vec![1.0f32; 4 * 3];
+        let call = xla::ConvCall {
+            window: &window,
+            spec: &sp,
+            lhs: &lhs,
+            lhs_dims: &[1, 3, 2, 2],
+            rhs: &rhs,
+            rhs_dims: &[4, 3, 1, 1],
+            out_dims: &[1, 4, 2, 2],
+        };
+        assert!(router.route_named(&call, Some("z_stem")).is_none());
+        assert!(router.route_named(&call, Some("z_stem")).is_none());
+        assert_eq!(router.conv_layer_stats(), vec![("z_stem".to_string(), 0, 2)]);
+        // anonymous route() calls keep the aggregate but not the breakdown
+        assert!(router.route(&call).is_none());
+        assert_eq!(router.fallback_calls(), 3);
+        assert_eq!(router.conv_layer_stats().len(), 1);
+
+        router.set_profiled_sparsity([("z_stem".to_string(), 2.0)]);
+        assert_eq!(router.sparsity_for(Some("z_stem"), 0.3), 1.0, "clamped to [0,1]");
+        assert_eq!(router.sparsity_for(Some("unprofiled"), 0.3), 0.3);
+        assert_eq!(router.sparsity_for(None, 0.3), 0.3);
     }
 
     #[test]

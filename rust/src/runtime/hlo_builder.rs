@@ -1,4 +1,5 @@
-//! Reference HLO-text emitters: the Rust-side artifact fallback.
+//! Reference HLO-text emitters: the Rust-side artifact fallback and the
+//! inventory-driven network graph builder.
 //!
 //! `python/compile/aot.py` is the primary artifact producer (real JAX +
 //! Pallas, run via `make artifacts`). This module emits functionally
@@ -8,18 +9,44 @@
 //! light up the full `Trainer` loop through the vendored mini-HLO
 //! interpreter (`xla::eval`).
 //!
-//! The train-step graph is the hand-lowered forward + backward + SGD of
-//! `python/compile/model.py`: two 3×3 pad-1 convolutions with ReLU (and
-//! measured ReLU-output sparsity, the paper's dynamic-sparsity signal),
-//! global average pool, a fully-connected layer, numerically stable
-//! softmax cross-entropy, and one SGD update. The input-gradient
+//! The classic train-step graph is the hand-lowered forward + backward +
+//! SGD of `python/compile/model.py`: two 3×3 pad-1 convolutions with ReLU
+//! (and measured ReLU-output sparsity, the paper's dynamic-sparsity
+//! signal), global average pool, a fully-connected layer, numerically
+//! stable softmax cross-entropy, and one SGD update. The input-gradient
 //! convolution is expressed as `reverse` + `dim_labels=bf01_io01->bf01`;
 //! the weight-gradient convolutions contract the batch dimension via
 //! `dim_labels=fb01_io01->bf01` with the activation spatial extent as the
 //! window. The backward graph is finite-difference-verified in
 //! `rust/tests/e2e_train.rs`.
+//!
+//! [`net_train_step_hlo`] / [`net_predict_hlo`] generalize that
+//! hand-lowering to an arbitrary `nets::zoo` conv inventory (ISSUE 7):
+//! layer names are parsed back into stage/block topology, residual blocks
+//! get their adds and 1×1 projection shortcuts, inter-stage maxpools are
+//! inferred from spatial-extent drops, and a [`Scale`] preset shrinks the
+//! Full geometry so a real multi-layer loop runs under `cargo test`.
+//! Two paper-fidelity rules shape the emission:
+//!
+//! * **§2.3 BN placement** — with BatchNorm between conv and ReLU the
+//!   output gradient `dz` is dense (BN backward smears the ReLU mask), so
+//!   BN layers measure the *post-BN* gradient; BN-free (Fixup) layers
+//!   mask first and measure the sparse gradient BWI actually consumes.
+//!   Per-layer ReLU (`sp_*`) and gradient (`dsp_*`) sparsity scalars ride
+//!   in the root tuple so the profiler sees what the model predicts.
+//! * **Strided backward as zero-insertion** — `dY` of a stride-`s` conv is
+//!   upsampled (iota-mask broadcast) to the stride-1 footprint before the
+//!   BWW/BWI convs, which keeps every backward conv in the exact window
+//!   form the `OpRouter` envelope and sparse kernels already handle.
+//!
+//! [`NetTrainPlan`] is the emission manifest: parameter names/dims,
+//! sparsity-series keys, and the `(instr, series)` feeds the trainer uses
+//! to hand measured sparsity to the selector. The emitted text publishes
+//! through `ArtifactSet::publish_fallback_text` as
+//! `train_step_<net>_<scale>` / `predict_<net>_<scale>`.
 
 use super::artifacts::geometry;
+use crate::nets::zoo::{NetLayer, NetSpec, Network, Scale};
 use std::fmt::Write;
 
 /// Training-problem geometry an emitted module is specialized to (AOT —
@@ -413,6 +440,866 @@ pub fn conv_module_hlo(
     text
 }
 
+// ---------------------------------------------------------------------------
+// Inventory-driven emitter: train_step / predict for any `nets::zoo` spec.
+// ---------------------------------------------------------------------------
+
+/// A zoo network at a concrete [`Scale`], ready for emission.
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    pub spec: NetSpec,
+    pub scale: Scale,
+    /// Label classes of the synthetic task (≤ input channels so the
+    /// per-class channel signatures of `kernels::layers::synthetic_batch`
+    /// survive the global average pool).
+    pub classes: usize,
+    /// SGD learning rate baked into the train-step graph.
+    pub lr: f32,
+}
+
+impl NetModel {
+    pub fn new(network: Network, scale: Scale) -> NetModel {
+        let spec = NetSpec::build_scaled(network, scale);
+        // BN keeps the deep loss surface well-conditioned; the BN-free
+        // inventories (VGG16, Fixup) need a gentler step to stay stable.
+        let lr = if spec.layers.iter().any(|l| l.has_bn) { 0.05 } else { 0.02 };
+        NetModel { spec, scale, classes: 8, lr }
+    }
+
+    /// Identifier-safe key, e.g. `resnet34_small`.
+    pub fn key(&self) -> String {
+        format!("{}_{}", self.spec.network.key(), self.scale.key())
+    }
+
+    /// `[n, c, h, w]` of the input images (channels padded to V=16).
+    pub fn input_dims(&self) -> [usize; 4] {
+        let c = &self.spec.layers[0].cfg;
+        [c.n, c.c, c.h, c.w]
+    }
+}
+
+/// Artifact stems for a model: (`train_step_<key>`, `predict_<key>`).
+pub fn net_artifact_names(m: &NetModel) -> (String, String) {
+    (format!("train_step_{}", m.key()), format!("predict_{}", m.key()))
+}
+
+/// Marker line for emitted net artifacts (same contract as
+/// [`fallback_marker`]: first line of the file, fingerprints the model).
+pub fn net_fallback_marker(m: &NetModel) -> String {
+    format!(
+        "{FALLBACK_PREFIX} v{FALLBACK_VERSION} net={} layers={} classes={} lr={}",
+        m.key(),
+        m.spec.layers.len(),
+        m.classes,
+        f32_text(m.lr),
+    )
+}
+
+/// Manifest of an emitted net train-step graph: what the trainer feeds in,
+/// what it reads out, and how conv instructions map to profiler series.
+#[derive(Debug, Clone)]
+pub struct NetTrainPlan {
+    /// Trainable parameters in positional order (name without `%`, dims).
+    /// The input image is the next parameter after these, labels the last.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Per-ReLU measured-sparsity series `<layer>_relu`, in root-tuple
+    /// order directly after the loss scalar.
+    pub relu_keys: Vec<String>,
+    /// Per-layer output-gradient sparsity series `<layer>_dz`, following
+    /// the ReLU block in the root tuple.
+    pub dz_keys: Vec<String>,
+    /// Conv instruction name → profiler series whose recent mean predicts
+    /// that conv's checked-operand sparsity (feeds the `Selector` through
+    /// `OpRouter::set_profiled_sparsity`).
+    pub sparsity_feeds: Vec<(String, String)>,
+    /// Instruction names of strided forward convs (the downsample forms
+    /// the widened router envelope must handle).
+    pub strided_fwd: Vec<String>,
+    pub input_dims: [usize; 4],
+    pub classes: usize,
+}
+
+impl NetTrainPlan {
+    /// Root-tuple arity: updated params, loss, ReLU and dz sparsities.
+    pub fn n_outputs(&self) -> usize {
+        self.params.len() + 1 + self.relu_keys.len() + self.dz_keys.len()
+    }
+}
+
+/// Emission-level view of the inventory: plain convs (stem / VGG) and
+/// residual blocks, with 2×2/2 maxpools inferred from spatial jumps.
+#[derive(Debug, Clone)]
+enum ItemKind {
+    Single(usize),
+    Block { convs: Vec<usize>, down: Option<usize> },
+}
+
+#[derive(Debug, Clone)]
+struct TopoItem {
+    kind: ItemKind,
+    pool_after: bool,
+}
+
+/// `s3b1_conv2` → `("s3b1", "conv2")`; VGG names (`conv1_1`, `conv7`) and
+/// the stem don't match and stay `Single`.
+fn block_parts(name: &str) -> Option<(&str, &str)> {
+    let (pfx, role) = name.rsplit_once('_')?;
+    if pfx.starts_with('s') && matches!(role, "conv1" | "conv2" | "conv3" | "down") {
+        Some((pfx, role))
+    } else {
+        None
+    }
+}
+
+fn item_first_layer(item: &TopoItem) -> usize {
+    match &item.kind {
+        ItemKind::Single(li) => *li,
+        ItemKind::Block { convs, .. } => convs[0],
+    }
+}
+
+fn item_last_layer(item: &TopoItem) -> usize {
+    match &item.kind {
+        ItemKind::Single(li) => *li,
+        ItemKind::Block { convs, .. } => *convs.last().unwrap(),
+    }
+}
+
+/// Group the layer inventory into stem/VGG singles and residual blocks
+/// (by the `s<stage>b<block>_` naming scheme), then infer the maxpool
+/// positions from spatial discontinuities between consecutive items.
+fn topology(spec: &NetSpec) -> Result<Vec<TopoItem>, String> {
+    let ls = &spec.layers;
+    let mut items: Vec<TopoItem> = Vec::new();
+    let mut i = 0;
+    while i < ls.len() {
+        if let Some((pfx, _)) = block_parts(&ls[i].name) {
+            let pfx = pfx.to_string();
+            let mut convs = Vec::new();
+            let mut down = None;
+            while i < ls.len() {
+                match block_parts(&ls[i].name) {
+                    Some((p, "down")) if p == pfx => {
+                        down = Some(i);
+                        i += 1;
+                    }
+                    Some((p, _)) if p == pfx => {
+                        convs.push(i);
+                        i += 1;
+                    }
+                    _ => break,
+                }
+            }
+            if !(2..=3).contains(&convs.len()) {
+                return Err(format!("block {pfx}: expected 2-3 main convs, got {}", convs.len()));
+            }
+            if !ls[*convs.last().unwrap()].after_shortcut {
+                return Err(format!("block {pfx}: last conv must carry after_shortcut"));
+            }
+            items.push(TopoItem { kind: ItemKind::Block { convs, down }, pool_after: false });
+        } else {
+            items.push(TopoItem { kind: ItemKind::Single(i), pool_after: false });
+            i += 1;
+        }
+    }
+    for j in 0..items.len().saturating_sub(1) {
+        let out_cfg = &ls[item_last_layer(&items[j])].cfg;
+        let next_cfg = &ls[item_first_layer(&items[j + 1])].cfg;
+        if next_cfg.c != out_cfg.k {
+            return Err(format!(
+                "channel chain broken between items {j} and {}: {} -> {}",
+                j + 1,
+                out_cfg.k,
+                next_cfg.c
+            ));
+        }
+        let out_hw = out_cfg.out_h();
+        if next_cfg.h == out_hw {
+            continue;
+        }
+        if next_cfg.h * 2 == out_hw {
+            items[j].pool_after = true; // 2×2/2 maxpool bridges the halving
+        } else {
+            return Err(format!("no pooling form bridges spatial {out_hw} -> {}", next_cfg.h));
+        }
+    }
+    Ok(items)
+}
+
+/// Pre-flight checks so the emitters proper are infallible: symmetric-pad
+/// backward forms must exist (`s ≥ pad+1`), and strided convs must satisfy
+/// the zero-insertion upsampling invariant `out·t == h + 2p − s + 1`, which
+/// makes their BWI/BWW exact stride-1 convolutions of the upsampled
+/// gradient (the form the kernel router handles).
+fn validate_emission(spec: &NetSpec, items: &[TopoItem]) -> Result<(), String> {
+    let _ = items;
+    for l in &spec.layers {
+        let c = &l.cfg;
+        if c.stride_p != c.stride_o {
+            return Err(format!("{}: anisotropic stride unsupported", l.name));
+        }
+        if !l.is_first && (c.s < c.pad_h + 1 || c.r < c.pad_w + 1) {
+            return Err(format!("{}: BWI needs s > pad", l.name));
+        }
+        let t = c.stride_p;
+        if t > 1
+            && (c.out_h() * t != c.h + 2 * c.pad_h - c.s + 1
+                || c.out_w() * t != c.w + 2 * c.pad_w - c.r + 1)
+        {
+            return Err(format!(
+                "{}: stride-{t} conv violates the upsampling invariant \
+                 (out·t must equal h + 2p − s + 1)",
+                l.name
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Forward-pass record for one conv layer, consumed by the backward pass.
+#[derive(Debug, Clone)]
+struct FwdRec {
+    /// Activation value feeding this conv (BWW's lhs).
+    input: String,
+    /// Pre-activation its ReLU mask compares against (`%z_*`, `%bn_*`, or
+    /// the residual `%res_*` for the post-shortcut ReLU).
+    pre: String,
+    /// Conv-output-shaped zeros, shared by ReLU/mask/select emission.
+    zeros: String,
+    /// Conv output dims `[n, k, oh, ow]`.
+    dims: [usize; 4],
+}
+
+#[derive(Debug, Clone)]
+struct PoolRec {
+    nm: String,
+    six: [usize; 6],
+    in4: [usize; 4],
+    out4: [usize; 4],
+}
+
+struct NetEmitter<'a> {
+    m: &'a NetModel,
+    items: Vec<TopoItem>,
+    train: bool,
+    out: String,
+    recs: Vec<Option<FwdRec>>,
+    pools: Vec<Option<PoolRec>>,
+    relu_keys: Vec<String>,
+    dz_keys: Vec<String>,
+    feeds: Vec<(String, String)>,
+    strided: Vec<String>,
+}
+
+impl<'a> NetEmitter<'a> {
+    fn new(m: &'a NetModel, items: Vec<TopoItem>, train: bool) -> NetEmitter<'a> {
+        let nl = m.spec.layers.len();
+        NetEmitter {
+            m,
+            items,
+            train,
+            out: String::with_capacity(64 * 1024),
+            recs: vec![None; nl],
+            pools: Vec::new(),
+            relu_keys: Vec::new(),
+            dz_keys: Vec::new(),
+            feeds: Vec::new(),
+            strided: Vec::new(),
+        }
+    }
+
+    fn ln(&mut self, line: String) {
+        self.out.push_str("  ");
+        self.out.push_str(&line);
+        self.out.push('\n');
+    }
+
+    fn layer(&self, li: usize) -> NetLayer {
+        self.m.spec.layers[li].clone()
+    }
+
+    /// Parameters, shared constants, and the module preamble.
+    fn prelude(&mut self) -> Vec<(String, Vec<usize>)> {
+        let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+        for l in &self.m.spec.layers {
+            params.push((format!("w_{}", l.name), vec![l.cfg.k, l.cfg.c, l.cfg.s, l.cfg.r]));
+        }
+        let last = self.m.spec.layers.last().unwrap().cfg.k;
+        params.push(("wfc".to_string(), vec![self.m.classes, last]));
+        params.push(("bfc".to_string(), vec![self.m.classes]));
+        for (i, (nm, dims)) in params.iter().enumerate() {
+            self.ln(format!("%{nm} = {} parameter({i})", sh(dims)));
+        }
+        let np = params.len();
+        let id = self.m.input_dims();
+        self.ln(format!("%x = {} parameter({np})", sh(&id)));
+        if self.train {
+            self.ln(format!("%labels = s32[{}] parameter({})", id[0], np + 1));
+        }
+        self.ln("%zero = f32[] constant(0)".to_string());
+        self.ln("%neg_inf = f32[] constant(-inf)".to_string());
+        if self.m.spec.layers.iter().any(|l| l.has_bn) {
+            self.ln("%bn_eps = f32[] constant(1e-5)".to_string());
+            self.ln("%bn_nh = f32[] constant(-0.5)".to_string());
+        }
+        params
+    }
+
+    /// Simplified batch norm (no affine): per-channel standardization with
+    /// batch statistics; `1/σ` is lowered as `exp(-0.5·log(var+ε))` since
+    /// the interpreter has no rsqrt. Returns the normalized value `%bn_<nm>`.
+    fn bn_fwd(&mut self, nm: &str, z: &str, od: [usize; 4]) -> String {
+        let k = od[1];
+        let m = (od[0] * od[2] * od[3]) as f32;
+        let sk = sh(&[k]);
+        let s4 = sh(&od);
+        self.ln(format!(
+            "%bn_ms_{nm} = {sk} reduce({z}, %zero), dimensions={{0,2,3}}, to_apply=%add_f32"
+        ));
+        self.ln(format!("%bn_invm_{nm} = f32[] constant({})", f32_text(1.0 / m)));
+        self.ln(format!("%bn_invmb_{nm} = {sk} broadcast(%bn_invm_{nm}), dimensions={{}}"));
+        self.ln(format!("%bn_mu_{nm} = {sk} multiply(%bn_ms_{nm}, %bn_invmb_{nm})"));
+        self.ln(format!("%bn_mub_{nm} = {s4} broadcast(%bn_mu_{nm}), dimensions={{1}}"));
+        self.ln(format!("%bn_xc_{nm} = {s4} subtract({z}, %bn_mub_{nm})"));
+        self.ln(format!("%bn_xc2_{nm} = {s4} multiply(%bn_xc_{nm}, %bn_xc_{nm})"));
+        self.ln(format!(
+            "%bn_vs_{nm} = {sk} reduce(%bn_xc2_{nm}, %zero), dimensions={{0,2,3}}, \
+             to_apply=%add_f32"
+        ));
+        self.ln(format!("%bn_var_{nm} = {sk} multiply(%bn_vs_{nm}, %bn_invmb_{nm})"));
+        self.ln(format!("%bn_epsb_{nm} = {sk} broadcast(%bn_eps), dimensions={{}}"));
+        self.ln(format!("%bn_ve_{nm} = {sk} add(%bn_var_{nm}, %bn_epsb_{nm})"));
+        self.ln(format!("%bn_lve_{nm} = {sk} log(%bn_ve_{nm})"));
+        self.ln(format!("%bn_nhb_{nm} = {sk} broadcast(%bn_nh), dimensions={{}}"));
+        self.ln(format!("%bn_larg_{nm} = {sk} multiply(%bn_lve_{nm}, %bn_nhb_{nm})"));
+        self.ln(format!("%bn_isig_{nm} = {sk} exponential(%bn_larg_{nm})"));
+        self.ln(format!("%bn_isigb_{nm} = {s4} broadcast(%bn_isig_{nm}), dimensions={{1}}"));
+        self.ln(format!("%bn_{nm} = {s4} multiply(%bn_xc_{nm}, %bn_isigb_{nm})"));
+        format!("%bn_{nm}")
+    }
+
+    /// BN backward: given `g` = ∂L/∂x̂, emit
+    /// `dz = (g − mean(g) − x̂·mean(g·x̂)) / σ` — the mean-subtraction terms
+    /// are what densify the output gradient (§2.3: BN destroys BWI
+    /// sparsity). Returns `%dz value` name.
+    fn bn_bwd(&mut self, nm: &str, g: &str, od: [usize; 4]) -> String {
+        let k = od[1];
+        let sk = sh(&[k]);
+        let s4 = sh(&od);
+        self.ln(format!(
+            "%gbs_{nm} = {sk} reduce({g}, %zero), dimensions={{0,2,3}}, to_apply=%add_f32"
+        ));
+        self.ln(format!("%gbm_{nm} = {sk} multiply(%gbs_{nm}, %bn_invmb_{nm})"));
+        self.ln(format!("%gbmb_{nm} = {s4} broadcast(%gbm_{nm}), dimensions={{1}}"));
+        self.ln(format!("%gx0_{nm} = {s4} multiply({g}, %bn_{nm})"));
+        self.ln(format!(
+            "%gxs_{nm} = {sk} reduce(%gx0_{nm}, %zero), dimensions={{0,2,3}}, to_apply=%add_f32"
+        ));
+        self.ln(format!("%gxm_{nm} = {sk} multiply(%gxs_{nm}, %bn_invmb_{nm})"));
+        self.ln(format!("%gxmb_{nm} = {s4} broadcast(%gxm_{nm}), dimensions={{1}}"));
+        self.ln(format!("%gxh_{nm} = {s4} multiply(%bn_{nm}, %gxmb_{nm})"));
+        self.ln(format!("%gt1_{nm} = {s4} subtract({g}, %gbmb_{nm})"));
+        self.ln(format!("%gt2_{nm} = {s4} subtract(%gt1_{nm}, %gxh_{nm})"));
+        self.ln(format!("%dz_{nm} = {s4} multiply(%gt2_{nm}, %bn_isigb_{nm})"));
+        format!("%dz_{nm}")
+    }
+
+    /// One forward conv (+BN). Leaves `pre` at the value the ReLU (or the
+    /// residual add) consumes. Records selector feeds for the FWD and BWW
+    /// forms, keyed by the input activation's producing ReLU series.
+    fn conv_fwd(&mut self, l: &NetLayer, input: &str, input_feed: Option<&str>) -> FwdRec {
+        let nm = &l.name;
+        let c = &l.cfg;
+        let od = [c.n, c.k, c.out_h(), c.out_w()];
+        let so = sh(&od);
+        let stride = if c.stride_p != 1 {
+            format!(" stride={}x{}", c.stride_p, c.stride_o)
+        } else {
+            String::new()
+        };
+        self.ln(format!(
+            "%z_{nm} = {so} convolution({input}, %w_{nm}), window={{size={}x{} \
+             pad={}_{}x{}_{}{stride}}}, dim_labels=bf01_oi01->bf01",
+            c.s, c.r, c.pad_h, c.pad_h, c.pad_w, c.pad_w
+        ));
+        if c.stride_p != 1 {
+            self.strided.push(format!("z_{nm}"));
+        }
+        if let Some(f) = input_feed {
+            self.feeds.push((format!("z_{nm}"), f.to_string()));
+            self.feeds.push((format!("bww_{nm}"), f.to_string()));
+        }
+        self.ln(format!("%zer_{nm} = {so} broadcast(%zero), dimensions={{}}"));
+        let pre = if l.has_bn { self.bn_fwd(nm, &format!("%z_{nm}"), od) } else { format!("%z_{nm}") };
+        FwdRec { input: input.to_string(), pre, zeros: format!("%zer_{nm}"), dims: od }
+    }
+
+    /// ReLU on `pre`; in train graphs also measures output sparsity
+    /// (`mean(a == 0)` → root-tuple scalar, profiler series `<nm>_relu`).
+    fn relu(&mut self, nm: &str, pre: &str, zeros: &str, od: [usize; 4]) -> String {
+        let s4 = sh(&od);
+        self.ln(format!("%a_{nm} = {s4} maximum({pre}, {zeros})"));
+        if self.train {
+            self.ln(format!(
+                "%sq_{nm} = {} compare(%a_{nm}, {zeros}), direction=EQ",
+                shp(&od)
+            ));
+            self.ln(format!("%sqf_{nm} = {s4} convert(%sq_{nm})"));
+            self.ln(format!(
+                "%sqs_{nm} = f32[] reduce(%sqf_{nm}, %zero), dimensions={{0,1,2,3}}, \
+                 to_apply=%add_f32"
+            ));
+            let inv = 1.0 / (od.iter().product::<usize>() as f32);
+            self.ln(format!("%sinv_{nm} = f32[] constant({})", f32_text(inv)));
+            self.ln(format!("%sp_{nm} = f32[] multiply(%sqs_{nm}, %sinv_{nm})"));
+            self.relu_keys.push(format!("{nm}_relu"));
+        }
+        format!("%a_{nm}")
+    }
+
+    /// 2×2/2 maxpool via reshape-to-rank-6 + max-reduce over the window
+    /// dims. The tie-splitting backward lives in `pool_bwd`.
+    fn pool_fwd(&mut self, ii: usize, nm: &str, act: &str, d4: [usize; 4]) -> (String, [usize; 4]) {
+        let (h2, w2) = (d4[2] / 2, d4[3] / 2);
+        let six = [d4[0], d4[1], h2, 2, w2, 2];
+        let out4 = [d4[0], d4[1], h2, w2];
+        self.ln(format!("%p6_{nm} = {} reshape({act})", sh(&six)));
+        self.ln(format!(
+            "%pool_{nm} = {} reduce(%p6_{nm}, %neg_inf), dimensions={{3,5}}, to_apply=%max_f32",
+            sh(&out4)
+        ));
+        self.pools[ii] = Some(PoolRec { nm: nm.to_string(), six, in4: d4, out4 });
+        (format!("%pool_{nm}"), out4)
+    }
+
+    /// Maxpool backward: route the pooled gradient to every element tying
+    /// the window max, split evenly among ties (matches the equal-share
+    /// convention; keeps the graph free of argmax plumbing).
+    fn pool_bwd(&mut self, rec: &PoolRec, d: &str) -> String {
+        let nm = &rec.nm;
+        let s6 = sh(&rec.six);
+        let s4 = sh(&rec.out4);
+        self.ln(format!("%pb_{nm} = {s6} broadcast(%pool_{nm}), dimensions={{0,1,2,4}}"));
+        self.ln(format!(
+            "%peq_{nm} = {} compare(%p6_{nm}, %pb_{nm}), direction=EQ",
+            shp(&rec.six)
+        ));
+        self.ln(format!("%peqf_{nm} = {s6} convert(%peq_{nm})"));
+        self.ln(format!(
+            "%pcnt_{nm} = {s4} reduce(%peqf_{nm}, %zero), dimensions={{3,5}}, to_apply=%add_f32"
+        ));
+        self.ln(format!("%pdn_{nm} = {s4} divide({d}, %pcnt_{nm})"));
+        self.ln(format!("%pdb_{nm} = {s6} broadcast(%pdn_{nm}), dimensions={{0,1,2,4}}"));
+        self.ln(format!("%pd6_{nm} = {s6} multiply(%peqf_{nm}, %pdb_{nm})"));
+        self.ln(format!("%dap_{nm} = {} reshape(%pd6_{nm})", sh(&rec.in4)));
+        format!("%dap_{nm}")
+    }
+
+    /// ReLU backward: mask the incoming gradient by `pre > 0`.
+    fn relu_bwd(&mut self, nm: &str, rec: &FwdRec, d: &str, out_name: &str) -> String {
+        self.ln(format!(
+            "%rm_{nm} = {} compare({}, {}), direction=GT",
+            shp(&rec.dims),
+            rec.pre,
+            rec.zeros
+        ));
+        self.ln(format!(
+            "%{out_name} = {} select(%rm_{nm}, {d}, {})",
+            sh(&rec.dims),
+            rec.zeros
+        ));
+        format!("%{out_name}")
+    }
+
+    /// Zero-insertion upsampling of a strided conv's output gradient:
+    /// `dz[n,k,oh,ow]` → `[n,k,oh·t,ow·t]` with the gradient at stride-t
+    /// positions and zeros between. Turns strided BWI/BWW into exact
+    /// stride-1 convolutions (the invariant is pre-checked in
+    /// `validate_emission`).
+    fn upsample(&mut self, nm: &str, dz: &str, od: [usize; 4], t: usize) -> (String, [usize; 4]) {
+        let six = [od[0], od[1], od[2], t, od[3], t];
+        let up = [od[0], od[1], od[2] * t, od[3] * t];
+        let s6 = sh(&six);
+        self.ln(format!("%ui_{nm} = s32[{t}] iota(), iota_dimension=0"));
+        self.ln(format!("%uz_{nm} = s32[] constant(0)"));
+        self.ln(format!("%uzb_{nm} = s32[{t}] broadcast(%uz_{nm}), dimensions={{}}"));
+        self.ln(format!("%ue_{nm} = pred[{t}] compare(%ui_{nm}, %uzb_{nm}), direction=EQ"));
+        self.ln(format!("%uf_{nm} = f32[{t}] convert(%ue_{nm})"));
+        self.ln(format!("%u6_{nm} = {s6} broadcast({dz}), dimensions={{0,1,2,4}}"));
+        self.ln(format!("%um3_{nm} = {s6} broadcast(%uf_{nm}), dimensions={{3}}"));
+        self.ln(format!("%um5_{nm} = {s6} broadcast(%uf_{nm}), dimensions={{5}}"));
+        self.ln(format!("%ua_{nm} = {s6} multiply(%u6_{nm}, %um3_{nm})"));
+        self.ln(format!("%ub_{nm} = {s6} multiply(%ua_{nm}, %um5_{nm})"));
+        self.ln(format!("%dzu_{nm} = {} reshape(%ub_{nm})", sh(&up)));
+        (format!("%dzu_{nm}"), up)
+    }
+
+    /// Backward through one conv layer. `d` is the gradient w.r.t. this
+    /// layer's activation output (`masked = false`, a private ReLU) or
+    /// already w.r.t. its pre-activation (`masked = true`, the shared
+    /// post-shortcut mask was applied by the caller). Emits BN backward,
+    /// dz-sparsity measurement, the weight gradient (`%bww_*`/`%gw_*`) and
+    /// — except for the first layer, whose input is the image — the input
+    /// gradient (`%bwi_*`), which is returned.
+    fn conv_bwd(&mut self, li: usize, d: &str, masked: bool) -> Option<String> {
+        let l = self.layer(li);
+        let nm = l.name.clone();
+        let c = l.cfg;
+        let rec = self.recs[li].clone().expect("forward emitted");
+        let od = rec.dims;
+        let g = if masked {
+            d.to_string()
+        } else {
+            self.relu_bwd(&nm, &rec, d, &format!("dm_{nm}"))
+        };
+        let dz = if l.has_bn { self.bn_bwd(&nm, &g, od) } else { g };
+        if self.train {
+            // measured output-gradient sparsity: mean(dz == 0) — the §2.3
+            // signal (BWI sparsity exists only where no BN follows the conv)
+            let s4 = sh(&od);
+            self.ln(format!(
+                "%dq_{nm} = {} compare({dz}, {}), direction=EQ",
+                shp(&od),
+                rec.zeros
+            ));
+            self.ln(format!("%dqf_{nm} = {s4} convert(%dq_{nm})"));
+            self.ln(format!(
+                "%dqs_{nm} = f32[] reduce(%dqf_{nm}, %zero), dimensions={{0,1,2,3}}, \
+                 to_apply=%add_f32"
+            ));
+            let inv = 1.0 / (od.iter().product::<usize>() as f32);
+            self.ln(format!("%dinv_{nm} = f32[] constant({})", f32_text(inv)));
+            self.ln(format!("%dsp_{nm} = f32[] multiply(%dqs_{nm}, %dinv_{nm})"));
+            self.dz_keys.push(format!("{nm}_dz"));
+        }
+        let t = c.stride_p;
+        let (dzsrc, ud) = if t > 1 { self.upsample(&nm, &dz, od, t) } else { (dz, od) };
+        // weight gradient: contract the batch dim (fb01_io01->bf01), window
+        // = the (upsampled) gradient's spatial extent, output [c,k,s,r]
+        self.ln(format!(
+            "%bww_{nm} = {} convolution({}, {dzsrc}), window={{size={}x{} \
+             pad={}_{}x{}_{}}}, dim_labels=fb01_io01->bf01",
+            sh(&[c.c, c.k, c.s, c.r]),
+            rec.input,
+            ud[2],
+            ud[3],
+            c.pad_h,
+            c.pad_h,
+            c.pad_w,
+            c.pad_w
+        ));
+        self.ln(format!(
+            "%gw_{nm} = {} transpose(%bww_{nm}), dimensions={{1,0,2,3}}",
+            sh(&[c.k, c.c, c.s, c.r])
+        ));
+        if l.is_first {
+            return None; // image gradient is unused; skip the stem BWI
+        }
+        self.feeds.push((format!("bwi_{nm}"), format!("{nm}_dz")));
+        let (qh, qw) = (c.s - 1 - c.pad_h, c.r - 1 - c.pad_w);
+        self.ln(format!(
+            "%wr_{nm} = {} reverse(%w_{nm}), dimensions={{2,3}}",
+            sh(&[c.k, c.c, c.s, c.r])
+        ));
+        self.ln(format!(
+            "%bwi_{nm} = {} convolution({dzsrc}, %wr_{nm}), window={{size={}x{} \
+             pad={qh}_{qh}x{qw}_{qw}}}, dim_labels=bf01_io01->bf01",
+            sh(&[c.n, c.c, c.h, c.w]),
+            c.s,
+            c.r
+        ));
+        Some(format!("%bwi_{nm}"))
+    }
+
+    /// Forward over the whole item list; returns the final activation and
+    /// its dims.
+    fn forward(&mut self) -> (String, [usize; 4]) {
+        self.pools = vec![None; self.items.len()];
+        let items = self.items.clone();
+        let mut act = "%x".to_string();
+        let mut feed: Option<String> = None;
+        let mut dims = self.m.input_dims();
+        for (ii, item) in items.iter().enumerate() {
+            match &item.kind {
+                ItemKind::Single(li) => {
+                    let l = self.layer(*li);
+                    let rec = self.conv_fwd(&l, &act, feed.as_deref());
+                    dims = rec.dims;
+                    act = self.relu(&l.name, &rec.pre, &rec.zeros, dims);
+                    self.recs[*li] = Some(rec);
+                    feed = Some(format!("{}_relu", l.name));
+                }
+                ItemKind::Block { convs, down } => {
+                    let block_in = act.clone();
+                    let block_feed = feed.clone();
+                    let mut cur = act.clone();
+                    let mut cfeed = feed.clone();
+                    for (ci, &li) in convs.iter().enumerate() {
+                        let l = self.layer(li);
+                        let rec = self.conv_fwd(&l, &cur, cfeed.as_deref());
+                        dims = rec.dims;
+                        if ci + 1 < convs.len() {
+                            cur = self.relu(&l.name, &rec.pre, &rec.zeros, dims);
+                            cfeed = Some(format!("{}_relu", l.name));
+                        } else {
+                            cur = rec.pre.clone(); // awaits the shortcut add
+                        }
+                        self.recs[li] = Some(rec);
+                    }
+                    let short = match down {
+                        Some(dli) => {
+                            let l = self.layer(*dli);
+                            let rec = self.conv_fwd(&l, &block_in, block_feed.as_deref());
+                            let s = rec.pre.clone();
+                            self.recs[*dli] = Some(rec);
+                            s
+                        }
+                        None => block_in,
+                    };
+                    let last_li = *convs.last().unwrap();
+                    let lname = self.layer(last_li).name;
+                    let pfx = block_parts(&lname).unwrap().0.to_string();
+                    self.ln(format!("%res_{pfx} = {} add({cur}, {short})", sh(&dims)));
+                    // the post-shortcut ReLU masks against the residual sum
+                    let zeros = {
+                        let r = self.recs[last_li].as_mut().unwrap();
+                        r.pre = format!("%res_{pfx}");
+                        r.zeros.clone()
+                    };
+                    act = self.relu(&lname, &format!("%res_{pfx}"), &zeros, dims);
+                    feed = Some(format!("{}_relu", lname));
+                }
+            }
+            if item.pool_after {
+                let nm = self.layer(item_last_layer(item)).name;
+                let (p, pd) = self.pool_fwd(ii, &nm, &act, dims);
+                act = p;
+                dims = pd;
+                // the pooled activation keeps (at least) the ReLU's zeros;
+                // its sparsity series remains the best live predictor
+            }
+        }
+        (act, dims)
+    }
+
+    /// Backward over the whole item list, starting from the gradient
+    /// w.r.t. the final activation.
+    fn backward(&mut self, mut d: String) {
+        let items = self.items.clone();
+        for (ii, item) in items.iter().enumerate().rev() {
+            if item.pool_after {
+                let rec = self.pools[ii].clone().expect("pool emitted");
+                d = self.pool_bwd(&rec, &d);
+            }
+            match &item.kind {
+                ItemKind::Single(li) => {
+                    match self.conv_bwd(*li, &d, false) {
+                        Some(next) => d = next,
+                        None => break, // the stem consumed the gradient
+                    }
+                }
+                ItemKind::Block { convs, down } => {
+                    let last_li = *convs.last().unwrap();
+                    let lname = self.layer(last_li).name;
+                    let pfx = block_parts(&lname).unwrap().0.to_string();
+                    let last_rec = self.recs[last_li].clone().expect("forward emitted");
+                    // shared post-shortcut mask feeds both branches
+                    let dres = self.relu_bwd(&lname, &last_rec, &d, &format!("dres_{pfx}"));
+                    let mut g = self
+                        .conv_bwd(last_li, &dres, true)
+                        .expect("block convs are never first");
+                    for &li in convs[..convs.len() - 1].iter().rev() {
+                        g = self.conv_bwd(li, &g, false).expect("not first");
+                    }
+                    let dshort = match down {
+                        Some(dli) => self
+                            .conv_bwd(*dli, &dres, true)
+                            .expect("projection convs are never first"),
+                        None => dres,
+                    };
+                    let in_li = convs[0];
+                    let ic = self.layer(in_li).cfg;
+                    self.ln(format!(
+                        "%din_{pfx} = {} add({g}, {dshort})",
+                        sh(&[ic.n, ic.c, ic.h, ic.w])
+                    ));
+                    d = format!("%din_{pfx}");
+                }
+            }
+        }
+    }
+}
+
+/// The train-step module for a zoo model: forward with per-ReLU sparsity
+/// measurement, softmax cross-entropy, full hand-lowered backward
+/// (residual fan-ins, BN backward, upsampled strided conv gradients), SGD,
+/// and per-layer dz-sparsity outputs. Returns the text and its
+/// [`NetTrainPlan`] manifest.
+pub fn net_train_step_hlo(m: &NetModel) -> Result<(String, NetTrainPlan), String> {
+    let items = topology(&m.spec)?;
+    validate_emission(&m.spec, &items)?;
+    let mut e = NetEmitter::new(m, items, true);
+    let n = m.input_dims()[0];
+    let cl = m.classes;
+    let snl = sh(&[n, cl]);
+    let pnl = shp(&[n, cl]);
+
+    e.out.push_str(&net_fallback_marker(m));
+    let _ = writeln!(e.out, "\nHloModule train_step_{}\n", m.key());
+    e.out.push_str(SCALAR_COMPS);
+    let _ = writeln!(e.out, "\nENTRY %train_step_{} {{", m.key());
+    let params = e.prelude();
+    let (act, fdims) = e.forward();
+
+    // head: global average pool → FC → stable log-softmax cross-entropy
+    let kf = fdims[1];
+    let snk = sh(&[n, kf]);
+    e.ln(format!(
+        "%gap_sum = {snk} reduce({act}, %zero), dimensions={{2,3}}, to_apply=%add_f32"
+    ));
+    e.ln(format!(
+        "%inv_hw = f32[] constant({})",
+        f32_text(1.0 / (fdims[2] * fdims[3]) as f32)
+    ));
+    e.ln(format!("%inv_hw_b = {snk} broadcast(%inv_hw), dimensions={{}}"));
+    e.ln(format!("%pooled = {snk} multiply(%gap_sum, %inv_hw_b)"));
+    e.ln(format!(
+        "%logits0 = {snl} dot(%pooled, %wfc), lhs_contracting_dims={{1}}, \
+         rhs_contracting_dims={{1}}"
+    ));
+    e.ln(format!("%bfc_b = {snl} broadcast(%bfc), dimensions={{1}}"));
+    e.ln(format!("%logits = {snl} add(%logits0, %bfc_b)"));
+    e.ln(format!(
+        "%row_max = {} reduce(%logits, %neg_inf), dimensions={{1}}, to_apply=%max_f32",
+        sh(&[n])
+    ));
+    e.ln(format!("%row_max_b = {snl} broadcast(%row_max), dimensions={{0}}"));
+    e.ln(format!("%centered = {snl} subtract(%logits, %row_max_b)"));
+    e.ln(format!("%exp_c = {snl} exponential(%centered)"));
+    e.ln(format!(
+        "%sum_exp = {} reduce(%exp_c, %zero), dimensions={{1}}, to_apply=%add_f32",
+        sh(&[n])
+    ));
+    e.ln(format!("%log_sum = {} log(%sum_exp)", sh(&[n])));
+    e.ln(format!("%log_sum_b = {snl} broadcast(%log_sum), dimensions={{0}}"));
+    e.ln(format!("%logp = {snl} subtract(%centered, %log_sum_b)"));
+    e.ln(format!("%sum_exp_b = {snl} broadcast(%sum_exp), dimensions={{0}}"));
+    e.ln(format!("%probs = {snl} divide(%exp_c, %sum_exp_b)"));
+    e.ln(format!("%iota_cl = s32[{n},{cl}] iota(), iota_dimension=1"));
+    e.ln(format!("%labels_b = s32[{n},{cl}] broadcast(%labels), dimensions={{0}}"));
+    e.ln(format!("%onehot_p = {pnl} compare(%labels_b, %iota_cl), direction=EQ"));
+    e.ln(format!("%onehot = {snl} convert(%onehot_p)"));
+    e.ln(format!("%picked = {snl} multiply(%onehot, %logp)"));
+    e.ln(
+        "%picked_sum = f32[] reduce(%picked, %zero), dimensions={0,1}, to_apply=%add_f32"
+            .to_string(),
+    );
+    e.ln(format!("%neg_inv_n = f32[] constant({})", f32_text(-1.0 / n as f32)));
+    e.ln("%loss = f32[] multiply(%picked_sum, %neg_inv_n)".to_string());
+
+    // backward head: dlogits = (probs - onehot)/N, FC grads, GAP backward
+    e.ln(format!("%pdiff = {snl} subtract(%probs, %onehot)"));
+    e.ln(format!("%inv_n = f32[] constant({})", f32_text(1.0 / n as f32)));
+    e.ln(format!("%inv_n_b = {snl} broadcast(%inv_n), dimensions={{}}"));
+    e.ln(format!("%dlogits = {snl} multiply(%pdiff, %inv_n_b)"));
+    e.ln(format!(
+        "%gw_bfc = {} reduce(%dlogits, %zero), dimensions={{0}}, to_apply=%add_f32",
+        sh(&[cl])
+    ));
+    e.ln(format!(
+        "%gw_wfc = {} dot(%dlogits, %pooled), lhs_contracting_dims={{0}}, \
+         rhs_contracting_dims={{0}}",
+        sh(&[cl, kf])
+    ));
+    e.ln(format!(
+        "%d_pooled = {snk} dot(%dlogits, %wfc), lhs_contracting_dims={{1}}, \
+         rhs_contracting_dims={{0}}"
+    ));
+    e.ln(format!("%d_gap = {snk} multiply(%d_pooled, %inv_hw_b)"));
+    e.ln(format!("%d_final = {} broadcast(%d_gap), dimensions={{0,1}}", sh(&fdims)));
+    e.backward("%d_final".to_string());
+
+    // SGD: p' = p - lr * g  (conv grads are %gw_w_<layer> via transpose
+    // naming below; FC grads are %gw_wfc / %gw_bfc)
+    e.ln(format!("%lr = f32[] constant({})", f32_text(m.lr)));
+    for (pname, dims) in &params {
+        let s = sh(dims);
+        let gname = match pname.strip_prefix("w_") {
+            Some(layer) => format!("%gw_{layer}"),
+            None => format!("%gw_{pname}"),
+        };
+        e.ln(format!("%lr_{pname} = {s} broadcast(%lr), dimensions={{}}"));
+        e.ln(format!("%step_{pname} = {s} multiply(%lr_{pname}, {gname})"));
+        e.ln(format!("%new_{pname} = {s} subtract(%{pname}, %step_{pname})"));
+    }
+    let mut shapes: Vec<String> = params.iter().map(|(_, d)| sh(d)).collect();
+    let mut opnds: Vec<String> = params.iter().map(|(p, _)| format!("%new_{p}")).collect();
+    shapes.push("f32[]".to_string());
+    opnds.push("%loss".to_string());
+    for k in &e.relu_keys {
+        shapes.push("f32[]".to_string());
+        opnds.push(format!("%sp_{}", k.strip_suffix("_relu").unwrap()));
+    }
+    for k in &e.dz_keys {
+        shapes.push("f32[]".to_string());
+        opnds.push(format!("%dsp_{}", k.strip_suffix("_dz").unwrap()));
+    }
+    let _ = writeln!(
+        e.out,
+        "  ROOT %out = ({}) tuple({})",
+        shapes.join(", "),
+        opnds.join(", ")
+    );
+    e.out.push_str("}\n");
+
+    let plan = NetTrainPlan {
+        params,
+        relu_keys: e.relu_keys,
+        dz_keys: e.dz_keys,
+        sparsity_feeds: e.feeds,
+        strided_fwd: e.strided,
+        input_dims: m.input_dims(),
+        classes: m.classes,
+    };
+    Ok((e.out, plan))
+}
+
+/// The predict module for a zoo model: forward only, `(logits,)`.
+pub fn net_predict_hlo(m: &NetModel) -> Result<String, String> {
+    let items = topology(&m.spec)?;
+    validate_emission(&m.spec, &items)?;
+    let mut e = NetEmitter::new(m, items, false);
+    let n = m.input_dims()[0];
+    let cl = m.classes;
+    let snl = sh(&[n, cl]);
+    e.out.push_str(&net_fallback_marker(m));
+    let _ = writeln!(e.out, "\nHloModule predict_{}\n", m.key());
+    e.out.push_str(SCALAR_COMPS);
+    let _ = writeln!(e.out, "\nENTRY %predict_{} {{", m.key());
+    e.prelude();
+    let (act, fdims) = e.forward();
+    let kf = fdims[1];
+    let snk = sh(&[n, kf]);
+    e.ln(format!(
+        "%gap_sum = {snk} reduce({act}, %zero), dimensions={{2,3}}, to_apply=%add_f32"
+    ));
+    e.ln(format!(
+        "%inv_hw = f32[] constant({})",
+        f32_text(1.0 / (fdims[2] * fdims[3]) as f32)
+    ));
+    e.ln(format!("%inv_hw_b = {snk} broadcast(%inv_hw), dimensions={{}}"));
+    e.ln(format!("%pooled = {snk} multiply(%gap_sum, %inv_hw_b)"));
+    e.ln(format!(
+        "%logits0 = {snl} dot(%pooled, %wfc), lhs_contracting_dims={{1}}, \
+         rhs_contracting_dims={{1}}"
+    ));
+    e.ln(format!("%bfc_b = {snl} broadcast(%bfc), dimensions={{1}}"));
+    e.ln(format!("%logits = {snl} add(%logits0, %bfc_b)"));
+    let _ = writeln!(e.out, "  ROOT %out = ({snl}) tuple(%logits)");
+    e.out.push_str("}\n");
+    Ok(e.out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -486,6 +1373,128 @@ mod tests {
                 .unwrap_or_else(|e| panic!("{labels} probe fails to parse: {e}"));
             xla::eval::validate(&module)
                 .unwrap_or_else(|e| panic!("{labels} probe fails validation: {e}"));
+        }
+    }
+
+    /// Every zoo network must emit train/predict modules that parse and
+    /// pass interpreter shape inference at the reduced scales, with a
+    /// manifest that matches the emitted graph.
+    #[test]
+    fn net_modules_emit_parse_and_validate() {
+        for network in Network::ALL {
+            for scale in [Scale::Small, Scale::Medium] {
+                let m = NetModel::new(network, scale);
+                let (text, plan) = net_train_step_hlo(&m)
+                    .unwrap_or_else(|e| panic!("{} emission failed: {e}", m.key()));
+                assert!(text.starts_with(&net_fallback_marker(&m)), "{}", m.key());
+                let module = xla::hlo::parse_module(&text)
+                    .unwrap_or_else(|e| panic!("{} fails to parse: {e}", m.key()));
+                xla::eval::validate(&module)
+                    .unwrap_or_else(|e| panic!("{} fails validation: {e}", m.key()));
+                let entry = &module.comps[module.entry];
+                match &entry.instrs[entry.root].shape {
+                    xla::hlo::ShapeDecl::Tuple(shapes) => assert_eq!(
+                        shapes.len(),
+                        plan.n_outputs(),
+                        "{}: root arity vs manifest",
+                        m.key()
+                    ),
+                    other => panic!("{}: root must be a tuple, got {other:?}", m.key()),
+                }
+                // one dz series per conv layer; one ReLU series per
+                // activation (projection `_down` convs have no ReLU)
+                let downs =
+                    m.spec.layers.iter().filter(|l| l.name.ends_with("_down")).count();
+                assert_eq!(
+                    plan.relu_keys.len(),
+                    m.spec.layers.len() - downs,
+                    "{}",
+                    m.key()
+                );
+                assert_eq!(plan.dz_keys.len(), m.spec.layers.len(), "{}", m.key());
+                // every feed targets an emitted conv and an emitted series
+                for (instr, series) in &plan.sparsity_feeds {
+                    assert!(
+                        text.contains(&format!("%{instr} = ")),
+                        "{}: feed target %{instr} not emitted",
+                        m.key()
+                    );
+                    assert!(
+                        plan.relu_keys.contains(series) || plan.dz_keys.contains(series),
+                        "{}: feed series {series} is not a measured key",
+                        m.key()
+                    );
+                }
+                // the ResNets hit strided downsample forms; VGG never does
+                if network == Network::Vgg16 {
+                    assert!(plan.strided_fwd.is_empty());
+                } else {
+                    assert!(
+                        plan.strided_fwd.len() >= 4,
+                        "{}: expected strided convs, got {:?}",
+                        m.key(),
+                        plan.strided_fwd
+                    );
+                }
+                let predict = net_predict_hlo(&m).unwrap();
+                let pm = xla::hlo::parse_module(&predict)
+                    .unwrap_or_else(|e| panic!("predict {} fails to parse: {e}", m.key()));
+                xla::eval::validate(&pm)
+                    .unwrap_or_else(|e| panic!("predict {} fails validation: {e}", m.key()));
+            }
+        }
+    }
+
+    /// §2.3: where a conv is followed by BatchNorm, the backward graph must
+    /// measure the *BN-backward* gradient (dense — the mean terms fill in
+    /// every element), and where there is no BN (Fixup) it must measure the
+    /// ReLU-masked gradient, which inherits the BWI sparsity.
+    #[test]
+    fn bn_position_rule_shapes_the_measured_gradient() {
+        let bn = NetModel::new(Network::ResNet34, Scale::Small);
+        let (text_bn, _) = net_train_step_hlo(&bn).unwrap();
+        for l in &bn.spec.layers {
+            assert!(l.has_bn, "resnet34 layers all carry BN");
+            let nm = &l.name;
+            assert!(
+                text_bn.contains(&format!("%dq_{nm} = ")),
+                "dz sparsity must be measured for {nm}"
+            );
+            // the measured tensor is the BN-backward output %dz_<nm>
+            assert!(
+                text_bn.contains(&format!("compare(%dz_{nm}, ")),
+                "{nm}: measured gradient must be the (dense) BN-backward output"
+            );
+        }
+
+        let fixup = NetModel::new(Network::FixupResNet50, Scale::Small);
+        let (text_fx, plan_fx) = net_train_step_hlo(&fixup).unwrap();
+        assert!(!text_fx.contains("%bn_"), "Fixup emits no BN at all");
+        for l in &fixup.spec.layers {
+            assert!(!l.has_bn);
+            let nm = &l.name;
+            let dq = text_fx
+                .lines()
+                .find(|ln| ln.trim_start().starts_with(&format!("%dq_{nm} = ")))
+                .unwrap_or_else(|| panic!("{nm}: dz sparsity not measured"));
+            // the measured tensor is a ReLU-masked gradient: either this
+            // layer's private mask (%dm_*) or the block's shared
+            // post-shortcut mask (%dres_*)
+            assert!(
+                dq.contains(&format!("compare(%dm_{nm}, ")) || dq.contains("compare(%dres_"),
+                "{nm}: measured gradient must be ReLU-masked, got {dq}"
+            );
+        }
+        // every non-first conv's BWI feed reads its own dz series
+        for l in fixup.spec.layers.iter().filter(|l| !l.is_first) {
+            assert!(
+                plan_fx
+                    .sparsity_feeds
+                    .iter()
+                    .any(|(i, s)| i == &format!("bwi_{}", l.name) && s == &format!("{}_dz", l.name)),
+                "{}: BWI must be fed its dz series",
+                l.name
+            );
         }
     }
 

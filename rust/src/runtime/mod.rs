@@ -41,6 +41,19 @@
 //! `SPARSETRAIN_OP_ROUTE=off` disables dot routing and fusion. Either
 //! alone leaves the other class active; both together restore the
 //! all-naive interpreter.
+//!
+//! **Per-net graphs (ISSUE 7).** [`hlo_builder`] also emits full
+//! multi-layer train/predict modules for any `nets::zoo` inventory
+//! (`train_step_<net>_<scale>` artifacts, published through
+//! [`artifacts::ArtifactSet::publish_fallback_text`]). For those runs the
+//! router additionally keeps **per-conv-instruction** routed/fallback
+//! counters ([`executor::OpRouter::conv_layer_stats`]) so a downsample
+//! conv silently dropping to the naive loop is visible, and accepts
+//! **trainer-fed measured sparsity**
+//! ([`executor::OpRouter::set_profiled_sparsity`]): the trainer pushes
+//! each layer's recent-mean profiled sparsity before every step, and the
+//! selector plans skip modes from that signal instead of the per-call
+//! live zero count.
 
 pub mod artifacts;
 pub mod executor;

@@ -100,6 +100,14 @@ impl Runtime {
         self.router.as_deref()
     }
 
+    /// A clonable handle to the installed op router. The trainer grabs
+    /// this *before* [`Runtime::load`] (whose returned `&Executable`
+    /// borrows the runtime exclusively) so it can feed profiled sparsity
+    /// into the router from inside the step loop.
+    pub fn op_router_arc(&self) -> Option<Arc<OpRouter>> {
+        self.router.clone()
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

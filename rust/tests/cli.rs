@@ -1,0 +1,59 @@
+//! CLI argument handling: malformed numeric options must be fatal usage
+//! errors (exit code 2, `error:` on stderr) on every subcommand — the
+//! trainer path used to silently fall back to defaults while the
+//! analytics path exited, so a typo like `--steps 2O` trained for 200
+//! steps without a word.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_sparsetrain"))
+        .args(args)
+        .output()
+        .expect("spawning the sparsetrain binary")
+}
+
+fn assert_usage_error(args: &[&str]) {
+    let out = run(args);
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "{args:?} must exit 2, got {:?}\nstderr: {}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "{args:?} stderr missing 'error:': {stderr}");
+}
+
+#[test]
+fn malformed_train_numeric_options_are_fatal() {
+    assert_usage_error(&["train", "--steps", "2O"]); // letter O, the classic typo
+    assert_usage_error(&["train", "--seed", "seven"]);
+    assert_usage_error(&["train", "--threads", "-1"]);
+}
+
+#[test]
+fn malformed_analytics_options_are_fatal() {
+    assert_usage_error(&["table6", "--epochs", "1e2"]);
+    assert_usage_error(&["plan", "--k", "256.0"]);
+    assert_usage_error(&["plan", "--r", ""]);
+    assert_usage_error(&["sweep", "--threads", "x"]);
+}
+
+#[test]
+fn unknown_net_and_scale_are_fatal() {
+    assert_usage_error(&["train", "--net", "alexnet"]);
+    assert_usage_error(&["train", "--net", "resnet34", "--scale", "huge"]);
+    assert_usage_error(&["train", "--scale", "small"]); // --scale without --net
+}
+
+#[test]
+fn no_subcommand_prints_usage_and_succeeds() {
+    let out = run(&[]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("USAGE"), "{stdout}");
+    assert!(stdout.contains("--net"), "train help must document --net: {stdout}");
+    assert!(stdout.contains("--scale"), "train help must document --scale: {stdout}");
+}

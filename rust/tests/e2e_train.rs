@@ -17,6 +17,7 @@
 
 use sparsetrain::coordinator::trainer::{Trainer, TrainerConfig};
 use sparsetrain::kernels::{reference, ConvConfig};
+use sparsetrain::nets::{Network, Scale};
 use sparsetrain::runtime::artifacts::{ArtifactSet, KERNEL_FWD, TRAIN_STEP};
 use sparsetrain::runtime::hlo_builder::{self, Geometry};
 use sparsetrain::runtime::pjrt::{literal_f32, literal_i32, Runtime};
@@ -82,6 +83,106 @@ fn e2e_trainer_learns_on_cold_checkout() {
             "{layer} sparsity left (0,1): {series:?}"
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-layer zoo training: emitted ResNet graphs run, route, and measure
+// ---------------------------------------------------------------------------
+
+/// The CI smoke behind `train --net resnet34`: a reduced-scale ResNet-34
+/// trains for a few steps with finite loss, every strided/downsample conv
+/// is served by the widened router envelope (routed, zero fallbacks), and
+/// per-layer sparsity is measured each step. Doubles as the §2.3 check on
+/// the BN side: with BN after every conv, the measured output-gradient
+/// (dz) sparsity collapses to ~0.
+#[test]
+#[cfg_attr(miri, ignore)] // multi-layer interpreted training steps
+fn e2e_resnet34_small_trains_with_routed_strided_convs() {
+    let dir = scratch_dir("resnet34-small");
+    let arts = ArtifactSet::new(&dir);
+    let steps = 4;
+    let mut t = Trainer::new_net(
+        &arts,
+        Network::ResNet34,
+        Scale::Small,
+        TrainerConfig { steps, seed: 1, log_every: 0, threads: 2 },
+    )
+    .expect("net trainer init");
+    let plan = t.net_plan().expect("net trainer carries a plan").clone();
+    assert!(
+        plan.strided_fwd.len() >= 4,
+        "resnet34 must hit strided forms: {:?}",
+        plan.strided_fwd
+    );
+
+    let report = t.run().expect("resnet34-small training");
+    assert_eq!(report.losses.len(), steps);
+    assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0), "{:?}", report.losses);
+
+    // per-layer measured sparsity: every ReLU and dz series covers the run
+    for key in plan.relu_keys.iter().chain(&plan.dz_keys) {
+        let series = report.profiler.series(key).unwrap_or_else(|| panic!("{key} missing"));
+        assert_eq!(series.len(), steps, "{key} series must cover every step");
+    }
+    // §2.3, BN side: BatchNorm's backward mean terms densify the gradient
+    for key in &plan.dz_keys {
+        let series = report.profiler.series(key).unwrap();
+        let m = mean(series);
+        assert!(m < 0.05, "{key}: BN layer dz sparsity should be ~0, got {m:.3}");
+    }
+
+    if let Some(router) = t.op_router() {
+        let stats: std::collections::BTreeMap<String, (usize, usize)> =
+            router.conv_layer_stats().into_iter().map(|(n, r, f)| (n, (r, f))).collect();
+        assert!(!stats.is_empty(), "convs must reach the router");
+        for instr in &plan.strided_fwd {
+            let &(routed, fb) = stats
+                .get(instr)
+                .unwrap_or_else(|| panic!("strided conv {instr} never reached the router"));
+            assert!(routed > 0, "{instr} must be kernel-routed");
+            assert_eq!(fb, 0, "{instr} silently fell back {fb} times");
+        }
+        // the whole emitted graph stays inside the conv envelope
+        for (nm, (routed, fb)) in &stats {
+            assert_eq!(*fb, 0, "{nm} fell back ({routed} routed)");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// §2.3, Fixup side: with no BN anywhere, the backward gradient keeps the
+/// ReLU mask's zeros, so the measured dz sparsity — the BWI operand
+/// sparsity the paper exploits — stays far from zero for every layer.
+#[test]
+#[cfg_attr(miri, ignore)] // multi-layer interpreted training steps
+fn e2e_fixup_resnet50_reports_bwi_gradient_sparsity() {
+    let dir = scratch_dir("fixup-small");
+    let arts = ArtifactSet::new(&dir);
+    let steps = 2;
+    let mut t = Trainer::new_net(
+        &arts,
+        Network::FixupResNet50,
+        Scale::Small,
+        TrainerConfig { steps, seed: 3, log_every: 0, threads: 2 },
+    )
+    .expect("net trainer init");
+    let plan = t.net_plan().unwrap().clone();
+    let report = t.run().expect("fixup-small training");
+    assert!(report.losses.iter().all(|l| l.is_finite()), "{:?}", report.losses);
+
+    let mut means = Vec::new();
+    for key in &plan.dz_keys {
+        let series = report.profiler.series(key).unwrap_or_else(|| panic!("{key} missing"));
+        let m = mean(series);
+        assert!(m > 0.02, "{key}: BN-free dz sparsity should be ReLU-like, got {m:.3}");
+        means.push(m);
+    }
+    assert!(
+        mean(&means) > 0.2,
+        "mean BN-free dz sparsity should be substantial, got {:.3}",
+        mean(&means)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ---------------------------------------------------------------------------
