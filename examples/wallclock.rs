@@ -13,9 +13,11 @@
 //! ```
 
 use sparsetrain::bench::wallclock::{run, WallclockConfig};
+use sparsetrain::coordinator::CostDb;
 use sparsetrain::kernels::simd;
 use sparsetrain::nets::table2::layer_by_name;
 use sparsetrain::util::cli::Args;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 wallclock — real-kernel wall-clock sweep (writes BENCH_kernels.json)
@@ -25,11 +27,14 @@ OPTIONS
   --threads 1,2,4    comma-separated thread counts (default: powers of two up to host)
   --sparsities 0,0.9 comma-separated sparsity levels (default: 0.0,0.5,0.9)
   --out PATH         output JSON path (default: BENCH_kernels.json)
+  --cost-db PATH     bulk-populate the measured-cost DB at PATH with every
+                     timed kernel cell (existing entries are loaded and
+                     EMA-merged; the file is saved atomically on exit)
   --smoke            tiny layer, seconds-scale run (CI emitter check)
   --min-trainer-speedup X
                      fail (exit 1) unless the kernel-routed trainer step at
-                     2 threads is at least X times the naive interpreter
-                     (the CI perf floor; 0 = no gate)
+                     2 threads (analytic selector) is at least X times the
+                     naive interpreter (the CI perf floor; 0 = no gate)
 
 Set SPARSETRAIN_BENCH_FAST=1 for shorter measurements and
 SPARSETRAIN_BACKEND=scalar|avx2|avx512|neon to force a backend.";
@@ -48,7 +53,7 @@ fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> Vec<T> {
 
 fn main() {
     let args = Args::from_env(
-        &["layers", "threads", "sparsities", "out", "min-trainer-speedup"],
+        &["layers", "threads", "sparsities", "out", "cost-db", "min-trainer-speedup"],
         &["smoke"],
     )
     .unwrap_or_else(|e| {
@@ -80,6 +85,9 @@ fn main() {
         wcfg.sparsities = parse_list(s, "--sparsities");
     }
     let out = args.get_or("out", "BENCH_kernels.json").to_string();
+    if let Some(p) = args.get("cost-db") {
+        wcfg.cost_db = Some(Arc::new(CostDb::at_path(std::path::PathBuf::from(p), true)));
+    }
 
     let bk = simd::dispatch();
     println!(
@@ -102,6 +110,15 @@ fn main() {
     for &t in &wcfg.threads {
         if let Some(s) = report.trainer_step_speedup(t) {
             println!("kernel-routed trainer step at {t} threads: {s:.2}x vs naive interpreter");
+        }
+    }
+    for (layer, t, ratio) in report.measured_vs_analytic() {
+        println!("measured vs analytic selector on {layer} at {t} threads: {ratio:.2}x");
+    }
+    if let Some(db) = &wcfg.cost_db {
+        match db.save() {
+            Ok(()) => println!("cost DB saved: {} entries", db.len()),
+            Err(e) => eprintln!("warning: cost DB save failed: {e}"),
         }
     }
 

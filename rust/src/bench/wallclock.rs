@@ -31,28 +31,56 @@
 //!
 //! Since ISSUE 6 the `kernel-routed` rows measure the **whole-graph op
 //! router**: convolutions on the sparse kernels, `dot` on the blocked
-//! parallel GEMM, and recognized elementwise chains fused — the row
-//! structure is unchanged, so the schema stays v2. The PR 5 floor
-//! (routed ≥ 2× naive at 2 threads) is CI-enforced via the example's
-//! `--min-trainer-speedup` flag; the ISSUE 6 target is ≥ 5×.
+//! parallel GEMM, and recognized elementwise chains fused. The PR 5
+//! floor (routed ≥ 2× naive at 2 threads) is CI-enforced via the
+//! example's `--min-trainer-speedup` flag; the ISSUE 6 target is ≥ 5×.
+//!
+//! Schema v3 (ISSUE 8) adds the measured-cost autotuning dimension:
+//! * every record carries a `selector` field — `"none"` for kernel
+//!   rows and the naive-interp baseline, `"analytic"` for routed
+//!   trainer rows with the cost DB detached (the analytic model picks
+//!   every skip mode), `"measured"` for routed trainer rows with a
+//!   fresh in-memory [`CostDb`] warmed by untimed steps first, so the
+//!   selector runs on measured costs — the analytic-vs-measured pair is
+//!   the autotuner's acceptance readout
+//!   ([`WallclockReport::measured_vs_analytic`]);
+//! * `layer: "resnet34_small"` trainer rows put the same pair on a
+//!   multi-layer zoo net whose per-layer sparsities differ (full sweep
+//!   only — the smoke config skips them);
+//! * when a cost DB is attached to the sweep
+//!   ([`WallclockConfig::cost_db`], CLI `--cost-db`), every timed
+//!   kernel cell's median is folded into it — the **bulk population**
+//!   path that seeds `PerLaneBranch` entries the router's lazy
+//!   exploration never tries on its own.
 
 use crate::bench::{bench, black_box, BenchConfig, BenchResult};
+use crate::coordinator::costdb::{CostDb, CostKey};
 use crate::coordinator::scheduler::Scheduler;
 use crate::kernels::layers::synthetic_batch;
 use crate::kernels::simd::{self, Backend};
 use crate::kernels::{direct, sparse_bwi, sparse_bww, sparse_fwd};
 use crate::kernels::{Component, ConvConfig, KernelStats, Scratch, SkipMode};
 use crate::nets::table2::{layer_by_name, NamedLayer};
+use crate::nets::{Network, Scale};
 use crate::runtime::artifacts::{geometry, ArtifactSet, TRAIN_STEP};
+use crate::runtime::hlo_builder::{self, NetModel};
 use crate::runtime::pjrt::{literal_f32, literal_i32, Runtime};
 use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::util::prng::Xorshift;
 use crate::V;
+use std::sync::Arc;
 
-/// The report schema version. v2 (ISSUE 5) adds the pre-transposed dense
+/// The report schema version. v2 (ISSUE 5) added the pre-transposed dense
 /// BWI baseline rows (`mode: "direct_pre"`) and the end-to-end
-/// `trainer_step` rows (naive-interp vs kernel-routed median ns/step).
-pub const SCHEMA: &str = "sparsetrain-wallclock-v2";
+/// `trainer_step` rows; v3 (ISSUE 8) adds the per-record `selector` field
+/// ("none" / "analytic" / "measured") and the zoo-net trainer pair.
+pub const SCHEMA: &str = "sparsetrain-wallclock-v3";
+
+/// Untimed steps run before timing a `selector: "measured"` trainer row:
+/// enough for every per-step conv key to go cold → explored → warm (the
+/// lazy path needs at most three executions per key), so the timed
+/// region measures DB-hit selection, not exploration.
+pub const COSTDB_WARMUP_STEPS: usize = 3;
 
 /// Default Table-2 layer set: three 3×3 shapes (one strided) and one 1×1,
 /// small enough that a full sweep finishes in minutes, large enough that
@@ -70,6 +98,12 @@ pub struct WallclockConfig {
     pub threads: Vec<usize>,
     pub bench: BenchConfig,
     pub seed: u64,
+    /// Bulk-population target: when set, every timed kernel cell's median
+    /// is recorded into this cost DB (the caller saves it afterwards).
+    pub cost_db: Option<Arc<CostDb>>,
+    /// Also time the zoo-net trainer pair (`resnet34_small`, analytic vs
+    /// measured) — minutes of extra wall time, so full sweeps only.
+    pub zoo_trainer: bool,
 }
 
 impl WallclockConfig {
@@ -86,6 +120,8 @@ impl WallclockConfig {
             threads: host_thread_sweep(),
             bench: BenchConfig::default(),
             seed: 0xBE_BC,
+            cost_db: None,
+            zoo_trainer: true,
         }
     }
 
@@ -106,6 +142,8 @@ impl WallclockConfig {
                 max_samples: 10,
             },
             seed: 7,
+            cost_db: None,
+            zoo_trainer: false,
         }
     }
 }
@@ -133,6 +171,11 @@ pub struct WallclockRecord {
     pub component: &'static str,
     /// "direct" (dense baseline kernel) or the `SkipMode` name.
     pub mode: &'static str,
+    /// Skip-mode decision source for routed trainer rows: `"analytic"`
+    /// (cost DB detached) or `"measured"` (warmed DB consulted first).
+    /// `"none"` for kernel cells and the naive baseline, where no
+    /// selector runs.
+    pub selector: &'static str,
     pub sparsity: f64,
     pub threads: usize,
     pub median_ns: f64,
@@ -324,34 +367,66 @@ pub fn trainer_rows_enabled() -> bool {
     }
 }
 
+/// What drives the skip-mode decision in a routed trainer row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SelectorVariant {
+    /// Cost DB detached: the analytic model picks every mode.
+    Analytic,
+    /// Fresh in-memory cost DB, warmed by [`COSTDB_WARMUP_STEPS`] untimed
+    /// steps so the timed region runs on DB hits.
+    Measured,
+}
+
+impl SelectorVariant {
+    fn name(self) -> &'static str {
+        match self {
+            SelectorVariant::Analytic => "analytic",
+            SelectorVariant::Measured => "measured",
+        }
+    }
+}
+
+/// Per-call unique scratch-dir sequence: scratch_fallback wipes on
+/// creation, and two tests in one process may time trainer steps
+/// concurrently.
+fn scratch_seq() -> usize {
+    static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Median ns per full train step at the paper geometry, through the
-/// offline fallback artifact: `routed_threads = None` times the naive
-/// interpreter, `Some(t)` the kernel-routed runtime at `t` scheduler
-/// threads. `None` result = environment failure (scratch dir unwritable).
-fn time_trainer_step(routed_threads: Option<usize>, bcfg: &BenchConfig) -> Option<f64> {
+/// offline fallback artifact: `routed = None` times the naive
+/// interpreter, `Some((t, variant))` the kernel-routed runtime at `t`
+/// scheduler threads with the given selector. `None` result =
+/// environment failure (scratch dir unwritable) or routing disabled.
+fn time_trainer_step(
+    routed: Option<(usize, SelectorVariant)>,
+    bcfg: &BenchConfig,
+) -> Option<f64> {
     use geometry::{CLASSES, C1, C2, C_IN, HW, N};
     // A "kernel-routed" row must actually be kernel-routed: when the
-    // process-wide kill switch disables routing, cpu_with_threads would
-    // silently hand back a naive runtime and the trajectory would record
-    // mislabeled data — skip the routed rows instead.
-    if routed_threads.is_some()
+    // process-wide kill switch disables routing, the runtime constructors
+    // would silently hand back a naive runtime and the trajectory would
+    // record mislabeled data — skip the routed rows instead.
+    if routed.is_some()
         && !(crate::runtime::executor::routing_enabled()
             || crate::runtime::executor::op_routing_enabled())
     {
         return None;
     }
-    let tag = match routed_threads {
+    let tag = match routed {
         None => "naive".to_string(),
-        Some(t) => format!("routed-t{t}"),
+        Some((t, v)) => format!("routed-t{t}-{}", v.name()),
     };
-    // Per-call unique scratch dir: scratch_fallback wipes on creation, and
-    // two tests in one process may time trainer steps concurrently.
-    static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
-    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    let arts = ArtifactSet::scratch_fallback(&format!("wallclock-{tag}-{seq}")).ok()?;
-    let mut rt = match routed_threads {
+    let arts = ArtifactSet::scratch_fallback(&format!("wallclock-{tag}-{}", scratch_seq())).ok()?;
+    // The analytic row pins the DB off (not the env default) so the pair
+    // is a clean A/B regardless of `SPARSETRAIN_COST_DB`.
+    let mut rt = match routed {
         None => Runtime::cpu_naive(&arts.dir).ok()?,
-        Some(t) => Runtime::cpu_with_threads(&arts.dir, t).ok()?,
+        Some((t, SelectorVariant::Analytic)) => Runtime::cpu_with_cost_db(&arts.dir, t, None).ok()?,
+        Some((t, SelectorVariant::Measured)) => {
+            Runtime::cpu_with_cost_db(&arts.dir, t, Some(Arc::new(CostDb::in_memory()))).ok()?
+        }
     };
     let exe = rt.load(TRAIN_STEP).ok()?;
 
@@ -375,6 +450,13 @@ fn time_trainer_step(routed_threads: Option<usize>, bcfg: &BenchConfig) -> Optio
         literal_f32(&x.to_nchw(), &[N as i64, C_IN as i64, HW as i64, HW as i64]).ok()?,
         literal_i32(&labels.iter().map(|&l| l as i32).collect::<Vec<_>>(), &[N as i64]).ok()?,
     ];
+    // Warm the measured selector's DB off the clock: the inputs are fixed,
+    // so every conv key repeats and reaches the DB-hit state before timing.
+    if matches!(routed, Some((_, SelectorVariant::Measured))) {
+        for _ in 0..COSTDB_WARMUP_STEPS {
+            black_box(exe.run(&inputs).ok()?);
+        }
+    }
     let r = bench(&format!("trainer_step {tag}"), bcfg, || {
         black_box(exe.run(&inputs).expect("train step"));
     });
@@ -394,7 +476,9 @@ fn trainer_step_flops() -> f64 {
 }
 
 /// Append the end-to-end `trainer_step` rows: one naive-interpreter
-/// baseline plus one kernel-routed row per requested thread count.
+/// baseline plus an analytic/measured kernel-routed pair per requested
+/// thread count (the autotuner's acceptance readout — a measured row no
+/// faster than its analytic twin means the cost DB is not paying off).
 fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec<WallclockRecord>) {
     let flops = trainer_step_flops();
     let Some(naive_ns) = time_trainer_step(None, bcfg) else {
@@ -410,6 +494,7 @@ fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec
         rs: 3,
         component: "trainer_step",
         mode: "naive-interp",
+        selector: "none",
         sparsity: 0.0,
         threads: 1,
         median_ns: naive_ns,
@@ -418,26 +503,140 @@ fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec
         speedup_vs_dense_same_threads: 1.0,
     });
     for &t in threads {
-        let Some(ns) = time_trainer_step(Some(t), bcfg) else { continue };
+        for variant in [SelectorVariant::Analytic, SelectorVariant::Measured] {
+            let Some(ns) = time_trainer_step(Some((t, variant)), bcfg) else { continue };
+            println!(
+                "{:<12} trainer_step kernel-routed  t={t}  sel={:<8}  {:>12.0} ns  \
+                 {:>7.2} GF/s  {:>5.2}x vs naive",
+                "paper",
+                variant.name(),
+                ns,
+                flops / ns,
+                naive_ns / ns
+            );
+            records.push(WallclockRecord {
+                layer: "paper".to_string(),
+                rs: 3,
+                component: "trainer_step",
+                mode: "kernel-routed",
+                selector: variant.name(),
+                sparsity: 0.0,
+                threads: t,
+                median_ns: ns,
+                gflops: flops / ns,
+                speedup_vs_direct1: naive_ns / ns,
+                speedup_vs_dense_same_threads: naive_ns / ns,
+            });
+        }
+    }
+}
+
+/// He-style init for one zoo-net parameter, mirroring the trainer's
+/// scheme exactly (conv weights He-uniform, FC `±sqrt(1/fan_in)`, rank-1
+/// zeros) so the benched step does the same arithmetic a real run does.
+fn init_net_param(rng: &mut Xorshift, dims: &[usize]) -> Option<Vec<f32>> {
+    Some(match dims {
+        [k, c, s, r] => {
+            let bound = (2.0 / (c * s * r) as f32).sqrt();
+            (0..k * c * s * r).map(|_| rng.range_f32(-bound, bound)).collect()
+        }
+        [rows, cols] => {
+            let bound = (1.0 / *cols as f32).sqrt();
+            (0..rows * cols).map(|_| rng.range_f32(-bound, bound)).collect()
+        }
+        [len] => vec![0.0f32; *len],
+        _ => return None,
+    })
+}
+
+/// Median ns per train step on the emitted `resnet34_small` zoo graph —
+/// a multi-layer net whose per-layer sparsities differ, so the measured
+/// selector has real mode crossovers to exploit.
+fn time_net_trainer_step(
+    variant: SelectorVariant,
+    threads: usize,
+    bcfg: &BenchConfig,
+) -> Option<f64> {
+    if !(crate::runtime::executor::routing_enabled()
+        || crate::runtime::executor::op_routing_enabled())
+    {
+        return None;
+    }
+    let model = NetModel::new(Network::ResNet34, Scale::Small);
+    let (train_name, _) = hlo_builder::net_artifact_names(&model);
+    let (text, plan) = hlo_builder::net_train_step_hlo(&model).ok()?;
+    let tag = format!("wallclock-zoo-{}-{}", variant.name(), scratch_seq());
+    let arts = ArtifactSet::scratch_fallback(&tag).ok()?;
+    arts.publish_fallback_text(&train_name, &text).ok()?;
+    let db = match variant {
+        SelectorVariant::Analytic => None,
+        SelectorVariant::Measured => Some(Arc::new(CostDb::in_memory())),
+    };
+    let mut rt = Runtime::cpu_with_cost_db(&arts.dir, threads, db).ok()?;
+    let exe = rt.load(&train_name).ok()?;
+
+    let mut rng = Xorshift::new(0x500);
+    let mut inputs = Vec::with_capacity(plan.params.len() + 2);
+    for (_, dims) in &plan.params {
+        let vals = init_net_param(&mut rng, dims)?;
+        let d64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        inputs.push(literal_f32(&vals, &d64).ok()?);
+    }
+    let [n, c_in, hw, _] = plan.input_dims;
+    let (x, labels) = synthetic_batch(&mut rng, n, c_in, hw, plan.classes);
+    inputs.push(literal_f32(&x.to_nchw(), &[n as i64, c_in as i64, hw as i64, hw as i64]).ok()?);
+    inputs
+        .push(literal_i32(&labels.iter().map(|&l| l as i32).collect::<Vec<_>>(), &[n as i64]).ok()?);
+
+    if variant == SelectorVariant::Measured {
+        for _ in 0..COSTDB_WARMUP_STEPS {
+            black_box(exe.run(&inputs).ok()?);
+        }
+    }
+    let r = bench(&format!("trainer_step zoo {}", variant.name()), bcfg, || {
+        black_box(exe.run(&inputs).expect("zoo train step"));
+    });
+    let ns = r.ns();
+    let _ = std::fs::remove_dir_all(&arts.dir);
+    Some(ns)
+}
+
+/// Append the `resnet34_small` analytic/measured trainer pair at 2
+/// threads (skipped when routing is disabled or the graph fails to
+/// emit). `speedup_vs_direct1` on these rows is relative to the analytic
+/// twin — ≥ 1.0 on the measured row is the ISSUE 8 acceptance bar.
+fn net_trainer_step_records(bcfg: &BenchConfig, records: &mut Vec<WallclockRecord>) {
+    const ZOO_THREADS: usize = 2;
+    let Some(analytic_ns) = time_net_trainer_step(SelectorVariant::Analytic, ZOO_THREADS, bcfg)
+    else {
+        println!("trainer_step zoo: unavailable; rows skipped");
+        return;
+    };
+    for (variant, ns) in [
+        (SelectorVariant::Analytic, Some(analytic_ns)),
+        (SelectorVariant::Measured, time_net_trainer_step(SelectorVariant::Measured, ZOO_THREADS, bcfg)),
+    ] {
+        let Some(ns) = ns else { continue };
         println!(
-            "{:<12} trainer_step kernel-routed  t={t}  {:>12.0} ns  {:>7.2} GF/s  \
-             {:>5.2}x vs naive",
-            "paper",
+            "{:<12} trainer_step kernel-routed  t={ZOO_THREADS}  sel={:<8}  {:>12.0} ns  \
+             {:>5.2}x vs analytic",
+            "resnet34_sm",
+            variant.name(),
             ns,
-            flops / ns,
-            naive_ns / ns
+            analytic_ns / ns
         );
         records.push(WallclockRecord {
-            layer: "paper".to_string(),
+            layer: "resnet34_small".to_string(),
             rs: 3,
             component: "trainer_step",
             mode: "kernel-routed",
+            selector: variant.name(),
             sparsity: 0.0,
-            threads: t,
+            threads: ZOO_THREADS,
             median_ns: ns,
-            gflops: flops / ns,
-            speedup_vs_direct1: naive_ns / ns,
-            speedup_vs_dense_same_threads: naive_ns / ns,
+            gflops: 0.0,
+            speedup_vs_direct1: analytic_ns / ns,
+            speedup_vs_dense_same_threads: analytic_ns / ns,
         });
     }
 }
@@ -464,6 +663,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                 rs: nl.cfg.r,
                 component: comp.name(),
                 mode: "direct",
+                selector: "none",
                 sparsity: 0.0,
                 threads: 1,
                 median_ns: direct_ns,
@@ -497,6 +697,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                     rs: nl.cfg.r,
                     component: comp.name(),
                     mode: "direct_pre",
+                    selector: "none",
                     sparsity: 0.0,
                     threads: 1,
                     median_ns: pre_ns,
@@ -516,6 +717,15 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                         if mode == SkipMode::Dense {
                             dense_same_ns = ns;
                         }
+                        // Bulk population: seed the measured-cost DB with
+                        // this cell's median — including PerLaneBranch,
+                        // which the router's lazy path never explores.
+                        if let Some(db) = &wcfg.cost_db {
+                            db.record(
+                                CostKey::conv(comp, &nl.cfg, sparsity, threads, bk.name(), mode),
+                                ns,
+                            );
+                        }
                         println!(
                             "{:<12} {} {:<14} s={sparsity:.1} t={threads}  {:>12.0} ns  \
                              {:>7.2} GF/s  {:>5.2}x vs direct",
@@ -526,6 +736,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                             rs: nl.cfg.r,
                             component: comp.name(),
                             mode: mode_name(mode),
+                            selector: "none",
                             sparsity,
                             threads,
                             median_ns: ns,
@@ -539,9 +750,13 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
         }
     }
     // End-to-end trainer-step rows (ISSUE 5 satellite): tie the perf
-    // trajectory to `Trainer`, not just isolated kernels.
+    // trajectory to `Trainer`, not just isolated kernels. ISSUE 8 adds
+    // the analytic/measured selector pairs and the zoo-net pair.
     if trainer_rows_enabled() {
         trainer_step_records(&wcfg.threads, &wcfg.bench, &mut records);
+        if wcfg.zoo_trainer {
+            net_trainer_step_records(&wcfg.bench, &mut records);
+        }
     }
     WallclockReport {
         backend: bk.name(),
@@ -566,6 +781,7 @@ impl WallclockReport {
         for (i, r) in self.records.iter().enumerate() {
             out.push_str(&format!(
                 "    {{\"layer\": \"{}\", \"rs\": {}, \"component\": \"{}\", \"mode\": \"{}\", \
+                 \"selector\": \"{}\", \
                  \"sparsity\": {:.2}, \"threads\": {}, \"median_ns\": {:.1}, \
                  \"gflops\": {:.3}, \"speedup_vs_direct1\": {:.3}, \
                  \"speedup_vs_dense_same_threads\": {:.3}}}{}\n",
@@ -573,6 +789,7 @@ impl WallclockReport {
                 r.rs,
                 r.component,
                 r.mode,
+                r.selector,
                 r.sparsity,
                 r.threads,
                 r.median_ns,
@@ -600,7 +817,11 @@ impl WallclockReport {
     /// trusting a stored ratio, and `None` whenever **either** row is
     /// missing or has a non-positive median — a report with routed rows
     /// but no `naive-interp` baseline (e.g. filtered or partially
-    /// recorded) must not yield a garbage ratio.
+    /// recorded) must not yield a garbage ratio. Since schema v3 only the
+    /// `selector: "analytic"` routed row on the paper geometry counts —
+    /// the measured rows are a separate readout
+    /// ([`WallclockReport::measured_vs_analytic`]), and mixing them here
+    /// would let the autotuner inflate the baseline floor.
     pub fn trainer_step_speedup(&self, threads: usize) -> Option<f64> {
         let naive = self.records.iter().find(|r| {
             r.component == "trainer_step" && r.mode == "naive-interp" && r.median_ns > 0.0
@@ -608,10 +829,35 @@ impl WallclockReport {
         let routed = self.records.iter().find(|r| {
             r.component == "trainer_step"
                 && r.mode == "kernel-routed"
+                && r.selector == "analytic"
+                && r.layer == "paper"
                 && r.threads == threads
                 && r.median_ns > 0.0
         })?;
         Some(naive.median_ns / routed.median_ns)
+    }
+
+    /// Analytic-time ÷ measured-time per (layer, threads) trainer pair —
+    /// the ISSUE 8 acceptance readout: every ratio should be ≥ 1.0 (the
+    /// warmed DB never loses to the analytic model) and > 1.0 somewhere.
+    /// Pairs missing either row are omitted.
+    pub fn measured_vs_analytic(&self) -> Vec<(String, usize, f64)> {
+        let mut out = Vec::new();
+        for m in &self.records {
+            if m.component != "trainer_step" || m.selector != "measured" || m.median_ns <= 0.0 {
+                continue;
+            }
+            if let Some(a) = self.records.iter().find(|a| {
+                a.component == "trainer_step"
+                    && a.selector == "analytic"
+                    && a.layer == m.layer
+                    && a.threads == m.threads
+                    && a.median_ns > 0.0
+            }) {
+                out.push((m.layer.clone(), m.threads, a.median_ns / m.median_ns));
+            }
+        }
+        out
     }
 
     /// Best `speedup_vs_direct1` over MaskLoop rows of **3×3 layers** at
@@ -641,6 +887,7 @@ mod tests {
             rs: 3,
             component: "trainer_step",
             mode,
+            selector: if mode == "kernel-routed" { "analytic" } else { "none" },
             sparsity: 0.0,
             threads,
             median_ns,
@@ -683,27 +930,68 @@ mod tests {
         let full =
             mk(vec![trainer_row("naive-interp", 1, 800.0), trainer_row("kernel-routed", 2, 100.0)]);
         assert_eq!(full.trainer_step_speedup(2), Some(8.0));
+        // a measured row must NOT satisfy the analytic baseline floor
+        let mut measured = trainer_row("kernel-routed", 2, 50.0);
+        measured.selector = "measured";
+        let report =
+            mk(vec![trainer_row("naive-interp", 1, 800.0), measured]);
+        assert_eq!(report.trainer_step_speedup(2), None);
+    }
+
+    /// The v3 acceptance readout pairs measured rows with their analytic
+    /// twin by (layer, threads) and ignores incomplete pairs.
+    #[test]
+    fn measured_vs_analytic_pairs_rows() {
+        let mut analytic = trainer_row("kernel-routed", 2, 200.0);
+        analytic.selector = "analytic";
+        let mut measured = trainer_row("kernel-routed", 2, 100.0);
+        measured.selector = "measured";
+        let mut zoo_measured = trainer_row("kernel-routed", 2, 70.0);
+        zoo_measured.selector = "measured";
+        zoo_measured.layer = "resnet34_small".to_string();
+        let report = WallclockReport {
+            backend: "scalar",
+            profile: "debug",
+            threads_available: 2,
+            records: vec![
+                trainer_row("naive-interp", 1, 800.0),
+                analytic,
+                measured,
+                zoo_measured, // no analytic twin → omitted
+            ],
+        };
+        assert_eq!(report.measured_vs_analytic(), vec![("paper".to_string(), 2, 2.0)]);
     }
 
     #[test]
     #[cfg_attr(miri, ignore = "wall-clock timing is meaningless under the interpreter")]
     fn smoke_sweep_produces_complete_report() {
-        let wcfg = WallclockConfig::smoke();
+        let mut wcfg = WallclockConfig::smoke();
+        // Bulk population rides along: every timed mode cell lands in the
+        // attached DB (1 layer × 3 comps × 2 sparsity buckets × 2 thread
+        // counts × 3 modes).
+        let db = Arc::new(CostDb::in_memory());
+        wcfg.cost_db = Some(Arc::clone(&db));
         let report = run(&wcfg);
+        assert_eq!(db.len(), 3 * 2 * 2 * 3, "bulk sweep must seed every mode cell");
         // 3 components × (1 direct + 2 sparsities × 2 threads × 3 modes)
-        // + 1 direct_pre BWI baseline, + the trainer rows (1 naive + one
-        // per thread count) in release builds
+        // + 1 direct_pre BWI baseline, + the trainer rows (1 naive + an
+        // analytic/measured pair per thread count) in release builds
         let kernel_rows = 3 * (1 + 2 * 2 * 3) + 1;
         let routed_rows = if crate::runtime::executor::routing_enabled()
             || crate::runtime::executor::op_routing_enabled()
         {
-            wcfg.threads.len()
+            2 * wcfg.threads.len()
         } else {
             0
         };
         let trainer_rows = if trainer_rows_enabled() { 1 + routed_rows } else { 0 };
         assert_eq!(report.records.len(), kernel_rows + trainer_rows);
         assert!(report.records.iter().all(|r| r.median_ns > 0.0 && r.gflops > 0.0));
+        assert!(report
+            .records
+            .iter()
+            .all(|r| matches!(r.selector, "none" | "analytic" | "measured")));
         assert!(report.records.iter().all(|r| r.speedup_vs_direct1 > 0.0));
         assert!(!report.backend.is_empty());
         assert!(report.best_maskloop_speedup(0.9, 1).is_some());
@@ -723,11 +1011,23 @@ mod tests {
                 || crate::runtime::executor::op_routing_enabled()
             {
                 assert!(report.trainer_step_speedup(2).is_some(), "routed trainer rows missing");
+                // every measured row has an analytic twin at the same
+                // (layer, threads) — the v3 pairing invariant
+                assert_eq!(
+                    report.measured_vs_analytic().len(),
+                    report
+                        .records
+                        .iter()
+                        .filter(|r| r.selector == "measured")
+                        .count(),
+                    "measured trainer rows must pair with analytic twins"
+                );
             }
         }
 
         let json = report.to_json();
         assert!(json.contains(&format!("\"schema\": \"{SCHEMA}\"")));
+        assert!(json.contains("\"selector\""));
         assert!(json.contains("\"backend\""));
         assert!(json.contains("MaskLoop"));
         assert!(json.contains("direct_pre"));

@@ -1,0 +1,662 @@
+//! Persistent per-machine measured-cost database (ISSUE 8).
+//!
+//! The analytic model in [`crate::sim::cost`] prices the paper's skip
+//! modes from calibrated constants and an assumption of perfect load
+//! balance; the §5 crossovers it predicts are only as good as that
+//! calibration. This module replaces prediction with *measurement* on
+//! the machine actually running: every routed kernel execution is timed
+//! with a monotonic-clock stamp and folded into an exponential moving
+//! average, keyed by everything that changes the answer —
+//!
+//! `(component FWD/BWI/BWW/GEMM, geometry signature, sparsity bucket,
+//!   thread count, SIMD backend, execution mode)`
+//!
+//! The DB is populated two ways:
+//!
+//! - **lazily**, by the [`crate::runtime::executor::OpRouter`] hot path:
+//!   the first execution of a cold key runs the analytic choice and
+//!   records its cost; the next execution of the same key runs the
+//!   *other* branch-free candidate once (bounded exploration: only
+//!   `Dense` and `MaskLoop`, the two modes the analytic selector can
+//!   itself pick); thereafter the cheapest measured mode wins. Because
+//!   the skip modes are mutually bit-identical (the long-standing
+//!   invariant proven by `conv_route_parity.rs`), exploration can never
+//!   change numerics — only wall time.
+//! - **in bulk**, by the wallclock sweep ([`crate::bench::wallclock`]),
+//!   which measures the full mode grid — including `PerLaneBranch`,
+//!   which the lazy path never explores on its own but which the warm
+//!   argmin will happily select once seeded.
+//!
+//! EMA updates (`EMA_ALPHA`) keep the entries tracking drift (thermal
+//! throttling, co-tenant contention) instead of freezing the first
+//! sample forever.
+//!
+//! ## Persistence
+//!
+//! The DB serializes to a versioned JSON file next to
+//! `BENCH_kernels.json` (default `COSTDB_kernels.json` at the repo
+//! root, overridable via `SPARSETRAIN_COST_DB_PATH`). Writes are atomic
+//! (tmp + rename); loads are tolerant — a truncated, garbage, or
+//! wrong-schema file is silently ignored and the selector falls back to
+//! the analytic model, never panicking. To keep `cargo test` runs from
+//! seeding the per-machine file with debug-build timings, the default
+//! path does file IO **only in release builds** (an explicit
+//! `SPARSETRAIN_COST_DB_PATH` always does IO); debug runs keep a purely
+//! in-memory DB. Under Miri the DB is disabled entirely — the isolated
+//! interpreter rejects both host clocks and file IO.
+//!
+//! ## Knobs
+//!
+//! - `SPARSETRAIN_COST_DB=off|0|false` — kill switch: no DB, pure
+//!   analytic selection, no timing stamps (bit-identical to PR 7).
+//! - `SPARSETRAIN_COST_DB=fresh` — reset: ignore any existing file and
+//!   start empty (the file is overwritten on save).
+//! - `SPARSETRAIN_COST_DB_PATH=<file>` — store location override.
+
+use crate::kernels::{Component, ConvConfig, SkipMode};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Version tag embedded in (and required of) the JSON file. Bump on any
+/// incompatible key/entry change; old files are then ignored, not
+/// migrated.
+pub const SCHEMA: &str = "sparsetrain-costdb-v1";
+
+/// Weight of the newest sample in the exponential moving average.
+pub const EMA_ALPHA: f64 = 0.25;
+
+/// Sparsity is quantized to `round(sparsity * BUCKETS)`, i.e. buckets
+/// 0..=10 at 10% granularity — coarse enough that a key re-warms in a
+/// handful of steps, fine enough to resolve the §5 mode crossovers.
+pub const BUCKETS: u8 = 10;
+
+/// Which measured kernel a cost entry describes. `Gemm` extends the
+/// paper's FWD/BWI/BWW triad with the router's blocked `dot` path so
+/// fully-connected layers share the same store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DbComponent {
+    Fwd,
+    Bwi,
+    Bww,
+    Gemm,
+}
+
+impl DbComponent {
+    pub fn name(self) -> &'static str {
+        match self {
+            DbComponent::Fwd => "FWD",
+            DbComponent::Bwi => "BWI",
+            DbComponent::Bww => "BWW",
+            DbComponent::Gemm => "GEMM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DbComponent> {
+        match s {
+            "FWD" => Some(DbComponent::Fwd),
+            "BWI" => Some(DbComponent::Bwi),
+            "BWW" => Some(DbComponent::Bww),
+            "GEMM" => Some(DbComponent::Gemm),
+            _ => None,
+        }
+    }
+
+    pub fn from_kernel(c: Component) -> DbComponent {
+        match c {
+            Component::Fwd => DbComponent::Fwd,
+            Component::Bwi => DbComponent::Bwi,
+            Component::Bww => DbComponent::Bww,
+        }
+    }
+}
+
+/// Stable string tag for a skip mode, used both in keys and in the JSON
+/// file (mirrors the wallclock bench's mode labels).
+pub fn mode_tag(mode: SkipMode) -> &'static str {
+    match mode {
+        SkipMode::Dense => "Dense",
+        SkipMode::PerLaneBranch => "PerLaneBranch",
+        SkipMode::MaskLoop => "MaskLoop",
+    }
+}
+
+/// Canonical geometry signature for a convolution shape — every field
+/// that changes the kernel's work, nothing that doesn't.
+pub fn geom_sig(cfg: &ConvConfig) -> String {
+    format!(
+        "n{}c{}k{}h{}w{}s{}r{}sp{}so{}ph{}pw{}",
+        cfg.n,
+        cfg.c,
+        cfg.k,
+        cfg.h,
+        cfg.w,
+        cfg.s,
+        cfg.r,
+        cfg.stride_p,
+        cfg.stride_o,
+        cfg.pad_h,
+        cfg.pad_w
+    )
+}
+
+/// Geometry signature for a routed rank-2 GEMM.
+pub fn gemm_sig(m: usize, n: usize, k: usize) -> String {
+    format!("m{m}n{n}k{k}")
+}
+
+/// Quantize a sparsity fraction into a bucket (see [`BUCKETS`]).
+/// Non-finite inputs map to bucket 0 (dense) rather than panicking.
+pub fn sparsity_bucket(sparsity: f64) -> u8 {
+    if !sparsity.is_finite() {
+        return 0;
+    }
+    (sparsity.clamp(0.0, 1.0) * BUCKETS as f64).round() as u8
+}
+
+/// Full lookup key — see the module docs for the rationale behind each
+/// dimension.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CostKey {
+    pub component: DbComponent,
+    pub geom: String,
+    pub bucket: u8,
+    pub threads: usize,
+    pub backend: String,
+    pub mode: String,
+}
+
+impl CostKey {
+    /// Key for a routed convolution execution.
+    pub fn conv(
+        comp: Component,
+        cfg: &ConvConfig,
+        sparsity: f64,
+        threads: usize,
+        backend: &str,
+        mode: SkipMode,
+    ) -> CostKey {
+        CostKey {
+            component: DbComponent::from_kernel(comp),
+            geom: geom_sig(cfg),
+            bucket: sparsity_bucket(sparsity),
+            threads,
+            backend: backend.to_string(),
+            mode: mode_tag(mode).to_string(),
+        }
+    }
+
+    /// Key for a routed GEMM execution. GEMM has no skip modes and no
+    /// sparsity dimension (bucket 0, mode "gemm"): the entry exists for
+    /// observability and future dense-vs-sparse dot policies, not mode
+    /// selection.
+    pub fn gemm(m: usize, n: usize, k: usize, threads: usize, backend: &str) -> CostKey {
+        CostKey {
+            component: DbComponent::Gemm,
+            geom: gemm_sig(m, n, k),
+            bucket: 0,
+            threads,
+            backend: backend.to_string(),
+            mode: "gemm".to_string(),
+        }
+    }
+}
+
+/// One measured cell: EMA over `samples` observations, in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEntry {
+    pub ema_ns: f64,
+    pub samples: u64,
+}
+
+/// How `skip_mode` arrived at its answer — surfaced so tests (and the
+/// train CLI report) can distinguish the paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DbDecision {
+    /// No DB attached (kill switch / Miri): pure analytic model.
+    Analytic,
+    /// Both lazily-explored candidates measured: cheapest measured mode.
+    Hit,
+    /// Key not fully measured yet: the returned mode is the one to
+    /// measure next (analytic choice first, then the other candidate).
+    Miss,
+}
+
+/// The database proper. Thread-safe: the map is behind a mutex (lookups
+/// are rare — once per routed op — and the critical section is tiny),
+/// counters are atomics. Dropping a dirty DB with a path saves it.
+pub struct CostDb {
+    path: Option<PathBuf>,
+    map: Mutex<HashMap<CostKey, CostEntry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    updates: AtomicU64,
+    dirty: AtomicBool,
+}
+
+impl CostDb {
+    /// An empty DB that never touches the filesystem.
+    pub fn in_memory() -> CostDb {
+        CostDb {
+            path: None,
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
+            dirty: AtomicBool::new(false),
+        }
+    }
+
+    /// A DB backed by `path`. With `load`, any existing file is parsed
+    /// (tolerantly: corrupt or wrong-schema content is ignored);
+    /// without, the DB starts empty and overwrites on save (`=fresh`).
+    pub fn at_path(path: PathBuf, load: bool) -> CostDb {
+        let mut db = CostDb::in_memory();
+        if load {
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if let Some(entries) = parse_json(&text) {
+                    let mut map = db.map.lock().unwrap();
+                    for (k, e) in entries {
+                        map.insert(k, e);
+                    }
+                }
+            }
+        }
+        db.path = Some(path);
+        db
+    }
+
+    /// The process-default DB per the environment knobs (module docs).
+    /// Returns `None` when killed (`SPARSETRAIN_COST_DB=off`) or under
+    /// Miri.
+    pub fn from_env() -> Option<Arc<CostDb>> {
+        if cfg!(miri) {
+            return None;
+        }
+        let mode = std::env::var("SPARSETRAIN_COST_DB").unwrap_or_default();
+        if matches!(mode.as_str(), "off" | "0" | "false") {
+            return None;
+        }
+        let fresh = mode == "fresh";
+        let explicit = std::env::var("SPARSETRAIN_COST_DB_PATH").ok().filter(|p| !p.is_empty());
+        // Default-path file IO is release-only so debug `cargo test`
+        // runs never seed the per-machine store with unrepresentative
+        // timings (same rule BENCH_kernels.json follows).
+        let file_io = explicit.is_some() || !cfg!(debug_assertions);
+        let db = if file_io {
+            let path = explicit.map(PathBuf::from).unwrap_or_else(Self::default_path);
+            CostDb::at_path(path, !fresh)
+        } else {
+            CostDb::in_memory()
+        };
+        Some(Arc::new(db))
+    }
+
+    /// `COSTDB_kernels.json` next to `BENCH_kernels.json` at the repo
+    /// root (the crate manifest dir).
+    pub fn default_path() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("COSTDB_kernels.json")
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses, updates)` counters for the CLI report.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.updates.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn lookup(&self, key: &CostKey) -> Option<CostEntry> {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).get(key).copied()
+    }
+
+    /// Fold one measured execution into the EMA for `key`. Non-finite
+    /// or negative durations are dropped.
+    pub fn record(&self, key: CostKey, ns: f64) {
+        if !ns.is_finite() || ns < 0.0 {
+            return;
+        }
+        {
+            let mut map = self.map.lock().unwrap_or_else(|p| p.into_inner());
+            let e = map.entry(key).or_insert(CostEntry { ema_ns: ns, samples: 0 });
+            if e.samples > 0 {
+                e.ema_ns = EMA_ALPHA * ns + (1.0 - EMA_ALPHA) * e.ema_ns;
+            } else {
+                e.ema_ns = ns;
+            }
+            e.samples = e.samples.saturating_add(1);
+        }
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        self.dirty.store(true, Ordering::Relaxed);
+    }
+
+    /// The measured-cost decision for a conv execution (see module docs
+    /// for the exploration policy). `analytic` is the fallback choice
+    /// from the analytic model; the caller is expected to *run* the
+    /// returned mode and [`record`](Self::record) its duration, which
+    /// is what advances a key from cold to warm.
+    pub fn choose_mode(
+        &self,
+        component: DbComponent,
+        geom: &str,
+        bucket: u8,
+        threads: usize,
+        backend: &str,
+        analytic: SkipMode,
+    ) -> (SkipMode, DbDecision) {
+        let key = |mode: SkipMode| CostKey {
+            component,
+            geom: geom.to_string(),
+            bucket,
+            threads,
+            backend: backend.to_string(),
+            mode: mode_tag(mode).to_string(),
+        };
+        let (dense, mask, plb) = {
+            let map = self.map.lock().unwrap_or_else(|p| p.into_inner());
+            (
+                map.get(&key(SkipMode::Dense)).map(|e| e.ema_ns),
+                map.get(&key(SkipMode::MaskLoop)).map(|e| e.ema_ns),
+                map.get(&key(SkipMode::PerLaneBranch)).map(|e| e.ema_ns),
+            )
+        };
+        // Cold key: measure the analytic choice first so the model's
+        // pick is always priced before anything else runs.
+        let analytic_cost = match analytic {
+            SkipMode::Dense => dense,
+            SkipMode::MaskLoop => mask,
+            SkipMode::PerLaneBranch => plb,
+        };
+        if analytic_cost.is_none() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return (analytic, DbDecision::Miss);
+        }
+        // Bounded exploration: price the other branch-free candidate
+        // once. PerLaneBranch is never lazily explored (bulk seeding
+        // only) — its per-lane branches lose on wide SIMD (§5) and the
+        // hot path should not pay to rediscover that per key.
+        if dense.is_none() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return (SkipMode::Dense, DbDecision::Miss);
+        }
+        if mask.is_none() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return (SkipMode::MaskLoop, DbDecision::Miss);
+        }
+        // Warm key: cheapest measured mode, PerLaneBranch included when
+        // the sweep seeded it.
+        let mut best = (SkipMode::Dense, dense.unwrap());
+        let mask = mask.unwrap();
+        if mask < best.1 {
+            best = (SkipMode::MaskLoop, mask);
+        }
+        if let Some(p) = plb {
+            if p < best.1 {
+                best = (SkipMode::PerLaneBranch, p);
+            }
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        (best.0, DbDecision::Hit)
+    }
+
+    /// Serialize the whole DB — schema header plus one entry per line
+    /// (stable order: sorted by the key fields) so diffs and the
+    /// tolerant line-oriented parser both stay simple.
+    pub fn to_json(&self) -> String {
+        let map = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rows: Vec<(String, String)> = map
+            .iter()
+            .map(|(k, e)| {
+                let sort = format!(
+                    "{}|{}|{:03}|{:06}|{}|{}",
+                    k.component.name(),
+                    k.geom,
+                    k.bucket,
+                    k.threads,
+                    k.backend,
+                    k.mode
+                );
+                let line = format!(
+                    "    {{\"component\": \"{}\", \"geom\": \"{}\", \"bucket\": {}, \
+                     \"threads\": {}, \"backend\": \"{}\", \"mode\": \"{}\", \
+                     \"ema_ns\": {:.3}, \"samples\": {}}}",
+                    k.component.name(),
+                    k.geom,
+                    k.bucket,
+                    k.threads,
+                    k.backend,
+                    k.mode,
+                    e.ema_ns,
+                    e.samples
+                );
+                (sort, line)
+            })
+            .collect();
+        drop(map);
+        rows.sort();
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+        out.push_str("  \"entries\": [\n");
+        for (i, (_, line)) in rows.iter().enumerate() {
+            out.push_str(line);
+            out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Atomic save (tmp + rename) to the configured path; a no-op for
+    /// in-memory DBs. Clears the dirty flag on success.
+    pub fn save(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json())?;
+        std::fs::rename(&tmp, path)?;
+        self.dirty.store(false, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+impl Drop for CostDb {
+    fn drop(&mut self) {
+        if self.path.is_some() && self.dirty.load(Ordering::Relaxed) {
+            let _ = self.save();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tolerant line-oriented JSON parsing (no serde in the dependency set)
+// ---------------------------------------------------------------------------
+
+/// Extract a `"name": "value"` string field from one line.
+fn field_str<'a>(line: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\": \"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line.get(start..)?;
+    rest.get(..rest.find('"')?)
+}
+
+/// Extract a `"name": value` numeric field (as raw text) from one line.
+fn field_raw<'a>(line: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line.get(start..)?;
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest.get(..end)?.trim())
+}
+
+/// Parse a serialized DB. Returns `None` when the schema tag is absent
+/// or wrong (stale file from another version — ignore wholesale);
+/// otherwise returns every line that parses cleanly and silently skips
+/// the rest (truncation, bit rot, hand edits). Must never panic: every
+/// step is `Option`-checked, nothing indexes raw.
+fn parse_json(text: &str) -> Option<Vec<(CostKey, CostEntry)>> {
+    if !text.contains(&format!("\"schema\": \"{SCHEMA}\"")) {
+        return None;
+    }
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(component) = field_str(line, "component").and_then(DbComponent::parse) else {
+            continue;
+        };
+        let parsed = (|| {
+            let geom = field_str(line, "geom")?.to_string();
+            let bucket: u8 = field_raw(line, "bucket")?.parse().ok()?;
+            let threads: usize = field_raw(line, "threads")?.parse().ok()?;
+            let backend = field_str(line, "backend")?.to_string();
+            let mode = field_str(line, "mode")?.to_string();
+            let ema_ns: f64 = field_raw(line, "ema_ns")?.parse().ok()?;
+            let samples: u64 = field_raw(line, "samples")?.parse().ok()?;
+            if !ema_ns.is_finite() || ema_ns < 0.0 || samples == 0 || bucket > BUCKETS {
+                return None;
+            }
+            Some((
+                CostKey { component, geom, bucket, threads, backend, mode },
+                CostEntry { ema_ns, samples: samples.max(1) },
+            ))
+        })();
+        if let Some(kv) = parsed {
+            out.push(kv);
+        }
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// Tests (miri_ prefixed: pure in-memory logic, no IO, no clocks — they
+// run in the Miri CI leg)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(mode: SkipMode) -> CostKey {
+        CostKey::conv(Component::Fwd, &ConvConfig::square(1, 16, 16, 8, 3, 1), 0.9, 2, "t", mode)
+    }
+
+    fn choose(db: &CostDb, analytic: SkipMode) -> (SkipMode, DbDecision) {
+        let key = k(SkipMode::Dense);
+        db.choose_mode(key.component, &key.geom, key.bucket, key.threads, &key.backend, analytic)
+    }
+
+    #[test]
+    fn miri_costdb_bucket_edges() {
+        assert_eq!(sparsity_bucket(0.0), 0);
+        assert_eq!(sparsity_bucket(1.0), 10);
+        assert_eq!(sparsity_bucket(0.95), 10);
+        assert_eq!(sparsity_bucket(0.94), 9);
+        assert_eq!(sparsity_bucket(-3.0), 0);
+        assert_eq!(sparsity_bucket(7.0), 10);
+        assert_eq!(sparsity_bucket(f64::NAN), 0);
+    }
+
+    #[test]
+    fn miri_costdb_decision_sequence_cold_to_warm() {
+        let db = CostDb::in_memory();
+        // Cold: analytic choice, Miss.
+        assert_eq!(choose(&db, SkipMode::MaskLoop), (SkipMode::MaskLoop, DbDecision::Miss));
+        db.record(k(SkipMode::MaskLoop), 100.0);
+        // Analytic measured, Dense not: explore Dense, still Miss.
+        assert_eq!(choose(&db, SkipMode::MaskLoop), (SkipMode::Dense, DbDecision::Miss));
+        db.record(k(SkipMode::Dense), 50.0);
+        // Warm: cheapest measured wins, Hit.
+        assert_eq!(choose(&db, SkipMode::MaskLoop), (SkipMode::Dense, DbDecision::Hit));
+        // Bulk-seeded PerLaneBranch can win the argmin but is never the
+        // exploration target.
+        db.record(k(SkipMode::PerLaneBranch), 10.0);
+        assert_eq!(choose(&db, SkipMode::MaskLoop), (SkipMode::PerLaneBranch, DbDecision::Hit));
+        let (hits, misses, updates) = db.counters();
+        assert_eq!((hits, misses, updates), (2, 2, 3));
+    }
+
+    #[test]
+    fn miri_costdb_ema_tracks_drift() {
+        let db = CostDb::in_memory();
+        db.record(k(SkipMode::Dense), 100.0);
+        assert_eq!(db.lookup(&k(SkipMode::Dense)).unwrap().ema_ns, 100.0);
+        db.record(k(SkipMode::Dense), 200.0);
+        let e = db.lookup(&k(SkipMode::Dense)).unwrap();
+        assert_eq!(e.ema_ns, EMA_ALPHA * 200.0 + (1.0 - EMA_ALPHA) * 100.0);
+        assert_eq!(e.samples, 2);
+        // Garbage durations are dropped, not stored.
+        db.record(k(SkipMode::Dense), f64::NAN);
+        db.record(k(SkipMode::Dense), -1.0);
+        assert_eq!(db.lookup(&k(SkipMode::Dense)).unwrap().samples, 2);
+    }
+
+    #[test]
+    fn miri_costdb_json_round_trip() {
+        let db = CostDb::in_memory();
+        db.record(k(SkipMode::Dense), 123.5);
+        db.record(k(SkipMode::MaskLoop), 77.0);
+        db.record(CostKey::gemm(64, 32, 128, 4, "t"), 5.0);
+        let text = db.to_json();
+        let entries = parse_json(&text).expect("schema tag present");
+        assert_eq!(entries.len(), 3);
+        let back = CostDb::in_memory();
+        {
+            let mut map = back.map.lock().unwrap();
+            for (key, e) in entries {
+                map.insert(key, e);
+            }
+        }
+        for key in [k(SkipMode::Dense), k(SkipMode::MaskLoop), CostKey::gemm(64, 32, 128, 4, "t")]
+        {
+            let a = db.lookup(&key).unwrap();
+            let b = back.lookup(&key).unwrap();
+            assert!((a.ema_ns - b.ema_ns).abs() < 1e-3, "{key:?}: {a:?} vs {b:?}");
+            assert_eq!(a.samples, b.samples);
+        }
+    }
+
+    #[test]
+    fn miri_costdb_parser_never_panics_on_garbage() {
+        // Wrong/missing schema: ignored wholesale.
+        assert!(parse_json("").is_none());
+        assert!(parse_json("{\"schema\": \"sparsetrain-costdb-v0\"}").is_none());
+        assert!(parse_json("not json at all \x00\x01").is_none());
+        // Right schema, garbage entries: bad lines skipped, good kept.
+        let db = CostDb::in_memory();
+        db.record(k(SkipMode::Dense), 9.0);
+        let good = db.to_json();
+        let good_line = good.lines().find(|l| l.contains("\"component\"")).unwrap();
+        let text = format!(
+            "{{\n  \"schema\": \"{SCHEMA}\",\n  \"entries\": [\n\
+             {{\"component\": \"FWD\", \"geom\": \"tr\n\
+             {{\"component\": \"NOPE\", \"geom\": \"x\", \"bucket\": 1}},\n\
+             {{\"component\": \"FWD\", \"geom\": \"x\", \"bucket\": 99, \"threads\": 1, \
+               \"backend\": \"t\", \"mode\": \"Dense\", \"ema_ns\": 1.0, \"samples\": 1}},\n\
+             {{\"component\": \"FWD\", \"geom\": \"x\", \"bucket\": 1, \"threads\": 1, \
+               \"backend\": \"t\", \"mode\": \"Dense\", \"ema_ns\": NaN, \"samples\": 1}},\n\
+             {good_line}\n  ]\n}}\n"
+        );
+        let entries = parse_json(&text).expect("schema ok");
+        assert_eq!(entries.len(), 1, "only the intact line survives");
+        assert_eq!(entries[0].0, k(SkipMode::Dense));
+    }
+
+    #[test]
+    fn miri_costdb_empty_serializes_and_parses() {
+        let db = CostDb::in_memory();
+        assert!(db.is_empty());
+        let entries = parse_json(&db.to_json()).unwrap();
+        assert!(entries.is_empty());
+    }
+}

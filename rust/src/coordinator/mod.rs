@@ -1,13 +1,16 @@
 //! The L3 coordinator: schedules the paper's output-parallel row-sweep
 //! tasks across worker threads, selects the best convolution algorithm per
-//! layer (static `combined` policy and the dynamic, profiler-driven variant
-//! §5.3 suggests), and drives the PJRT training loop.
+//! layer (static `combined` policy, the dynamic profiler-driven variant
+//! §5.3 suggests, and the measured-cost database of ISSUE 8), and drives
+//! the PJRT training loop.
 
+pub mod costdb;
 pub mod metrics;
 pub mod scheduler;
 pub mod selector;
 pub mod trainer;
 
+pub use costdb::{CostDb, CostEntry, CostKey, DbDecision};
 pub use metrics::MetricsRegistry;
 pub use scheduler::Scheduler;
 pub use selector::{AlgoPolicy, Selector};

@@ -62,18 +62,118 @@
 //! ([`Scheduler::with_backend`] pins it for parity tests), and since every
 //! backend computes bit-identical fused multiply-adds, the serial-parity
 //! and cross-thread determinism guarantees above are backend-independent.
+//!
+//! **Feedback-driven chunk sizing (ISSUE 8).** Each launch stamps every
+//! chunk's wall time (monotonic clock, disabled under Miri) next to the
+//! long-reported `tasks_per_chunk`; a per-(component, task-count) tuner
+//! doubles the chunks-per-worker multiplier when the slowest chunk
+//! dominates (max/mean > 1.5) and decays it when chunks finish evenly,
+//! bounded at 32×. Because every task owns a disjoint output view, chunk
+//! count can never change numerics — the serial-parity and stats-merge
+//! guarantees above hold for *any* chunking, so adaptation is pure
+//! wall-time tuning.
 
 use crate::kernels::direct::SweepGeom;
 use crate::kernels::regalloc::{plan_bww, plan_fwd};
 use crate::kernels::simd::{self, Backend};
 use crate::kernels::{
-    sparse_bwi, sparse_bww, sparse_fwd, ConvConfig, KernelStats, Scratch, SkipMode,
+    sparse_bwi, sparse_bww, sparse_fwd, Component, ConvConfig, KernelStats, Scratch, SkipMode,
 };
 use crate::tensor::{ActTensor, BatchTiledTensor, FilterTensor};
 use crate::util::threadpool::ThreadPool;
 use crate::V;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Default chunks-per-worker: a few chunks per thread so early-finishing
+/// threads rebalance, without shredding locality.
+const CHUNK_MULT_DEFAULT: usize = 4;
+/// Upper bound for the feedback-driven multiplier — past this, chunk
+/// bookkeeping outweighs any remaining balance win.
+const CHUNK_MULT_MAX: usize = 32;
+/// Max-over-mean chunk-time ratio above which the next launch of the same
+/// shape gets finer chunks.
+const IMBALANCE_SPLIT: f64 = 1.5;
+/// Ratio below which a raised multiplier decays back toward the default.
+const IMBALANCE_RELAX: f64 = 1.1;
+
+/// Feedback-driven chunk sizing (ISSUE 8 satellite): every run already
+/// reports `tasks_per_chunk`, and now per-chunk wall times; when the
+/// slowest chunk dominates (dynamic sparsity makes task cost uneven —
+/// §3.2.2's whole point), the next launch of the *same* (component,
+/// task-count) shape uses more, finer chunks so the pool's dynamic
+/// claiming can rebalance; when chunks finish evenly the multiplier
+/// decays back. Chunk count never affects numerics (each task owns its
+/// output view), so adaptation is pure wall-time tuning.
+struct ChunkTuner {
+    mult: Mutex<HashMap<(u8, usize), usize>>,
+}
+
+impl ChunkTuner {
+    fn new() -> ChunkTuner {
+        ChunkTuner { mult: Mutex::new(HashMap::new()) }
+    }
+
+    fn multiplier(&self, key: (u8, usize)) -> usize {
+        *self.mult.lock().unwrap().get(&key).unwrap_or(&CHUNK_MULT_DEFAULT)
+    }
+
+    fn observe(&self, key: (u8, usize), threads: usize, chunk_ns: &[u64], tasks: &[usize]) {
+        if threads < 2 {
+            return; // single worker: chunking cannot rebalance anything
+        }
+        let Some(imb) = imbalance(chunk_ns, tasks) else { return };
+        let mut map = self.mult.lock().unwrap();
+        let m = map.entry(key).or_insert(CHUNK_MULT_DEFAULT);
+        if imb > IMBALANCE_SPLIT && *m < CHUNK_MULT_MAX {
+            *m *= 2;
+        } else if imb < IMBALANCE_RELAX && *m > CHUNK_MULT_DEFAULT {
+            *m /= 2;
+        }
+    }
+}
+
+/// Max-over-mean across the chunks that actually ran, preferring wall
+/// times and falling back to task counts when no times were captured
+/// (Miri, or a future clockless build). `None` when fewer than two
+/// chunks ran — nothing to balance.
+fn imbalance(chunk_ns: &[u64], tasks: &[usize]) -> Option<f64> {
+    let vals: Vec<f64> = if chunk_ns.iter().any(|&v| v > 0) {
+        chunk_ns.iter().filter(|&&v| v > 0).map(|&v| v as f64).collect()
+    } else {
+        tasks.iter().filter(|&&t| t > 0).map(|&t| t as f64).collect()
+    };
+    if vals.len() < 2 {
+        return None;
+    }
+    let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+    let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+    if mean > 0.0 {
+        Some(max / mean)
+    } else {
+        None
+    }
+}
+
+/// Monotonic per-chunk stamp; disabled under Miri (the isolated
+/// interpreter rejects host clocks), where the tuner then falls back to
+/// task-count balance.
+fn chunk_clock() -> Option<std::time::Instant> {
+    if cfg!(miri) {
+        None
+    } else {
+        Some(std::time::Instant::now())
+    }
+}
+
+fn comp_tag(comp: Component) -> u8 {
+    match comp {
+        Component::Fwd => 0,
+        Component::Bwi => 1,
+        Component::Bww => 2,
+    }
+}
 
 /// A parallel executor for SparseTrain kernels.
 ///
@@ -85,6 +185,7 @@ use std::sync::Mutex;
 pub struct Scheduler {
     pool: ThreadPool,
     backend: Backend,
+    tuner: ChunkTuner,
 }
 
 /// Execution report: merged kernel stats + load-balance info.
@@ -93,22 +194,34 @@ pub struct RunReport {
     pub stats: KernelStats,
     /// Tasks executed per worker chunk (for balance assertions).
     pub tasks_per_chunk: Vec<usize>,
+    /// Wall nanoseconds each chunk spent in its worker closure (zero for
+    /// chunks that never ran, and everywhere under Miri). Feeds the
+    /// chunk-size tuner; exported for balance diagnostics.
+    pub chunk_ns: Vec<u64>,
     pub total_tasks: usize,
 }
 
 impl Scheduler {
     pub fn new(threads: usize) -> Scheduler {
-        Scheduler { pool: ThreadPool::new(threads), backend: simd::dispatch() }
+        Scheduler {
+            pool: ThreadPool::new(threads),
+            backend: simd::dispatch(),
+            tuner: ChunkTuner::new(),
+        }
     }
 
     /// A scheduler sized to the host's available parallelism.
     pub fn with_host_parallelism() -> Scheduler {
-        Scheduler { pool: ThreadPool::with_host_parallelism(), backend: simd::dispatch() }
+        Scheduler {
+            pool: ThreadPool::with_host_parallelism(),
+            backend: simd::dispatch(),
+            tuner: ChunkTuner::new(),
+        }
     }
 
     /// A scheduler pinned to an explicit backend (parity tests, benches).
     pub fn with_backend(threads: usize, backend: Backend) -> Scheduler {
-        Scheduler { pool: ThreadPool::new(threads), backend }
+        Scheduler { pool: ThreadPool::new(threads), backend, tuner: ChunkTuner::new() }
     }
 
     pub fn threads(&self) -> usize {
@@ -148,10 +261,17 @@ impl Scheduler {
         (cfg.k / plan.q) * cfg.c
     }
 
-    /// Default chunk count: a few chunks per worker so early-finishing
-    /// threads rebalance, without shredding locality.
-    fn chunks_for(&self, total: usize) -> usize {
-        (self.pool.threads() * 4).min(total.max(1))
+    /// Chunk count for a launch: the tuned chunks-per-worker multiplier
+    /// for this (component, task-count) shape — starts at
+    /// [`CHUNK_MULT_DEFAULT`], adapted by observed imbalance.
+    fn chunks_for(&self, comp: Component, total: usize) -> usize {
+        (self.pool.threads() * self.tuner.multiplier((comp_tag(comp), total))).min(total.max(1))
+    }
+
+    /// The current chunks-per-worker multiplier for a shape (introspection
+    /// for tests and diagnostics).
+    pub fn chunk_multiplier(&self, comp: Component, total_tasks: usize) -> usize {
+        self.tuner.multiplier((comp_tag(comp), total_tasks))
     }
 
     /// Run SparseTrain FWD with output parallelism. Tasks are `(i, oy, qb)`
@@ -170,19 +290,21 @@ impl Scheduler {
         let geom = SweepGeom::fwd(cfg);
         let bk = self.backend;
         let total = Self::fwd_task_count(cfg);
-        let chunks = self.chunks_for(total);
+        let chunks = self.chunks_for(Component::Fwd, total);
 
         // Split y into one view per task, in scheduler task order.
         let mut views = y.par_row_tiles_mut(plan.q / V);
         debug_assert_eq!(views.len(), total);
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+        let chunk_ns: Vec<AtomicU64> = (0..chunks).map(|_| AtomicU64::new(0)).collect();
 
         self.pool.for_chunk_slices_with(
             &mut views,
             chunks,
             Scratch::new,
             |ci, _start, chunk, scratch| {
+                let t0 = chunk_clock();
                 let mut local = KernelStats::new();
                 for view in chunk.iter_mut() {
                     sparse_fwd::fwd_task(
@@ -191,6 +313,9 @@ impl Scheduler {
                     tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
                 }
                 merged.lock().unwrap().merge(&local);
+                if let Some(t0) = t0 {
+                    chunk_ns[ci].store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
             },
         );
 
@@ -199,11 +324,16 @@ impl Scheduler {
         // filter footprint once after their loops; do the same post-merge.
         stats.filter_bytes_per_sweep =
             stats.filter_bytes_per_sweep.max((cfg.s * cfg.r * plan.q * V * 4) as u64);
-        RunReport {
-            stats,
-            tasks_per_chunk: tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
-            total_tasks: total,
-        }
+        let tasks_per_chunk: Vec<usize> =
+            tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let chunk_ns: Vec<u64> = chunk_ns.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        self.tuner.observe(
+            (comp_tag(Component::Fwd), total),
+            self.pool.threads(),
+            &chunk_ns,
+            &tasks_per_chunk,
+        );
+        RunReport { stats, tasks_per_chunk, chunk_ns, total_tasks: total }
     }
 
     /// Run SparseTrain BWI with output parallelism over `(i, iy, cb)`
@@ -227,19 +357,21 @@ impl Scheduler {
         let taps = sparse_bwi::bwi_col_taps(cfg);
         let bk = self.backend;
         let total = Self::bwi_task_count(cfg);
-        let chunks = self.chunks_for(total);
+        let chunks = self.chunks_for(Component::Bwi, total);
 
         // Split dd into one view per task, in scheduler task order.
         let mut views = dd.par_row_tiles_mut(plan.q / V);
         debug_assert_eq!(views.len(), total);
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+        let chunk_ns: Vec<AtomicU64> = (0..chunks).map(|_| AtomicU64::new(0)).collect();
 
         self.pool.for_chunk_slices_with(
             &mut views,
             chunks,
             Scratch::new,
             |ci, _start, chunk, scratch| {
+                let t0 = chunk_clock();
                 let mut local = KernelStats::new();
                 for view in chunk.iter_mut() {
                     sparse_bwi::bwi_task(
@@ -248,17 +380,25 @@ impl Scheduler {
                     tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
                 }
                 merged.lock().unwrap().merge(&local);
+                if let Some(t0) = t0 {
+                    chunk_ns[ci].store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
             },
         );
 
         let mut stats = merged.into_inner().unwrap();
         stats.filter_bytes_per_sweep =
             stats.filter_bytes_per_sweep.max((cfg.s * cfg.r * plan.q * V * 4) as u64);
-        RunReport {
-            stats,
-            tasks_per_chunk: tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
-            total_tasks: total,
-        }
+        let tasks_per_chunk: Vec<usize> =
+            tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let chunk_ns: Vec<u64> = chunk_ns.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        self.tuner.observe(
+            (comp_tag(Component::Bwi), total),
+            self.pool.threads(),
+            &chunk_ns,
+            &tasks_per_chunk,
+        );
+        RunReport { stats, tasks_per_chunk, chunk_ns, total_tasks: total }
     }
 
     /// Run SparseTrain BWW in parallel over `(qb, c)` tasks — one per
@@ -283,19 +423,21 @@ impl Scheduler {
         let taps = sparse_bww::bww_col_taps(cfg);
         let bk = self.backend;
         let total = Self::bww_task_count(cfg);
-        let chunks = self.chunks_for(total);
+        let chunks = self.chunks_for(Component::Bww, total);
 
         // Split dg into one (qb, c) tile view per task, in task order.
         let mut views = dg.par_qc_tiles_mut(plan.q / V);
         debug_assert_eq!(views.len(), total);
         let merged: Mutex<KernelStats> = Mutex::new(KernelStats::new());
         let tasks_per_chunk: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+        let chunk_ns: Vec<AtomicU64> = (0..chunks).map(|_| AtomicU64::new(0)).collect();
 
         self.pool.for_chunk_slices_with(
             &mut views,
             chunks,
             Scratch::new,
             |ci, _start, chunk, scratch| {
+                let t0 = chunk_clock();
                 let mut local = KernelStats::new();
                 for view in chunk.iter_mut() {
                     sparse_bww::bww_task(
@@ -304,17 +446,25 @@ impl Scheduler {
                     tasks_per_chunk[ci].fetch_add(1, Ordering::Relaxed);
                 }
                 merged.lock().unwrap().merge(&local);
+                if let Some(t0) = t0 {
+                    chunk_ns[ci].store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
             },
         );
 
         let mut stats = merged.into_inner().unwrap();
         stats.filter_bytes_per_sweep =
             stats.filter_bytes_per_sweep.max((cfg.r * plan.q * 4) as u64);
-        RunReport {
-            stats,
-            tasks_per_chunk: tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
-            total_tasks: total,
-        }
+        let tasks_per_chunk: Vec<usize> =
+            tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let chunk_ns: Vec<u64> = chunk_ns.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        self.tuner.observe(
+            (comp_tag(Component::Bww), total),
+            self.pool.threads(),
+            &chunk_ns,
+            &tasks_per_chunk,
+        );
+        RunReport { stats, tasks_per_chunk, chunk_ns, total_tasks: total }
     }
 }
 
@@ -707,5 +857,82 @@ mod tests {
         let report = sched.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
         let nonempty = report.tasks_per_chunk.iter().filter(|&&t| t > 0).count();
         assert!(nonempty > 1, "work not spread: {:?}", report.tasks_per_chunk);
+        assert_eq!(report.chunk_ns.len(), report.tasks_per_chunk.len());
+    }
+
+    // -----------------------------------------------------------------
+    // Chunk-size feedback (ISSUE 8 satellite): deterministic unit tests
+    // on synthetic imbalance observations — no clocks, miri-safe.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn miri_imbalance_math() {
+        // Even chunks → ratio 1.0; one hot chunk → max/mean.
+        assert_eq!(imbalance(&[100, 100, 100, 100], &[1; 4]), Some(1.0));
+        let imb = imbalance(&[100, 100, 100, 700], &[1; 4]).unwrap();
+        assert!((imb - 700.0 / 250.0).abs() < 1e-12);
+        // Zero-ns chunks (never ran) are excluded.
+        assert_eq!(imbalance(&[100, 100, 0, 0], &[1, 1, 0, 0]), Some(1.0));
+        // No times at all (Miri) → task-count fallback.
+        assert_eq!(imbalance(&[0, 0, 0], &[2, 2, 4]), Some(4.0 / (8.0 / 3.0)));
+        // Fewer than two active chunks → nothing to balance.
+        assert_eq!(imbalance(&[100, 0, 0], &[1, 0, 0]), None);
+        assert_eq!(imbalance(&[], &[]), None);
+    }
+
+    #[test]
+    fn miri_chunk_tuner_splits_caps_and_decays() {
+        let t = ChunkTuner::new();
+        let key = (comp_tag(Component::Fwd), 128);
+        assert_eq!(t.multiplier(key), CHUNK_MULT_DEFAULT);
+        // Heavy imbalance doubles the multiplier, up to the cap.
+        let skew = [100u64, 100, 100, 1000];
+        let tasks = [1usize; 4];
+        let mut expect = CHUNK_MULT_DEFAULT;
+        for _ in 0..8 {
+            t.observe(key, 4, &skew, &tasks);
+            expect = (expect * 2).min(CHUNK_MULT_MAX);
+            assert_eq!(t.multiplier(key), expect);
+        }
+        assert_eq!(t.multiplier(key), CHUNK_MULT_MAX);
+        // Even chunks decay it back down to (not below) the default.
+        let even = [100u64; 4];
+        for _ in 0..8 {
+            t.observe(key, 4, &even, &tasks);
+        }
+        assert_eq!(t.multiplier(key), CHUNK_MULT_DEFAULT);
+        // Other keys are untouched.
+        assert_eq!(t.multiplier((comp_tag(Component::Bww), 128)), CHUNK_MULT_DEFAULT);
+        // Single-threaded runs never adapt.
+        t.observe(key, 1, &skew, &tasks);
+        assert_eq!(t.multiplier(key), CHUNK_MULT_DEFAULT);
+        // Mild imbalance (between the thresholds) holds steady.
+        t.observe(key, 4, &[100, 100, 100, 130], &tasks);
+        assert_eq!(t.multiplier(key), CHUNK_MULT_DEFAULT);
+    }
+
+    /// End to end through the scheduler: a run's observed balance feeds
+    /// the *next* launch of the same shape, and whatever chunk count
+    /// results, numerics stay bit-identical (chunking owns disjoint
+    /// views; the invariant the adaptive path must never break).
+    #[test]
+    fn miri_adapted_chunking_keeps_numerics() {
+        let hw = if cfg!(miri) { 3 } else { 6 };
+        let cfg = ConvConfig::square(1, 16, 16, hw, 3, 1);
+        let (d, g) = setup(&cfg, 0.9);
+        let sched = Scheduler::new(2);
+        let mut first = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let r1 = sched.run_fwd(&cfg, &d, &g, &mut first, SkipMode::MaskLoop);
+        // Force the finest chunking and re-run: bit-identical output and
+        // identical merged stats regardless of the multiplier.
+        {
+            let mut m = sched.tuner.mult.lock().unwrap();
+            m.insert((comp_tag(Component::Fwd), r1.total_tasks), CHUNK_MULT_MAX);
+        }
+        let mut second = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        let r2 = sched.run_fwd(&cfg, &d, &g, &mut second, SkipMode::MaskLoop);
+        assert_eq!(first.data(), second.data(), "chunking changed numerics");
+        assert_eq!(r1.stats, r2.stats, "chunking changed merged stats");
+        assert_eq!(r2.tasks_per_chunk.iter().sum::<usize>(), r2.total_tasks);
     }
 }

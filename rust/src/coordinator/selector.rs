@@ -2,12 +2,30 @@
 //! dynamic variant the paper sketches ("profile the sparsity of each layer
 //! at intervals during training and then dynamically select the best
 //! implementation").
+//!
+//! **Measured vs analytic (ISSUE 8).** `skip_mode` serves two masters:
+//! when a [`CostDb`] is attached (`cost_db: Some(..)`, the release-run
+//! default), the decision consults *measured* wall times first —
+//! [`CostDb::choose_mode`] returns the cheapest measured skip mode for
+//! the (component, geometry, sparsity bucket, threads, backend) key, and
+//! only falls back to the analytic [`crate::sim::cost`] model while the
+//! key is cold (reporting [`DbDecision::Miss`] and naming the mode to
+//! measure next). With no DB (`SPARSETRAIN_COST_DB=off`, Miri, or plain
+//! [`Selector::new`]) the decision is the pure analytic model, exactly
+//! the PR 7 behavior ([`DbDecision::Analytic`]). The contract that makes
+//! this safe: the skip modes are mutually bit-identical (proven by
+//! `conv_route_parity.rs`), so the DB may only ever change *wall time*,
+//! never numerics. Everything else the selector does (`select`, `cost`,
+//! `select_dynamic`) remains purely analytic — the DB keys on executed
+//! kernels, not on algorithm families the router cannot run.
 
-use crate::kernels::{winograd, onebyone, Component, ConvConfig, SkipMode};
+use crate::coordinator::costdb::{self, CostDb, DbDecision};
+use crate::kernels::{simd, winograd, onebyone, Component, ConvConfig, SkipMode};
 use crate::sim::{Algorithm, Machine};
 use crate::sparsity::SparsityProfiler;
 use crate::tensor::ActTensor;
 use crate::util::prng::Xorshift;
+use std::sync::Arc;
 
 /// Selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,12 +65,26 @@ pub struct Selector {
     pub threads: usize,
     /// Seed for synthesizing pattern tensors at a given sparsity.
     pub seed: u64,
+    /// Measured-cost database consulted first by [`Selector::skip_mode`]
+    /// (ISSUE 8). `None` — kill switch, Miri, or a plain constructor —
+    /// means pure analytic selection, the PR 7 behavior.
+    pub cost_db: Option<Arc<CostDb>>,
+    /// SIMD backend tag used in measured-cost keys: the *dispatched*
+    /// backend actually executing (env override included), not the
+    /// modeled `machine`.
+    pub backend: &'static str,
 }
 
 impl Selector {
     pub fn new(machine: Machine) -> Selector {
         let threads = machine.cores;
-        Selector { machine, threads, seed: 0xA11CE }
+        Selector {
+            machine,
+            threads,
+            seed: 0xA11CE,
+            cost_db: None,
+            backend: simd::dispatch().name(),
+        }
     }
 
     /// A selector whose cost estimates assume `threads` active cores —
@@ -143,17 +175,54 @@ impl Selector {
         }
     }
 
-    /// Skip mode for a kernel-routed convolution launch (ISSUE 5): run the
-    /// combined policy at the measured operand sparsity — when the cost
-    /// model (at this selector's thread count) says the sparsity machinery
-    /// pays for itself, use the Algorithm-3 mask loop; otherwise run the
-    /// Dense loop, which is the same SIMD row-sweep without zero checks.
-    /// Either way the launch stays parallel and bit-deterministic.
-    pub fn skip_mode(&self, cfg: &ConvConfig, comp: Component, sparsity: f64) -> SkipMode {
+    /// Attach (or detach) a measured-cost database, builder-style.
+    pub fn with_cost_db(mut self, db: Option<Arc<CostDb>>) -> Selector {
+        self.cost_db = db;
+        self
+    }
+
+    /// The analytic-only skip mode (ISSUE 5; also the off-DB fallback):
+    /// run the combined policy at the measured operand sparsity — when
+    /// the cost model (at this selector's thread count) says the sparsity
+    /// machinery pays for itself, use the Algorithm-3 mask loop;
+    /// otherwise run the Dense loop, which is the same SIMD row-sweep
+    /// without zero checks. Either way the launch stays parallel and
+    /// bit-deterministic.
+    pub fn skip_mode_analytic(&self, cfg: &ConvConfig, comp: Component, sparsity: f64) -> SkipMode {
         match self.select(AlgoPolicy::Combined, cfg, comp, sparsity, true) {
             Algorithm::SparseTrain => SkipMode::MaskLoop,
             _ => SkipMode::Dense,
         }
+    }
+
+    /// Skip mode plus how it was decided (measured-vs-analytic contract
+    /// in the module docs). The decision is a pure function of the DB
+    /// contents and the analytic choice — querying does not mutate the
+    /// map, so query-then-execute sees a stable answer within a step.
+    pub fn skip_mode_decision(
+        &self,
+        cfg: &ConvConfig,
+        comp: Component,
+        sparsity: f64,
+    ) -> (SkipMode, DbDecision) {
+        let analytic = self.skip_mode_analytic(cfg, comp, sparsity);
+        match &self.cost_db {
+            None => (analytic, DbDecision::Analytic),
+            Some(db) => db.choose_mode(
+                costdb::DbComponent::from_kernel(comp),
+                &costdb::geom_sig(cfg),
+                costdb::sparsity_bucket(sparsity),
+                self.threads,
+                self.backend,
+                analytic,
+            ),
+        }
+    }
+
+    /// Skip mode for a kernel-routed convolution launch: measured-cost
+    /// DB first, analytic model off-DB (see [`Self::skip_mode_decision`]).
+    pub fn skip_mode(&self, cfg: &ConvConfig, comp: Component, sparsity: f64) -> SkipMode {
+        self.skip_mode_decision(cfg, comp, sparsity).0
     }
 
     /// Dynamic selection from live profiler data (recent-window sparsity),
@@ -233,6 +302,39 @@ mod tests {
         let s = sel();
         assert_eq!(s.skip_mode(&cfg, Component::Fwd, 0.9), SkipMode::MaskLoop);
         assert_eq!(s.skip_mode(&cfg, Component::Fwd, 0.0), SkipMode::Dense);
+    }
+
+    #[test]
+    fn miri_skip_mode_consults_cost_db_first() {
+        use crate::coordinator::costdb::CostKey;
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let db = Arc::new(CostDb::in_memory());
+        let s = Selector::with_threads(Machine::skylake_x(), 2).with_cost_db(Some(db.clone()));
+        // Cold key: analytic choice (MaskLoop at 0.9), reported as a miss.
+        assert_eq!(
+            s.skip_mode_decision(&cfg, Component::Fwd, 0.9),
+            (SkipMode::MaskLoop, DbDecision::Miss)
+        );
+        db.record(CostKey::conv(Component::Fwd, &cfg, 0.9, 2, s.backend, SkipMode::MaskLoop), 100.0);
+        // Analytic priced → explore the other candidate once.
+        assert_eq!(
+            s.skip_mode_decision(&cfg, Component::Fwd, 0.9),
+            (SkipMode::Dense, DbDecision::Miss)
+        );
+        db.record(CostKey::conv(Component::Fwd, &cfg, 0.9, 2, s.backend, SkipMode::Dense), 10.0);
+        // Warm: the measurement overrides the analytic model.
+        assert_eq!(
+            s.skip_mode_decision(&cfg, Component::Fwd, 0.9),
+            (SkipMode::Dense, DbDecision::Hit)
+        );
+        // skip_mode is the decision's mode.
+        assert_eq!(s.skip_mode(&cfg, Component::Fwd, 0.9), SkipMode::Dense);
+        // No DB (kill switch / plain constructor): pure analytic.
+        let off = Selector::with_threads(Machine::skylake_x(), 2);
+        assert_eq!(
+            off.skip_mode_decision(&cfg, Component::Fwd, 0.9),
+            (SkipMode::MaskLoop, DbDecision::Analytic)
+        );
     }
 
     #[test]

@@ -13,7 +13,13 @@
 //! blocked parallel GEMM, and its recognized elementwise chains as fused
 //! single passes — all through the persistent-thread-pool scheduler
 //! ([`TrainerConfig::threads`] wide), with the selector picking the conv
-//! skip mode from measured sparsity.
+//! skip mode from measured sparsity. Since ISSUE 8 that selection is
+//! additionally measured-cost-driven: the router's default
+//! [`crate::coordinator::CostDb`] times every routed conv/GEMM and the
+//! selector prefers the cheapest measured mode per (geometry, sparsity
+//! bucket, threads, backend) key (`SPARSETRAIN_COST_DB=off` restores
+//! pure analytic selection). The `train` CLI prints the DB's
+//! hit/miss/update counters after the run.
 
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::kernels::layers::synthetic_batch;

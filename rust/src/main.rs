@@ -42,7 +42,11 @@ COMMANDS
                       Prints per-op-kind and, with --net, per-layer
                       routed/fallback counters;
                       SPARSETRAIN_CONV_ROUTE=off / SPARSETRAIN_OP_ROUTE=off
-                      disable routing classes.)
+                      disable routing classes. The measured-cost DB
+                      (COSTDB_kernels.json) drives skip-mode selection;
+                      SPARSETRAIN_COST_DB=off reverts to the analytic
+                      model, =fresh resets, SPARSETRAIN_COST_DB_PATH
+                      relocates the store.)
   plan               register plan  [--k N] [--r N]
 
 OPTIONS
@@ -196,6 +200,20 @@ fn main() {
                                 s.ew_routed + s.ew_fallback,
                                 router.threads()
                             );
+                            match router.cost_db() {
+                                Some(db) => {
+                                    let (hits, misses, updates) = db.counters();
+                                    println!(
+                                        "costdb: {hits} hits, {misses} misses, \
+                                         {updates} updates ({} entries{})",
+                                        db.len(),
+                                        db.path()
+                                            .map(|p| format!("; {}", p.display()))
+                                            .unwrap_or_default()
+                                    );
+                                }
+                                None => println!("costdb: off (analytic selector)"),
+                            }
                             let per_layer = router.conv_layer_stats();
                             if !per_layer.is_empty() {
                                 println!("per-conv routing (instr: routed/fallback):");

@@ -15,6 +15,8 @@
 //! | SGD `subtract(w, multiply(splat(lr), g))` | single fused pass, mul-then-sub roundings preserved | **bit-identical** |
 //! | `select(compare(z, splat, GT), t, splat)` (ReLU backward) | single fused pass | **bit-identical** |
 //! | `reduce` with a `bin(p0, p1)` body (sums, max) | row-major fold without index decompose | **bit-identical** |
+//! | unary (`exponential`, `log`, `negate`) | parallel elementwise pass over the pool ([`xla::eval::un_f32`] per element) | **bit-identical** |
+//! | `convert` to f32 (f32 copy, s32/pred cast, fused `convert(iota)` index fill) | parallel elementwise pass | **bit-identical** |
 //!
 //! The three convolution forms (unchanged from ISSUE 5):
 //!
@@ -44,7 +46,19 @@
 //! router construction); [`OpRouter::stats`] exposes per-kind
 //! routed/fallback/fused counters so silent fallback regressions show up
 //! in the `train` CLI output.
+//!
+//! **Measured-cost autotuning (ISSUE 8).** When a
+//! [`crate::coordinator::CostDb`] is attached (the default —
+//! `SPARSETRAIN_COST_DB=off` detaches it), every routed conv and GEMM is
+//! wrapped in monotonic-clock stamps and its wall time recorded under the
+//! (component, geometry, sparsity bucket, threads, backend, mode) key;
+//! the selector's `skip_mode` then consults those measurements first and
+//! falls back to the analytic model while a key is cold. Because the
+//! skip modes are mutually bit-identical, the DB changes wall time only,
+//! never numerics — with the kill switch (or under Miri, where the DB is
+//! always absent) the router behaves exactly as before the DB existed.
 
+use crate::coordinator::costdb::{CostDb, CostKey};
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::selector::Selector;
 use crate::kernels::gemm;
@@ -56,8 +70,9 @@ use crate::V;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use xla::eval::bin_f32;
-use xla::hlo::{BinKind, CmpDir, Op};
+use std::time::Instant;
+use xla::eval::{bin_f32, un_f32};
+use xla::hlo::{BinKind, CmpDir, Op, UnaryKind};
 
 /// The three SparseTrain-executable convolution forms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,6 +138,10 @@ pub struct RouteStats {
     pub ew_fallback: usize,
 }
 
+/// Minimum output elements before an elementwise route spreads across the
+/// pool; below this a serial in-place pass beats the launch handoff.
+const PAR_EW_MIN: usize = 4096;
+
 /// How one instruction was served (internal tri-state behind the
 /// elementwise counters).
 enum Served {
@@ -168,19 +187,38 @@ pub struct OpRouter {
     /// conv has an entry, the selector sees this instead of the checked
     /// operand's live zero count.
     profiled: Mutex<BTreeMap<String, f64>>,
+    /// Measured-cost DB shared with the selector (ISSUE 8). `None` = kill
+    /// switch or Miri: pure analytic selection, no timing stamps.
+    cost_db: Option<Arc<CostDb>>,
 }
 
 impl OpRouter {
-    /// A router running `threads` workers (`0` = host parallelism).
+    /// A router running `threads` workers (`0` = host parallelism), with
+    /// the process-default measured-cost DB ([`CostDb::from_env`]).
     pub fn new(threads: usize) -> OpRouter {
+        Self::with_cost_db(threads, CostDb::from_env())
+    }
+
+    /// A router with an explicit measured-cost DB (or none — the
+    /// kill-switch behavior, regardless of environment). Tests use this
+    /// to pin each selector decision path deterministically.
+    pub fn with_cost_db(threads: usize, cost_db: Option<Arc<CostDb>>) -> OpRouter {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
+        // Miri has no host clock: force the analytic path so hooked runs
+        // never stamp time (and records never happen).
+        let cost_db = if cfg!(miri) { None } else { cost_db };
+        let sched = Scheduler::new(threads);
+        let mut selector =
+            Selector::with_threads(Machine::skylake_x(), threads).with_cost_db(cost_db.clone());
+        // Key on the backend actually scheduled (env overrides included).
+        selector.backend = sched.backend().name();
         OpRouter {
-            sched: Scheduler::new(threads),
-            selector: Selector::with_threads(Machine::skylake_x(), threads),
+            sched,
+            selector,
             route_convs: routing_enabled(),
             route_ops: op_routing_enabled(),
             routed: AtomicUsize::new(0),
@@ -192,11 +230,18 @@ impl OpRouter {
             ew_fallback: AtomicUsize::new(0),
             conv_by_instr: Mutex::new(BTreeMap::new()),
             profiled: Mutex::new(BTreeMap::new()),
+            cost_db,
         }
     }
 
     pub fn threads(&self) -> usize {
         self.sched.threads()
+    }
+
+    /// The attached measured-cost DB, if any (for the CLI report and the
+    /// bench harness).
+    pub fn cost_db(&self) -> Option<&Arc<CostDb>> {
+        self.cost_db.as_ref()
     }
 
     /// Convolutions served by the kernel stack so far.
@@ -322,6 +367,10 @@ impl OpRouter {
                 ok
             }
             Op::Binary(kind) => self.tally_ew(self.route_binary(call, *kind, out)),
+            // Raw `iota` is s32-only, so the f32 hook never sees it; its
+            // work is served by the fused `convert(iota)` path below.
+            Op::Unary(kind) => self.tally_ew(self.route_unary(call, *kind, out)),
+            Op::Convert => self.tally_ew(self.route_convert(call, out)),
             Op::Select => self.tally_ew(self.route_select(call, out)),
             Op::Broadcast { dims } => self.tally_ew(route_broadcast(call, dims, out)),
             Op::Reduce { dims, to_apply } => {
@@ -363,12 +412,21 @@ impl OpRouter {
         };
         out.fill(0.0);
         let bk = self.sched.backend();
+        let t0 = self.cost_clock();
         if m <= gemm::MB {
             // One panel: the parallel path would enqueue a single task —
             // pay the pool handoff only when there is work to spread.
             gemm::gemm_with(bk, m, n, k, a_ref, b_ref, out);
         } else {
             gemm::gemm_parallel(self.sched.pool(), bk, m, n, k, a_ref, b_ref, out);
+        }
+        if let (Some(t0), Some(db)) = (t0, self.cost_db.as_ref()) {
+            // GEMM has no mode choice — the entry is pure observability
+            // (and the seed for future dense-vs-sparse dot policies).
+            db.record(
+                CostKey::gemm(m, n, k, self.sched.threads(), bk.name()),
+                t0.elapsed().as_nanos() as f64,
+            );
         }
         true
     }
@@ -499,12 +557,143 @@ impl OpRouter {
         Served::Fused
     }
 
-    /// Skip mode for one call: the thread-count-aware selector's combined
-    /// policy at the measured operand sparsity, mapped onto the kernel's
-    /// skip machinery (SparseTrain wins → Algorithm-3 mask loop, anything
-    /// else → the Dense loop — still SIMD and still parallel).
+    /// Run `f(start_offset, chunk)` over disjoint chunks of `out` — on
+    /// the scheduler pool for large outputs, serially otherwise (below
+    /// [`PAR_EW_MIN`] the pool handoff costs more than it saves). `f`
+    /// must fill its chunk completely. Both paths apply the identical
+    /// per-element map, so the partition cannot change numerics.
+    fn par_elementwise<F>(&self, out: &mut [f32], f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Send + Sync,
+    {
+        let threads = self.sched.threads();
+        if out.len() < PAR_EW_MIN || threads < 2 {
+            f(0, out);
+        } else {
+            let chunks = threads * 4;
+            self.sched.pool().for_chunk_slices(out, chunks, |_ci, start, chunk| f(start, chunk));
+        }
+    }
+
+    /// Elementwise unaries (`exponential`, `log`, `negate`): the naive
+    /// evaluator's [`un_f32`] per element, spread across the pool —
+    /// bit-identical (same scalar libm call per element, any partition).
+    fn route_unary(&self, call: &xla::OpCall<'_>, kind: UnaryKind, out: &mut [f32]) -> Served {
+        let Some((x, _)) = call.operand_f32(0) else {
+            return Served::Declined;
+        };
+        if x.len() != out.len() {
+            return Served::Declined;
+        }
+        self.par_elementwise(out, |start, chunk| {
+            for (o, &u) in chunk.iter_mut().zip(&x[start..start + chunk.len()]) {
+                *o = un_f32(kind, u);
+            }
+        });
+        Served::Routed
+    }
+
+    /// `convert` to f32: parallel f32 copies and s32/pred casts, plus the
+    /// fused `convert(iota)` index fill. Raw `iota` is s32-only (shape
+    /// inference rejects anything else), so the f32 hook can never serve
+    /// it directly — instead, when the operand's defining instruction is
+    /// `iota`, the route skips the materialized s32 buffer entirely and
+    /// fills `out[i] = ((i / stride) % extent) as i32 as f32`, exactly
+    /// the naive `eval_iota`-then-convert chain. All paths reproduce the
+    /// naive evaluator bit for bit (same per-element cast, any
+    /// partition).
+    fn route_convert(&self, call: &xla::OpCall<'_>, out: &mut [f32]) -> Served {
+        if let Some(op) = call.operand_instr(0) {
+            if let Op::Iota { dim } = op.op {
+                let dims = call.out_dims();
+                if dim < dims.len() && out.len() == dims.iter().product::<usize>() {
+                    let extent = dims[dim];
+                    let stride: usize = dims[dim + 1..].iter().product();
+                    if extent > 0 && stride > 0 {
+                        self.par_elementwise(out, |start, chunk| {
+                            for (j, o) in chunk.iter_mut().enumerate() {
+                                *o = (((start + j) / stride) % extent) as i32 as f32;
+                            }
+                        });
+                        return Served::Routed;
+                    }
+                }
+            }
+        }
+        if let Some((x, _)) = call.operand_f32(0) {
+            if x.len() != out.len() {
+                return Served::Declined;
+            }
+            self.par_elementwise(out, |start, chunk| {
+                chunk.copy_from_slice(&x[start..start + chunk.len()]);
+            });
+            return Served::Routed;
+        }
+        if let Some((x, _)) = call.operand_s32(0) {
+            if x.len() != out.len() {
+                return Served::Declined;
+            }
+            self.par_elementwise(out, |start, chunk| {
+                for (o, &v) in chunk.iter_mut().zip(&x[start..start + chunk.len()]) {
+                    *o = v as f32;
+                }
+            });
+            return Served::Routed;
+        }
+        if let Some((x, _)) = call.operand_pred(0) {
+            if x.len() != out.len() {
+                return Served::Declined;
+            }
+            self.par_elementwise(out, |start, chunk| {
+                for (o, &v) in chunk.iter_mut().zip(&x[start..start + chunk.len()]) {
+                    *o = if v { 1.0 } else { 0.0 };
+                }
+            });
+            return Served::Routed;
+        }
+        Served::Declined
+    }
+
+    /// Skip mode for one call: measured-cost DB first (cheapest measured
+    /// mode for this key), analytic model while the key is cold or the DB
+    /// is detached — see [`Selector::skip_mode_decision`]. Either way the
+    /// launch stays parallel and the modes are mutually bit-identical.
     fn skip_mode(&self, cfg: &ConvConfig, comp: Component, sparsity: f64) -> SkipMode {
         self.selector.skip_mode(cfg, comp, sparsity)
+    }
+
+    /// Monotonic stamp for lazy DB population — `None` when no DB is
+    /// attached, so the no-DB hot path pays zero clock reads.
+    fn cost_clock(&self) -> Option<Instant> {
+        if self.cost_db.is_some() && !cfg!(miri) {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Fold one timed conv execution into the DB (no-op without a stamp).
+    fn record_conv_cost(
+        &self,
+        t0: Option<Instant>,
+        comp: Component,
+        cfg: &ConvConfig,
+        sparsity: f64,
+        mode: SkipMode,
+    ) {
+        if let (Some(t0), Some(db)) = (t0, self.cost_db.as_ref()) {
+            db.record(
+                CostKey::conv(
+                    comp,
+                    cfg,
+                    sparsity,
+                    self.sched.threads(),
+                    self.sched.backend().name(),
+                    mode,
+                ),
+                t0.elapsed().as_nanos() as f64,
+            );
+        }
     }
 
     /// Try to execute one interpreter convolution on the kernel stack.
@@ -587,8 +776,11 @@ impl OpRouter {
         let d = ActTensor::from_nchw(cfg.n, cfg.c, cfg.h, cfg.w, call.lhs);
         let g = FilterTensor::from_kcsr(cfg.k, cfg.c, cfg.s, cfg.r, call.rhs);
         let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
-        let mode = self.skip_mode(&cfg, Component::Fwd, self.sparsity_for(instr, d.sparsity()));
+        let sparsity = self.sparsity_for(instr, d.sparsity());
+        let mode = self.skip_mode(&cfg, Component::Fwd, sparsity);
+        let t0 = self.cost_clock();
         self.sched.run_fwd(&cfg, &d, &g, &mut y, mode);
+        self.record_conv_cost(t0, Component::Fwd, &cfg, sparsity, mode);
         Some(y.to_nchw())
     }
 
@@ -646,8 +838,11 @@ impl OpRouter {
             }
         }
         let mut dd = ActTensor::zeros(cfg.n, cfg.c, cfg.h, cfg.w);
-        let mode = self.skip_mode(&cfg, Component::Bwi, self.sparsity_for(instr, dy.sparsity()));
+        let sparsity = self.sparsity_for(instr, dy.sparsity());
+        let mode = self.skip_mode(&cfg, Component::Bwi, sparsity);
+        let t0 = self.cost_clock();
         self.sched.run_bwi(&cfg, &dy, &gt, &mut dd, mode);
+        self.record_conv_cost(t0, Component::Bwi, &cfg, sparsity, mode);
         Some(dd.to_nchw())
     }
 
@@ -690,8 +885,11 @@ impl OpRouter {
         let d = BatchTiledTensor::from_act(&d_act);
         let dy = ActTensor::from_nchw(cfg.n, cfg.k, w.size[0], w.size[1], call.rhs);
         let mut dg = FilterTensor::zeros(cfg.k, cfg.c, cfg.s, cfg.r);
-        let mode = self.skip_mode(&cfg, Component::Bww, self.sparsity_for(instr, d.sparsity()));
+        let sparsity = self.sparsity_for(instr, d.sparsity());
+        let mode = self.skip_mode(&cfg, Component::Bww, sparsity);
+        let t0 = self.cost_clock();
         self.sched.run_bww(&cfg, &d, &dy, &mut dg, mode);
+        self.record_conv_cost(t0, Component::Bww, &cfg, sparsity, mode);
 
         // Unpack dG[k,c,s,r] into the conv's [C,K,S,R] output layout.
         let mut out = vec![0.0f32; cfg.c * cfg.k * cfg.s * cfg.r];
@@ -962,6 +1160,12 @@ mod tests {
         let window = Window { size: [3, 3], stride: [1, 1], pad_lo: [1, 1], pad_hi: [1, 1] };
         let sp = spec("bf01_oi01->bf01");
         let router = OpRouter::new(2);
+        // Query the mode BEFORE routing: with a cost DB attached (env
+        // opt-in), routing records a sample, and a later query may flip
+        // to an unexplored mode. All modes are mutually bit-identical,
+        // but the serial re-check below must use the mode the routed
+        // call actually ran.
+        let mode = router.skip_mode(&cfg, Component::Fwd, d.sparsity());
         let out = router
             .route(&xla::ConvCall {
                 window: &window,
@@ -980,7 +1184,6 @@ mod tests {
         // and it is bit-identical to the serial sparse kernel at the
         // selector's chosen mode (scheduler serial-parity, re-checked
         // through the routing path)
-        let mode = router.skip_mode(&cfg, Component::Fwd, d.sparsity());
         let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
         let mut st = KernelStats::new();
         crate::kernels::sparse_fwd::fwd(&cfg, &d, &g, &mut y, mode, &mut st);

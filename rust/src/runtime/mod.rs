@@ -54,6 +54,24 @@
 //! each layer's recent-mean profiled sparsity before every step, and the
 //! selector plans skip modes from that signal instead of the per-call
 //! live zero count.
+//!
+//! **Measured-cost autotuning (ISSUE 8).** The router attaches a
+//! persistent per-machine cost database ([`crate::coordinator::CostDb`],
+//! `COSTDB_kernels.json` next to the bench baselines): every routed conv
+//! and GEMM is timed with monotonic-clock stamps and folded into an EMA
+//! keyed by (component, geometry, sparsity bucket, threads, SIMD
+//! backend, mode), and the selector consults those measurements before
+//! its analytic model — cold keys fall back to the analytic answer, so a
+//! missing or corrupt DB only costs speed, never correctness (all skip
+//! modes are mutually bit-identical). `SPARSETRAIN_COST_DB=off` detaches
+//! the DB entirely; `=fresh` ignores any on-disk file;
+//! `SPARSETRAIN_COST_DB_PATH` relocates it. The scheduler independently
+//! feeds each sweep's per-chunk wall times into its chunk tuner so
+//! imbalanced geometries split finer on the next call. New in the same
+//! PR:
+//! unary (`exponential`/`log`/`negate`) and `convert`-to-f32 (including
+//! a fused `convert(iota)` index fill) route as parallel elementwise
+//! passes, bit-identical to the naive evaluator.
 
 pub mod artifacts;
 pub mod executor;

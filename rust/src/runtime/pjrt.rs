@@ -63,9 +63,29 @@ impl Runtime {
     /// class is enabled; the per-class kill switches are honored inside
     /// [`OpRouter::route_op`].
     pub fn cpu_with_threads<P: AsRef<Path>>(artifacts_dir: P, threads: usize) -> Result<Runtime> {
+        Self::cpu_with_router(artifacts_dir, || OpRouter::new(threads))
+    }
+
+    /// [`Runtime::cpu_with_threads`] with an explicit cost database
+    /// (`None` pins the analytic selector) instead of the
+    /// `SPARSETRAIN_COST_DB` env default — the lever the wallclock bench
+    /// uses to put analytic and measured selector rows side by side in one
+    /// process.
+    pub fn cpu_with_cost_db<P: AsRef<Path>>(
+        artifacts_dir: P,
+        threads: usize,
+        cost_db: Option<Arc<crate::coordinator::CostDb>>,
+    ) -> Result<Runtime> {
+        Self::cpu_with_router(artifacts_dir, || OpRouter::with_cost_db(threads, cost_db))
+    }
+
+    fn cpu_with_router<P: AsRef<Path>>(
+        artifacts_dir: P,
+        make: impl FnOnce() -> OpRouter,
+    ) -> Result<Runtime> {
         let mut client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let router = if executor::routing_enabled() || executor::op_routing_enabled() {
-            let router = Arc::new(OpRouter::new(threads));
+            let router = Arc::new(make());
             client.set_op_executor(executor::hook(Arc::clone(&router)));
             Some(router)
         } else {

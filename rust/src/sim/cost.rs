@@ -17,6 +17,13 @@
 //!
 //! Wall time = max(core-bound share, L2 share, DRAM) — reported with the
 //! full breakdown so benches can show *why* a kernel wins.
+//!
+//! Since ISSUE 8 this model is also the **fallback tier** of the runtime
+//! skip-mode decision: [`crate::coordinator::Selector`] consults the
+//! measured-cost database ([`crate::coordinator::CostDb`]) first and
+//! prices a mode analytically only while the key is cold or the DB is
+//! detached — so the constants here decide the *first* execution of each
+//! shape, and measurements take over from the second.
 
 use super::branch::mispredict_cycles;
 use super::machine::Machine;

@@ -238,6 +238,48 @@ impl<'a> OpCall<'a> {
         self.value_f32(self.operand_idx(k)?)
     }
 
+    /// The live s32 buffer (and dims) of the value at instruction `idx` —
+    /// the same contract as [`value_f32`](Self::value_f32), for `s32`
+    /// values (e.g. a hook serving `convert` from an integer operand).
+    pub fn value_s32(&self, idx: usize) -> Option<(&'a [i32], &'a [usize])> {
+        let Slot::Single(v) = self.slots.get(idx)? else {
+            return None;
+        };
+        let Buf::S32(buf) = &v.buf else {
+            return None;
+        };
+        if buf.len() != v.shape.elements() {
+            return None;
+        }
+        Some((buf.as_slice(), v.shape.dims.as_slice()))
+    }
+
+    /// The s32 buffer (and dims) of the `k`-th operand.
+    pub fn operand_s32(&self, k: usize) -> Option<(&'a [i32], &'a [usize])> {
+        self.value_s32(self.operand_idx(k)?)
+    }
+
+    /// The live pred buffer (and dims) of the value at instruction `idx` —
+    /// the same contract as [`value_f32`](Self::value_f32), for `pred`
+    /// values.
+    pub fn value_pred(&self, idx: usize) -> Option<(&'a [bool], &'a [usize])> {
+        let Slot::Single(v) = self.slots.get(idx)? else {
+            return None;
+        };
+        let Buf::Pred(buf) = &v.buf else {
+            return None;
+        };
+        if buf.len() != v.shape.elements() {
+            return None;
+        }
+        Some((buf.as_slice(), v.shape.dims.as_slice()))
+    }
+
+    /// The pred buffer (and dims) of the `k`-th operand.
+    pub fn operand_pred(&self, k: usize) -> Option<(&'a [bool], &'a [usize])> {
+        self.value_pred(self.operand_idx(k)?)
+    }
+
     /// When computation `to_apply` is a plain two-parameter binary fold
     /// body — `root = bin(param0, param1)` exactly, matching the fold
     /// `acc = bin(acc, elem)` the interpreter applies in row-major operand
@@ -358,7 +400,10 @@ pub fn bin_f32(kind: BinKind, a: f32, b: f32) -> f32 {
     }
 }
 
-fn un_f32(kind: UnaryKind, a: f32) -> f32 {
+/// The interpreter's elementwise unary semantics — public (like
+/// [`bin_f32`]) so an external [`OpExecutor`] can reproduce them bit for
+/// bit.
+pub fn un_f32(kind: UnaryKind, a: f32) -> f32 {
     match kind {
         UnaryKind::Neg => -a,
         UnaryKind::Exp => a.exp(),
