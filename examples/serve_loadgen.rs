@@ -1,0 +1,111 @@
+//! Serving-latency demo: the batched sparse-inference front end under
+//! synthetic open-loop load (ISSUE 9).
+//!
+//! Spawns the [`coordinator::serve`] server over the routed predict
+//! ladder, replays a seeded Poisson arrival schedule against it, and
+//! prints p50/p95/p99 latency, throughput and the batch-size histogram
+//! per scenario — the same rig as `sparsetrain serve`, kept as an example
+//! so `cargo run --example` users can poke rates and batching knobs
+//! without the CLI's smoke-gating.
+//!
+//! ```bash
+//! cargo run --release --example serve_loadgen
+//! cargo run --release --example serve_loadgen -- --rate 2000 --requests 1000 --max-batch 16
+//! cargo run --release --example serve_loadgen -- --scenario wide64 --deadline-us 500
+//! ```
+
+use sparsetrain::bench::loadgen::{
+    self, run_serve_bench, scenario_by_name, wallclock_report, ArrivalKind, ServeBenchConfig,
+};
+use sparsetrain::coordinator::serve::ServeConfig;
+use sparsetrain::util::cli::Args;
+
+const USAGE: &str = "\
+serve_loadgen — open-loop load against the batching predict server
+
+USAGE: cargo run --release --example serve_loadgen -- [options]
+
+  --rate RPS         mean arrival rate (default 400)
+  --requests N       requests per scenario (default 400)
+  --max-batch N      batch-size cap / top ladder rung (default 8)
+  --deadline-us N    max queueing delay before an under-full batch closes
+                     (default 2000)
+  --depth N          bounded-queue shed limit (default 64)
+  --threads N        op-router worker threads (default 2)
+  --seed N           arrival/input/weight seed (default 42)
+  --scenario NAME    paper | hires32 | wide64 | all (default all)
+  --out FILE         also write wallclock-v4 serve rows here (optional)";
+
+fn main() {
+    let args = Args::from_env(
+        &[
+            "rate",
+            "requests",
+            "max-batch",
+            "deadline-us",
+            "depth",
+            "threads",
+            "seed",
+            "scenario",
+            "out",
+        ],
+        &[],
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    });
+    let die = |e: String| -> ! {
+        eprintln!("error: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    };
+    let rate = args.get_f64("rate", 400.0).unwrap_or_else(|e| die(e));
+    let requests = args.get_usize("requests", 400).unwrap_or_else(|e| die(e));
+    let max_batch = args.get_usize("max-batch", 8).unwrap_or_else(|e| die(e));
+    let deadline_us = args.get_usize("deadline-us", 2000).unwrap_or_else(|e| die(e));
+    let depth = args.get_usize("depth", 64).unwrap_or_else(|e| die(e));
+    let threads = args.get_usize("threads", 2).unwrap_or_else(|e| die(e));
+    let seed = args.get_usize("seed", 42).unwrap_or_else(|e| die(e)) as u64;
+    if !(rate > 0.0 && rate.is_finite()) || requests == 0 || max_batch == 0 || depth == 0 {
+        die("--rate must be positive; --requests/--max-batch/--depth at least 1".to_string());
+    }
+    let scenario = args.get_or("scenario", "all");
+    let scs = if scenario == "all" {
+        loadgen::scenarios()
+    } else {
+        match scenario_by_name(scenario) {
+            Some(sc) => vec![sc],
+            None => die(format!("unknown --scenario '{scenario}'")),
+        }
+    };
+
+    let cfg = ServeBenchConfig {
+        rate_rps: rate,
+        requests,
+        seed,
+        serve: ServeConfig {
+            max_batch,
+            max_delay_ns: deadline_us as u64 * 1_000,
+            queue_depth: depth,
+        },
+        threads,
+        arrivals: ArrivalKind::Poisson,
+    };
+    println!(
+        "== serve loadgen: {} scenario(s), {requests} req @ {rate} rps, \
+         max-batch {max_batch}, deadline {deadline_us} µs, depth {depth} ==",
+        scs.len()
+    );
+    let reports = run_serve_bench(&scs, &cfg).unwrap_or_else(|e| {
+        eprintln!("serve bench failed: {e:#}");
+        std::process::exit(1);
+    });
+    if let Some(out) = args.get("out") {
+        let report = wallclock_report(&reports);
+        if let Err(e) = report.write_json(std::path::Path::new(out)) {
+            eprintln!("writing {out} failed: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {} serve rows ({}) to {out}", reports.len(), loadgen::schema());
+    }
+}

@@ -1,0 +1,489 @@
+//! Open-loop synthetic load generator for the serving front end
+//! (ISSUE 9) → `component: "serve"` rows in `BENCH_serve.json`.
+//!
+//! Drives [`crate::coordinator::serve::Server`] the way a latency bench
+//! should be driven: **open loop** — arrivals follow a precomputed
+//! schedule (seeded Poisson or uniform inter-arrival gaps,
+//! [`arrival_offsets`]) and are *never* gated on earlier replies, so
+//! queueing delay under overload is measured instead of hidden
+//! (closed-loop generators famously under-report tail latency). The
+//! whole schedule is a pure function of `(rate, requests, seed, kind)`:
+//! CI replays the exact same arrival process every run, and the only
+//! nondeterminism left in a report is the machine's actual speed.
+//!
+//! Latency is measured on the **same [`Clock`] the server batches on**
+//! (one shared [`MonotonicClock`]): a request's latency is the server's
+//! batch-completion stamp minus the generator's send stamp, so clock
+//! skew between generator and server cannot exist by construction. The
+//! deterministic *logic* tests live in `rust/tests/serve.rs` on the
+//! virtual clock; this module is the wall-clock measurement rig.
+//!
+//! Scenarios pair the paper geometry with zoo-inspired variants
+//! ([`scenarios`]): a higher-resolution input and a wider-channel net,
+//! so batching policy is exercised across distinct compute/latency
+//! ratios. Reports ([`LoadReport`]) carry p50/p95/p99 latency,
+//! throughput, and the batch-size histogram, and serialize as
+//! `component: "serve"` rows in the wallclock v4 schema
+//! ([`crate::bench::wallclock::ServeExtra`]).
+
+use crate::bench::wallclock::{
+    build_profile, ServeExtra, WallclockRecord, WallclockReport, SCHEMA,
+};
+use crate::coordinator::costdb::CostDb;
+use crate::coordinator::serve::{
+    Clock, MonotonicClock, Nanos, PredictExecutor, ServeConfig, ServeReply, ServeRequest, Server,
+};
+use crate::kernels::layers::synthetic_batch;
+use crate::kernels::simd;
+use crate::runtime::hlo_builder::Geometry;
+use crate::util::prng::Xorshift;
+use crate::util::stats::percentile;
+use anyhow::Result;
+use std::sync::{mpsc, Arc};
+
+/// One serving workload: a name plus the model geometry to compile the
+/// predict ladder for (`n` is ignored — the server picks batch sizes).
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub geometry: Geometry,
+}
+
+/// The mixed zoo-net geometry set: the paper model plus a
+/// higher-resolution and a wider-channel variant, so the batch policy
+/// sees distinct compute-per-sample profiles.
+pub fn scenarios() -> Vec<Scenario> {
+    let paper = Geometry::paper();
+    vec![
+        Scenario { name: "paper", geometry: paper },
+        Scenario { name: "hires32", geometry: Geometry { hw: 32, ..paper } },
+        Scenario { name: "wide64", geometry: Geometry { c1: 64, c2: 64, ..paper } },
+    ]
+}
+
+pub fn scenario_by_name(name: &str) -> Option<Scenario> {
+    scenarios().into_iter().find(|s| s.name == name)
+}
+
+/// Shape of the synthetic arrival process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Exponential inter-arrival gaps (memoryless — the standard
+    /// serving-bench arrival model; produces natural burstiness).
+    Poisson,
+    /// Fixed gaps at exactly the configured rate (worst case for
+    /// deadline-closed batches: arrivals never cluster).
+    Uniform,
+}
+
+/// The deterministic arrival schedule: nanosecond offsets from bench
+/// start, one per request, non-decreasing. Pure in `(rate, requests,
+/// seed, kind)` — same inputs, same schedule, on every machine.
+pub fn arrival_offsets(
+    rate_rps: f64,
+    requests: usize,
+    seed: u64,
+    kind: ArrivalKind,
+) -> Vec<Nanos> {
+    assert!(rate_rps > 0.0 && rate_rps.is_finite(), "arrival rate must be positive");
+    let mean_gap_ns = 1e9 / rate_rps;
+    let mut rng = Xorshift::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        out.push(t as Nanos);
+        t += match kind {
+            ArrivalKind::Uniform => mean_gap_ns,
+            // Inverse-CDF exponential; 1 - u ∈ (0, 1] keeps ln() finite.
+            ArrivalKind::Poisson => -mean_gap_ns * (1.0 - rng.next_f64()).ln(),
+        };
+    }
+    out
+}
+
+/// Load-generator configuration for one scenario run.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeBenchConfig {
+    /// Mean arrival rate, requests per second.
+    pub rate_rps: f64,
+    /// Total requests to submit.
+    pub requests: usize,
+    /// Seeds the arrival schedule, the synthetic inputs, and (xored)
+    /// the served model's weights.
+    pub seed: u64,
+    pub serve: ServeConfig,
+    /// Worker threads for the op router's scheduler pool.
+    pub threads: usize,
+    pub arrivals: ArrivalKind,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        ServeBenchConfig {
+            rate_rps: 400.0,
+            requests: 400,
+            seed: 42,
+            serve: ServeConfig::default(),
+            threads: 2,
+            arrivals: ArrivalKind::Poisson,
+        }
+    }
+}
+
+/// The measured outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub scenario: String,
+    pub threads: usize,
+    /// Batch-size policy in effect: `"measured"` (warm-capable cost DB
+    /// attached to the router) or `"static"`.
+    pub selector: &'static str,
+    /// Requests submitted (accepted + rejected).
+    pub requests: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// Per-completed-request latency (send stamp → batch completion
+    /// stamp, shared clock), nanoseconds.
+    pub latencies_ns: Vec<f64>,
+    /// Wall time from first send to full drain.
+    pub wall_ns: Nanos,
+    pub batch_hist: Vec<(usize, usize)>,
+}
+
+impl LoadReport {
+    pub fn completed(&self) -> usize {
+        self.latencies_ns.len()
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        percentile(&self.latencies_ns, 50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&self.latencies_ns, 95.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        percentile(&self.latencies_ns, 99.0)
+    }
+
+    /// Completed requests per second of wall time.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.completed() as f64 * 1e9 / self.wall_ns as f64
+    }
+
+    /// This run as a wallclock v4 `component: "serve"` row.
+    pub fn to_record(&self) -> WallclockRecord {
+        WallclockRecord {
+            layer: self.scenario.clone(),
+            rs: 3,
+            component: "serve",
+            mode: "batched",
+            selector: self.selector,
+            sparsity: 0.0,
+            threads: self.threads,
+            median_ns: self.p50_ns(),
+            gflops: 0.0,
+            speedup_vs_direct1: 1.0,
+            speedup_vs_dense_same_threads: 1.0,
+            serve: Some(ServeExtra {
+                p50_ns: self.p50_ns(),
+                p95_ns: self.p95_ns(),
+                p99_ns: self.p99_ns(),
+                throughput_rps: self.throughput_rps(),
+                requests: self.requests,
+                rejected: self.rejected,
+                batch_hist: self.batch_hist.clone(),
+            }),
+        }
+    }
+
+    pub fn print(&self) {
+        let ms = |ns: f64| ns / 1e6;
+        let hist: Vec<String> =
+            self.batch_hist.iter().map(|(b, n)| format!("{b}:{n}")).collect();
+        println!(
+            "{:<10} t={} sel={:<8} {:>5} req ({} rej)  p50 {:>8.3} ms  p95 {:>8.3} ms  \
+             p99 {:>8.3} ms  {:>8.1} req/s  batches [{}]",
+            self.scenario,
+            self.threads,
+            self.selector,
+            self.requests,
+            self.rejected,
+            ms(self.p50_ns()),
+            ms(self.p95_ns()),
+            ms(self.p99_ns()),
+            self.throughput_rps(),
+            hist.join(" ")
+        );
+    }
+}
+
+/// The batch policy label for the current process environment — mirrors
+/// what [`PredictExecutor::policy`] will report once built: `"measured"`
+/// only when routing is on *and* the cost DB is not killed.
+fn selector_label() -> &'static str {
+    let routing = crate::runtime::executor::routing_enabled()
+        || crate::runtime::executor::op_routing_enabled();
+    if routing && CostDb::from_env().is_some() {
+        "measured"
+    } else {
+        "static"
+    }
+}
+
+/// Run one scenario: spawn the server, replay the arrival schedule open
+/// loop, drain, and collect per-request latencies. Errors if the server
+/// died early or any accepted request went unanswered (the
+/// drained-shutdown contract).
+pub fn run_scenario(sc: &Scenario, cfg: &ServeBenchConfig) -> Result<LoadReport> {
+    let clock: Arc<dyn Clock> = Arc::new(MonotonicClock::new());
+    let g = sc.geometry;
+    let (max_batch, threads) = (cfg.serve.max_batch, cfg.threads);
+    let exec_seed = cfg.seed ^ 0x5EED;
+    let server = Server::spawn(cfg.serve, Arc::clone(&clock), move || {
+        PredictExecutor::new(g, max_batch, threads, exec_seed)
+    });
+    let tx = server.handle();
+    let offsets = arrival_offsets(cfg.rate_rps, cfg.requests, cfg.seed, cfg.arrivals);
+    let mut rng = Xorshift::new(cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+    let mut pending = Vec::with_capacity(cfg.requests);
+    let t_start = clock.now();
+    for &off in &offsets {
+        // Open loop: pace to the schedule, never to replies.
+        let target = t_start + off;
+        let now = clock.now();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_nanos(target - now));
+        }
+        let (x, _) = synthetic_batch(&mut rng, 1, g.c_in, g.hw, g.classes);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let sent_at = clock.now();
+        if tx.send(ServeRequest { input: x.to_nchw(), reply: reply_tx }).is_err() {
+            drop(tx);
+            server.shutdown()?; // surface the executor's error
+            anyhow::bail!("serve thread exited before the schedule finished");
+        }
+        pending.push((sent_at, reply_rx));
+    }
+    drop(tx);
+    let stats = server.shutdown()?;
+    let wall_ns = clock.now().saturating_sub(t_start);
+
+    let mut latencies_ns = Vec::with_capacity(pending.len());
+    let mut rejected = 0usize;
+    for (i, (sent_at, reply_rx)) in pending.iter().enumerate() {
+        match reply_rx.try_recv() {
+            Ok(ServeReply::Done(p)) => {
+                latencies_ns.push(p.completed_at.saturating_sub(*sent_at) as f64);
+            }
+            Ok(ServeReply::Rejected { .. }) => rejected += 1,
+            Err(_) => anyhow::bail!("request {i} got no reply after drained shutdown"),
+        }
+    }
+    anyhow::ensure!(
+        rejected as u64 == stats.rejected && latencies_ns.len() as u64 == stats.completed,
+        "reply tally (done {}, rejected {rejected}) disagrees with server stats {stats:?}",
+        latencies_ns.len()
+    );
+    Ok(LoadReport {
+        scenario: sc.name.to_string(),
+        threads: cfg.threads,
+        selector: selector_label(),
+        requests: cfg.requests,
+        accepted: stats.accepted as usize,
+        rejected,
+        latencies_ns,
+        wall_ns,
+        batch_hist: stats.batch_hist(),
+    })
+}
+
+/// Run every scenario in order, printing each report line.
+pub fn run_serve_bench(scs: &[Scenario], cfg: &ServeBenchConfig) -> Result<Vec<LoadReport>> {
+    let mut out = Vec::with_capacity(scs.len());
+    for sc in scs {
+        let report = run_scenario(sc, cfg)?;
+        report.print();
+        out.push(report);
+    }
+    Ok(out)
+}
+
+/// Wrap serve reports in the wallclock v4 envelope for `BENCH_serve.json`.
+pub fn wallclock_report(reports: &[LoadReport]) -> WallclockReport {
+    WallclockReport {
+        backend: simd::dispatch().name(),
+        profile: build_profile(),
+        threads_available: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        records: reports.iter().map(|r| r.to_record()).collect(),
+    }
+}
+
+/// The CI smoke gate: at a low configured rate with a deep queue, a
+/// healthy server rejects nothing, completes everything, and posts
+/// finite tail latency. Returns one message per violation (empty =
+/// pass); machine *speed* is deliberately not gated — only invariants
+/// that hold on any machine.
+pub fn smoke_violations(reports: &[LoadReport]) -> Vec<String> {
+    let mut out = Vec::new();
+    if reports.is_empty() {
+        out.push("no scenarios ran".to_string());
+    }
+    for r in reports {
+        if r.rejected != 0 {
+            out.push(format!("{}: {} requests rejected at smoke rate", r.scenario, r.rejected));
+        }
+        if r.completed() + r.rejected != r.requests {
+            out.push(format!(
+                "{}: {} completed + {} rejected != {} submitted",
+                r.scenario,
+                r.completed(),
+                r.rejected,
+                r.requests
+            ));
+        }
+        if !(r.throughput_rps() > 0.0) {
+            out.push(format!("{}: throughput {} not positive", r.scenario, r.throughput_rps()));
+        }
+        let p99 = r.p99_ns();
+        if !p99.is_finite() || p99 <= 0.0 {
+            out.push(format!("{}: p99 {} not finite/positive", r.scenario, p99));
+        }
+    }
+    out
+}
+
+/// The schema tag serve reports are written under (re-exported so the
+/// CLI can print it without importing wallclock directly).
+pub fn schema() -> &'static str {
+    SCHEMA
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::wallclock::parse_serve_rows;
+
+    // ---- percentile goldens (the latency reporter's math, pinned) ----
+
+    #[test]
+    fn miri_percentile_small_sample_goldens() {
+        // n = 1: every percentile is the sample.
+        assert_eq!(percentile(&[42.0], 50.0), 42.0);
+        assert_eq!(percentile(&[42.0], 99.0), 42.0);
+        // n = 10, values 10..=100: rank = (p/100)·(n−1), interpolated.
+        let v: Vec<f64> = (1..=10).map(|i| (i * 10) as f64).collect();
+        assert!((percentile(&v, 50.0) - 55.0).abs() < 1e-9, "p50 interpolates 50|60");
+        assert!((percentile(&v, 95.0) - 95.5).abs() < 1e-9, "p95 = 90·0.45 + 100·0.55");
+        assert!((percentile(&v, 99.0) - 99.1).abs() < 1e-9, "p99 = 90·0.09 + 100·0.91");
+        assert_eq!(percentile(&v, 0.0), 10.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+    }
+
+    #[test]
+    fn miri_percentile_duplicates_and_empty() {
+        // Duplicate-heavy small sample: interpolation crosses the jump.
+        let v = [5.0, 5.0, 5.0, 9.0];
+        assert_eq!(percentile(&v, 50.0), 5.0);
+        assert!((percentile(&v, 99.0) - 8.88).abs() < 1e-9, "p99 = 5·0.03 + 9·0.97");
+        // All-equal: every percentile is that value.
+        assert_eq!(percentile(&[7.0; 5], 99.0), 7.0);
+        // Empty: defined as 0.0, which smoke_violations rejects as a
+        // non-positive p99 rather than letting it read as "fast".
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        // Unsorted input is sorted internally.
+        assert_eq!(percentile(&[9.0, 5.0, 5.0, 5.0], 50.0), 5.0);
+    }
+
+    // ---- arrival schedule determinism ----
+
+    #[test]
+    fn miri_arrivals_are_deterministic_and_monotone() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Uniform] {
+            let a = arrival_offsets(1000.0, 50, 7, kind);
+            let b = arrival_offsets(1000.0, 50, 7, kind);
+            assert_eq!(a, b, "same seed, same schedule ({kind:?})");
+            assert_eq!(a.len(), 50);
+            assert_eq!(a[0], 0, "first arrival at t=0");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "non-decreasing ({kind:?})");
+        }
+        let a = arrival_offsets(1000.0, 50, 7, ArrivalKind::Poisson);
+        let c = arrival_offsets(1000.0, 50, 8, ArrivalKind::Poisson);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn miri_uniform_arrivals_hit_exact_rate() {
+        // 1000 rps → exactly 1 ms gaps.
+        let a = arrival_offsets(1000.0, 4, 0, ArrivalKind::Uniform);
+        assert_eq!(a, vec![0, 1_000_000, 2_000_000, 3_000_000]);
+    }
+
+    #[test]
+    fn miri_poisson_mean_gap_tracks_rate() {
+        // Long-run mean gap ≈ 1/rate (law of large numbers; generous
+        // tolerance keeps this deterministic-seed test robust).
+        let a = arrival_offsets(10_000.0, 4000, 3, ArrivalKind::Poisson);
+        let mean_gap = *a.last().unwrap() as f64 / (a.len() - 1) as f64;
+        let expect = 1e9 / 10_000.0;
+        assert!(
+            (mean_gap - expect).abs() < expect * 0.2,
+            "mean gap {mean_gap} vs expected {expect}"
+        );
+    }
+
+    // ---- smoke gate + record plumbing ----
+
+    fn report(rejected: usize, latencies: Vec<f64>) -> LoadReport {
+        let requests = latencies.len() + rejected;
+        LoadReport {
+            scenario: "paper".to_string(),
+            threads: 2,
+            selector: "static",
+            requests,
+            accepted: latencies.len(),
+            rejected,
+            latencies_ns: latencies,
+            wall_ns: 1_000_000_000,
+            batch_hist: vec![(1, 2), (8, 1)],
+        }
+    }
+
+    #[test]
+    fn miri_smoke_violations_gate() {
+        let healthy = report(0, vec![1000.0, 2000.0, 3000.0]);
+        assert!(smoke_violations(&[healthy]).is_empty());
+        assert_eq!(smoke_violations(&[]), vec!["no scenarios ran".to_string()]);
+        let rejected = report(2, vec![1000.0]);
+        assert!(smoke_violations(&[rejected]).iter().any(|m| m.contains("rejected")));
+        // Zero completions: p99 = 0.0 and throughput 0 both trip.
+        let empty = report(0, Vec::new());
+        let v = smoke_violations(&[empty]);
+        assert!(v.iter().any(|m| m.contains("throughput")));
+        assert!(v.iter().any(|m| m.contains("p99")));
+        // A lost reply shows up as completed + rejected != submitted.
+        let mut lost = report(0, vec![1000.0]);
+        lost.requests = 2;
+        assert!(smoke_violations(&[lost]).iter().any(|m| m.contains("submitted")));
+    }
+
+    #[test]
+    fn miri_load_report_serializes_as_v4_serve_row() {
+        let r = report(1, vec![1000.0, 2000.0, 4000.0]);
+        let json = wallclock_report(&[r.clone()]).to_json();
+        assert!(json.contains(&format!("\"schema\": \"{}\"", schema())));
+        let rows = parse_serve_rows(&json);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].layer, "paper");
+        assert_eq!(rows[0].extra.requests, 4);
+        assert_eq!(rows[0].extra.rejected, 1);
+        assert_eq!(rows[0].extra.batch_hist, vec![(1, 2), (8, 1)]);
+        assert_eq!(rows[0].extra.p50_ns, 2000.0);
+        // throughput: 3 completed over exactly 1 s of wall time
+        assert!((rows[0].extra.throughput_rps - 3.0).abs() < 1e-9);
+    }
+}

@@ -3,9 +3,11 @@
 //! Used by every target in `rust/benches/`. Provides warmup, adaptive
 //! iteration counts, outlier-trimmed summaries, and a `black_box` to defeat
 //! dead-code elimination. [`wallclock`] layers the real-kernel wall-clock
-//! sweep (→ `BENCH_kernels.json`) on top of it.
+//! sweep (→ `BENCH_kernels.json`) on top of it; [`loadgen`] drives the
+//! serving front end open loop (→ `BENCH_serve.json`).
 
 pub mod experiments;
+pub mod loadgen;
 pub mod wallclock;
 
 use crate::util::stats::Summary;

@@ -73,8 +73,12 @@ use std::sync::Arc;
 /// The report schema version. v2 (ISSUE 5) added the pre-transposed dense
 /// BWI baseline rows (`mode: "direct_pre"`) and the end-to-end
 /// `trainer_step` rows; v3 (ISSUE 8) adds the per-record `selector` field
-/// ("none" / "analytic" / "measured") and the zoo-net trainer pair.
-pub const SCHEMA: &str = "sparsetrain-wallclock-v3";
+/// ("none" / "analytic" / "measured") and the zoo-net trainer pair; v4
+/// (ISSUE 9) adds optional serving-latency fields on `component: "serve"`
+/// rows ([`ServeExtra`]: p50/p95/p99 latency, throughput, request and
+/// reject counts, batch-size histogram) emitted by the
+/// [`crate::bench::loadgen`] load generator.
+pub const SCHEMA: &str = "sparsetrain-wallclock-v4";
 
 /// Untimed steps run before timing a `selector: "measured"` trainer row:
 /// enough for every per-step conv key to go cold → explored → warm (the
@@ -183,6 +187,26 @@ pub struct WallclockRecord {
     pub gflops: f64,
     pub speedup_vs_direct1: f64,
     pub speedup_vs_dense_same_threads: f64,
+    /// Serving-latency extension (schema v4): present exactly on
+    /// `component: "serve"` rows, `None` on every kernel/trainer row.
+    pub serve: Option<ServeExtra>,
+}
+
+/// The v4 serving fields carried by `component: "serve"` rows — tail
+/// latency, throughput, and the batch-size histogram from one
+/// [`crate::bench::loadgen`] scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeExtra {
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub throughput_rps: f64,
+    /// Requests submitted by the generator (accepted + rejected).
+    pub requests: usize,
+    /// Requests shed by the bounded queue.
+    pub rejected: usize,
+    /// `(batch size, batches executed)` ascending by size.
+    pub batch_hist: Vec<(usize, usize)>,
 }
 
 /// The full report: detected backend + all records.
@@ -501,6 +525,7 @@ fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec
         gflops: flops / naive_ns,
         speedup_vs_direct1: 1.0,
         speedup_vs_dense_same_threads: 1.0,
+        serve: None,
     });
     for &t in threads {
         for variant in [SelectorVariant::Analytic, SelectorVariant::Measured] {
@@ -526,6 +551,7 @@ fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec
                 gflops: flops / ns,
                 speedup_vs_direct1: naive_ns / ns,
                 speedup_vs_dense_same_threads: naive_ns / ns,
+                serve: None,
             });
         }
     }
@@ -637,6 +663,7 @@ fn net_trainer_step_records(bcfg: &BenchConfig, records: &mut Vec<WallclockRecor
             gflops: 0.0,
             speedup_vs_direct1: analytic_ns / ns,
             speedup_vs_dense_same_threads: analytic_ns / ns,
+            serve: None,
         });
     }
 }
@@ -670,6 +697,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                 gflops: flops / direct_ns,
                 speedup_vs_direct1: 1.0,
                 speedup_vs_dense_same_threads: 1.0,
+                serve: None,
             });
 
             // Fair dense-BWI baseline (ISSUE 5 satellite): the
@@ -704,6 +732,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                     gflops: flops / pre_ns,
                     speedup_vs_direct1: direct_ns / pre_ns,
                     speedup_vs_dense_same_threads: 1.0,
+                    serve: None,
                 });
             }
 
@@ -743,6 +772,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                             gflops: flops / ns,
                             speedup_vs_direct1: direct_ns / ns,
                             speedup_vs_dense_same_threads: dense_same_ns / ns,
+                            serve: None,
                         });
                     }
                 }
@@ -784,7 +814,7 @@ impl WallclockReport {
                  \"selector\": \"{}\", \
                  \"sparsity\": {:.2}, \"threads\": {}, \"median_ns\": {:.1}, \
                  \"gflops\": {:.3}, \"speedup_vs_direct1\": {:.3}, \
-                 \"speedup_vs_dense_same_threads\": {:.3}}}{}\n",
+                 \"speedup_vs_dense_same_threads\": {:.3}",
                 r.layer,
                 r.rs,
                 r.component,
@@ -796,8 +826,26 @@ impl WallclockReport {
                 r.gflops,
                 r.speedup_vs_direct1,
                 r.speedup_vs_dense_same_threads,
-                if i + 1 < self.records.len() { "," } else { "" }
             ));
+            // v4: serve rows append their latency/throughput fields on the
+            // same line so the report stays one record per line.
+            if let Some(s) = &r.serve {
+                let hist: Vec<String> =
+                    s.batch_hist.iter().map(|(b, n)| format!("\"{b}\": {n}")).collect();
+                out.push_str(&format!(
+                    ", \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"p99_ns\": {:.1}, \
+                     \"throughput_rps\": {:.3}, \"requests\": {}, \"rejected\": {}, \
+                     \"batch_hist\": {{{}}}",
+                    s.p50_ns,
+                    s.p95_ns,
+                    s.p99_ns,
+                    s.throughput_rps,
+                    s.requests,
+                    s.rejected,
+                    hist.join(", ")
+                ));
+            }
+            out.push_str(if i + 1 < self.records.len() { "},\n" } else { "}\n" });
         }
         out.push_str("  ]\n}\n");
         out
@@ -877,6 +925,91 @@ impl WallclockReport {
     }
 }
 
+/// One parsed `component: "serve"` row from a v4 report — what CI and
+/// offline analysis read back out of `BENCH_serve.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRow {
+    pub layer: String,
+    pub selector: String,
+    pub threads: usize,
+    pub median_ns: f64,
+    pub extra: ServeExtra,
+}
+
+/// Extract a `"name": "value"` string field from one record line.
+fn row_str<'a>(line: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\": \"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line.get(start..)?;
+    rest.get(..rest.find('"')?)
+}
+
+/// Extract a `"name": value` numeric field (as raw text) from one line.
+fn row_raw<'a>(line: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line.get(start..)?;
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest.get(..end)?.trim())
+}
+
+/// Parse the inline `"batch_hist": {"1": 2, "8": 5}` object.
+fn row_hist(line: &str) -> Option<Vec<(usize, usize)>> {
+    let pat = "\"batch_hist\": {";
+    let start = line.find(pat)? + pat.len();
+    let rest = line.get(start..)?;
+    let body = rest.get(..rest.find('}')?)?;
+    let mut out = Vec::new();
+    for pair in body.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        let (k, v) = pair.split_once(':')?;
+        let b: usize = k.trim().trim_matches('"').parse().ok()?;
+        let n: usize = v.trim().parse().ok()?;
+        out.push((b, n));
+    }
+    Some(out)
+}
+
+/// Read every `component: "serve"` row back out of a serialized v4
+/// report. Same tolerance contract as the cost-DB parser: lines that
+/// fail to parse are skipped, never panicked on; a non-v4 report (no
+/// schema tag) yields an empty vec.
+pub fn parse_serve_rows(json: &str) -> Vec<ServeRow> {
+    if !json.contains(&format!("\"schema\": \"{SCHEMA}\"")) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for line in json.lines() {
+        if row_str(line, "component") != Some("serve") {
+            continue;
+        }
+        let parsed = (|| {
+            Some(ServeRow {
+                layer: row_str(line, "layer")?.to_string(),
+                selector: row_str(line, "selector")?.to_string(),
+                threads: row_raw(line, "threads")?.parse().ok()?,
+                median_ns: row_raw(line, "median_ns")?.parse().ok()?,
+                extra: ServeExtra {
+                    p50_ns: row_raw(line, "p50_ns")?.parse().ok()?,
+                    p95_ns: row_raw(line, "p95_ns")?.parse().ok()?,
+                    p99_ns: row_raw(line, "p99_ns")?.parse().ok()?,
+                    throughput_rps: row_raw(line, "throughput_rps")?.parse().ok()?,
+                    requests: row_raw(line, "requests")?.parse().ok()?,
+                    rejected: row_raw(line, "rejected")?.parse().ok()?,
+                    batch_hist: row_hist(line)?,
+                },
+            })
+        })();
+        if let Some(row) = parsed {
+            out.push(row);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -894,6 +1027,7 @@ mod tests {
             gflops: 1.0,
             speedup_vs_direct1: 1.0,
             speedup_vs_dense_same_threads: 1.0,
+            serve: None,
         }
     }
 
@@ -961,6 +1095,67 @@ mod tests {
             ],
         };
         assert_eq!(report.measured_vs_analytic(), vec![("paper".to_string(), 2, 2.0)]);
+    }
+
+    /// v4 serve rows survive a serialize → parse round trip bit-exactly
+    /// (every numeric is chosen exactly representable at the emitter's
+    /// printed precision), kernel rows stay serve-free, and the parser
+    /// ignores non-v4 input wholesale.
+    #[test]
+    fn miri_serve_rows_round_trip_through_v4_json() {
+        let extra = ServeExtra {
+            p50_ns: 1200.5,
+            p95_ns: 850_000.1,
+            p99_ns: 999_999.9,
+            throughput_rps: 1234.125,
+            requests: 400,
+            rejected: 7,
+            batch_hist: vec![(1, 3), (4, 2), (8, 40)],
+        };
+        let serve_row = WallclockRecord {
+            layer: "paper".to_string(),
+            rs: 3,
+            component: "serve",
+            mode: "batched",
+            selector: "measured",
+            sparsity: 0.0,
+            threads: 2,
+            median_ns: 1200.5,
+            gflops: 0.0,
+            speedup_vs_direct1: 1.0,
+            speedup_vs_dense_same_threads: 1.0,
+            serve: Some(extra.clone()),
+        };
+        let report = WallclockReport {
+            backend: "scalar",
+            profile: "debug",
+            threads_available: 2,
+            records: vec![trainer_row("naive-interp", 1, 800.0), serve_row],
+        };
+        let json = report.to_json();
+        assert_eq!(json.matches("\"layer\"").count(), 2, "one line per record");
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "inline hist object keeps braces balanced"
+        );
+        let rows = parse_serve_rows(&json);
+        assert_eq!(rows.len(), 1, "kernel rows are not serve rows");
+        assert_eq!(
+            rows[0],
+            ServeRow {
+                layer: "paper".to_string(),
+                selector: "measured".to_string(),
+                threads: 2,
+                median_ns: 1200.5,
+                extra,
+            }
+        );
+        // Wrong schema tag: ignored wholesale.
+        assert!(parse_serve_rows(&json.replace(SCHEMA, "sparsetrain-wallclock-v3")).is_empty());
+        // An empty hist parses as empty, not as a failure.
+        let empty_hist = json.replace("{\"1\": 3, \"4\": 2, \"8\": 40}", "{}");
+        assert_eq!(parse_serve_rows(&empty_hist)[0].extra.batch_hist, Vec::new());
     }
 
     #[test]

@@ -324,6 +324,30 @@ impl CostDb {
         self.map.lock().unwrap_or_else(|p| p.into_inner()).get(key).copied()
     }
 
+    /// Cheapest measured EMA over **all** sparsity buckets and modes for
+    /// a `(component, geometry, threads, backend)` slice — the serve
+    /// batch planner's query ([`crate::coordinator::serve`]): it wants
+    /// "how fast can this shape go here", whatever mode/sparsity the
+    /// router picked when it recorded. `None` when the slice is cold.
+    pub fn best_ns(
+        &self,
+        component: DbComponent,
+        geom: &str,
+        threads: usize,
+        backend: &str,
+    ) -> Option<f64> {
+        let map = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        map.iter()
+            .filter(|(k, _)| {
+                k.component == component
+                    && k.geom == geom
+                    && k.threads == threads
+                    && k.backend == backend
+            })
+            .map(|(_, e)| e.ema_ns)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
     /// Fold one measured execution into the EMA for `key`. Non-finite
     /// or negative durations are dropped.
     pub fn record(&self, key: CostKey, ns: f64) {
@@ -650,6 +674,24 @@ mod tests {
         let entries = parse_json(&text).expect("schema ok");
         assert_eq!(entries.len(), 1, "only the intact line survives");
         assert_eq!(entries[0].0, k(SkipMode::Dense));
+    }
+
+    #[test]
+    fn miri_costdb_best_ns_spans_buckets_and_modes() {
+        let db = CostDb::in_memory();
+        let geom = k(SkipMode::Dense).geom;
+        assert_eq!(db.best_ns(DbComponent::Fwd, &geom, 2, "t"), None, "cold slice");
+        db.record(k(SkipMode::Dense), 100.0);
+        db.record(k(SkipMode::MaskLoop), 40.0);
+        // Different bucket, same slice: still a candidate.
+        let mut other_bucket = k(SkipMode::Dense);
+        other_bucket.bucket = 3;
+        db.record(other_bucket, 25.0);
+        assert_eq!(db.best_ns(DbComponent::Fwd, &geom, 2, "t"), Some(25.0));
+        // Mismatched threads / backend / component slices stay invisible.
+        assert_eq!(db.best_ns(DbComponent::Fwd, &geom, 4, "t"), None);
+        assert_eq!(db.best_ns(DbComponent::Fwd, &geom, 2, "u"), None);
+        assert_eq!(db.best_ns(DbComponent::Bwi, &geom, 2, "t"), None);
     }
 
     #[test]

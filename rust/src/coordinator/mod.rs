@@ -1,17 +1,23 @@
 //! The L3 coordinator: schedules the paper's output-parallel row-sweep
 //! tasks across worker threads, selects the best convolution algorithm per
 //! layer (static `combined` policy, the dynamic profiler-driven variant
-//! §5.3 suggests, and the measured-cost database of ISSUE 8), and drives
-//! the PJRT training loop.
+//! §5.3 suggests, and the measured-cost database of ISSUE 8), drives the
+//! PJRT training loop, and batches inference requests for serving
+//! (ISSUE 9, [`serve`]).
 
 pub mod costdb;
 pub mod metrics;
 pub mod scheduler;
 pub mod selector;
+pub mod serve;
 pub mod trainer;
 
 pub use costdb::{CostDb, CostEntry, CostKey, DbDecision};
 pub use metrics::MetricsRegistry;
 pub use scheduler::Scheduler;
 pub use selector::{AlgoPolicy, Selector};
+pub use serve::{
+    BatchExecutor, Batcher, Clock, MonotonicClock, PredictExecutor, Prediction, ServeConfig,
+    ServeReply, ServeRequest, ServeSession, ServeStats, Server, VirtualClock,
+};
 pub use trainer::{TrainReport, Trainer, TrainerConfig};

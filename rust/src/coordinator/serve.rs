@@ -1,0 +1,899 @@
+//! Batched sparse-inference serving front end (ISSUE 9).
+//!
+//! FWD-only serving is the sparsity story's best case: the backward triad
+//! never runs, so the routed forward kernels' ReLU-skip wins land on every
+//! request (the Shi & Chu direction, arXiv 1704.07724). This module turns
+//! the routed predict artifact into a latency-bounded batch server:
+//! single-sample requests coalesce into batches under a **size/deadline
+//! policy**, run on the existing persistent-thread-pool `Scheduler` via
+//! the [`crate::runtime::executor::OpRouter`] (the kernels are already
+//! batch-parallel over `(i, oy, qb)` row tasks), and a bounded queue sheds
+//! load with an explicit [`ServeReply::Rejected`] once depth exceeds the
+//! configured limit.
+//!
+//! ## Determinism contract (the virtual clock)
+//!
+//! Async batching logic is notoriously timing-flaky to test, so every
+//! coalescing decision here is driven by an injected [`Clock`] — a plain
+//! `now() -> Nanos` source — never by `Instant::now()` or `sleep` inside
+//! the decision logic:
+//!
+//! * [`MonotonicClock`] wraps `Instant` for production;
+//! * [`VirtualClock`] is a manually-advanced atomic counter for tests.
+//!
+//! The layering makes the contract checkable:
+//!
+//! 1. [`Batcher`] is a **pure state machine**: every method takes an
+//!    explicit `now` and performs no IO, no clock reads, no threads. Given
+//!    the same (push, pop) call sequence with the same timestamps it makes
+//!    bit-identical decisions — the property suite replays randomized
+//!    arrival schedules on it directly.
+//! 2. [`ServeSession`] binds a `Batcher` to a [`Clock`] and a
+//!    [`BatchExecutor`], still **single-threaded and inline**: `submit` /
+//!    `tick` / `shutdown` observe the clock once per call and run any due
+//!    batch on the caller's thread. Tests drive it with a [`VirtualClock`]
+//!    and zero sleeps; every decision is deterministically replayable.
+//! 3. [`Server`] is the production shell: one service thread owning a
+//!    `ServeSession`, fed by an `mpsc` channel, waking on
+//!    `recv_timeout(next deadline)`. All timing still flows through the
+//!    shared `Clock`, so an open-loop load generator
+//!    ([`crate::bench::loadgen`]) measures latency on the same timebase
+//!    the server batches on.
+//!
+//! ## Batch-size policy
+//!
+//! [`PredictExecutor`] compiles a **ladder** of predict artifacts (batch
+//! sizes `1, 2, 4, …, max_batch`, each a [`Geometry`]-specialized
+//! `predict` module — shapes are AOT, so one artifact per batch size) and
+//! pads a partial batch up to the nearest rung with zero samples. Because
+//! every routed op (conv row sweeps, per-row GEMM, reduce, elementwise) is
+//! per-sample independent, padded and sequential execution are
+//! **bit-identical** per sample — pinned by `rust/tests/serve.rs` — so
+//! padding and batching can never change an answer, only its latency.
+//!
+//! Rung selection consults the PR 8 measured-cost DB when warm: the
+//! planned batch size is the rung minimizing measured FWD ns/sample for
+//! the two predict convolutions, falling back to the static `max_batch`
+//! policy while any rung is cold or when the DB is detached
+//! (`SPARSETRAIN_COST_DB=off`) — the same kill-switch discipline as the
+//! skip-mode selector, and the same guarantee: a missing DB costs only
+//! speed, never correctness.
+
+use crate::coordinator::costdb::{geom_sig, DbComponent};
+use crate::kernels::ConvConfig;
+use crate::runtime::artifacts::ArtifactSet;
+use crate::runtime::hlo_builder::{self, Geometry};
+use crate::runtime::pjrt::{literal_f32, Runtime};
+use crate::util::prng::Xorshift;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server-relative timestamp in nanoseconds (origin = clock creation).
+pub type Nanos = u64;
+
+/// The server's only time source. `Send + Sync` so one clock can be
+/// shared between the service thread and load generators — latency is
+/// then measured on the exact timebase batching decisions were made on.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Nanos;
+}
+
+/// Production clock: nanoseconds since construction, via `Instant`.
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now(&self) -> Nanos {
+        self.origin.elapsed().as_nanos() as Nanos
+    }
+}
+
+/// Manually-advanced test clock. Time moves only when a test calls
+/// [`VirtualClock::advance`] / [`VirtualClock::set`], so every deadline
+/// decision in a test is an exact, replayable function of the script —
+/// no sleeps, no flake. Shared via `Arc` between the test and (in the
+/// executor-service-time pattern) the [`BatchExecutor`] itself.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    t: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { t: AtomicU64::new(0) }
+    }
+
+    /// Advance by `d` and return the new now.
+    pub fn advance(&self, d: Nanos) -> Nanos {
+        self.t.fetch_add(d, Ordering::SeqCst) + d
+    }
+
+    /// Jump to an absolute instant (tests must keep this monotonic).
+    pub fn set(&self, t: Nanos) {
+        self.t.store(t, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Nanos {
+        self.t.load(Ordering::SeqCst)
+    }
+}
+
+/// Batching/shedding policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Hard cap on coalesced batch size (also the top ladder rung).
+    pub max_batch: usize,
+    /// A batch closes when its **oldest** member has waited this long,
+    /// even if under-full.
+    pub max_delay_ns: Nanos,
+    /// Bounded-queue shed limit: a request arriving while this many are
+    /// already queued is rejected, never silently dropped.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, max_delay_ns: 2_000_000, queue_depth: 64 }
+    }
+}
+
+/// The pure size/deadline coalescing state machine. No clock, no IO:
+/// every method takes an explicit `now`, which is what makes batching
+/// decisions deterministically replayable (see the module docs).
+pub struct Batcher<T> {
+    max_batch: usize,
+    max_delay_ns: Nanos,
+    queue_depth: usize,
+    /// Current coalescing target in `1..=max_batch` (the measured-cost
+    /// policy may plan below the cap; see [`BatchExecutor::planned_batch`]).
+    target: usize,
+    queue: VecDeque<(Nanos, T)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_delay_ns: Nanos, queue_depth: usize) -> Batcher<T> {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(queue_depth >= 1, "queue_depth must be >= 1");
+        Batcher { max_batch, max_delay_ns, queue_depth, target: max_batch, queue: VecDeque::new() }
+    }
+
+    pub fn target(&self) -> usize {
+        self.target
+    }
+
+    /// Re-plan the coalescing target (clamped into `1..=max_batch`).
+    pub fn set_target(&mut self, t: usize) {
+        self.target = t.clamp(1, self.max_batch);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue one item stamped `now`; `Err(item)` = shed (queue already
+    /// at `queue_depth`).
+    #[allow(clippy::result_large_err)] // Err carries the item back by design
+    pub fn push(&mut self, item: T, now: Nanos) -> std::result::Result<(), T> {
+        if self.queue.len() >= self.queue_depth {
+            return Err(item);
+        }
+        self.queue.push_back((now, item));
+        Ok(())
+    }
+
+    /// Pop the next due batch, FIFO, at most `target` items. A batch is
+    /// due when the queue reached the target size ("size-closed") or the
+    /// oldest member's age reached `max_delay_ns` ("deadline-closed" — at
+    /// exactly the deadline tick, `now >= enqueued + max_delay`). `None`
+    /// when nothing is due; callers loop until then.
+    pub fn pop_ready(&mut self, now: Nanos) -> Option<Vec<(Nanos, T)>> {
+        let (t0, _) = self.queue.front()?;
+        let due = self.queue.len() >= self.target || now >= t0 + self.max_delay_ns;
+        if !due {
+            return None;
+        }
+        let n = self.queue.len().min(self.target);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// The instant the current queue head deadline-closes (`None` when
+    /// empty). The threaded server sleeps exactly until this.
+    pub fn next_deadline(&self) -> Option<Nanos> {
+        self.queue.front().map(|&(t0, _)| t0 + self.max_delay_ns)
+    }
+
+    /// Flush everything immediately in FIFO batches of at most `target`
+    /// items — the drained-shutdown path: zero accepted requests are lost.
+    pub fn drain_all(&mut self) -> Vec<Vec<(Nanos, T)>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.target);
+            out.push(self.queue.drain(..n).collect());
+        }
+        out
+    }
+}
+
+/// One completed prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    /// Server-assigned submission id (FIFO order witness).
+    pub id: u64,
+    /// Logits for this sample (`classes` floats).
+    pub output: Vec<f32>,
+    /// Clock reading when the server enqueued the request.
+    pub enqueued_at: Nanos,
+    /// Clock reading when its batch finished executing.
+    pub completed_at: Nanos,
+    /// Size of the coalesced batch it rode in.
+    pub batch_size: usize,
+}
+
+/// What a client's reply channel receives — exactly one per request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeReply {
+    Done(Prediction),
+    /// Bounded-queue shed: depth was at the configured limit on arrival.
+    Rejected { id: u64, depth: usize },
+}
+
+/// Runs one coalesced batch. `inputs[i]` is one sample (NCHW, flattened);
+/// the result must hold exactly one output per input, in order.
+pub trait BatchExecutor {
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// The coalescing target to plan for, given the configured cap — the
+    /// measured-cost policy hook. Defaults to the static policy (the cap).
+    fn planned_batch(&self, max_batch: usize) -> usize {
+        max_batch
+    }
+
+    /// Which policy drives [`BatchExecutor::planned_batch`] right now —
+    /// `"static"` or `"measured"` — recorded in serve bench rows.
+    fn policy(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Counters + batch-size observations for one session's lifetime.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    /// One entry per executed batch, in execution order.
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ServeStats {
+    /// `(batch size, batches executed)` ascending by size.
+    pub fn batch_hist(&self) -> Vec<(usize, usize)> {
+        let mut hist = std::collections::BTreeMap::new();
+        for &b in &self.batch_sizes {
+            *hist.entry(b).or_insert(0usize) += 1;
+        }
+        hist.into_iter().collect()
+    }
+}
+
+struct Pending {
+    id: u64,
+    input: Vec<f32>,
+    reply: Sender<ServeReply>,
+}
+
+/// Deterministic single-threaded serving core: a [`Batcher`] bound to a
+/// [`Clock`] and a [`BatchExecutor`]. All batch execution happens inline
+/// on the caller's thread inside `submit`/`tick`/`shutdown`; the clock is
+/// read once per call. Drive it with a [`VirtualClock`] for exact tests,
+/// or let [`Server`] wrap it in a service thread for production.
+pub struct ServeSession<E: BatchExecutor> {
+    cfg: ServeConfig,
+    clock: Arc<dyn Clock>,
+    exec: E,
+    batcher: Batcher<Pending>,
+    next_id: u64,
+    stats: ServeStats,
+}
+
+impl<E: BatchExecutor> ServeSession<E> {
+    pub fn new(cfg: ServeConfig, clock: Arc<dyn Clock>, exec: E) -> ServeSession<E> {
+        let batcher = Batcher::new(cfg.max_batch, cfg.max_delay_ns, cfg.queue_depth);
+        ServeSession { cfg, clock, exec, batcher, next_id: 0, stats: ServeStats::default() }
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    pub fn depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    pub fn next_deadline(&self) -> Option<Nanos> {
+        self.batcher.next_deadline()
+    }
+
+    pub fn executor(&self) -> &E {
+        &self.exec
+    }
+
+    /// Accept (or shed) one request, then run every batch that is due at
+    /// the current clock reading. Returns the assigned request id; a shed
+    /// request still gets an id (echoed in its [`ServeReply::Rejected`]).
+    /// `Err` means the executor failed — the server is broken, not the
+    /// request.
+    pub fn submit(&mut self, input: Vec<f32>, reply: Sender<ServeReply>) -> Result<u64> {
+        let now = self.clock.now();
+        let id = self.next_id;
+        self.next_id += 1;
+        // Re-plan the coalescing target on every arrival: the measured
+        // policy tightens as the cost DB warms.
+        let planned = self.exec.planned_batch(self.cfg.max_batch);
+        self.batcher.set_target(planned);
+        match self.batcher.push(Pending { id, input, reply }, now) {
+            Ok(()) => {
+                self.stats.accepted += 1;
+            }
+            Err(p) => {
+                self.stats.rejected += 1;
+                let _ = p.reply.send(ServeReply::Rejected { id, depth: self.batcher.depth() });
+            }
+        }
+        self.run_ready(now)?;
+        Ok(id)
+    }
+
+    /// Run every batch due at the current clock reading (the deadline
+    /// path; the threaded server calls this when its deadline wait fires).
+    pub fn tick(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        self.run_ready(now)
+    }
+
+    /// Flush all queued requests (in FIFO batches of at most the planned
+    /// size) and return the stats. No accepted request is ever dropped.
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        let now = self.clock.now();
+        self.run_ready(now)?;
+        for batch in self.batcher.drain_all() {
+            self.execute(batch)?;
+        }
+        Ok(self.stats)
+    }
+
+    fn run_ready(&mut self, now: Nanos) -> Result<()> {
+        while let Some(batch) = self.batcher.pop_ready(now) {
+            self.execute(batch)?;
+        }
+        Ok(())
+    }
+
+    fn execute(&mut self, batch: Vec<(Nanos, Pending)>) -> Result<()> {
+        let bsz = batch.len();
+        let (metas, inputs): (Vec<_>, Vec<_>) =
+            batch.into_iter().map(|(t, p)| ((t, p.id, p.reply), p.input)).unzip();
+        let outputs = self.exec.run_batch(&inputs)?;
+        anyhow::ensure!(
+            outputs.len() == bsz,
+            "executor returned {} outputs for a batch of {bsz}",
+            outputs.len()
+        );
+        let completed_at = self.clock.now();
+        self.stats.batch_sizes.push(bsz);
+        self.stats.completed += bsz as u64;
+        for ((enqueued_at, id, reply), output) in metas.into_iter().zip(outputs) {
+            // A gone client (dropped receiver) is not a server error.
+            let _ = reply.send(ServeReply::Done(Prediction {
+                id,
+                output,
+                enqueued_at,
+                completed_at,
+                batch_size: bsz,
+            }));
+        }
+        Ok(())
+    }
+}
+
+/// One queued request for the threaded [`Server`].
+pub struct ServeRequest {
+    /// One sample, NCHW flattened (`c_in * hw * hw` floats).
+    pub input: Vec<f32>,
+    /// Where the single [`ServeReply`] for this request goes.
+    pub reply: Sender<ServeReply>,
+}
+
+enum Incoming {
+    Req(ServeRequest),
+    DeadlineFired,
+    Closed,
+}
+
+/// Production shell: a service thread owning a [`ServeSession`], fed by
+/// an `mpsc` channel. The thread sleeps in `recv_timeout` until either a
+/// request arrives or the queue head's deadline fires — there is no
+/// polling loop. Dropping every [`Server::handle`] clone and calling
+/// [`Server::shutdown`] drains the queue (zero accepted requests lost)
+/// and returns the stats.
+pub struct Server {
+    tx: Option<Sender<ServeRequest>>,
+    join: Option<std::thread::JoinHandle<Result<ServeStats>>>,
+}
+
+impl Server {
+    /// Spawn the service thread. `make_exec` runs **on** that thread (so
+    /// the executor — runtime, compiled artifacts, thread pool — need not
+    /// be `Send`); its error, like any executor error later, surfaces
+    /// from [`Server::shutdown`].
+    pub fn spawn<E, F>(cfg: ServeConfig, clock: Arc<dyn Clock>, make_exec: F) -> Server
+    where
+        E: BatchExecutor + 'static,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<ServeRequest>();
+        let join = std::thread::spawn(move || -> Result<ServeStats> {
+            let exec = make_exec()?;
+            let mut session = ServeSession::new(cfg, Arc::clone(&clock), exec);
+            loop {
+                let msg = match session.next_deadline() {
+                    None => match rx.recv() {
+                        Ok(r) => Incoming::Req(r),
+                        Err(_) => Incoming::Closed,
+                    },
+                    Some(deadline) => {
+                        let now = clock.now();
+                        if deadline <= now {
+                            session.tick()?;
+                            continue;
+                        }
+                        match rx.recv_timeout(Duration::from_nanos(deadline - now)) {
+                            Ok(r) => Incoming::Req(r),
+                            Err(RecvTimeoutError::Timeout) => Incoming::DeadlineFired,
+                            Err(RecvTimeoutError::Disconnected) => Incoming::Closed,
+                        }
+                    }
+                };
+                match msg {
+                    Incoming::Req(r) => {
+                        session.submit(r.input, r.reply)?;
+                    }
+                    Incoming::DeadlineFired => session.tick()?,
+                    Incoming::Closed => break,
+                }
+            }
+            session.shutdown()
+        });
+        Server { tx: Some(tx), join: Some(join) }
+    }
+
+    /// A clonable submission handle. All clones (and the server's own)
+    /// must drop before the service thread drains and exits.
+    pub fn handle(&self) -> Sender<ServeRequest> {
+        self.tx.as_ref().expect("server already shut down").clone()
+    }
+
+    /// Close the channel, wait for the drain, return the stats (or the
+    /// executor's error).
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        drop(self.tx.take());
+        let join = self.join.take().expect("server already shut down");
+        match join.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("serve thread panicked"),
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Per-process unique suffix for serve artifact scratch dirs (two
+/// executors in one test binary must not share a directory).
+fn serve_seq() -> usize {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Powers-of-two rungs up to and including `max_batch`.
+pub fn batch_ladder(max_batch: usize) -> Vec<usize> {
+    assert!(max_batch >= 1, "max_batch must be >= 1");
+    let mut out = Vec::new();
+    let mut b = 1;
+    while b < max_batch {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(max_batch);
+    out
+}
+
+/// The real [`BatchExecutor`]: the routed predict graph at a ladder of
+/// batch sizes (see the module docs). Weights are seeded He init — the
+/// same scheme the trainer uses — so two executors built with the same
+/// seed serve bit-identical models.
+pub struct PredictExecutor {
+    runtime: Runtime,
+    geometry: Geometry,
+    ladder: Vec<usize>,
+    names: Vec<String>,
+    dir: PathBuf,
+    sample_in: usize,
+    sample_out: usize,
+    w1: Vec<f32>,
+    w2: Vec<f32>,
+    wfc: Vec<f32>,
+    bfc: Vec<f32>,
+    policy_measured: bool,
+}
+
+impl PredictExecutor {
+    /// Kernel-routed executor (`threads` sizes the op router's pool;
+    /// 0 = host parallelism). The cost DB attaches per the usual env
+    /// knobs; `SPARSETRAIN_COST_DB=off` pins the static batch policy.
+    pub fn new(geometry: Geometry, max_batch: usize, threads: usize, seed: u64) -> Result<Self> {
+        Self::build(geometry, max_batch, threads, seed, false)
+    }
+
+    /// All-naive-interpreter executor — the A/B lever the batched-vs-
+    /// sequential parity suite uses on the unrouted path.
+    pub fn new_naive(geometry: Geometry, max_batch: usize, seed: u64) -> Result<Self> {
+        Self::build(geometry, max_batch, 0, seed, true)
+    }
+
+    fn build(
+        geometry: Geometry,
+        max_batch: usize,
+        threads: usize,
+        seed: u64,
+        naive: bool,
+    ) -> Result<Self> {
+        let dir = std::env::temp_dir()
+            .join(format!("sparsetrain-serve-{}-{}", std::process::id(), serve_seq()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let arts = ArtifactSet::new(&dir);
+        let ladder = batch_ladder(max_batch);
+        let mut names = Vec::with_capacity(ladder.len());
+        for &b in &ladder {
+            let g = Geometry { n: b, ..geometry };
+            let name = format!("predict_serve_b{b}");
+            arts.publish_fallback_text(&name, &hlo_builder::predict_hlo(&g))
+                .with_context(|| format!("publishing serve predict artifact (batch {b})"))?;
+            names.push(name);
+        }
+        let mut runtime = if naive {
+            Runtime::cpu_naive(&dir)?
+        } else {
+            Runtime::cpu_with_threads(&dir, threads)?
+        };
+        // Preload the whole ladder now: `Runtime::load` needs `&mut`, but
+        // dispatch-time lookups go through the shared-borrow
+        // `Runtime::get`, so a loaded executable per rung must exist first.
+        for name in &names {
+            runtime.load(name)?;
+        }
+
+        let mut rng = Xorshift::new(seed);
+        let he = |rng: &mut Xorshift, n: usize, fan_in: usize| -> Vec<f32> {
+            let bound = (2.0 / fan_in as f32).sqrt();
+            (0..n).map(|_| rng.range_f32(-bound, bound)).collect()
+        };
+        let w1 = he(&mut rng, geometry.c1 * geometry.c_in * 9, geometry.c_in * 9);
+        let w2 = he(&mut rng, geometry.c2 * geometry.c1 * 9, geometry.c1 * 9);
+        let fc_bound = (1.0 / geometry.c2 as f32).sqrt();
+        let wfc = (0..geometry.classes * geometry.c2)
+            .map(|_| rng.range_f32(-fc_bound, fc_bound))
+            .collect();
+        let bfc = vec![0.0f32; geometry.classes];
+        let policy_measured = runtime.op_router().and_then(|r| r.cost_db()).is_some();
+        Ok(PredictExecutor {
+            runtime,
+            geometry,
+            ladder,
+            names,
+            dir,
+            sample_in: geometry.c_in * geometry.hw * geometry.hw,
+            sample_out: geometry.classes,
+            w1,
+            w2,
+            wfc,
+            bfc,
+            policy_measured,
+        })
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    /// Expected per-sample input length (`c_in * hw * hw`).
+    pub fn sample_len(&self) -> usize {
+        self.sample_in
+    }
+
+    /// Single-sample convenience (runs the batch-1 rung) — the sequential
+    /// baseline the parity suite compares batched output against.
+    pub fn predict_one(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut outs = self.run_batch(&[input.to_vec()])?;
+        Ok(outs.remove(0))
+    }
+}
+
+impl Drop for PredictExecutor {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl BatchExecutor for PredictExecutor {
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let bsz = inputs.len();
+        let cap = *self.ladder.last().expect("ladder is non-empty");
+        anyhow::ensure!(bsz >= 1 && bsz <= cap, "batch size {bsz} outside 1..={cap}");
+        let idx = self
+            .ladder
+            .iter()
+            .position(|&b| b >= bsz)
+            .expect("ladder covers every size up to the cap");
+        let art_b = self.ladder[idx];
+        let g = self.geometry;
+        // Zero-pad up to the rung: every routed op is per-sample
+        // independent, so padding cannot perturb the live rows.
+        let mut x = vec![0.0f32; art_b * self.sample_in];
+        for (i, s) in inputs.iter().enumerate() {
+            anyhow::ensure!(
+                s.len() == self.sample_in,
+                "sample {i} has {} floats, expected {}",
+                s.len(),
+                self.sample_in
+            );
+            x[i * self.sample_in..(i + 1) * self.sample_in].copy_from_slice(s);
+        }
+        let lits = [
+            literal_f32(&self.w1, &[g.c1 as i64, g.c_in as i64, 3, 3])?,
+            literal_f32(&self.w2, &[g.c2 as i64, g.c1 as i64, 3, 3])?,
+            literal_f32(&self.wfc, &[g.classes as i64, g.c2 as i64])?,
+            literal_f32(&self.bfc, &[g.classes as i64])?,
+            literal_f32(&x, &[art_b as i64, g.c_in as i64, g.hw as i64, g.hw as i64])?,
+        ];
+        let exe = self
+            .runtime
+            .get(&self.names[idx])
+            .context("serve predict artifact not preloaded")?;
+        let outs = exe.run(&lits)?;
+        anyhow::ensure!(outs.len() == 1, "predict returns exactly (logits,)");
+        let logits = outs[0].to_vec::<f32>()?;
+        anyhow::ensure!(
+            logits.len() == art_b * self.sample_out,
+            "logits length {} != {} * {}",
+            logits.len(),
+            art_b,
+            self.sample_out
+        );
+        Ok((0..bsz)
+            .map(|i| logits[i * self.sample_out..(i + 1) * self.sample_out].to_vec())
+            .collect())
+    }
+
+    /// Measured-cost rung selection: minimize FWD ns/sample summed over
+    /// the two predict convolutions. Any cold rung (or a detached DB)
+    /// falls back to the static policy — the cap — until the DB warms;
+    /// partial drain batches exercise the smaller rungs, which is what
+    /// warms them.
+    fn planned_batch(&self, max_batch: usize) -> usize {
+        let cap = max_batch.min(*self.ladder.last().expect("ladder is non-empty"));
+        let Some(router) = self.runtime.op_router() else { return cap };
+        let Some(db) = router.cost_db() else { return cap };
+        let threads = router.threads();
+        let backend = crate::kernels::simd::dispatch().name();
+        let g = self.geometry;
+        let mut best: Option<(usize, f64)> = None;
+        for &b in &self.ladder {
+            if b > cap {
+                break;
+            }
+            let conv1 = ConvConfig::square(b, g.c_in, g.c1, g.hw, 3, 1);
+            let conv2 = ConvConfig::square(b, g.c1, g.c2, g.hw, 3, 1);
+            let rung_ns = match (
+                db.best_ns(DbComponent::Fwd, &geom_sig(&conv1), threads, backend),
+                db.best_ns(DbComponent::Fwd, &geom_sig(&conv2), threads, backend),
+            ) {
+                (Some(a), Some(c)) => a + c,
+                _ => return cap, // cold rung: static policy until warm
+            };
+            let per_sample = rung_ns / b as f64;
+            let better = match best {
+                None => true,
+                Some((_, cur)) => per_sample < cur,
+            };
+            if better {
+                best = Some((b, per_sample));
+            }
+        }
+        match best {
+            Some((b, _)) => b,
+            None => cap,
+        }
+    }
+
+    fn policy(&self) -> &'static str {
+        if self.policy_measured {
+            "measured"
+        } else {
+            "static"
+        }
+    }
+}
+
+/// Block until `rx` yields its reply (test/bench convenience).
+pub fn wait_reply(rx: &Receiver<ServeReply>) -> Result<ServeReply> {
+    rx.recv().context("reply channel closed without a reply")
+}
+
+// ---------------------------------------------------------------------------
+// Tests. The pure batcher/clock tests carry no IO and run in the Miri CI
+// leg (`coordinator::serve` filter); executor tests touch the filesystem
+// and real clocks and are cfg'd out under Miri.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_manual_and_monotonic() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.advance(5), 5);
+        assert_eq!(c.now(), 5);
+        c.set(100);
+        assert_eq!(c.now(), 100);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "Instant is unavailable under isolation")]
+    fn monotonic_clock_never_goes_backwards() {
+        let c = MonotonicClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn batch_ladder_covers_all_caps() {
+        assert_eq!(batch_ladder(1), vec![1]);
+        assert_eq!(batch_ladder(8), vec![1, 2, 4, 8]);
+        assert_eq!(batch_ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(batch_ladder(9), vec![1, 2, 4, 8, 9]);
+    }
+
+    #[test]
+    fn batcher_size_closes_at_target_and_deadline_closes_at_tick() {
+        let mut b: Batcher<u32> = Batcher::new(3, 100, 10);
+        assert!(b.push(1, 0).is_ok());
+        assert!(b.push(2, 10).is_ok());
+        assert!(b.pop_ready(10).is_none(), "under target and under deadline");
+        assert!(b.push(3, 20).is_ok());
+        let batch = b.pop_ready(20).expect("size-closed at exactly target");
+        assert_eq!(batch.iter().map(|&(_, v)| v).collect::<Vec<_>>(), vec![1, 2, 3]);
+
+        assert!(b.push(4, 30).is_ok());
+        assert_eq!(b.next_deadline(), Some(130));
+        assert!(b.pop_ready(129).is_none(), "one tick before the deadline");
+        let batch = b.pop_ready(130).expect("deadline-closed at exactly the tick");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn batcher_sheds_at_exact_depth_and_drains_in_target_chunks() {
+        let mut b: Batcher<u32> = Batcher::new(8, 100, 2);
+        assert!(b.push(1, 0).is_ok());
+        assert!(b.push(2, 0).is_ok());
+        assert_eq!(b.push(3, 0), Err(3), "third arrival sheds at depth 2");
+        b.set_target(1);
+        let batches = b.drain_all();
+        assert_eq!(batches.len(), 2, "drain respects the planned batch size");
+        assert_eq!(b.depth(), 0);
+        assert!(b.push(4, 0).is_ok(), "shedding recovers once drained");
+    }
+
+    #[test]
+    fn batcher_target_clamps_into_configured_range() {
+        let mut b: Batcher<u32> = Batcher::new(4, 100, 10);
+        b.set_target(0);
+        assert_eq!(b.target(), 1);
+        b.set_target(99);
+        assert_eq!(b.target(), 4);
+    }
+
+    struct DoubleExec;
+    impl BatchExecutor for DoubleExec {
+        fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(inputs.iter().map(|v| vec![v[0] * 2.0]).collect())
+        }
+    }
+
+    #[test]
+    fn session_replies_exactly_once_in_fifo_order() {
+        let clock = Arc::new(VirtualClock::new());
+        let cfg = ServeConfig { max_batch: 2, max_delay_ns: 100, queue_depth: 8 };
+        let mut s = ServeSession::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>, DoubleExec);
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (tx, rx) = mpsc::channel();
+            s.submit(vec![i as f32], tx).unwrap();
+            rxs.push(rx);
+        }
+        // first two size-closed immediately; third still queued
+        assert_eq!(s.depth(), 1);
+        let stats = s.shutdown().unwrap();
+        assert_eq!(stats.batch_sizes, vec![2, 1]);
+        assert_eq!((stats.accepted, stats.rejected, stats.completed), (3, 0, 3));
+        for (i, rx) in rxs.iter().enumerate() {
+            match rx.try_recv().unwrap() {
+                ServeReply::Done(p) => {
+                    assert_eq!(p.id, i as u64, "FIFO ids");
+                    assert_eq!(p.output, vec![i as f32 * 2.0], "no cross-request mixing");
+                }
+                other => panic!("expected Done, got {other:?}"),
+            }
+            assert!(rx.try_recv().is_err(), "exactly one reply per request");
+        }
+        assert_eq!(stats.batch_hist(), vec![(1, 1), (2, 1)]);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns the PJRT runtime and touches the filesystem")]
+    fn predict_executor_pads_partial_batches_and_bounds_sizes() {
+        // Tiny geometry: channels below V keep the convs on the (equally
+        // deterministic) interpreter fallback — this test pins executor
+        // mechanics, not routing.
+        let g = Geometry::tiny();
+        let mut ex = PredictExecutor::new(g, 4, 1, 11).unwrap();
+        assert_eq!(ex.ladder(), &[1, 2, 4]);
+        assert_eq!(ex.sample_len(), g.c_in * g.hw * g.hw);
+        let mut rng = Xorshift::new(3);
+        let samples: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..ex.sample_len()).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+            .collect();
+        // 3 samples ride the 4-rung (padded); outputs stay per-sample.
+        let outs = ex.run_batch(&samples).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert!(outs.iter().all(|o| o.len() == g.classes && o.iter().all(|v| v.is_finite())));
+        assert!(ex.run_batch(&[]).is_err(), "empty batch rejected");
+        let too_many: Vec<Vec<f32>> = (0..5).map(|_| vec![0.0; ex.sample_len()]).collect();
+        assert!(ex.run_batch(&too_many).is_err(), "over-cap batch rejected");
+        let bad_len = vec![vec![0.0f32; 3]];
+        assert!(ex.run_batch(&bad_len).is_err(), "wrong sample length rejected");
+    }
+}

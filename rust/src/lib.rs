@@ -38,8 +38,11 @@
 //!   output-row tasks, BWI over `(i, iy, cb)` input-row tasks, BWW over
 //!   `(qb, c)` disjoint filter-gradient tiles, each atomic-free with
 //!   per-chunk stats merged to exact serial parity), the
-//!   thread-count-aware per-layer algorithm selector, and the PJRT-driven
-//!   training loop.
+//!   thread-count-aware per-layer algorithm selector, the PJRT-driven
+//!   training loop, and [`coordinator::serve`] — the batched inference
+//!   front end (size/deadline request coalescing on an injected `Clock`,
+//!   bounded-queue shedding, a ladder of batch-specialized predict
+//!   artifacts with measured-cost rung selection).
 //!
 //!   **Parallel execution model.** The scheduler never shares a `&mut`
 //!   tensor across threads: before a run it splits the output tensor into
@@ -87,7 +90,9 @@
 //!   per-call thread-spawn overhead.
 //! * [`bench`] — the hand-rolled benchmark harness shared by `rust/benches`,
 //!   plus [`bench::wallclock`]: the real-kernel wall-clock sweep behind
-//!   `cargo run --release --example wallclock` → `BENCH_kernels.json`.
+//!   `cargo run --release --example wallclock` → `BENCH_kernels.json`,
+//!   and [`bench::loadgen`]: the seeded open-loop serving load generator
+//!   behind `sparsetrain serve` → `BENCH_serve.json`.
 //! * [`util`] — substrates built from scratch for the offline environment:
 //!   PRNG, statistics, thread pool, CLI parsing, text tables, and a mini
 //!   property-testing framework.

@@ -4,10 +4,16 @@
 //! sparsetrain table3|table4|table5|table6|fig1|fig2|fig3|fig4   experiments
 //! sparsetrain sweep --layer vgg3_2                              one layer
 //! sparsetrain train --steps 200                                 PJRT trainer
+//! sparsetrain serve --smoke                                     batch server
 //! sparsetrain plan --k 256 --r 3                                register plan
 //! ```
 
 use sparsetrain::bench::experiments;
+use sparsetrain::bench::loadgen::{
+    self, run_serve_bench, scenario_by_name, smoke_violations, wallclock_report, ArrivalKind,
+    ServeBenchConfig,
+};
+use sparsetrain::coordinator::serve::ServeConfig;
 use sparsetrain::coordinator::trainer::{Trainer, TrainerConfig};
 use sparsetrain::kernels::regalloc::{plan_bww, plan_fwd};
 use sparsetrain::kernels::Component;
@@ -47,6 +53,21 @@ COMMANDS
                       SPARSETRAIN_COST_DB=off reverts to the analytic
                       model, =fresh resets, SPARSETRAIN_COST_DB_PATH
                       relocates the store.)
+  serve              batched sparse-inference server under synthetic load
+                     [--smoke] [--rate RPS] [--requests N] [--max-batch N]
+                     [--deadline-us N] [--depth N] [--threads N] [--seed N]
+                     [--scenario paper|hires32|wide64|all] [--out FILE]
+                     (Open-loop seeded Poisson arrivals drive the batching
+                      front end over the routed predict ladder; prints
+                      p50/p95/p99 latency, throughput and the batch-size
+                      histogram per scenario and writes them as
+                      component:\"serve\" rows in the wallclock v4 schema,
+                      default BENCH_serve.json. Batch-size selection uses
+                      the measured-cost DB when warm, static max-batch
+                      otherwise — SPARSETRAIN_COST_DB=off pins static.
+                      --smoke runs one short low-rate scenario and exits
+                      nonzero on any reject / zero throughput / non-finite
+                      p99.)
   plan               register plan  [--k N] [--r N]
 
 OPTIONS
@@ -66,8 +87,25 @@ fn usize_opt(args: &Args, name: &str, default: usize) -> usize {
 
 fn main() {
     let args = Args::from_env(
-        &["layer", "steps", "seed", "epochs", "k", "r", "threads", "net", "scale"],
-        &["csv", "detail"],
+        &[
+            "layer",
+            "steps",
+            "seed",
+            "epochs",
+            "k",
+            "r",
+            "threads",
+            "net",
+            "scale",
+            "rate",
+            "requests",
+            "max-batch",
+            "deadline-us",
+            "depth",
+            "scenario",
+            "out",
+        ],
+        &["csv", "detail", "smoke"],
     )
     .unwrap_or_else(|e| {
         eprintln!("error: {e}\n\n{USAGE}");
@@ -241,6 +279,76 @@ fn main() {
                     eprintln!("{e:#}");
                     std::process::exit(1);
                 }
+            }
+        }
+        Some("serve") => {
+            let smoke = args.flag("smoke");
+            let rate = args.get_f64("rate", if smoke { 100.0 } else { 400.0 }).unwrap_or_else(|e| {
+                eprintln!("error: {e}\n\n{USAGE}");
+                std::process::exit(2);
+            });
+            let requests = usize_opt(&args, "requests", if smoke { 50 } else { 400 });
+            let max_batch = usize_opt(&args, "max-batch", 8);
+            let deadline_us = usize_opt(&args, "deadline-us", 2000);
+            // Smoke structurally guarantees zero rejects regardless of
+            // machine speed: the queue is deeper than the request count.
+            let depth = usize_opt(&args, "depth", if smoke { 256 } else { 64 });
+            let serve_threads = usize_opt(&args, "threads", 2);
+            let seed = usize_opt(&args, "seed", 42) as u64;
+            let scenario = args.get_or("scenario", if smoke { "paper" } else { "all" });
+            let out = args.get_or("out", "BENCH_serve.json");
+            if !(rate > 0.0 && rate.is_finite()) || requests == 0 || max_batch == 0 || depth == 0 {
+                eprintln!(
+                    "error: --rate must be positive and --requests/--max-batch/--depth \
+                     at least 1\n\n{USAGE}"
+                );
+                std::process::exit(2);
+            }
+            let scs = if scenario == "all" {
+                loadgen::scenarios()
+            } else {
+                match scenario_by_name(scenario) {
+                    Some(sc) => vec![sc],
+                    None => {
+                        eprintln!("error: unknown --scenario '{scenario}'\n\n{USAGE}");
+                        std::process::exit(2);
+                    }
+                }
+            };
+            let cfg = ServeBenchConfig {
+                rate_rps: rate,
+                requests,
+                seed,
+                serve: ServeConfig {
+                    max_batch,
+                    max_delay_ns: deadline_us as u64 * 1_000,
+                    queue_depth: depth,
+                },
+                threads: serve_threads,
+                arrivals: ArrivalKind::Poisson,
+            };
+            let reports = match run_serve_bench(&scs, &cfg) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("serve bench failed: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            let report = wallclock_report(&reports);
+            if let Err(e) = report.write_json(std::path::Path::new(out)) {
+                eprintln!("writing {out} failed: {e}");
+                std::process::exit(1);
+            }
+            println!("wrote {} serve rows ({}) to {out}", reports.len(), loadgen::schema());
+            if smoke {
+                let violations = smoke_violations(&reports);
+                if !violations.is_empty() {
+                    for v in &violations {
+                        eprintln!("serve smoke violation: {v}");
+                    }
+                    std::process::exit(1);
+                }
+                println!("serve smoke OK");
             }
         }
         _ => {

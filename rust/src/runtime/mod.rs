@@ -72,6 +72,17 @@
 //! unary (`exponential`/`log`/`negate`) and `convert`-to-f32 (including
 //! a fused `convert(iota)` index fill) route as parallel elementwise
 //! passes, bit-identical to the naive evaluator.
+//!
+//! **Serving (ISSUE 9).** [`crate::coordinator::serve`] layers a batched
+//! inference front end on this runtime: one `Runtime` per server preloads
+//! a ladder of batch-size-specialized `predict_serve_b<N>` artifacts
+//! (emitted by [`hlo_builder::predict_hlo`] at `Geometry { n: N, .. }`),
+//! and dispatch-time lookups go through the shared-borrow
+//! [`pjrt::Runtime::get`] so the hot path never re-loads. Because every
+//! routed op above is per-sample independent, a zero-padded batch is
+//! bit-identical per sample to sequential single-sample execution —
+//! `rust/tests/serve.rs` pins that on both the routed and the all-naive
+//! path.
 
 pub mod artifacts;
 pub mod executor;

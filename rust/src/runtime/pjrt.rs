@@ -136,6 +136,14 @@ impl Runtime {
         &self.dir
     }
 
+    /// A previously [`Runtime::load`]ed executable, by name, through a
+    /// shared borrow — the serve dispatch path preloads its whole batch
+    /// ladder once, then looks rungs up here per request without taking
+    /// `&mut self`.
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.cache.get(name).map(|&idx| &self.loaded[idx])
+    }
+
     /// Load and compile `<name>.hlo.txt` (cached per runtime).
     pub fn load(&mut self, name: &str) -> Result<&Executable> {
         if let Some(&idx) = self.cache.get(name) {

@@ -49,6 +49,15 @@ fn unknown_net_and_scale_are_fatal() {
 }
 
 #[test]
+fn malformed_serve_options_are_fatal() {
+    assert_usage_error(&["serve", "--rate", "fast"]);
+    assert_usage_error(&["serve", "--rate", "-50"]);
+    assert_usage_error(&["serve", "--max-batch", "0"]);
+    assert_usage_error(&["serve", "--requests", "1O0"]); // letter O again
+    assert_usage_error(&["serve", "--scenario", "imagenet"]);
+}
+
+#[test]
 fn no_subcommand_prints_usage_and_succeeds() {
     let out = run(&[]);
     assert!(out.status.success());
@@ -56,4 +65,6 @@ fn no_subcommand_prints_usage_and_succeeds() {
     assert!(stdout.contains("USAGE"), "{stdout}");
     assert!(stdout.contains("--net"), "train help must document --net: {stdout}");
     assert!(stdout.contains("--scale"), "train help must document --scale: {stdout}");
+    assert!(stdout.contains("serve"), "help must document the serve subcommand: {stdout}");
+    assert!(stdout.contains("--max-batch"), "serve help must document --max-batch: {stdout}");
 }

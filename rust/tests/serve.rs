@@ -1,0 +1,548 @@
+//! Gating suite for the batched serving front end (ISSUE 9).
+//!
+//! Every batching/timing assertion here runs on the manually-advanced
+//! [`VirtualClock`] — there is not a single sleep-based timing assertion
+//! in this file. The contract under test (see `coordinator::serve` module
+//! docs): a batch closes at **exactly** `max_batch` arrivals or at
+//! **exactly** the deadline tick, whichever comes first; replies are FIFO
+//! and exactly-once; the bounded queue sheds at **exactly** the
+//! configured depth with an explicit `Rejected`; a drained shutdown loses
+//! zero accepted requests; and — because every routed op is per-sample
+//! independent — a batch of B single-sample requests is **bit-identical**
+//! to B sequential single-sample predicts, padded rungs included.
+//!
+//! The threaded [`Server`] test at the bottom uses the real
+//! [`MonotonicClock`], but only asserts schedule-independent invariants
+//! (conservation, bounds, per-sample bits); batch composition there may
+//! legitimately vary with machine speed.
+
+use anyhow::Result;
+use sparsetrain::coordinator::serve::{
+    wait_reply, BatchExecutor, Clock, MonotonicClock, Nanos, PredictExecutor, ServeConfig,
+    ServeReply, ServeRequest, ServeSession, ServeStats, Server, VirtualClock,
+};
+use sparsetrain::runtime::hlo_builder::Geometry;
+use sparsetrain::util::prng::Xorshift;
+use sparsetrain::util::proptest::{check, Config as PropConfig, Gen};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Arc;
+
+/// Echoes `input[0] + 1.0` per sample and advances the shared virtual
+/// clock by `service_ns` per batch — the "executor service time" pattern:
+/// latency assertions then cover queueing *and* execution on one timebase.
+struct EchoExec {
+    clock: Arc<VirtualClock>,
+    service_ns: Nanos,
+}
+
+impl BatchExecutor for EchoExec {
+    fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.clock.advance(self.service_ns);
+        Ok(inputs.iter().map(|v| vec![v[0] + 1.0]).collect())
+    }
+}
+
+/// Pull the one-and-only reply off a request's channel; a second reply is
+/// a protocol violation.
+fn one_reply(rx: &Receiver<ServeReply>) -> ServeReply {
+    let r = rx.try_recv().expect("exactly one reply must have been sent");
+    assert!(rx.try_recv().is_err(), "a request must receive exactly one reply");
+    r
+}
+
+fn done(reply: ServeReply) -> sparsetrain::coordinator::serve::Prediction {
+    match reply {
+        ServeReply::Done(p) => p,
+        other => panic!("expected Done, got {other:?}"),
+    }
+}
+
+fn session_with(
+    cfg: ServeConfig,
+    service_ns: Nanos,
+) -> (Arc<VirtualClock>, ServeSession<EchoExec>) {
+    let clock = Arc::new(VirtualClock::new());
+    let exec = EchoExec { clock: Arc::clone(&clock), service_ns };
+    let session = ServeSession::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>, exec);
+    (clock, session)
+}
+
+// ---------------------------------------------------------------------------
+// Exact close points: size at the Nth arrival, deadline at the exact tick
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batch_closes_at_exactly_max_batch_arrivals() {
+    let cfg = ServeConfig { max_batch: 4, max_delay_ns: 1_000_000, queue_depth: 16 };
+    let (_clock, mut s) = session_with(cfg, 0);
+    let mut rxs = Vec::new();
+    for i in 0..3 {
+        let (tx, rx) = mpsc::channel();
+        s.submit(vec![i as f32], tx).unwrap();
+        rxs.push(rx);
+    }
+    assert_eq!(s.depth(), 3, "one under max_batch: nothing may execute");
+    assert!(s.stats().batch_sizes.is_empty());
+
+    let (tx, rx) = mpsc::channel();
+    s.submit(vec![3.0], tx).unwrap();
+    rxs.push(rx);
+    assert_eq!(s.depth(), 0, "the max_batch-th arrival closes the batch");
+    assert_eq!(s.stats().batch_sizes, vec![4]);
+    for (i, rx) in rxs.iter().enumerate() {
+        let p = done(one_reply(rx));
+        assert_eq!((p.id, p.batch_size), (i as u64, 4));
+        assert_eq!(p.output, vec![i as f32 + 1.0]);
+    }
+}
+
+#[test]
+fn deadline_closes_at_exactly_the_tick_with_exact_latency() {
+    let cfg = ServeConfig { max_batch: 8, max_delay_ns: 1_000, queue_depth: 8 };
+    let (clock, mut s) = session_with(cfg, 7);
+    let (tx, rx) = mpsc::channel();
+    s.submit(vec![41.0], tx).unwrap();
+    assert_eq!(s.next_deadline(), Some(1_000));
+
+    clock.set(999);
+    s.tick().unwrap();
+    assert_eq!(s.depth(), 1, "one tick before the deadline: still coalescing");
+
+    clock.set(1_000);
+    s.tick().unwrap();
+    assert_eq!(s.depth(), 0, "fires at exactly enqueue + max_delay");
+    let p = done(one_reply(&rx));
+    assert_eq!(p.id, 0);
+    assert_eq!(p.output, vec![42.0]);
+    assert_eq!(p.enqueued_at, 0);
+    assert_eq!(p.completed_at, 1_007, "deadline + service time, on the shared clock");
+    assert_eq!(p.batch_size, 1);
+}
+
+// ---------------------------------------------------------------------------
+// FIFO, exactly-once, shedding, drained shutdown
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replies_are_fifo_and_exactly_once_across_batches() {
+    let cfg = ServeConfig { max_batch: 4, max_delay_ns: 1_000_000, queue_depth: 32 };
+    let (_clock, mut s) = session_with(cfg, 1);
+    let mut rxs = Vec::new();
+    for i in 0..10 {
+        let (tx, rx) = mpsc::channel();
+        let id = s.submit(vec![i as f32], tx).unwrap();
+        assert_eq!(id, i as u64, "ids are assigned in submission order");
+        rxs.push(rx);
+    }
+    assert_eq!(s.stats().batch_sizes, vec![4, 4], "two size-closed batches so far");
+    assert_eq!(s.depth(), 2);
+    let stats = s.shutdown().unwrap();
+    assert_eq!(stats.batch_sizes, vec![4, 4, 2], "shutdown drains the FIFO tail");
+    assert_eq!((stats.accepted, stats.rejected, stats.completed), (10, 0, 10));
+    for (i, rx) in rxs.iter().enumerate() {
+        let p = done(one_reply(rx));
+        assert_eq!(p.id, i as u64, "FIFO: reply i carries id i");
+        assert_eq!(p.output, vec![i as f32 + 1.0], "no cross-request mixing");
+    }
+}
+
+#[test]
+fn queue_sheds_at_exactly_the_configured_depth_and_recovers() {
+    let cfg = ServeConfig { max_batch: 8, max_delay_ns: 1_000, queue_depth: 4 };
+    let (clock, mut s) = session_with(cfg, 0);
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let (tx, rx) = mpsc::channel();
+        s.submit(vec![i as f32], tx).unwrap();
+        rxs.push(rx);
+        assert!(rxs[i].try_recv().is_err(), "request {i} must still be queued");
+    }
+    assert_eq!(s.depth(), 4);
+
+    // The depth+1-th arrival is shed — explicitly, with its id echoed.
+    let (tx, rx) = mpsc::channel();
+    let shed_id = s.submit(vec![99.0], tx).unwrap();
+    assert_eq!(shed_id, 4);
+    assert_eq!(one_reply(&rx), ServeReply::Rejected { id: 4, depth: 4 });
+    assert_eq!((s.stats().accepted, s.stats().rejected), (4, 1));
+    assert_eq!(s.depth(), 4, "a shed request never enters the queue");
+
+    // Deadline-drain the queue: shedding must recover immediately.
+    clock.set(1_000);
+    s.tick().unwrap();
+    assert_eq!(s.depth(), 0);
+    let (tx, rx2) = mpsc::channel();
+    s.submit(vec![5.0], tx).unwrap();
+    let stats = s.shutdown().unwrap();
+    assert_eq!((stats.accepted, stats.rejected, stats.completed), (5, 1, 5));
+    assert_eq!(done(one_reply(&rx2)).output, vec![6.0]);
+    for rx in &rxs {
+        assert!(matches!(one_reply(rx), ServeReply::Done(_)));
+    }
+}
+
+#[test]
+fn drained_shutdown_loses_zero_accepted_requests() {
+    let cfg = ServeConfig { max_batch: 8, max_delay_ns: 1_000_000, queue_depth: 64 };
+    let (_clock, mut s) = session_with(cfg, 0);
+    let mut rxs = Vec::new();
+    for i in 0..5 {
+        let (tx, rx) = mpsc::channel();
+        s.submit(vec![i as f32], tx).unwrap();
+        rxs.push(rx);
+    }
+    assert_eq!(s.depth(), 5, "under-full and under-deadline: all queued");
+    let stats = s.shutdown().unwrap();
+    assert_eq!(stats.batch_sizes, vec![5]);
+    assert_eq!((stats.accepted, stats.completed), (5, 5));
+    for (i, rx) in rxs.iter().enumerate() {
+        assert_eq!(done(one_reply(rx)).id, i as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: the same schedule replays bit-identically
+// ---------------------------------------------------------------------------
+
+fn scripted_run() -> (ServeStats, Vec<ServeReply>) {
+    let cfg = ServeConfig { max_batch: 3, max_delay_ns: 100, queue_depth: 4 };
+    let (clock, mut s) = session_with(cfg, 5);
+    let mut rxs = Vec::new();
+    for (i, gap) in [0u64, 3, 1, 120, 2, 40, 200, 0, 0, 0, 0].into_iter().enumerate() {
+        clock.advance(gap);
+        let (tx, rx) = mpsc::channel();
+        s.submit(vec![i as f32], tx).unwrap();
+        rxs.push(rx);
+    }
+    clock.advance(250);
+    s.tick().unwrap();
+    let stats = s.shutdown().unwrap();
+    let replies = rxs.iter().map(one_reply).collect();
+    (stats, replies)
+}
+
+#[test]
+fn identical_schedules_replay_bit_identically() {
+    let (stats_a, replies_a) = scripted_run();
+    let (stats_b, replies_b) = scripted_run();
+    assert_eq!(stats_a, stats_b, "stats must be a pure function of the schedule");
+    assert_eq!(replies_a, replies_b, "every reply — ids, bits, timestamps — must replay");
+    assert_eq!(stats_a.accepted + stats_a.rejected, 11);
+    assert_eq!(stats_a.completed, stats_a.accepted);
+}
+
+// ---------------------------------------------------------------------------
+// Executor failure is a server error, not a hang or a lost request
+// ---------------------------------------------------------------------------
+
+struct FailExec;
+impl BatchExecutor for FailExec {
+    fn run_batch(&mut self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("backend down")
+    }
+}
+
+/// Returns no outputs for a non-empty batch: the arity contract breaker.
+struct ShortExec;
+impl BatchExecutor for ShortExec {
+    fn run_batch(&mut self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(Vec::new())
+    }
+}
+
+#[test]
+fn executor_failure_surfaces_as_an_error_not_a_hang() {
+    let cfg = ServeConfig { max_batch: 1, max_delay_ns: 1_000, queue_depth: 8 };
+    let clock = Arc::new(VirtualClock::new());
+    let mut s = ServeSession::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>, FailExec);
+    let (tx, _rx) = mpsc::channel();
+    assert!(s.submit(vec![1.0], tx).is_err(), "a failing executor must fail the call");
+
+    let mut s = ServeSession::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>, ShortExec);
+    let (tx, _rx) = mpsc::channel();
+    assert!(s.submit(vec![1.0], tx).is_err(), "an arity-cheating executor must be caught");
+}
+
+// ---------------------------------------------------------------------------
+// Property: randomized arrival schedules on the virtual clock
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct ArrivalCase {
+    max_batch: usize,
+    depth: usize,
+    delay: Nanos,
+    /// Inter-arrival gaps; one submission per entry.
+    gaps: Vec<Nanos>,
+}
+
+struct ArrivalGen;
+
+impl Gen<ArrivalCase> for ArrivalGen {
+    fn generate(&self, rng: &mut Xorshift) -> ArrivalCase {
+        let max_batch = 1 + rng.below(6);
+        let depth = 1 + rng.below(10);
+        let delay = (1 + rng.below(1_000)) as Nanos;
+        let gaps =
+            (0..rng.below(41)).map(|_| rng.below(2 * delay as usize + 2) as Nanos).collect();
+        ArrivalCase { max_batch, depth, delay, gaps }
+    }
+    fn shrink(&self, v: &ArrivalCase) -> Vec<ArrivalCase> {
+        let mut out = Vec::new();
+        if !v.gaps.is_empty() {
+            out.push(ArrivalCase { gaps: v.gaps[..v.gaps.len() / 2].to_vec(), ..v.clone() });
+            let mut one_less = v.clone();
+            one_less.gaps.pop();
+            out.push(one_less);
+        }
+        if v.max_batch > 1 {
+            out.push(ArrivalCase { max_batch: 1, ..v.clone() });
+        }
+        if v.depth > 1 {
+            out.push(ArrivalCase { depth: 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn property_randomized_arrivals_preserve_serving_invariants() {
+    check(PropConfig { cases: 96, seed: 0x5E17E, max_shrink_steps: 256 }, &ArrivalGen, |c| {
+        let cfg = ServeConfig {
+            max_batch: c.max_batch,
+            max_delay_ns: c.delay,
+            queue_depth: c.depth,
+        };
+        let (clock, mut s) = session_with(cfg, 0);
+        let mut rxs = Vec::new();
+        for (i, &gap) in c.gaps.iter().enumerate() {
+            clock.advance(gap);
+            let (tx, rx) = mpsc::channel();
+            let id = s.submit(vec![i as f32], tx).map_err(|e| format!("submit: {e}"))?;
+            if id != i as u64 {
+                return Err(format!("id {id} assigned to submission {i}"));
+            }
+            if s.depth() > c.depth {
+                return Err(format!("depth {} exceeds the limit {}", s.depth(), c.depth));
+            }
+            rxs.push(rx);
+        }
+        let stats = s.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+
+        // Conservation: every submission is accepted xor rejected; every
+        // accepted request completes; batches account for every completion.
+        let submitted = c.gaps.len() as u64;
+        if stats.accepted + stats.rejected != submitted {
+            return Err(format!("{stats:?} does not conserve {submitted} submissions"));
+        }
+        if stats.completed != stats.accepted {
+            return Err(format!("{stats:?} lost accepted requests"));
+        }
+        if stats.batch_sizes.iter().any(|&b| b == 0 || b > c.max_batch) {
+            return Err(format!("batch size out of 1..={}: {:?}", c.max_batch, stats.batch_sizes));
+        }
+        if stats.batch_sizes.iter().sum::<usize>() as u64 != stats.completed {
+            return Err(format!(
+                "batch sizes {:?} != completed {}",
+                stats.batch_sizes, stats.completed
+            ));
+        }
+
+        // Exactly-once replies; FIFO completion order; bounded waiting.
+        let max_gap = c.gaps.iter().copied().max().unwrap_or(0);
+        let (mut dones, mut rejects) = (0u64, 0u64);
+        let mut last_completed = 0;
+        for (i, rx) in rxs.iter().enumerate() {
+            let reply = rx.try_recv().map_err(|_| format!("request {i}: no reply"))?;
+            if rx.try_recv().is_ok() {
+                return Err(format!("request {i}: more than one reply"));
+            }
+            match reply {
+                ServeReply::Done(p) => {
+                    dones += 1;
+                    if p.id != i as u64 || p.output != vec![i as f32 + 1.0] {
+                        return Err(format!("request {i}: wrong reply {p:?}"));
+                    }
+                    if p.completed_at < last_completed {
+                        return Err(format!("request {i}: completed before request {}", i - 1));
+                    }
+                    last_completed = p.completed_at;
+                    let wait = p.completed_at - p.enqueued_at;
+                    if wait > c.delay + max_gap {
+                        return Err(format!(
+                            "request {i} waited {wait} ns > deadline {} + max gap {max_gap}",
+                            c.delay
+                        ));
+                    }
+                }
+                ServeReply::Rejected { id, depth } => {
+                    rejects += 1;
+                    if id != i as u64 {
+                        return Err(format!("request {i}: rejection carries id {id}"));
+                    }
+                    if depth != c.depth {
+                        return Err(format!(
+                            "request {i}: shed at depth {depth}, limit is {}",
+                            c.depth
+                        ));
+                    }
+                }
+            }
+        }
+        if dones != stats.completed || rejects != stats.rejected {
+            return Err(format!(
+                "replies ({dones} done, {rejects} rejected) disagree with {stats:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Parity: a batch of B requests is bit-identical to B sequential predicts
+// ---------------------------------------------------------------------------
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits2(v: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    v.iter().map(|s| bits(s)).collect()
+}
+
+/// Routed-envelope geometry (channels = V) kept small: the CI parity legs
+/// run this both with routing on and under `SPARSETRAIN_OP_ROUTE=off` /
+/// `SPARSETRAIN_CONV_ROUTE=off`, so the same assertions pin the padded
+/// batch path on the SIMD kernels *and* on the naive interpreter.
+fn parity_geometry() -> Geometry {
+    Geometry { hw: 8, c1: 16, c2: 16, classes: 5, ..Geometry::paper() }
+}
+
+#[test]
+fn batched_predict_is_bit_identical_to_sequential_singles() {
+    let g = parity_geometry();
+    let seed = 0xA11CE;
+    let mut rng = Xorshift::new(77);
+    let sample_len = g.c_in * g.hw * g.hw;
+    let samples: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..sample_len).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+        .collect();
+
+    // Kernel-routed executor (honors the route kill-switch env vars).
+    let mut routed = PredictExecutor::new(g, 4, 1, seed).unwrap();
+    assert_eq!(routed.sample_len(), sample_len);
+    let batched = routed.run_batch(&samples).unwrap();
+    let singles: Vec<Vec<f32>> =
+        samples.iter().map(|s| routed.predict_one(s).unwrap()).collect();
+    assert_eq!(
+        bits2(&batched),
+        bits2(&singles),
+        "a batch of 3 (padded to the 4-rung) must be bit-identical to 3 sequential predicts"
+    );
+
+    // All-naive interpreter executor: the same parity, and — because op
+    // routing is bit-identical to naive evaluation by contract — the same
+    // bits as the routed executor built from the same seed.
+    let mut naive = PredictExecutor::new_naive(g, 4, seed).unwrap();
+    let naive_batched = naive.run_batch(&samples).unwrap();
+    let naive_singles: Vec<Vec<f32>> =
+        samples.iter().map(|s| naive.predict_one(s).unwrap()).collect();
+    assert_eq!(bits2(&naive_batched), bits2(&naive_singles), "naive batched vs sequential");
+    assert_eq!(
+        bits2(&batched),
+        bits2(&naive_batched),
+        "routed and naive executors with one seed must serve one model"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The real executor behind the session (virtual clock) and the threaded
+// server (monotonic clock, schedule-independent assertions only)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_serves_real_predictions_on_the_virtual_clock() {
+    let g = Geometry::tiny();
+    let seed = 99;
+    let mut reference = PredictExecutor::new_naive(g, 2, seed).unwrap();
+    let exec = PredictExecutor::new_naive(g, 2, seed).unwrap();
+    let clock = Arc::new(VirtualClock::new());
+    let cfg = ServeConfig { max_batch: 2, max_delay_ns: 1_000, queue_depth: 8 };
+    let mut s = ServeSession::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>, exec);
+
+    let mut rng = Xorshift::new(5);
+    let sample_len = g.c_in * g.hw * g.hw;
+    let samples: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..sample_len).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+        .collect();
+    let mut rxs = Vec::new();
+    for s_in in &samples[..2] {
+        let (tx, rx) = mpsc::channel();
+        s.submit(s_in.clone(), tx).unwrap();
+        rxs.push(rx);
+    }
+    assert_eq!(s.stats().batch_sizes, vec![2], "size-closed at max_batch");
+
+    clock.advance(1_000);
+    let (tx, rx) = mpsc::channel();
+    s.submit(samples[2].clone(), tx).unwrap();
+    rxs.push(rx);
+    clock.set(2_000);
+    s.tick().unwrap();
+    let stats = s.shutdown().unwrap();
+    assert_eq!(stats.batch_sizes, vec![2, 1], "the straggler deadline-closes alone");
+
+    for (i, rx) in rxs.iter().enumerate() {
+        let p = done(one_reply(rx));
+        let want = reference.predict_one(&samples[i]).unwrap();
+        assert_eq!(
+            bits(&p.output),
+            bits(&want),
+            "request {i}: served logits must match a sequential predict bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn threaded_server_drains_cleanly_with_zero_rejects() {
+    let g = Geometry::tiny();
+    let seed = 7;
+    let mut reference = PredictExecutor::new_naive(g, 4, seed).unwrap();
+    let clock: Arc<dyn Clock> = Arc::new(MonotonicClock::new());
+    let cfg = ServeConfig { max_batch: 4, max_delay_ns: 500_000, queue_depth: 64 };
+    let server =
+        Server::spawn(cfg, Arc::clone(&clock), move || PredictExecutor::new_naive(g, 4, seed));
+    let tx = server.handle();
+
+    let mut rng = Xorshift::new(13);
+    let sample_len = g.c_in * g.hw * g.hw;
+    let mut samples = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..6 {
+        let input: Vec<f32> = (0..sample_len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let (reply, rx) = mpsc::channel();
+        tx.send(ServeRequest { input: input.clone(), reply }).unwrap();
+        samples.push(input);
+        rxs.push(rx);
+    }
+    drop(tx);
+    let stats = server.shutdown().unwrap();
+
+    // Batch composition is machine-dependent here; the invariants are not.
+    assert_eq!((stats.accepted, stats.rejected, stats.completed), (6, 0, 6));
+    assert_eq!(stats.batch_sizes.iter().sum::<usize>(), 6);
+    assert!(stats.batch_sizes.iter().all(|&b| (1..=4).contains(&b)));
+    for (i, rx) in rxs.iter().enumerate() {
+        let p = match wait_reply(rx).unwrap() {
+            ServeReply::Done(p) => p,
+            other => panic!("request {i}: expected Done, got {other:?}"),
+        };
+        assert!((1..=4).contains(&p.batch_size));
+        let want = reference.predict_one(&samples[i]).unwrap();
+        assert_eq!(
+            bits(&p.output),
+            bits(&want),
+            "request {i}: batching must never change the answer"
+        );
+    }
+}
