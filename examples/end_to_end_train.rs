@@ -38,7 +38,7 @@ fn pjrt_training_phase(steps: usize, seed: u64, threads: usize) -> (f64, f64) {
 
     println!("== end-to-end training: rust coordinator → PJRT → train-step artifact ==");
     let mut trainer =
-        Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20, threads })
+        Trainer::new(&artifacts, TrainerConfig { steps, seed, log_every: 20, threads, pipeline: None })
             .expect("trainer init");
     let report = trainer.run().unwrap_or_else(|e| {
         eprintln!(

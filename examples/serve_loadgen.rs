@@ -34,7 +34,7 @@ USAGE: cargo run --release --example serve_loadgen -- [options]
   --threads N        op-router worker threads (default 2)
   --seed N           arrival/input/weight seed (default 42)
   --scenario NAME    paper | hires32 | wide64 | all (default all)
-  --out FILE         also write wallclock-v4 serve rows here (optional)";
+  --out FILE         also write wallclock-v5 serve rows here (optional)";
 
 fn main() {
     let args = Args::from_env(

@@ -23,7 +23,7 @@
 //! so batching policy is exercised across distinct compute/latency
 //! ratios. Reports ([`LoadReport`]) carry p50/p95/p99 latency,
 //! throughput, and the batch-size histogram, and serialize as
-//! `component: "serve"` rows in the wallclock v4 schema
+//! `component: "serve"` rows in the wallclock v5 schema
 //! ([`crate::bench::wallclock::ServeExtra`]).
 
 use crate::bench::wallclock::{
@@ -175,7 +175,7 @@ impl LoadReport {
         self.completed() as f64 * 1e9 / self.wall_ns as f64
     }
 
-    /// This run as a wallclock v4 `component: "serve"` row.
+    /// This run as a wallclock v5 `component: "serve"` row.
     pub fn to_record(&self) -> WallclockRecord {
         WallclockRecord {
             layer: self.scenario.clone(),
@@ -183,6 +183,7 @@ impl LoadReport {
             component: "serve",
             mode: "batched",
             selector: self.selector,
+            pipeline: "none",
             sparsity: 0.0,
             threads: self.threads,
             median_ns: self.p50_ns(),
@@ -313,7 +314,7 @@ pub fn run_serve_bench(scs: &[Scenario], cfg: &ServeBenchConfig) -> Result<Vec<L
     Ok(out)
 }
 
-/// Wrap serve reports in the wallclock v4 envelope for `BENCH_serve.json`.
+/// Wrap serve reports in the wallclock v5 envelope for `BENCH_serve.json`.
 pub fn wallclock_report(reports: &[LoadReport]) -> WallclockReport {
     WallclockReport {
         backend: simd::dispatch().name(),

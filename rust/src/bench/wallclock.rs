@@ -77,8 +77,12 @@ use std::sync::Arc;
 /// (ISSUE 9) adds optional serving-latency fields on `component: "serve"`
 /// rows ([`ServeExtra`]: p50/p95/p99 latency, throughput, request and
 /// reject counts, batch-size histogram) emitted by the
-/// [`crate::bench::loadgen`] load generator.
-pub const SCHEMA: &str = "sparsetrain-wallclock-v4";
+/// [`crate::bench::loadgen`] load generator; v5 (ISSUE 10) adds the
+/// per-record `pipeline` field ("on" / "off" / "none") and a zoo-net
+/// trainer pair timed with the dependency-scheduled evaluator explicitly
+/// on vs off at the same selector and thread count
+/// ([`WallclockReport::pipeline_speedup`]).
+pub const SCHEMA: &str = "sparsetrain-wallclock-v5";
 
 /// Untimed steps run before timing a `selector: "measured"` trainer row:
 /// enough for every per-step conv key to go cold → explored → warm (the
@@ -180,6 +184,10 @@ pub struct WallclockRecord {
     /// `"none"` for kernel cells and the naive baseline, where no
     /// selector runs.
     pub selector: &'static str,
+    /// Schema v5: whether the dependency-scheduled (pipelined) evaluator
+    /// ran this row — `"on"` / `"off"` for trainer-step rows, `"none"`
+    /// for kernel cells and serve rows, where it never applies.
+    pub pipeline: &'static str,
     pub sparsity: f64,
     pub threads: usize,
     pub median_ns: f64,
@@ -187,7 +195,7 @@ pub struct WallclockRecord {
     pub gflops: f64,
     pub speedup_vs_direct1: f64,
     pub speedup_vs_dense_same_threads: f64,
-    /// Serving-latency extension (schema v4): present exactly on
+    /// Serving-latency extension (schema v4+): present exactly on
     /// `component: "serve"` rows, `None` on every kernel/trainer row.
     pub serve: Option<ServeExtra>,
 }
@@ -421,12 +429,14 @@ fn scratch_seq() -> usize {
 /// Median ns per full train step at the paper geometry, through the
 /// offline fallback artifact: `routed = None` times the naive
 /// interpreter, `Some((t, variant))` the kernel-routed runtime at `t`
-/// scheduler threads with the given selector. `None` result =
-/// environment failure (scratch dir unwritable) or routing disabled.
+/// scheduler threads with the given selector. Returns the median plus
+/// whether the runtime actually pipelined (env default — off at one
+/// thread or under the kill switch). `None` result = environment failure
+/// (scratch dir unwritable) or routing disabled.
 fn time_trainer_step(
     routed: Option<(usize, SelectorVariant)>,
     bcfg: &BenchConfig,
-) -> Option<f64> {
+) -> Option<(f64, bool)> {
     use geometry::{CLASSES, C1, C2, C_IN, HW, N};
     // A "kernel-routed" row must actually be kernel-routed: when the
     // process-wide kill switch disables routing, the runtime constructors
@@ -452,6 +462,7 @@ fn time_trainer_step(
             Runtime::cpu_with_cost_db(&arts.dir, t, Some(Arc::new(CostDb::in_memory()))).ok()?
         }
     };
+    let pipelined = rt.pipelined();
     let exe = rt.load(TRAIN_STEP).ok()?;
 
     // One fixed batch + parameter set (same He init as the trainer), so
@@ -486,7 +497,7 @@ fn time_trainer_step(
     });
     let ns = r.ns();
     let _ = std::fs::remove_dir_all(&arts.dir);
-    Some(ns)
+    Some((ns, pipelined))
 }
 
 /// Dense-equivalent FLOPs of one train step's five convolutions (conv1
@@ -505,7 +516,7 @@ fn trainer_step_flops() -> f64 {
 /// faster than its analytic twin means the cost DB is not paying off).
 fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec<WallclockRecord>) {
     let flops = trainer_step_flops();
-    let Some(naive_ns) = time_trainer_step(None, bcfg) else {
+    let Some((naive_ns, _)) = time_trainer_step(None, bcfg) else {
         println!("trainer_step: scratch artifacts unavailable; rows skipped");
         return;
     };
@@ -519,6 +530,7 @@ fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec
         component: "trainer_step",
         mode: "naive-interp",
         selector: "none",
+        pipeline: "off",
         sparsity: 0.0,
         threads: 1,
         median_ns: naive_ns,
@@ -529,12 +541,15 @@ fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec
     });
     for &t in threads {
         for variant in [SelectorVariant::Analytic, SelectorVariant::Measured] {
-            let Some(ns) = time_trainer_step(Some((t, variant)), bcfg) else { continue };
+            let Some((ns, pipelined)) = time_trainer_step(Some((t, variant)), bcfg) else {
+                continue;
+            };
             println!(
-                "{:<12} trainer_step kernel-routed  t={t}  sel={:<8}  {:>12.0} ns  \
+                "{:<12} trainer_step kernel-routed  t={t}  sel={:<8} pipe={:<3}  {:>12.0} ns  \
                  {:>7.2} GF/s  {:>5.2}x vs naive",
                 "paper",
                 variant.name(),
+                if pipelined { "on" } else { "off" },
                 ns,
                 flops / ns,
                 naive_ns / ns
@@ -545,6 +560,7 @@ fn trainer_step_records(threads: &[usize], bcfg: &BenchConfig, records: &mut Vec
                 component: "trainer_step",
                 mode: "kernel-routed",
                 selector: variant.name(),
+                pipeline: if pipelined { "on" } else { "off" },
                 sparsity: 0.0,
                 threads: t,
                 median_ns: ns,
@@ -577,12 +593,16 @@ fn init_net_param(rng: &mut Xorshift, dims: &[usize]) -> Option<Vec<f32>> {
 
 /// Median ns per train step on the emitted `resnet34_small` zoo graph —
 /// a multi-layer net whose per-layer sparsities differ, so the measured
-/// selector has real mode crossovers to exploit.
+/// selector has real mode crossovers to exploit. `pipeline` pins the
+/// dependency-scheduled evaluator explicitly (the v5 on/off A/B must not
+/// depend on `SPARSETRAIN_PIPELINE`); the returned flag is what the
+/// runtime actually did.
 fn time_net_trainer_step(
     variant: SelectorVariant,
     threads: usize,
+    pipeline: Option<bool>,
     bcfg: &BenchConfig,
-) -> Option<f64> {
+) -> Option<(f64, bool)> {
     if !(crate::runtime::executor::routing_enabled()
         || crate::runtime::executor::op_routing_enabled())
     {
@@ -598,7 +618,8 @@ fn time_net_trainer_step(
         SelectorVariant::Analytic => None,
         SelectorVariant::Measured => Some(Arc::new(CostDb::in_memory())),
     };
-    let mut rt = Runtime::cpu_with_cost_db(&arts.dir, threads, db).ok()?;
+    let mut rt = Runtime::cpu_with_options(&arts.dir, threads, db, pipeline).ok()?;
+    let pipelined = rt.pipelined();
     let exe = rt.load(&train_name).ok()?;
 
     let mut rng = Xorshift::new(0x500);
@@ -624,30 +645,50 @@ fn time_net_trainer_step(
     });
     let ns = r.ns();
     let _ = std::fs::remove_dir_all(&arts.dir);
-    Some(ns)
+    Some((ns, pipelined))
 }
 
-/// Append the `resnet34_small` analytic/measured trainer pair at 2
-/// threads (skipped when routing is disabled or the graph fails to
-/// emit). `speedup_vs_direct1` on these rows is relative to the analytic
-/// twin — ≥ 1.0 on the measured row is the ISSUE 8 acceptance bar.
+/// Append the `resnet34_small` zoo trainer rows at 2 threads (skipped
+/// when routing is disabled or the graph fails to emit):
+///
+/// * the ISSUE 8 analytic/measured selector pair, both with the pipeline
+///   explicitly **on** — `speedup_vs_direct1` on these rows is relative
+///   to the analytic twin, ≥ 1.0 on the measured row is that PR's bar;
+/// * the ISSUE 10 pipeline **off** twin of the analytic row — the
+///   on/off pair at the same selector and thread count is the schema-v5
+///   acceptance readout ([`WallclockReport::pipeline_speedup`]).
+///
+/// Pipeline state is pinned per row (not read from the environment) so
+/// the A/B survives any ambient `SPARSETRAIN_PIPELINE`.
 fn net_trainer_step_records(bcfg: &BenchConfig, records: &mut Vec<WallclockRecord>) {
     const ZOO_THREADS: usize = 2;
-    let Some(analytic_ns) = time_net_trainer_step(SelectorVariant::Analytic, ZOO_THREADS, bcfg)
+    let Some((analytic_ns, _)) =
+        time_net_trainer_step(SelectorVariant::Analytic, ZOO_THREADS, Some(true), bcfg)
     else {
         println!("trainer_step zoo: unavailable; rows skipped");
         return;
     };
-    for (variant, ns) in [
-        (SelectorVariant::Analytic, Some(analytic_ns)),
-        (SelectorVariant::Measured, time_net_trainer_step(SelectorVariant::Measured, ZOO_THREADS, bcfg)),
-    ] {
-        let Some(ns) = ns else { continue };
+    let cells: [(SelectorVariant, bool, Option<(f64, bool)>); 3] = [
+        (SelectorVariant::Analytic, true, Some((analytic_ns, true))),
+        (
+            SelectorVariant::Measured,
+            true,
+            time_net_trainer_step(SelectorVariant::Measured, ZOO_THREADS, Some(true), bcfg),
+        ),
+        (
+            SelectorVariant::Analytic,
+            false,
+            time_net_trainer_step(SelectorVariant::Analytic, ZOO_THREADS, Some(false), bcfg),
+        ),
+    ];
+    for (variant, pipe, ns) in cells {
+        let Some((ns, _)) = ns else { continue };
         println!(
-            "{:<12} trainer_step kernel-routed  t={ZOO_THREADS}  sel={:<8}  {:>12.0} ns  \
-             {:>5.2}x vs analytic",
+            "{:<12} trainer_step kernel-routed  t={ZOO_THREADS}  sel={:<8} pipe={:<3}  \
+             {:>12.0} ns  {:>5.2}x vs analytic/on",
             "resnet34_sm",
             variant.name(),
+            if pipe { "on" } else { "off" },
             ns,
             analytic_ns / ns
         );
@@ -657,6 +698,7 @@ fn net_trainer_step_records(bcfg: &BenchConfig, records: &mut Vec<WallclockRecor
             component: "trainer_step",
             mode: "kernel-routed",
             selector: variant.name(),
+            pipeline: if pipe { "on" } else { "off" },
             sparsity: 0.0,
             threads: ZOO_THREADS,
             median_ns: ns,
@@ -691,6 +733,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                 component: comp.name(),
                 mode: "direct",
                 selector: "none",
+                pipeline: "none",
                 sparsity: 0.0,
                 threads: 1,
                 median_ns: direct_ns,
@@ -726,6 +769,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                     component: comp.name(),
                     mode: "direct_pre",
                     selector: "none",
+                    pipeline: "none",
                     sparsity: 0.0,
                     threads: 1,
                     median_ns: pre_ns,
@@ -766,6 +810,7 @@ pub fn run(wcfg: &WallclockConfig) -> WallclockReport {
                             component: comp.name(),
                             mode: mode_name(mode),
                             selector: "none",
+                            pipeline: "none",
                             sparsity,
                             threads,
                             median_ns: ns,
@@ -811,7 +856,7 @@ impl WallclockReport {
         for (i, r) in self.records.iter().enumerate() {
             out.push_str(&format!(
                 "    {{\"layer\": \"{}\", \"rs\": {}, \"component\": \"{}\", \"mode\": \"{}\", \
-                 \"selector\": \"{}\", \
+                 \"selector\": \"{}\", \"pipeline\": \"{}\", \
                  \"sparsity\": {:.2}, \"threads\": {}, \"median_ns\": {:.1}, \
                  \"gflops\": {:.3}, \"speedup_vs_direct1\": {:.3}, \
                  \"speedup_vs_dense_same_threads\": {:.3}",
@@ -820,6 +865,7 @@ impl WallclockReport {
                 r.component,
                 r.mode,
                 r.selector,
+                r.pipeline,
                 r.sparsity,
                 r.threads,
                 r.median_ns,
@@ -888,7 +934,9 @@ impl WallclockReport {
     /// Analytic-time ÷ measured-time per (layer, threads) trainer pair —
     /// the ISSUE 8 acceptance readout: every ratio should be ≥ 1.0 (the
     /// warmed DB never loses to the analytic model) and > 1.0 somewhere.
-    /// Pairs missing either row are omitted.
+    /// Pairs missing either row are omitted. Since schema v5 the twin
+    /// must also match on `pipeline` — a measured/pipelined row compared
+    /// against an analytic/sequential one would conflate the two levers.
     pub fn measured_vs_analytic(&self) -> Vec<(String, usize, f64)> {
         let mut out = Vec::new();
         for m in &self.records {
@@ -900,12 +948,42 @@ impl WallclockReport {
                     && a.selector == "analytic"
                     && a.layer == m.layer
                     && a.threads == m.threads
+                    && a.pipeline == m.pipeline
                     && a.median_ns > 0.0
             }) {
                 out.push((m.layer.clone(), m.threads, a.median_ns / m.median_ns));
             }
         }
         out
+    }
+
+    /// Sequential-time ÷ pipelined-time for the trainer pair at
+    /// (layer, threads) with the **same selector** — the ISSUE 10
+    /// acceptance readout: ≥ 1.0 means the dependency-scheduled evaluator
+    /// is no slower than strict SSA-order evaluation. `None` when either
+    /// twin is missing or has a non-positive median.
+    pub fn pipeline_speedup(&self, layer: &str, threads: usize) -> Option<f64> {
+        let row = |pipe: &str| {
+            self.records.iter().find(|r| {
+                r.component == "trainer_step"
+                    && r.mode == "kernel-routed"
+                    && r.layer == layer
+                    && r.threads == threads
+                    && r.pipeline == pipe
+                    && r.median_ns > 0.0
+            })
+        };
+        let on = row("on")?;
+        let off = self.records.iter().find(|r| {
+            r.component == "trainer_step"
+                && r.mode == "kernel-routed"
+                && r.layer == layer
+                && r.threads == threads
+                && r.pipeline == "off"
+                && r.selector == on.selector
+                && r.median_ns > 0.0
+        })?;
+        Some(off.median_ns / on.median_ns)
     }
 
     /// Best `speedup_vs_direct1` over MaskLoop rows of **3×3 layers** at
@@ -1021,6 +1099,7 @@ mod tests {
             component: "trainer_step",
             mode,
             selector: if mode == "kernel-routed" { "analytic" } else { "none" },
+            pipeline: if mode == "kernel-routed" { "on" } else { "off" },
             sparsity: 0.0,
             threads,
             median_ns,
@@ -1072,6 +1151,33 @@ mod tests {
         assert_eq!(report.trainer_step_speedup(2), None);
     }
 
+    /// The v5 acceptance readout pairs the pipelined row with its
+    /// sequential twin at the same (layer, threads, selector); an
+    /// off-only or on-only report yields `None`, never a garbage ratio.
+    #[test]
+    fn miri_pipeline_speedup_pairs_on_off_rows() {
+        let mk = |records: Vec<WallclockRecord>| WallclockReport {
+            backend: "scalar",
+            profile: "debug",
+            threads_available: 2,
+            records,
+        };
+        let on = trainer_row("kernel-routed", 2, 100.0); // pipeline: "on"
+        let mut off = trainer_row("kernel-routed", 2, 150.0);
+        off.pipeline = "off";
+        assert_eq!(mk(vec![on.clone()]).pipeline_speedup("paper", 2), None);
+        assert_eq!(mk(vec![off.clone()]).pipeline_speedup("paper", 2), None);
+        let report = mk(vec![on.clone(), off.clone()]);
+        assert_eq!(report.pipeline_speedup("paper", 2), Some(1.5));
+        assert_eq!(report.pipeline_speedup("paper", 4), None, "thread count must match");
+        assert_eq!(report.pipeline_speedup("resnet34_small", 2), None, "layer must match");
+        // The off twin must share the selector — a measured/off row does
+        // not pair with an analytic/on row.
+        let mut mismatched = off;
+        mismatched.selector = "measured";
+        assert_eq!(mk(vec![on, mismatched]).pipeline_speedup("paper", 2), None);
+    }
+
     /// The v3 acceptance readout pairs measured rows with their analytic
     /// twin by (layer, threads) and ignores incomplete pairs.
     #[test]
@@ -1097,10 +1203,10 @@ mod tests {
         assert_eq!(report.measured_vs_analytic(), vec![("paper".to_string(), 2, 2.0)]);
     }
 
-    /// v4 serve rows survive a serialize → parse round trip bit-exactly
+    /// Serve rows survive a serialize → parse round trip bit-exactly
     /// (every numeric is chosen exactly representable at the emitter's
     /// printed precision), kernel rows stay serve-free, and the parser
-    /// ignores non-v4 input wholesale.
+    /// ignores input from any other schema version wholesale.
     #[test]
     fn miri_serve_rows_round_trip_through_v4_json() {
         let extra = ServeExtra {
@@ -1118,6 +1224,7 @@ mod tests {
             component: "serve",
             mode: "batched",
             selector: "measured",
+            pipeline: "none",
             sparsity: 0.0,
             threads: 2,
             median_ns: 1200.5,
@@ -1223,6 +1330,7 @@ mod tests {
         let json = report.to_json();
         assert!(json.contains(&format!("\"schema\": \"{SCHEMA}\"")));
         assert!(json.contains("\"selector\""));
+        assert!(json.contains("\"pipeline\": \"none\""), "v5 field on every kernel row");
         assert!(json.contains("\"backend\""));
         assert!(json.contains("MaskLoop"));
         assert!(json.contains("direct_pre"));

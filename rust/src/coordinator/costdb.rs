@@ -201,6 +201,30 @@ impl CostKey {
             mode: "gemm".to_string(),
         }
     }
+
+    /// Key for a parallel GEMM execution at an explicit work-distribution
+    /// chunk count (mode `c<chunks>`). The selector's GEMM policy
+    /// ([`crate::coordinator::Selector::gemm_chunks`]) explores a small
+    /// candidate set of chunk counts per shape through these keys and
+    /// then picks the cheapest measured one — every chunk count is
+    /// bit-identical, so a cold or corrupt key only costs speed.
+    pub fn gemm_chunks(
+        m: usize,
+        n: usize,
+        k: usize,
+        threads: usize,
+        backend: &str,
+        chunks: usize,
+    ) -> CostKey {
+        CostKey {
+            component: DbComponent::Gemm,
+            geom: gemm_sig(m, n, k),
+            bucket: 0,
+            threads,
+            backend: backend.to_string(),
+            mode: format!("c{chunks}"),
+        }
+    }
 }
 
 /// One measured cell: EMA over `samples` observations, in nanoseconds.

@@ -2,11 +2,13 @@
 //! tasks across worker threads, selects the best convolution algorithm per
 //! layer (static `combined` policy, the dynamic profiler-driven variant
 //! §5.3 suggests, and the measured-cost database of ISSUE 8), drives the
-//! PJRT training loop, and batches inference requests for serving
-//! (ISSUE 9, [`serve`]).
+//! PJRT training loop, batches inference requests for serving
+//! (ISSUE 9, [`serve`]), and supplies the dependency-scheduled
+//! evaluator's cost-gated overlap planner (ISSUE 10, [`pipeline`]).
 
 pub mod costdb;
 pub mod metrics;
+pub mod pipeline;
 pub mod scheduler;
 pub mod selector;
 pub mod serve;

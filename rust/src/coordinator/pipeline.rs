@@ -1,0 +1,316 @@
+//! Pipeline planner (ISSUE 10): the cost-gated overlap policy behind the
+//! dependency-scheduled evaluator.
+//!
+//! The vendored interpreter builds the data-dependency DAG and proves
+//! which instruction pairs are independent; this module supplies the two
+//! host-side halves of [`xla::PipelinePlanner`]:
+//!
+//! - **`join`** — [`crate::runtime::executor::OpRouter::overlap_join`]:
+//!   structured fork-join on the *same* persistent pool every routed
+//!   kernel already uses (one task on the caller, one on a parked
+//!   worker). No second pool, no thread spawns.
+//! - **`overlap`** — [`should_overlap`]: co-schedule two ready
+//!   instructions only when (a) both are canonical, in-envelope
+//!   SparseTrain convolutions (the ops whose BWI‖BWW independence the
+//!   paper's backward pass exposes — everything else is too cheap for a
+//!   handoff to pay), and (b) the measured-cost DB says the first op's
+//!   inner parallelism **under-fills** the configured thread count:
+//!   `ns(1 thread) / ns(t threads) < 0.6·t`. Near-linear scaling means
+//!   the op already saturates the pool and co-scheduling would only
+//!   steal its workers; poor scaling means a worker is idle and the
+//!   second op rides along for free. Off-DB or cold keys default to
+//!   *allow* — co-scheduled ops key their selector decisions and cost
+//!   records on an effective thread budget of 1, so overlapped runs are
+//!   exactly what populates the `threads = 1` rows this gate reads.
+//!
+//! Numerics are not this module's concern: the evaluator only consults
+//! `overlap` for pairs already proven independent, each op fully owns
+//! its output buffer, and independent ops commute — so any gate answer
+//! (including a random one) yields bit-identical results. Pinned by
+//! `rust/tests/pipeline_route_parity.rs`; the kill switch
+//! `SPARSETRAIN_PIPELINE=off` removes the planner entirely.
+
+use crate::coordinator::costdb::{self, CostDb, DbComponent};
+use crate::kernels::{Component, ConvConfig};
+use crate::runtime::executor::{cfg_in_envelope, classify, Form, OpRouter};
+use crate::V;
+use std::sync::Arc;
+use xla::hlo::{Computation, Op, ShapeDecl};
+
+/// Parallel-efficiency floor below which an op is considered to
+/// under-fill the pool (see the module docs' gate condition).
+const SCALING_FLOOR: f64 = 0.6;
+
+/// Rank-4 dims of instruction `idx`'s declared shape, if it has one.
+fn dims4(comp: &Computation, idx: usize) -> Option<[usize; 4]> {
+    let instr = comp.instrs.get(idx)?;
+    let ShapeDecl::Single(sh) = &instr.shape else {
+        return None;
+    };
+    match sh.dims[..] {
+        [a, b, c, d] => Some([a, b, c, d]),
+        _ => None,
+    }
+}
+
+/// When instruction `idx` is a canonical, in-envelope SparseTrain
+/// convolution, reconstruct the kernel config the router would run it
+/// with — the same shape extraction as `OpRouter::route_fwd/bwi/bww`,
+/// but from declared shapes (plan time) instead of live buffers (run
+/// time). `validate()` at compile guarantees declared shapes are the
+/// executed shapes, so the two never disagree.
+pub(crate) fn conv_config_of(comp: &Computation, idx: usize) -> Option<(Component, ConvConfig)> {
+    let instr = comp.instrs.get(idx)?;
+    let Op::Convolution { window: w, spec } = &instr.op else {
+        return None;
+    };
+    let [li, ri] = instr.operands[..] else {
+        return None;
+    };
+    let l = dims4(comp, li)?;
+    let r = dims4(comp, ri)?;
+    let o = dims4(comp, idx)?;
+    if w.pad_lo != w.pad_hi || w.size != [r[2], r[3]] {
+        return None;
+    }
+    match classify(spec)? {
+        Form::Fwd => {
+            let cfg = ConvConfig {
+                n: l[0],
+                c: l[1],
+                k: r[0],
+                h: l[2],
+                w: l[3],
+                s: w.size[0],
+                r: w.size[1],
+                stride_p: w.stride[0],
+                stride_o: w.stride[1],
+                pad_h: w.pad_lo[0],
+                pad_w: w.pad_lo[1],
+            };
+            (r[1] == cfg.c && cfg_in_envelope(&cfg)).then_some((Component::Fwd, cfg))
+        }
+        Form::Bwi => {
+            if w.stride != [1, 1] {
+                return None;
+            }
+            let (s, rr) = (w.size[0], w.size[1]);
+            if w.pad_lo[0] + 1 > s || w.pad_lo[1] + 1 > rr {
+                return None;
+            }
+            let cfg = ConvConfig {
+                n: l[0],
+                c: r[1],
+                k: l[1],
+                h: o[2],
+                w: o[3],
+                s,
+                r: rr,
+                stride_p: 1,
+                stride_o: 1,
+                pad_h: s - 1 - w.pad_lo[0],
+                pad_w: rr - 1 - w.pad_lo[1],
+            };
+            (r[0] == cfg.k
+                && cfg_in_envelope(&cfg)
+                && cfg.out_h() == l[2]
+                && cfg.out_w() == l[3])
+                .then_some((Component::Bwi, cfg))
+        }
+        Form::Bww => {
+            if w.stride != [1, 1] {
+                return None;
+            }
+            let cfg = ConvConfig {
+                n: l[0],
+                c: l[1],
+                k: r[1],
+                h: l[2],
+                w: l[3],
+                s: o[2],
+                r: o[3],
+                stride_p: 1,
+                stride_o: 1,
+                pad_h: w.pad_lo[0],
+                pad_w: w.pad_lo[1],
+            };
+            (r[0] == cfg.n
+                && cfg.n % V == 0
+                && cfg_in_envelope(&cfg)
+                && cfg.out_h() == w.size[0]
+                && cfg.out_w() == w.size[1])
+                .then_some((Component::Bww, cfg))
+        }
+    }
+}
+
+/// The measured half of the gate, factored out of [`should_overlap`] so
+/// it is testable without a live router (whose DB is forcibly detached
+/// under Miri): does the measured scaling of `(comp, geom)` say the op
+/// under-fills `threads` workers? Cold keys and a detached DB answer
+/// `true` — co-scheduling is the exploration that records the
+/// single-thread rows a warm answer needs.
+pub(crate) fn scaling_underfills(
+    db: Option<&CostDb>,
+    comp: DbComponent,
+    geom: &str,
+    threads: usize,
+    backend: &str,
+) -> bool {
+    let Some(db) = db else {
+        return true;
+    };
+    match (db.best_ns(comp, geom, 1, backend), db.best_ns(comp, geom, threads, backend)) {
+        (Some(ns_1), Some(ns_t)) if ns_t > 0.0 => {
+            ns_1 / ns_t < SCALING_FLOOR * threads as f64
+        }
+        _ => true,
+    }
+}
+
+/// The full overlap predicate the planner installs — see the module docs
+/// for the policy. `a` is the instruction the evaluator is about to run
+/// (the lowest-index ready one, whose measured scaling is queried);
+/// `b` is the co-scheduling candidate.
+pub fn should_overlap(router: &OpRouter, comp: &Computation, a: usize, b: usize) -> bool {
+    let threads = router.threads();
+    if threads < 2 {
+        return false;
+    }
+    let Some((ka, cfg_a)) = conv_config_of(comp, a) else {
+        return false;
+    };
+    if conv_config_of(comp, b).is_none() {
+        return false;
+    }
+    scaling_underfills(
+        router.cost_db().map(|d| d.as_ref()),
+        DbComponent::from_kernel(ka),
+        &costdb::geom_sig(&cfg_a),
+        threads,
+        router.backend_name(),
+    )
+}
+
+/// Coerce a closure to the vendored crate's higher-ranked join type.
+fn join_arc<F>(f: F) -> Arc<xla::JoinFn>
+where
+    F: for<'a> Fn(xla::TaskBox<'a>, xla::TaskBox<'a>) + Send + Sync + 'static,
+{
+    Arc::new(f)
+}
+
+/// Build the planner for a router: `join` forks onto the router's pool,
+/// `overlap` applies [`should_overlap`]. Install with
+/// [`xla::PjRtClient::set_pipeline_planner`] *before* compiling — the
+/// runtime does this exactly when `SPARSETRAIN_PIPELINE` is on, the
+/// router exists, and the pool has at least two workers.
+pub fn planner(router: &Arc<OpRouter>) -> Arc<xla::PipelinePlanner> {
+    let jr = Arc::clone(router);
+    let or = Arc::clone(router);
+    Arc::new(xla::PipelinePlanner {
+        join: join_arc(move |a, b| jr.overlap_join(a, b)),
+        overlap: Arc::new(move |comp: &Computation, a: usize, b: usize| {
+            should_overlap(&or, comp, a, b)
+        }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::costdb::CostKey;
+    use crate::kernels::SkipMode;
+
+    /// Two independent in-envelope FWD convs plus a plain multiply, all
+    /// on 16-channel shapes (a `V` multiple for every supported width).
+    fn two_conv_comp() -> xla::hlo::Module {
+        let text = "HloModule p\nENTRY %m {\n  %x = f32[1,16,4,4] parameter(0)\n  \
+                    %w1 = f32[16,16,3,3] parameter(1)\n  \
+                    %a = f32[1,16,4,4] convolution(%x, %w1), \
+                    window={size=3x3 pad=1_1x1_1}, dim_labels=bf01_oi01->bf01\n  \
+                    %b = f32[1,16,4,4] convolution(%x, %w1), \
+                    window={size=3x3 pad=1_1x1_1}, dim_labels=bf01_oi01->bf01\n  \
+                    ROOT %e = f32[1,16,4,4] multiply(%a, %b)\n}\n";
+        xla::hlo::parse_module(text).unwrap()
+    }
+
+    #[test]
+    fn miri_conv_config_reconstructs_the_fwd_shape() {
+        let m = two_conv_comp();
+        let comp = &m.comps[m.entry];
+        // instrs: 0 %x, 1 %w1, 2 %a, 3 %b, 4 %e
+        let (component, cfg) = conv_config_of(comp, 2).expect("canonical FWD conv");
+        assert_eq!(component, Component::Fwd);
+        assert_eq!((cfg.n, cfg.c, cfg.k), (1, 16, 16));
+        assert_eq!((cfg.h, cfg.w, cfg.s, cfg.r), (4, 4, 3, 3));
+        assert_eq!((cfg.pad_h, cfg.pad_w, cfg.stride_p, cfg.stride_o), (1, 1, 1, 1));
+        assert!(conv_config_of(comp, 4).is_none(), "multiply is not a conv");
+        assert!(conv_config_of(comp, 0).is_none(), "parameter is not a conv");
+    }
+
+    #[test]
+    fn miri_gate_requires_two_routable_convs_and_two_threads() {
+        let m = two_conv_comp();
+        let comp = &m.comps[m.entry];
+        // No DB (forced under Miri anyway): the heuristic path. Two
+        // independent convs at >= 2 threads overlap; anything else not.
+        let router = OpRouter::with_cost_db(2, None);
+        assert!(should_overlap(&router, comp, 2, 3));
+        assert!(!should_overlap(&router, comp, 2, 4), "partner is a multiply");
+        assert!(!should_overlap(&router, comp, 4, 3), "first op is a multiply");
+        let single = OpRouter::with_cost_db(1, None);
+        assert!(!should_overlap(&single, comp, 2, 3), "one thread: nothing to overlap onto");
+    }
+
+    #[test]
+    fn miri_gate_scaling_threshold_cold_and_warm() {
+        let cfg = ConvConfig::square(1, 16, 16, 4, 3, 1);
+        let geom = costdb::geom_sig(&cfg);
+        let record = |db: &CostDb, threads: usize, ns: f64| {
+            db.record(
+                CostKey::conv(Component::Fwd, &cfg, 0.5, threads, "t", SkipMode::Dense),
+                ns,
+            );
+        };
+        // Detached DB and cold keys both allow (exploration).
+        assert!(scaling_underfills(None, DbComponent::Fwd, &geom, 2, "t"));
+        let db = CostDb::in_memory();
+        assert!(scaling_underfills(Some(&db), DbComponent::Fwd, &geom, 2, "t"), "cold slice");
+        record(&db, 1, 2000.0);
+        assert!(scaling_underfills(Some(&db), DbComponent::Fwd, &geom, 2, "t"), "t-row cold");
+        // Near-linear scaling (2000 -> 1050, efficiency ~0.95): the op
+        // fills the pool; keep it sequential.
+        record(&db, 2, 1050.0);
+        assert!(!scaling_underfills(Some(&db), DbComponent::Fwd, &geom, 2, "t"));
+        // Poor scaling (2000 -> 1900, efficiency ~0.53 < 0.6): a worker
+        // idles; co-schedule. Fresh DB so the EMA doesn't mix samples.
+        let db2 = CostDb::in_memory();
+        record(&db2, 1, 2000.0);
+        record(&db2, 2, 1900.0);
+        assert!(scaling_underfills(Some(&db2), DbComponent::Fwd, &geom, 2, "t"));
+        // Mismatched backend slices stay invisible -> cold -> allow.
+        assert!(scaling_underfills(Some(&db), DbComponent::Fwd, &geom, 2, "other"));
+    }
+
+    #[test]
+    fn miri_planner_join_runs_both_and_overlap_matches_gate() {
+        let m = two_conv_comp();
+        let comp = &m.comps[m.entry];
+        let router = Arc::new(OpRouter::with_cost_db(2, None));
+        let p = planner(&router);
+        assert!((p.overlap)(comp, 2, 3));
+        assert!(!(p.overlap)(comp, 2, 4));
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        (p.join)(
+            Box::new(|| {
+                hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }),
+            Box::new(|| {
+                hits.fetch_add(10, std::sync::atomic::Ordering::Relaxed);
+            }),
+        );
+        assert_eq!(hits.load(std::sync::atomic::Ordering::Relaxed), 11);
+        assert_eq!(router.overlap_pairs(), 1);
+    }
+}

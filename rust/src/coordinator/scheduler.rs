@@ -186,6 +186,10 @@ pub struct Scheduler {
     pool: ThreadPool,
     backend: Backend,
     tuner: ChunkTuner,
+    /// Busy-worker EMA over recent launches (see
+    /// [`Scheduler::pool_utilization`]); `None` until a timed
+    /// multi-thread launch has run.
+    util_ema: Mutex<Option<f64>>,
 }
 
 /// Execution report: merged kernel stats + load-balance info.
@@ -207,6 +211,7 @@ impl Scheduler {
             pool: ThreadPool::new(threads),
             backend: simd::dispatch(),
             tuner: ChunkTuner::new(),
+            util_ema: Mutex::new(None),
         }
     }
 
@@ -216,12 +221,18 @@ impl Scheduler {
             pool: ThreadPool::with_host_parallelism(),
             backend: simd::dispatch(),
             tuner: ChunkTuner::new(),
+            util_ema: Mutex::new(None),
         }
     }
 
     /// A scheduler pinned to an explicit backend (parity tests, benches).
     pub fn with_backend(threads: usize, backend: Backend) -> Scheduler {
-        Scheduler { pool: ThreadPool::new(threads), backend, tuner: ChunkTuner::new() }
+        Scheduler {
+            pool: ThreadPool::new(threads),
+            backend,
+            tuner: ChunkTuner::new(),
+            util_ema: Mutex::new(None),
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -272,6 +283,35 @@ impl Scheduler {
     /// for tests and diagnostics).
     pub fn chunk_multiplier(&self, comp: Component, total_tasks: usize) -> usize {
         self.tuner.multiplier((comp_tag(comp), total_tasks))
+    }
+
+    /// Busy-worker utilization EMA over recent kernel launches:
+    /// `Σ chunk_ns / (threads · max chunk_ns)` per launch (clamped to 1),
+    /// folded at EMA weight 0.25 (matching the cost DB). A value well
+    /// below 1 means the pool sat under-filled during sweeps — exactly
+    /// the slack the ISSUE 10 pipeline executor co-schedules into. `None`
+    /// single-threaded, under Miri (no clocks), or before any launch.
+    pub fn pool_utilization(&self) -> Option<f64> {
+        *self.util_ema.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Fold one launch's per-chunk wall times into the utilization EMA.
+    fn note_utilization(&self, chunk_ns: &[u64]) {
+        let threads = self.pool.threads();
+        if threads < 2 {
+            return;
+        }
+        let busy: u64 = chunk_ns.iter().sum();
+        let max = chunk_ns.iter().copied().max().unwrap_or(0);
+        if busy == 0 || max == 0 {
+            return; // clockless (Miri) or nothing ran
+        }
+        let frac = (busy as f64 / (threads as f64 * max as f64)).min(1.0);
+        let mut ema = self.util_ema.lock().unwrap_or_else(|p| p.into_inner());
+        *ema = Some(match *ema {
+            Some(prev) => 0.25 * frac + 0.75 * prev,
+            None => frac,
+        });
     }
 
     /// Run SparseTrain FWD with output parallelism. Tasks are `(i, oy, qb)`
@@ -327,6 +367,7 @@ impl Scheduler {
         let tasks_per_chunk: Vec<usize> =
             tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect();
         let chunk_ns: Vec<u64> = chunk_ns.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        self.note_utilization(&chunk_ns);
         self.tuner.observe(
             (comp_tag(Component::Fwd), total),
             self.pool.threads(),
@@ -392,6 +433,7 @@ impl Scheduler {
         let tasks_per_chunk: Vec<usize> =
             tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect();
         let chunk_ns: Vec<u64> = chunk_ns.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        self.note_utilization(&chunk_ns);
         self.tuner.observe(
             (comp_tag(Component::Bwi), total),
             self.pool.threads(),
@@ -458,6 +500,7 @@ impl Scheduler {
         let tasks_per_chunk: Vec<usize> =
             tasks_per_chunk.iter().map(|a| a.load(Ordering::Relaxed)).collect();
         let chunk_ns: Vec<u64> = chunk_ns.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        self.note_utilization(&chunk_ns);
         self.tuner.observe(
             (comp_tag(Component::Bww), total),
             self.pool.threads(),
@@ -510,6 +553,33 @@ mod tests {
         assert!(allclose(&y.to_nchw(), &yref, 1e-4, 1e-5));
         assert_eq!(report.total_tasks, Scheduler::fwd_task_count(&cfg));
         assert_eq!(report.tasks_per_chunk.iter().sum::<usize>(), report.total_tasks);
+    }
+
+    #[test]
+    fn miri_pool_utilization_reports_only_on_timed_multithread_runs() {
+        let cfg = ConvConfig::square(1, V, V, 6, 3, 1);
+        let (d, g) = setup(&cfg, 0.5);
+
+        // Single worker: utilization is meaningless and stays None.
+        let s1 = Scheduler::with_backend(1, Backend::scalar());
+        let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+        s1.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+        assert_eq!(s1.pool_utilization(), None);
+
+        // Two workers: None before any run; after runs, either a valid
+        // fraction (timed) or None (clockless — always the case under
+        // Miri, possible off-Miri when a tiny launch lands under the
+        // clock resolution).
+        let s2 = Scheduler::with_backend(2, Backend::scalar());
+        assert_eq!(s2.pool_utilization(), None);
+        for _ in 0..3 {
+            let mut y = ActTensor::zeros(cfg.n, cfg.k, cfg.out_h(), cfg.out_w());
+            s2.run_fwd(&cfg, &d, &g, &mut y, SkipMode::MaskLoop);
+        }
+        if let Some(u) = s2.pool_utilization() {
+            assert!(u > 0.0 && u <= 1.0, "utilization out of range: {u}");
+            assert!(!cfg!(miri), "Miri has no clocks; utilization must stay None");
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! `select_dynamic`) remains purely analytic — the DB keys on executed
 //! kernels, not on algorithm families the router cannot run.
 
-use crate::coordinator::costdb::{self, CostDb, DbDecision};
+use crate::coordinator::costdb::{self, CostDb, CostKey, DbDecision};
 use crate::kernels::{simd, winograd, onebyone, Component, ConvConfig, SkipMode};
 use crate::sim::{Algorithm, Machine};
 use crate::sparsity::SparsityProfiler;
@@ -225,6 +225,73 @@ impl Selector {
         self.skip_mode_decision(cfg, comp, sparsity).0
     }
 
+    /// [`Self::skip_mode_decision`] at an explicit thread budget instead
+    /// of the configured one. The pipeline executor (ISSUE 10) uses this
+    /// for thread-budget splitting: an op co-scheduled onto a pool worker
+    /// runs its inner parallel-for inline — effectively one thread — so
+    /// both the analytic model and the measured-cost key must see that
+    /// budget, not the pool width (which also self-populates the
+    /// single-thread DB rows the overlap gate compares against).
+    pub fn skip_mode_decision_at(
+        &self,
+        cfg: &ConvConfig,
+        comp: Component,
+        sparsity: f64,
+        threads: usize,
+    ) -> (SkipMode, DbDecision) {
+        let at = Selector {
+            machine: self.machine,
+            threads: threads.max(1),
+            seed: self.seed,
+            cost_db: self.cost_db.clone(),
+            backend: self.backend,
+        };
+        at.skip_mode_decision(cfg, comp, sparsity)
+    }
+
+    /// Work-distribution chunk count for a parallel GEMM of shape
+    /// `m × n × k` at `threads` workers (ISSUE 10 satellite: the recorded
+    /// `gemm` cost rows finally drive a policy). With no DB the static
+    /// `default_chunks` (one chunk per `MB`-row panel) stands; with one,
+    /// a small candidate set — the default plus 1×/2×/4× the thread
+    /// count — is explored lazily through [`CostKey::gemm_chunks`] keys
+    /// and the cheapest measured candidate wins. Every candidate is
+    /// bit-identical (chunking only groups independent row panels), so a
+    /// cold key costs at most one exploratory timing.
+    pub fn gemm_chunks(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        threads: usize,
+        default_chunks: usize,
+    ) -> usize {
+        let cap = m.max(1);
+        let default_chunks = default_chunks.clamp(1, cap);
+        let Some(db) = &self.cost_db else {
+            return default_chunks;
+        };
+        let threads = threads.max(1);
+        let mut cands = vec![default_chunks, threads, threads * 2, threads * 4];
+        for c in &mut cands {
+            *c = (*c).clamp(1, cap);
+        }
+        cands.sort_unstable();
+        cands.dedup();
+        let mut best: Option<(usize, f64)> = None;
+        for &c in &cands {
+            match db.lookup(&CostKey::gemm_chunks(m, n, k, threads, self.backend, c)) {
+                // Cold candidate: run (and time) it next — lazy explore.
+                None => return c,
+                Some(e) => match best {
+                    Some((_, b)) if b <= e.ema_ns => {}
+                    _ => best = Some((c, e.ema_ns)),
+                },
+            }
+        }
+        best.map(|(c, _)| c).unwrap_or(default_chunks)
+    }
+
     /// Dynamic selection from live profiler data (recent-window sparsity),
     /// falling back to 0.5 (the ReLU prior) with no observations.
     pub fn select_dynamic(
@@ -334,6 +401,51 @@ mod tests {
         assert_eq!(
             off.skip_mode_decision(&cfg, Component::Fwd, 0.9),
             (SkipMode::MaskLoop, DbDecision::Analytic)
+        );
+    }
+
+    #[test]
+    fn miri_gemm_chunks_explores_then_picks_cheapest_measured() {
+        use crate::coordinator::costdb::{CostDb, CostKey};
+        let (m, n, k) = (64usize, 10, 512);
+        // No DB: the static default stands.
+        let off = Selector::with_threads(Machine::skylake_x(), 2);
+        assert_eq!(off.gemm_chunks(m, n, k, 2, 2), 2);
+        let db = Arc::new(CostDb::in_memory());
+        let s = Selector::with_threads(Machine::skylake_x(), 2).with_cost_db(Some(db.clone()));
+        // Candidates at threads=2, default 2: {2, 4, 8}. All cold → the
+        // lowest is the one to explore; measuring it moves on to the next.
+        assert_eq!(s.gemm_chunks(m, n, k, 2, 2), 2);
+        db.record(CostKey::gemm_chunks(m, n, k, 2, s.backend, 2), 300.0);
+        assert_eq!(s.gemm_chunks(m, n, k, 2, 2), 4);
+        db.record(CostKey::gemm_chunks(m, n, k, 2, s.backend, 4), 100.0);
+        assert_eq!(s.gemm_chunks(m, n, k, 2, 2), 8);
+        db.record(CostKey::gemm_chunks(m, n, k, 2, s.backend, 8), 200.0);
+        // Warm: cheapest measured candidate wins.
+        assert_eq!(s.gemm_chunks(m, n, k, 2, 2), 4);
+        // Candidates never exceed the row count.
+        assert_eq!(s.gemm_chunks(1, n, k, 2, 16), 1);
+    }
+
+    #[test]
+    fn miri_skip_mode_decision_at_keys_on_the_given_thread_budget() {
+        use crate::coordinator::costdb::{CostDb, CostKey};
+        let cfg = ConvConfig::square(16, 256, 256, 56, 3, 1);
+        let db = Arc::new(CostDb::in_memory());
+        let s = Selector::with_threads(Machine::skylake_x(), 4).with_cost_db(Some(db.clone()));
+        // Warm both candidate modes at threads=1 only: the t=1 decision
+        // must hit while the configured-width decision stays a miss.
+        db.record(CostKey::conv(Component::Fwd, &cfg, 0.9, 1, s.backend, SkipMode::MaskLoop), 90.0);
+        db.record(CostKey::conv(Component::Fwd, &cfg, 0.9, 1, s.backend, SkipMode::Dense), 400.0);
+        assert_eq!(
+            s.skip_mode_decision_at(&cfg, Component::Fwd, 0.9, 1),
+            (SkipMode::MaskLoop, DbDecision::Hit)
+        );
+        assert_eq!(s.skip_mode_decision(&cfg, Component::Fwd, 0.9).1, DbDecision::Miss);
+        // At the configured width the _at variant is the plain decision.
+        assert_eq!(
+            s.skip_mode_decision_at(&cfg, Component::Fwd, 0.9, 4),
+            s.skip_mode_decision(&cfg, Component::Fwd, 0.9)
         );
     }
 

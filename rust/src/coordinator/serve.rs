@@ -58,6 +58,18 @@
 //! (`SPARSETRAIN_COST_DB=off`) — the same kill-switch discipline as the
 //! skip-mode selector, and the same guarantee: a missing DB costs only
 //! speed, never correctness.
+//!
+//! ## Deadline policy (ISSUE 10)
+//!
+//! The coalescing deadline is planned the same way the batch size is:
+//! [`BatchExecutor::planned_delay_ns`] re-plans `max_delay_ns` on every
+//! arrival. [`PredictExecutor`] derives it from the measured full-cap
+//! FWD service time when the DB is warm — waiting much longer than a
+//! few batch-execution times can only add latency, never throughput —
+//! clamped so it never exceeds the configured static deadline and never
+//! collapses below [`MIN_PLANNED_DELAY_NS`]. Cold or detached DB keeps
+//! the static deadline, so `SPARSETRAIN_COST_DB=off` pins both policies
+//! at once.
 
 use crate::coordinator::costdb::{geom_sig, DbComponent};
 use crate::kernels::ConvConfig;
@@ -186,6 +198,18 @@ impl<T> Batcher<T> {
         self.target = t.clamp(1, self.max_batch);
     }
 
+    pub fn max_delay_ns(&self) -> Nanos {
+        self.max_delay_ns
+    }
+
+    /// Re-plan the deadline-close window — the measured-cost deadline
+    /// policy hook ([`BatchExecutor::planned_delay_ns`]). Applies to the
+    /// queue head immediately: deadlines are computed from enqueue stamps
+    /// on every query, not cached.
+    pub fn set_max_delay(&mut self, d: Nanos) {
+        self.max_delay_ns = d;
+    }
+
     pub fn depth(&self) -> usize {
         self.queue.len()
     }
@@ -268,6 +292,13 @@ pub trait BatchExecutor {
         max_batch
     }
 
+    /// The deadline-close window to plan for, given the configured static
+    /// deadline — the measured-cost latency policy hook. Defaults to the
+    /// static policy (the configured deadline, unchanged).
+    fn planned_delay_ns(&self, static_delay_ns: Nanos) -> Nanos {
+        static_delay_ns
+    }
+
     /// Which policy drives [`BatchExecutor::planned_batch`] right now —
     /// `"static"` or `"measured"` — recorded in serve bench rows.
     fn policy(&self) -> &'static str {
@@ -347,10 +378,11 @@ impl<E: BatchExecutor> ServeSession<E> {
         let now = self.clock.now();
         let id = self.next_id;
         self.next_id += 1;
-        // Re-plan the coalescing target on every arrival: the measured
-        // policy tightens as the cost DB warms.
+        // Re-plan the coalescing target and deadline on every arrival:
+        // both measured policies tighten as the cost DB warms.
         let planned = self.exec.planned_batch(self.cfg.max_batch);
         self.batcher.set_target(planned);
+        self.batcher.set_max_delay(self.exec.planned_delay_ns(self.cfg.max_delay_ns));
         match self.batcher.push(Pending { id, input, reply }, now) {
             Ok(()) => {
                 self.stats.accepted += 1;
@@ -533,6 +565,16 @@ pub fn batch_ladder(max_batch: usize) -> Vec<usize> {
     out.push(max_batch);
     out
 }
+
+/// Measured-deadline floor: the planned deadline never collapses below
+/// this, however fast the measured batch is — a near-zero deadline would
+/// close every batch at size 1 and spin the service thread.
+pub const MIN_PLANNED_DELAY_NS: Nanos = 50_000;
+
+/// The planned deadline is this multiple of one full-cap batch's measured
+/// FWD service time: waiting a few service times to fill a batch is
+/// worthwhile; waiting longer only adds latency.
+const DELAY_SERVICE_MULTIPLE: f64 = 4.0;
 
 /// The real [`BatchExecutor`]: the routed predict graph at a ladder of
 /// batch sizes (see the module docs). Weights are seeded He init — the
@@ -746,6 +788,31 @@ impl BatchExecutor for PredictExecutor {
         }
     }
 
+    /// Measured-cost deadline (see the module docs): a small multiple of
+    /// the full-cap rung's measured FWD time, clamped into
+    /// `[MIN_PLANNED_DELAY_NS, static]`. Cold rung or detached DB keeps
+    /// the static deadline.
+    fn planned_delay_ns(&self, static_delay_ns: Nanos) -> Nanos {
+        let Some(router) = self.runtime.op_router() else { return static_delay_ns };
+        let Some(db) = router.cost_db() else { return static_delay_ns };
+        let threads = router.threads();
+        let backend = crate::kernels::simd::dispatch().name();
+        let g = self.geometry;
+        let b = *self.ladder.last().expect("ladder is non-empty");
+        let conv1 = ConvConfig::square(b, g.c_in, g.c1, g.hw, 3, 1);
+        let conv2 = ConvConfig::square(b, g.c1, g.c2, g.hw, 3, 1);
+        match (
+            db.best_ns(DbComponent::Fwd, &geom_sig(&conv1), threads, backend),
+            db.best_ns(DbComponent::Fwd, &geom_sig(&conv2), threads, backend),
+        ) {
+            (Some(c1), Some(c2)) => {
+                let planned = ((c1 + c2) * DELAY_SERVICE_MULTIPLE) as Nanos;
+                planned.clamp(MIN_PLANNED_DELAY_NS.min(static_delay_ns), static_delay_ns)
+            }
+            _ => static_delay_ns, // cold rung: static deadline until warm
+        }
+    }
+
     fn policy(&self) -> &'static str {
         if self.policy_measured {
             "measured"
@@ -836,11 +903,61 @@ mod tests {
         assert_eq!(b.target(), 4);
     }
 
+    #[test]
+    fn batcher_replanned_deadline_applies_to_queue_head() {
+        let mut b: Batcher<u32> = Batcher::new(4, 1_000, 10);
+        assert!(b.push(1, 0).is_ok());
+        assert_eq!(b.next_deadline(), Some(1_000));
+        b.set_max_delay(100);
+        assert_eq!(b.max_delay_ns(), 100);
+        assert_eq!(b.next_deadline(), Some(100), "deadlines recompute, not cache");
+        assert!(b.pop_ready(99).is_none());
+        assert!(b.pop_ready(100).is_some(), "closes at the planned deadline");
+    }
+
     struct DoubleExec;
     impl BatchExecutor for DoubleExec {
         fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
             Ok(inputs.iter().map(|v| vec![v[0] * 2.0]).collect())
         }
+    }
+
+    /// Echo executor pinning a planned deadline below the static config —
+    /// the measured-deadline policy shape, without a cost DB.
+    struct PlannedDelayExec(Nanos);
+    impl BatchExecutor for PlannedDelayExec {
+        fn run_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(inputs.to_vec())
+        }
+        fn planned_delay_ns(&self, _static_delay_ns: Nanos) -> Nanos {
+            self.0
+        }
+    }
+
+    #[test]
+    fn session_replans_deadline_from_executor_on_every_arrival() {
+        let clock = Arc::new(VirtualClock::new());
+        let cfg = ServeConfig { max_batch: 4, max_delay_ns: 2_000_000, queue_depth: 8 };
+        let mut s =
+            ServeSession::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>, PlannedDelayExec(100));
+        let (tx, rx) = mpsc::channel();
+        s.submit(vec![1.0], tx).unwrap();
+        assert_eq!(
+            s.next_deadline(),
+            Some(100),
+            "planned deadline beats the static config deadline"
+        );
+        clock.advance(100);
+        s.tick().unwrap();
+        assert_eq!(s.depth(), 0, "deadline-closed at the planned tick");
+        assert!(matches!(rx.try_recv().unwrap(), ServeReply::Done(_)));
+
+        // The default trait policy is the static deadline, unchanged.
+        let mut stat = ServeSession::new(cfg, clock as Arc<dyn Clock>, DoubleExec);
+        let (tx2, _rx2) = mpsc::channel();
+        stat.submit(vec![1.0], tx2).unwrap();
+        let t0 = stat.next_deadline().expect("one queued request");
+        assert_eq!(t0, 100 + cfg.max_delay_ns, "static policy: enqueue + configured deadline");
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! pure analytic selection). The `train` CLI prints the DB's
 //! hit/miss/update counters after the run.
 
+use crate::coordinator::costdb::CostDb;
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::kernels::layers::synthetic_batch;
 use crate::nets::{Network, Scale};
@@ -41,11 +42,18 @@ pub struct TrainerConfig {
     /// (`0` = host parallelism). Ignored when routing is disabled via
     /// `SPARSETRAIN_CONV_ROUTE=off` + `SPARSETRAIN_OP_ROUTE=off`.
     pub threads: usize,
+    /// Dependency-scheduled (pipelined) evaluation: `None` follows
+    /// `SPARSETRAIN_PIPELINE` (default on), `Some(b)` pins it — the
+    /// race-free per-trainer override the parity tests use instead of
+    /// mutating process-global environment variables. Effective only
+    /// with a router and ≥ 2 threads; results are bit-identical either
+    /// way.
+    pub pipeline: Option<bool>,
 }
 
 impl Default for TrainerConfig {
     fn default() -> Self {
-        TrainerConfig { steps: 200, seed: 7, log_every: 25, threads: 0 }
+        TrainerConfig { steps: 200, seed: 7, log_every: 25, threads: 0, pipeline: None }
     }
 }
 
@@ -100,8 +108,15 @@ impl Trainer {
         // op router (persistent thread pool, selector-chosen conv skip
         // mode), so every train step's five convolutions, three dots, and
         // recognized elementwise chains run multi-threaded / fused instead
-        // of through the interpreter's naive loop.
-        let runtime = Runtime::cpu_with_threads(&artifacts.dir, cfg.threads)?;
+        // of through the interpreter's naive loop. At >= 2 threads the
+        // pipeline planner additionally co-schedules independent
+        // instruction pairs (unless cfg.pipeline / the env says off).
+        let runtime = Runtime::cpu_with_options(
+            &artifacts.dir,
+            cfg.threads,
+            CostDb::from_env(),
+            cfg.pipeline,
+        )?;
         Ok(Trainer { runtime, cfg, metrics: MetricsRegistry::new(), net: None })
     }
 
@@ -129,7 +144,12 @@ impl Trainer {
         artifacts
             .publish_fallback_text(&predict_name, &predict)
             .with_context(|| format!("publishing {predict_name}"))?;
-        let runtime = Runtime::cpu_with_threads(&artifacts.dir, cfg.threads)?;
+        let runtime = Runtime::cpu_with_options(
+            &artifacts.dir,
+            cfg.threads,
+            CostDb::from_env(),
+            cfg.pipeline,
+        )?;
         Ok(Trainer {
             runtime,
             cfg,
@@ -147,6 +167,13 @@ impl Trainer {
     /// per-op-kind routed/fallback/fused counters for CLI reporting.
     pub fn op_router(&self) -> Option<&crate::runtime::OpRouter> {
         self.runtime.op_router()
+    }
+
+    /// Whether this trainer's executables evaluate through the
+    /// dependency-scheduled (pipelined) executor — for the CLI's
+    /// `pipeline:` report line.
+    pub fn pipelined(&self) -> bool {
+        self.runtime.pipelined()
     }
 
     /// He-style uniform init for a conv weight [k][c][s][r].
@@ -380,8 +407,11 @@ mod tests {
         let arts = ArtifactSet::scratch_fallback("trainer-unit").unwrap();
         assert!(arts.complete(), "fallback must satisfy the manifest");
         let mut t =
-            Trainer::new(&arts, TrainerConfig { steps: 5, seed: 1, log_every: 0, threads: 2 })
-                .unwrap();
+            Trainer::new(
+                &arts,
+                TrainerConfig { steps: 5, seed: 1, log_every: 0, threads: 2, pipeline: None },
+            )
+            .unwrap();
         let report = t.run().unwrap();
         assert_eq!(report.losses.len(), 5);
         assert!(report.losses.iter().all(|l| l.is_finite()));

@@ -102,6 +102,26 @@ pub fn gemm_parallel(
     b: &[f32],
     c: &mut [f32],
 ) {
+    gemm_parallel_chunks(pool, bk, m, n, k, a, b, c, m.div_ceil(MB));
+}
+
+/// [`gemm_parallel`] with an explicit work-distribution chunk count (the
+/// selector's measured-cost GEMM policy picks it per shape). The chunk
+/// count only changes how whole output rows are *grouped* across workers
+/// — per-row contraction order is untouched — so every chunk count is
+/// bit-identical to the serial kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel_chunks(
+    pool: &ThreadPool,
+    bk: Backend,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    chunks: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
@@ -109,7 +129,7 @@ pub fn gemm_parallel(
         return;
     }
     let mut rows: Vec<&mut [f32]> = c.chunks_mut(n).collect();
-    let chunks = m.div_ceil(MB);
+    let chunks = chunks.clamp(1, m);
     pool.for_chunk_slices(&mut rows, chunks, |_ci, start, chunk| {
         gemm_panel_rows(bk, n, k, a, b, start, chunk);
     });
@@ -190,6 +210,25 @@ mod tests {
             let sb: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
             let pb: Vec<u32> = par.iter().map(|v| v.to_bits()).collect();
             assert_eq!(sb, pb, "m={m}");
+        }
+    }
+
+    #[test]
+    fn miri_gemm_parallel_chunks_bit_identical_for_any_chunk_count() {
+        let bk = Backend::scalar();
+        let pool = ThreadPool::new(2);
+        let mut rng = Xorshift::new(13);
+        let (m, n, k) = (6usize, 17usize, 9usize);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_with(bk, m, n, k, &a, &b, &mut serial);
+        let sb: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
+        for chunks in [1usize, 2, 3, 6, 64] {
+            let mut par = vec![0.0f32; m * n];
+            gemm_parallel_chunks(&pool, bk, m, n, k, &a, &b, &mut par, chunks);
+            let pb: Vec<u32> = par.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, pb, "chunks={chunks}");
         }
     }
 

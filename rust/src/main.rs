@@ -52,7 +52,12 @@ COMMANDS
                       (COSTDB_kernels.json) drives skip-mode selection;
                       SPARSETRAIN_COST_DB=off reverts to the analytic
                       model, =fresh resets, SPARSETRAIN_COST_DB_PATH
-                      relocates the store.)
+                      relocates the store. At >= 2 threads the dependency-
+                      scheduled evaluator overlaps independent backward ops
+                      when measured costs say a lone op under-fills the
+                      pool; prints the pipeline state, overlap-pair count
+                      and pool-utilization EMA. SPARSETRAIN_PIPELINE=off
+                      restores strictly sequential evaluation.)
   serve              batched sparse-inference server under synthetic load
                      [--smoke] [--rate RPS] [--requests N] [--max-batch N]
                      [--deadline-us N] [--depth N] [--threads N] [--seed N]
@@ -61,7 +66,7 @@ COMMANDS
                       front end over the routed predict ladder; prints
                       p50/p95/p99 latency, throughput and the batch-size
                       histogram per scenario and writes them as
-                      component:\"serve\" rows in the wallclock v4 schema,
+                      component:\"serve\" rows in the wallclock v5 schema,
                       default BENCH_serve.json. Batch-size selection uses
                       the measured-cost DB when warm, static max-batch
                       otherwise — SPARSETRAIN_COST_DB=off pins static.
@@ -214,7 +219,7 @@ fn main() {
                     std::process::exit(1);
                 }
             };
-            let cfg = TrainerConfig { steps, seed, log_every: 20, threads: trainer_threads };
+            let cfg = TrainerConfig { steps, seed, log_every: 20, threads: trainer_threads, pipeline: None };
             let built = match net {
                 Some(network) => Trainer::new_net(&artifacts, network, scale, cfg),
                 None => Trainer::new(&artifacts, cfg),
@@ -260,8 +265,23 @@ fn main() {
                                     println!("  {nm}: {routed}/{fb}{flag}");
                                 }
                             }
+                            // Overlap + utilization make a pipeline that
+                            // never fires visible in plain CLI output.
+                            println!(
+                                "pipeline: {} ({} overlap pairs)",
+                                if t.pipelined() { "on" } else { "off" },
+                                router.overlap_pairs()
+                            );
+                            match router.pool_utilization() {
+                                Some(u) => println!(
+                                    "pool-utilization: {:.1}% (busy-worker EMA)",
+                                    u * 100.0
+                                ),
+                                None => println!("pool-utilization: n/a (no timed sweeps)"),
+                            }
                         } else {
                             println!("op-router: disabled (naive interpreter)");
+                            println!("pipeline: off (no op router)");
                         }
                         println!(
                             "done: {} steps, {:.1} steps/s, learned={}",

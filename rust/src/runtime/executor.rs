@@ -57,6 +57,25 @@
 //! skip modes are mutually bit-identical, the DB changes wall time only,
 //! never numerics — with the kill switch (or under Miri, where the DB is
 //! always absent) the router behaves exactly as before the DB existed.
+//!
+//! **Dependency-scheduled execution (ISSUE 10).** The router also backs
+//! the evaluator's DAG executor ([`xla::eval::execute_pipelined_in`]):
+//! [`OpRouter::overlap_join`] is the fork-join primitive the
+//! [`xla::PipelinePlanner`] uses to run two ready instructions
+//! concurrently on the *same* persistent pool (one task stays on the
+//! caller, the other runs on a parked worker), and
+//! [`crate::coordinator::pipeline`] builds the planner's cost-gated
+//! overlap predicate around this router's DB. When a conv executes on a
+//! pool worker (i.e. as the co-scheduled half of a pair), its inner
+//! parallel-for runs inline —
+//! [`crate::util::threadpool::ThreadPool::for_chunk_slices`] detects
+//! reentrancy — so `effective_threads` reports `1` there and
+//! every selector decision and cost record keys on the thread budget the
+//! op *actually* had. Overlapped runs therefore self-populate the
+//! `threads = 1` DB rows the overlap gate reads. Kill switch:
+//! `SPARSETRAIN_PIPELINE=off` ([`pipeline_enabled`]) restores strictly
+//! sequential evaluation; either way results are bit-identical (pinned by
+//! `rust/tests/pipeline_route_parity.rs`).
 
 use crate::coordinator::costdb::{CostDb, CostKey};
 use crate::coordinator::scheduler::Scheduler;
@@ -76,7 +95,7 @@ use xla::hlo::{BinKind, CmpDir, Op, UnaryKind};
 
 /// The three SparseTrain-executable convolution forms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Form {
+pub(crate) enum Form {
     /// `bf01_oi01->bf01` — a plain forward convolution.
     Fwd,
     /// `bf01_io01->bf01` — the input-gradient convolution (the graph has
@@ -88,7 +107,7 @@ enum Form {
 }
 
 /// Classify a parsed `dim_labels` spec; `None` = not a canonical form.
-fn classify(spec: &xla::hlo::ConvSpec) -> Option<Form> {
+pub(crate) fn classify(spec: &xla::hlo::ConvSpec) -> Option<Form> {
     if spec.lhs_s != [2, 3] || spec.rhs_s != [2, 3] || spec.out_s != [2, 3] {
         return None;
     }
@@ -107,7 +126,7 @@ fn classify(spec: &xla::hlo::ConvSpec) -> Option<Form> {
 /// the V-multiple channel constraint and degenerate filters; the register
 /// planner additionally needs `R ≤ REG_BUDGET` so `plan_fwd`/`plan_bww`
 /// always find a feasible Q.
-fn cfg_in_envelope(cfg: &ConvConfig) -> bool {
+pub(crate) fn cfg_in_envelope(cfg: &ConvConfig) -> bool {
     cfg.n >= 1
         && cfg.k >= V
         && cfg.c >= V
@@ -190,6 +209,10 @@ pub struct OpRouter {
     /// Measured-cost DB shared with the selector (ISSUE 8). `None` = kill
     /// switch or Miri: pure analytic selection, no timing stamps.
     cost_db: Option<Arc<CostDb>>,
+    /// Instruction pairs the DAG executor co-scheduled through
+    /// [`OpRouter::overlap_join`] (ISSUE 10). The `train` CLI prints this
+    /// so a pipeline that never overlaps anything is visible.
+    overlap_pairs: AtomicUsize,
 }
 
 impl OpRouter {
@@ -231,6 +254,7 @@ impl OpRouter {
             conv_by_instr: Mutex::new(BTreeMap::new()),
             profiled: Mutex::new(BTreeMap::new()),
             cost_db,
+            overlap_pairs: AtomicUsize::new(0),
         }
     }
 
@@ -238,10 +262,59 @@ impl OpRouter {
         self.sched.threads()
     }
 
+    /// The thread budget the *current* call actually has: `1` when this
+    /// thread is one of the scheduler pool's workers (an op co-scheduled by
+    /// the DAG executor — its inner parallel-for runs inline because the
+    /// pool detects reentrancy), the full configured count otherwise. Every
+    /// selector decision and cost record keys on this, so overlapped runs
+    /// self-populate the `threads = 1` DB rows the overlap gate consults.
+    fn effective_threads(&self) -> usize {
+        if self.sched.pool().on_worker_thread() {
+            1
+        } else {
+            self.sched.threads()
+        }
+    }
+
+    /// Structured fork-join for the DAG executor's [`xla::PipelinePlanner`]:
+    /// run `a` and `b` concurrently on the persistent pool and return only
+    /// when **both** have completed. One task runs on the calling thread,
+    /// the other on a parked worker (via the pool's non-`'static` chunk
+    /// scope), so a pair costs one handoff, not two. Bumps the overlap
+    /// counter reported by [`OpRouter::overlap_pairs`].
+    pub fn overlap_join(&self, a: xla::TaskBox<'_>, b: xla::TaskBox<'_>) {
+        self.overlap_pairs.fetch_add(1, Ordering::Relaxed);
+        let mut tasks: Vec<Option<xla::TaskBox<'_>>> = vec![Some(a), Some(b)];
+        self.sched.pool().for_chunk_slices(&mut tasks, 2, |_ci, _start, chunk| {
+            for t in chunk {
+                if let Some(f) = t.take() {
+                    f();
+                }
+            }
+        });
+    }
+
+    /// Instruction pairs co-scheduled so far (cumulative).
+    pub fn overlap_pairs(&self) -> usize {
+        self.overlap_pairs.load(Ordering::Relaxed)
+    }
+
+    /// Busy-worker utilization EMA from the scheduler's timed conv chunks
+    /// (`None` single-threaded, under Miri, or before the first timed run).
+    pub fn pool_utilization(&self) -> Option<f64> {
+        self.sched.pool_utilization()
+    }
+
     /// The attached measured-cost DB, if any (for the CLI report and the
     /// bench harness).
     pub fn cost_db(&self) -> Option<&Arc<CostDb>> {
         self.cost_db.as_ref()
+    }
+
+    /// Name of the SIMD backend the scheduler dispatched — the cost-DB
+    /// key field the pipeline overlap gate queries with.
+    pub fn backend_name(&self) -> &'static str {
+        self.sched.backend().name()
     }
 
     /// Convolutions served by the kernel stack so far.
@@ -412,21 +485,33 @@ impl OpRouter {
         };
         out.fill(0.0);
         let bk = self.sched.backend();
+        let eff = self.effective_threads();
         let t0 = self.cost_clock();
         if m <= gemm::MB {
             // One panel: the parallel path would enqueue a single task —
             // pay the pool handoff only when there is work to spread.
             gemm::gemm_with(bk, m, n, k, a_ref, b_ref, out);
+            if let (Some(t0), Some(db)) = (t0, self.cost_db.as_ref()) {
+                // Shape-level observability row (no chunk choice applies).
+                db.record(
+                    CostKey::gemm(m, n, k, eff, bk.name()),
+                    t0.elapsed().as_nanos() as f64,
+                );
+            }
         } else {
-            gemm::gemm_parallel(self.sched.pool(), bk, m, n, k, a_ref, b_ref, out);
-        }
-        if let (Some(t0), Some(db)) = (t0, self.cost_db.as_ref()) {
-            // GEMM has no mode choice — the entry is pure observability
-            // (and the seed for future dense-vs-sparse dot policies).
-            db.record(
-                CostKey::gemm(m, n, k, self.sched.threads(), bk.name()),
-                t0.elapsed().as_nanos() as f64,
-            );
+            // Measured-cost GEMM policy (ISSUE 10 satellite): the selector
+            // picks the panel-distribution chunk count for this shape from
+            // recorded `c{chunks}` rows, exploring candidates while cold.
+            // Every chunk count is bit-identical (row grouping only).
+            let default = m.div_ceil(gemm::MB);
+            let chunks = self.selector.gemm_chunks(m, n, k, eff, default);
+            gemm::gemm_parallel_chunks(self.sched.pool(), bk, m, n, k, a_ref, b_ref, out, chunks);
+            if let (Some(t0), Some(db)) = (t0, self.cost_db.as_ref()) {
+                db.record(
+                    CostKey::gemm_chunks(m, n, k, eff, bk.name(), chunks),
+                    t0.elapsed().as_nanos() as f64,
+                );
+            }
         }
         true
     }
@@ -656,10 +741,12 @@ impl OpRouter {
 
     /// Skip mode for one call: measured-cost DB first (cheapest measured
     /// mode for this key), analytic model while the key is cold or the DB
-    /// is detached — see [`Selector::skip_mode_decision`]. Either way the
-    /// launch stays parallel and the modes are mutually bit-identical.
+    /// is detached — see [`Selector::skip_mode_decision`]. Keys on the
+    /// *effective* thread budget, so a conv co-scheduled onto a pool
+    /// worker (inner launch runs inline) is planned as single-threaded.
+    /// Either way the modes are mutually bit-identical.
     fn skip_mode(&self, cfg: &ConvConfig, comp: Component, sparsity: f64) -> SkipMode {
-        self.selector.skip_mode(cfg, comp, sparsity)
+        self.selector.skip_mode_decision_at(cfg, comp, sparsity, self.effective_threads()).0
     }
 
     /// Monotonic stamp for lazy DB population — `None` when no DB is
@@ -687,7 +774,10 @@ impl OpRouter {
                     comp,
                     cfg,
                     sparsity,
-                    self.sched.threads(),
+                    // Same effective-threads key as the decision above: a
+                    // co-scheduled conv's sample must not pollute the
+                    // full-budget row it did not run under.
+                    self.effective_threads(),
                     self.sched.backend().name(),
                     mode,
                 ),
@@ -1100,6 +1190,17 @@ pub fn op_routing_enabled() -> bool {
     }
 }
 
+/// `SPARSETRAIN_PIPELINE=off|0` disables the dependency-scheduled
+/// evaluator — every instruction runs strictly sequentially, exactly the
+/// pre-ISSUE-10 behavior. The third kill switch in the family; like the
+/// other two it is read once, at runtime construction.
+pub fn pipeline_enabled() -> bool {
+    match std::env::var("SPARSETRAIN_PIPELINE") {
+        Ok(v) => !matches!(v.as_str(), "off" | "0" | "false"),
+        Err(_) => true,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1252,5 +1353,34 @@ mod tests {
         if std::env::var("SPARSETRAIN_CONV_ROUTE").is_err() {
             assert!(routing_enabled());
         }
+    }
+
+    #[test]
+    fn miri_pipeline_env_default_is_on() {
+        // Same contract as the conv/op switches: default on, explicit
+        // off-values disable (covered by the match arms).
+        if std::env::var("SPARSETRAIN_PIPELINE").is_err() {
+            assert!(pipeline_enabled());
+        }
+    }
+
+    /// `overlap_join` runs both tasks to completion (structured fork-join)
+    /// and tallies exactly one pair per call, including when the caller is
+    /// itself a pool worker (reentrant → both run inline).
+    #[test]
+    fn miri_overlap_join_runs_both_tasks_and_counts_pairs() {
+        use std::sync::atomic::AtomicUsize as Counter;
+        let router = Arc::new(OpRouter::new(2));
+        let hits = Counter::new(0);
+        router.overlap_join(
+            Box::new(|| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }),
+            Box::new(|| {
+                hits.fetch_add(10, Ordering::Relaxed);
+            }),
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 11);
+        assert_eq!(router.overlap_pairs(), 1);
     }
 }

@@ -83,6 +83,26 @@
 //! bit-identical per sample to sequential single-sample execution —
 //! `rust/tests/serve.rs` pins that on both the routed and the all-naive
 //! path.
+//!
+//! **Dependency-scheduled execution (ISSUE 10).** The interpreter no
+//! longer walks each computation strictly in SSA order: when a
+//! [`xla::PipelinePlanner`] is installed (the default at ≥ 2 threads),
+//! the evaluator builds a data-dependency DAG over the instruction list
+//! and may run two *ready, independent* instructions concurrently —
+//! in practice the backward pass's BWI of layer *l* alongside BWW of
+//! layer *l+1*, the overlap the paper's dataflow exposes. The planner
+//! halves live here: [`crate::coordinator::pipeline`] gates each
+//! candidate pair on measured costs (co-schedule only when the first
+//! op's scaling under-fills the pool) and joins the pair on the router's
+//! persistent pool ([`executor::OpRouter::overlap_join`]). *Buffer
+//! ownership under overlap*: the two concurrent ops draw scratch from
+//! disjoint arenas (main + spare, re-merged on retire) and each fully
+//! owns its output slot, so results are **bit-identical** to sequential
+//! evaluation at any thread count — pinned by
+//! `rust/tests/pipeline_route_parity.rs`. `SPARSETRAIN_PIPELINE=off`
+//! (third kill switch in the family) restores strictly sequential
+//! evaluation; the `train` CLI prints the overlap-pair counter and the
+//! pool-utilization EMA so a pipeline that never fires is visible.
 
 pub mod artifacts;
 pub mod executor;

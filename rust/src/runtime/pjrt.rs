@@ -9,6 +9,15 @@
 //! evaluator. `SPARSETRAIN_CONV_ROUTE=off` / `SPARSETRAIN_OP_ROUTE=off`
 //! (or [`Runtime::cpu_naive`]) restore the all-interpreter behavior — the
 //! A/B levers the parity tests and the trainer-step wallclock rows use.
+//!
+//! When the router is installed with at least two workers, the client
+//! additionally gets the ISSUE 10 pipeline planner
+//! ([`crate::coordinator::pipeline`]): executables compiled by this
+//! runtime evaluate through the dependency-scheduled executor, which
+//! co-schedules cost-gated independent instruction pairs (BWI‖BWW) on
+//! the router's pool — bit-identical to sequential evaluation.
+//! `SPARSETRAIN_PIPELINE=off` (or the explicit override on
+//! [`Runtime::cpu_with_options`]) keeps evaluation strictly sequential.
 
 use super::executor::{self, OpRouter};
 use anyhow::{Context, Result};
@@ -47,6 +56,10 @@ pub struct Runtime {
     cache: HashMap<String, usize>,
     loaded: Vec<Executable>,
     router: Option<Arc<OpRouter>>,
+    /// Whether the pipeline planner was installed on the client (so
+    /// executables compiled by this runtime evaluate through the DAG
+    /// executor) — surfaced to the CLI's `pipeline:` report line.
+    pipelined: bool,
 }
 
 impl Runtime {
@@ -63,7 +76,7 @@ impl Runtime {
     /// class is enabled; the per-class kill switches are honored inside
     /// [`OpRouter::route_op`].
     pub fn cpu_with_threads<P: AsRef<Path>>(artifacts_dir: P, threads: usize) -> Result<Runtime> {
-        Self::cpu_with_router(artifacts_dir, || OpRouter::new(threads))
+        Self::cpu_with_router(artifacts_dir, || OpRouter::new(threads), None)
     }
 
     /// [`Runtime::cpu_with_threads`] with an explicit cost database
@@ -76,12 +89,27 @@ impl Runtime {
         threads: usize,
         cost_db: Option<Arc<crate::coordinator::CostDb>>,
     ) -> Result<Runtime> {
-        Self::cpu_with_router(artifacts_dir, || OpRouter::with_cost_db(threads, cost_db))
+        Self::cpu_with_options(artifacts_dir, threads, cost_db, None)
+    }
+
+    /// The fully explicit constructor: scheduler width, cost DB, and the
+    /// pipeline override. `pipeline: None` reads `SPARSETRAIN_PIPELINE`
+    /// (default on); `Some(b)` pins it regardless of environment — the
+    /// race-free lever the parity tests and the wallclock bench use to
+    /// put pipelined and sequential rows side by side in one process.
+    pub fn cpu_with_options<P: AsRef<Path>>(
+        artifacts_dir: P,
+        threads: usize,
+        cost_db: Option<Arc<crate::coordinator::CostDb>>,
+        pipeline: Option<bool>,
+    ) -> Result<Runtime> {
+        Self::cpu_with_router(artifacts_dir, || OpRouter::with_cost_db(threads, cost_db), pipeline)
     }
 
     fn cpu_with_router<P: AsRef<Path>>(
         artifacts_dir: P,
         make: impl FnOnce() -> OpRouter,
+        pipeline: Option<bool>,
     ) -> Result<Runtime> {
         let mut client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let router = if executor::routing_enabled() || executor::op_routing_enabled() {
@@ -91,12 +119,23 @@ impl Runtime {
         } else {
             None
         };
+        // The DAG executor needs a second worker to overlap onto and the
+        // router's pool to join on; otherwise sequential evaluation is
+        // both simpler and faster.
+        let mut pipelined = false;
+        if let Some(router) = &router {
+            if pipeline.unwrap_or_else(executor::pipeline_enabled) && router.threads() >= 2 {
+                client.set_pipeline_planner(crate::coordinator::pipeline::planner(router));
+                pipelined = true;
+            }
+        }
         Ok(Runtime {
             client,
             dir: artifacts_dir.as_ref().to_path_buf(),
             cache: HashMap::new(),
             loaded: Vec::new(),
             router,
+            pipelined,
         })
     }
 
@@ -111,6 +150,7 @@ impl Runtime {
             cache: HashMap::new(),
             loaded: Vec::new(),
             router: None,
+            pipelined: false,
         })
     }
 
@@ -118,6 +158,12 @@ impl Runtime {
     /// routed/fallback/fused call counts, thread width).
     pub fn op_router(&self) -> Option<&OpRouter> {
         self.router.as_deref()
+    }
+
+    /// Whether executables compiled by this runtime evaluate through the
+    /// dependency-scheduled (pipelined) executor.
+    pub fn pipelined(&self) -> bool {
+        self.pipelined
     }
 
     /// A clonable handle to the installed op router. The trainer grabs
@@ -202,6 +248,21 @@ mod tests {
             assert!(rt.op_router().unwrap().threads() >= 1);
         }
         assert!(Runtime::cpu_naive("artifacts").unwrap().op_router().is_none());
+        assert!(!Runtime::cpu_naive("artifacts").unwrap().pipelined());
+    }
+
+    #[test]
+    fn pipeline_override_beats_environment() {
+        // Explicit off: never pipelined, whatever the env says.
+        let off = Runtime::cpu_with_options("artifacts", 2, None, Some(false)).unwrap();
+        assert!(!off.pipelined());
+        // Explicit on at 2 threads: pipelined iff a router is installed
+        // (route kill switches can remove it process-wide).
+        let on = Runtime::cpu_with_options("artifacts", 2, None, Some(true)).unwrap();
+        assert_eq!(on.pipelined(), on.op_router().is_some());
+        // One thread: nothing to overlap onto, even when forced on.
+        let single = Runtime::cpu_with_options("artifacts", 1, None, Some(true)).unwrap();
+        assert!(!single.pipelined());
     }
 
     #[test]

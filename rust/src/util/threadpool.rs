@@ -209,6 +209,16 @@ impl ThreadPool {
         self.shared.panicked.load(Ordering::SeqCst)
     }
 
+    /// Whether the calling thread is one of *this* pool's workers. Lets a
+    /// caller that may run either on the coordinator thread or inside a
+    /// pool task (e.g. an op co-scheduled by the pipeline executor) size
+    /// its decisions to its effective parallelism: parallel-for issued
+    /// from a worker runs inline (see [`ThreadPool::broadcast`]), i.e. at
+    /// an effective thread count of 1.
+    pub fn on_worker_thread(&self) -> bool {
+        CURRENT_POOL.with(|c| c.get()) == Arc::as_ptr(&self.shared) as usize
+    }
+
     /// Run `work` once on the calling thread and once per `extra` parked
     /// worker threads, blocking until every invocation has returned. This
     /// is the core the parallel-for primitives are built on: `work` is the
@@ -758,6 +768,25 @@ mod tests {
             }
         });
         assert_eq!(outer.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn miri_on_worker_thread_identifies_this_pools_workers() {
+        let pool = ThreadPool::new(2);
+        let other = ThreadPool::new(2);
+        assert!(!pool.on_worker_thread(), "coordinator thread is not a worker");
+        let caller = std::thread::current().id();
+        let mismatches = AtomicU64::new(0);
+        pool.for_chunks(8, 4, |_ci, _s, _e| {
+            let on_caller = std::thread::current().id() == caller;
+            // A participant is a pool worker iff it is not the caller,
+            // and never a worker of an unrelated pool.
+            if pool.on_worker_thread() != !on_caller || other.on_worker_thread() {
+                mismatches.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(mismatches.load(Ordering::SeqCst), 0);
+        assert!(!pool.on_worker_thread(), "flag does not leak back to the caller");
     }
 
     #[test]

@@ -51,7 +51,7 @@ fn e2e_trainer_learns_on_cold_checkout() {
 
     let steps = 30;
     let mut trainer =
-        Trainer::new(&arts, TrainerConfig { steps, seed: 1, log_every: 0, threads: 2 })
+        Trainer::new(&arts, TrainerConfig { steps, seed: 1, log_every: 0, threads: 2, pipeline: None })
             .expect("trainer init");
     let report = trainer.run().expect("interpreted training run");
 
@@ -105,7 +105,7 @@ fn e2e_resnet34_small_trains_with_routed_strided_convs() {
         &arts,
         Network::ResNet34,
         Scale::Small,
-        TrainerConfig { steps, seed: 1, log_every: 0, threads: 2 },
+        TrainerConfig { steps, seed: 1, log_every: 0, threads: 2, pipeline: None },
     )
     .expect("net trainer init");
     let plan = t.net_plan().expect("net trainer carries a plan").clone();
@@ -163,7 +163,7 @@ fn e2e_fixup_resnet50_reports_bwi_gradient_sparsity() {
         &arts,
         Network::FixupResNet50,
         Scale::Small,
-        TrainerConfig { steps, seed: 3, log_every: 0, threads: 2 },
+        TrainerConfig { steps, seed: 3, log_every: 0, threads: 2, pipeline: None },
     )
     .expect("net trainer init");
     let plan = t.net_plan().unwrap().clone();

@@ -423,7 +423,7 @@ fn five_by_five_same_band_as_three_by_three() {
 fn pjrt_trainer_smoke() {
     let arts = ArtifactSet::scratch_fallback("integration-smoke").expect("offline fallback");
     let mut t =
-        Trainer::new(&arts, TrainerConfig { steps: 8, seed: 3, log_every: 0, threads: 2 }).unwrap();
+        Trainer::new(&arts, TrainerConfig { steps: 8, seed: 3, log_every: 0, threads: 2, pipeline: None }).unwrap();
     let report = t.run().expect("interpreted training run");
     assert_eq!(report.losses.len(), 8);
     assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0));

@@ -29,12 +29,39 @@
 //! buffer, which makes an arena-reusing run bit-identical to a
 //! fresh-allocation run ([`Arena::disabled`]) — pinned by
 //! `miri_arena_reuse_is_bit_identical_to_fresh_alloc`.
+//!
+//! **Dependency-scheduled execution (ISSUE 10).** With a
+//! [`PipelinePlanner`] installed, [`execute_pipelined_in`] replaces the
+//! strict instruction-list walk with a ready-queue walk over the
+//! computation's data-dependency DAG: an instruction becomes *ready* when
+//! every direct operand has completed, and the planner may approve
+//! co-scheduling one extra ready instruction alongside the one being
+//! dispatched (the host runs the pair on its persistent thread pool via
+//! the planner's `join`). Correctness is structural, not numerical:
+//!
+//! * **Buffer ownership** — each instruction exclusively owns its output
+//!   buffer from `take_uninit` until the result lands in its slot; the
+//!   two co-scheduled instructions draw from *disjoint* arenas (main +
+//!   spare), so no allocation path is shared during an overlap window.
+//! * **Read safety** — readiness by direct operands implies (inductively)
+//!   that every [`FUSION_READ_DEPTH`]-transitive operand a fusing hook
+//!   may inspect has also completed; pending slots read as absent (`None`
+//!   from [`OpCall::value_f32`]), same as retired ones.
+//! * **Retirement** — a buffer is recycled only when *every* instruction
+//!   whose depth-extended read set contains it has completed (reader
+//!   counting generalizes the sequential last-use schedule to
+//!   out-of-order completion). The root is never retired.
+//! * **Bit-identity** — per-op arithmetic is untouched and independent
+//!   ops commute, so any topological completion order produces the same
+//!   bits as the sequential walk at any thread count — pinned by the
+//!   `miri_dag_*` smokes here and `rust/tests/pipeline_route_parity.rs`
+//!   on the sparsetrain side.
 
 use crate::hlo::{
     BinKind, CmpDir, Computation, ConvSpec, ElemType, Instr, Module, Op, Shape, ShapeDecl,
     UnaryKind, Window, MAX_ELEMENTS,
 };
-use crate::{Error, Literal, OpExecutor, Payload, Result};
+use crate::{Error, Literal, OpExecutor, Payload, PipelinePlanner, Result, TaskBox};
 use std::collections::HashMap;
 
 fn err(msg: impl Into<String>) -> Error {
@@ -1293,6 +1320,212 @@ fn eval_comp(
     Ok(slots.swap_remove(comp.root))
 }
 
+/// `reads[j]` = every instruction index within [`FUSION_READ_DEPTH`]
+/// operand levels of `j` — the exact set the sequential `retire_schedule`
+/// walks, kept per consumer (duplicates included; increments and
+/// decrements are symmetric) so the DAG executor can retire a buffer the
+/// moment its *last* depth-extended reader completes, in any order.
+fn extended_reads(comp: &Computation) -> Vec<Vec<usize>> {
+    let mut reads = Vec::with_capacity(comp.instrs.len());
+    for instr in &comp.instrs {
+        let mut seen = Vec::new();
+        let mut frontier: Vec<usize> = instr.operands.clone();
+        for _ in 0..FUSION_READ_DEPTH {
+            let mut next = Vec::new();
+            for &o in &frontier {
+                seen.push(o);
+                next.extend_from_slice(&comp.instrs[o].operands);
+            }
+            frontier = next;
+            if frontier.is_empty() {
+                break;
+            }
+        }
+        reads.push(seen);
+    }
+    reads
+}
+
+/// Dependency-scheduled twin of [`eval_comp`]: walks the computation as a
+/// DAG, dispatching the lowest-index ready instruction and — when the
+/// planner approves a pair — co-scheduling a second ready instruction
+/// through the planner's `join`. See the module docs for the
+/// buffer-ownership / read-safety / retirement invariants that make every
+/// completion order bit-identical to the sequential walk.
+fn eval_comp_dag(
+    module: &Module,
+    comp: &Computation,
+    args: &[Value],
+    hook: Option<&OpExecutor>,
+    planner: &PipelinePlanner,
+    arena: &mut Arena,
+    spare: &mut Arena,
+) -> Result<Slot> {
+    let n = comp.instrs.len();
+    let reads = extended_reads(comp);
+    let recycling = arena.enabled();
+
+    // readers_left[o] = completions still owed before o's buffer is dead.
+    let mut readers_left = vec![0usize; n];
+    for r in &reads {
+        for &o in r {
+            readers_left[o] += 1;
+        }
+    }
+    let mut pending: Vec<usize> = comp.instrs.iter().map(|i| i.operands.len()).collect();
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (j, instr) in comp.instrs.iter().enumerate() {
+        for &o in &instr.operands {
+            consumers[o].push(j);
+        }
+    }
+
+    // Placeholder for not-yet-evaluated slots: an empty tuple reads as
+    // absent through every OpCall accessor, exactly like a retired buffer
+    // — and readiness guarantees no evaluator path ever reads one.
+    let mut slots: Vec<Slot> = (0..n).map(|_| Slot::Tuple(Vec::new())).collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&j| pending[j] == 0).collect();
+    ready.sort_unstable();
+
+    let mut completed = 0usize;
+    while completed < n {
+        let Some(&a) = ready.first() else {
+            // validate() rejects cyclic/malformed graphs, so every stall
+            // would be an executor bug; fail loudly rather than hang.
+            return Err(err("dependency-scheduled executor stalled (no ready instruction)"));
+        };
+        ready.remove(0);
+
+        // Try to co-schedule one more ready instruction alongside `a`.
+        let partner = ready
+            .iter()
+            .position(|&b| (planner.overlap)(comp, a, b))
+            .map(|pos| ready.remove(pos));
+
+        if let Some(b) = partner {
+            let mut out_a: Option<Result<Slot>> = None;
+            let mut out_b: Option<Result<Slot>> = None;
+            {
+                let (oa, ob) = (&mut out_a, &mut out_b);
+                let slots_ref: &[Slot] = &slots;
+                let arena_a = &mut *arena;
+                let arena_b = &mut *spare;
+                let task_a: TaskBox<'_> = Box::new(move || {
+                    *oa = Some(eval_instr(
+                        module,
+                        comp,
+                        &comp.instrs[a],
+                        slots_ref,
+                        args,
+                        hook,
+                        arena_a,
+                    ));
+                });
+                let task_b: TaskBox<'_> = Box::new(move || {
+                    *ob = Some(eval_instr(
+                        module,
+                        comp,
+                        &comp.instrs[b],
+                        slots_ref,
+                        args,
+                        hook,
+                        arena_b,
+                    ));
+                });
+                (planner.join)(task_a, task_b);
+            }
+            // `a < b` (a was the queue minimum), so propagating a's error
+            // first matches the sequential executor's error choice.
+            let ra = out_a.ok_or_else(|| err("pipeline join dropped a task"))?;
+            let rb = out_b.ok_or_else(|| err("pipeline join dropped a task"))?;
+            slots[a] = ra?;
+            slots[b] = rb?;
+            for j in [a, b] {
+                completed += 1;
+                finish_instr(
+                    comp,
+                    j,
+                    &consumers,
+                    &reads,
+                    &mut pending,
+                    &mut ready,
+                    &mut readers_left,
+                    &mut slots,
+                    arena,
+                    recycling,
+                );
+            }
+        } else {
+            slots[a] = eval_instr(module, comp, &comp.instrs[a], &slots, args, hook, arena)?;
+            completed += 1;
+            finish_instr(
+                comp,
+                a,
+                &consumers,
+                &reads,
+                &mut pending,
+                &mut ready,
+                &mut readers_left,
+                &mut slots,
+                arena,
+                recycling,
+            );
+        }
+    }
+    Ok(slots.swap_remove(comp.root))
+}
+
+/// Post-completion bookkeeping for one instruction: wake consumers whose
+/// last dependency this was, and retire buffers whose last depth-extended
+/// reader this was (both arenas' buffers funnel back through the main
+/// arena — pool membership is not identity-tracked, only size-keyed).
+#[allow(clippy::too_many_arguments)]
+fn finish_instr(
+    comp: &Computation,
+    j: usize,
+    consumers: &[Vec<usize>],
+    reads: &[Vec<usize>],
+    pending: &mut [usize],
+    ready: &mut Vec<usize>,
+    readers_left: &mut [usize],
+    slots: &mut [Slot],
+    arena: &mut Arena,
+    recycling: bool,
+) {
+    for &c in &consumers[j] {
+        pending[c] -= 1;
+        if pending[c] == 0 {
+            let pos = ready.binary_search(&c).unwrap_or_else(|p| p);
+            ready.insert(pos, c);
+        }
+    }
+    if !recycling {
+        return;
+    }
+    let retire = |o: usize, slots: &mut [Slot], arena: &mut Arena| {
+        if o == comp.root {
+            return;
+        }
+        if let Slot::Single(v) = &mut slots[o] {
+            if let Buf::F32(buf) = &mut v.buf {
+                if !buf.is_empty() {
+                    arena.give(std::mem::take(buf));
+                }
+            }
+        }
+    };
+    // A value nobody (transitively) reads dies with its own completion.
+    if readers_left[j] == 0 {
+        retire(j, slots, arena);
+    }
+    for &o in &reads[j] {
+        readers_left[o] -= 1;
+        if readers_left[o] == 0 {
+            retire(o, slots, arena);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Literal boundary
 // ---------------------------------------------------------------------------
@@ -1372,6 +1605,25 @@ pub fn execute_with_hook_in(
     hook: Option<&OpExecutor>,
     arena: &mut Arena,
 ) -> Result<Literal> {
+    let mut spare = Arena::new(); // untouched: no planner, no co-scheduling
+    execute_pipelined_in(module, inputs, hook, None, arena, &mut spare)
+}
+
+/// [`execute_with_hook_in`] plus dependency-scheduled execution: when
+/// `planner` is `Some`, the entry computation runs through the DAG
+/// executor (see the module docs), with `spare` supplying the second,
+/// disjoint buffer arena for the co-scheduled instruction of each overlap
+/// window (retired buffers from both funnel back into `arena`). With
+/// `planner == None` this is exactly the sequential evaluator. Results
+/// are bit-identical either way.
+pub fn execute_pipelined_in(
+    module: &Module,
+    inputs: &[Literal],
+    hook: Option<&OpExecutor>,
+    planner: Option<&PipelinePlanner>,
+    arena: &mut Arena,
+    spare: &mut Arena,
+) -> Result<Literal> {
     validate(module)?;
     let comp =
         module.comps.get(module.entry).ok_or_else(|| err("entry computation out of range"))?;
@@ -1387,7 +1639,11 @@ pub fn execute_with_hook_in(
         let want = single_shape(&comp.instrs[comp.params[k]].shape)?;
         args.push(literal_to_value(lit, want, k)?);
     }
-    match eval_comp(module, comp, &args, hook, arena)? {
+    let root = match planner {
+        Some(p) => eval_comp_dag(module, comp, &args, hook, p, arena, spare)?,
+        None => eval_comp(module, comp, &args, hook, arena)?,
+    };
+    match root {
         Slot::Single(v) => value_to_literal(v),
         Slot::Tuple(vals) => {
             let lits: Vec<Literal> = vals.into_iter().map(value_to_literal).collect::<Result<_>>()?;
@@ -1623,6 +1879,142 @@ mod tests {
             let got = execute_with_hook_in(&module, &inputs, None, &mut arena).unwrap();
             assert_eq!(bits(&got), reference, "round {round}");
         }
+    }
+
+    /// A toy planner for the DAG-executor smokes: `join` runs the pair on
+    /// a real second thread (`std::thread::scope`, Miri-clean), `overlap`
+    /// approves every proposed pair and counts them.
+    fn scoped_planner(counter: std::sync::Arc<std::sync::atomic::AtomicUsize>) -> PipelinePlanner {
+        use std::sync::Arc;
+        let join: Arc<crate::JoinFn> = Arc::new(|a: TaskBox<'_>, b: TaskBox<'_>| {
+            std::thread::scope(|s| {
+                s.spawn(move || b());
+                a();
+            });
+        });
+        let overlap: Arc<crate::OverlapFn> = Arc::new(move |_comp, _a, _b| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            true
+        });
+        PipelinePlanner { join, overlap }
+    }
+
+    #[test]
+    fn miri_dag_executor_matches_sequential_bit_for_bit() {
+        // The widest evaluator graph in this suite (broadcast, compare,
+        // select, unary, reduce, dot, tuple root) with a diamond of
+        // independent branches, run three rounds against a persistent
+        // arena so recycled buffers carry stale contents — the pipelined
+        // result must equal the sequential fresh-alloc reference bit for
+        // bit, with real co-scheduling happening on a second thread.
+        let text = "HloModule a\n\
+            %add_f32 {\n  %p0 = f32[] parameter(0)\n  %p1 = f32[] parameter(1)\n  ROOT %add = f32[] add(%p0, %p1)\n}\n\
+            ENTRY %m {\n\
+            \x20 %x = f32[3,4] parameter(0)\n\
+            \x20 %w = f32[4,2] parameter(1)\n\
+            \x20 %zero = f32[] constant(0)\n\
+            \x20 %zb = f32[3,4] broadcast(%zero), dimensions={}\n\
+            \x20 %mask = pred[3,4] compare(%x, %zb), direction=GT\n\
+            \x20 %relu = f32[3,4] select(%mask, %x, %zb)\n\
+            \x20 %e = f32[3,4] exponential(%relu)\n\
+            \x20 %sq = f32[3,4] multiply(%x, %x)\n\
+            \x20 %rows = f32[3] reduce(%e, %zero), dimensions={1}, to_apply=%add_f32\n\
+            \x20 %rb = f32[3,4] broadcast(%rows), dimensions={0}\n\
+            \x20 %nrm = f32[3,4] divide(%e, %rb)\n\
+            \x20 %d = f32[3,2] dot(%nrm, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n\
+            \x20 %g = f32[3,2] dot(%sq, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n\
+            \x20 ROOT %t = (f32[3,2], f32[3,2], f32[3]) tuple(%d, %g, %rows)\n}\n";
+        let module = parse_module(text).unwrap();
+        let xs: Vec<f32> = (0..12).map(|i| (i as f32) - 5.5).collect();
+        let ws: Vec<f32> = (0..8).map(|i| 0.25 * (i as f32) - 1.0).collect();
+        let inputs = [
+            Literal::vec1(&xs).reshape(&[3, 4]).unwrap(),
+            Literal::vec1(&ws).reshape(&[4, 2]).unwrap(),
+        ];
+        let bits = |lit: &Literal| -> Vec<Vec<u32>> {
+            lit.clone()
+                .to_tuple()
+                .unwrap()
+                .iter()
+                .map(|e| e.to_vec::<f32>().unwrap().iter().map(|v| v.to_bits()).collect())
+                .collect()
+        };
+
+        let mut off = Arena::disabled();
+        let reference = bits(&execute_with_hook_in(&module, &inputs, None, &mut off).unwrap());
+
+        let proposed = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let planner = scoped_planner(proposed.clone());
+        let mut arena = Arena::new();
+        let mut spare = Arena::new();
+        for round in 0..3 {
+            let got = execute_pipelined_in(
+                &module,
+                &inputs,
+                None,
+                Some(&planner),
+                &mut arena,
+                &mut spare,
+            )
+            .unwrap();
+            assert_eq!(bits(&got), reference, "round {round}");
+        }
+        // The graph has independent branches (%sq ‖ the softmax chain),
+        // so the planner must actually have been consulted.
+        assert!(proposed.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn miri_dag_without_overlap_or_planner_is_sequential() {
+        let text = "HloModule d\nENTRY %m {\n\
+            \x20 %x = f32[2,2] parameter(0)\n\
+            \x20 %a = f32[2,2] add(%x, %x)\n\
+            \x20 %b = f32[2,2] multiply(%x, %x)\n\
+            \x20 ROOT %t = (f32[2,2], f32[2,2]) tuple(%a, %b)\n}\n";
+        let module = parse_module(text).unwrap();
+        let x = Literal::vec1(&[1.0f32, -2.0, 3.0, -4.0]).reshape(&[2, 2]).unwrap();
+        let inputs = [x];
+        let reference = execute(&module, &inputs).unwrap();
+
+        // A planner that always declines: the ready-queue walk must
+        // degrade to exactly the sequential order, never calling join.
+        use std::sync::Arc;
+        let join: Arc<crate::JoinFn> =
+            Arc::new(|_a: TaskBox<'_>, _b: TaskBox<'_>| panic!("join must not be called"));
+        let planner = PipelinePlanner { join, overlap: Arc::new(|_, _, _| false) };
+        let mut arena = Arena::new();
+        let mut spare = Arena::new();
+        let got =
+            execute_pipelined_in(&module, &inputs, None, Some(&planner), &mut arena, &mut spare)
+                .unwrap();
+        assert_eq!(
+            got.clone().to_tuple().unwrap()[0].to_vec::<f32>().unwrap(),
+            reference.clone().to_tuple().unwrap()[0].to_vec::<f32>().unwrap()
+        );
+        assert_eq!(
+            got.to_tuple().unwrap()[1].to_vec::<f32>().unwrap(),
+            reference.to_tuple().unwrap()[1].to_vec::<f32>().unwrap()
+        );
+    }
+
+    #[test]
+    fn miri_dag_join_dropping_a_task_is_an_error_not_a_hang() {
+        let text = "HloModule d\nENTRY %m {\n\
+            \x20 %x = f32[2] parameter(0)\n\
+            \x20 %a = f32[2] add(%x, %x)\n\
+            \x20 %b = f32[2] multiply(%x, %x)\n\
+            \x20 ROOT %t = (f32[2], f32[2]) tuple(%a, %b)\n}\n";
+        let module = parse_module(text).unwrap();
+        let x = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        use std::sync::Arc;
+        // A non-conforming join that runs only one of the two tasks.
+        let join: Arc<crate::JoinFn> = Arc::new(|a: TaskBox<'_>, _b: TaskBox<'_>| a());
+        let planner = PipelinePlanner { join, overlap: Arc::new(|_, _, _| true) };
+        let mut arena = Arena::new();
+        let mut spare = Arena::new();
+        let e = execute_pipelined_in(&module, &[x], None, Some(&planner), &mut arena, &mut spare)
+            .unwrap_err();
+        assert!(e.to_string().contains("dropped a task"), "{e}");
     }
 
     #[test]

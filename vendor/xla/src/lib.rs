@@ -59,6 +59,39 @@ pub struct ConvCall<'a> {
 /// contract is `Err`, never a panic.
 pub type OpExecutor = dyn for<'a> Fn(&eval::OpCall<'a>, &mut [f32]) -> bool + Send + Sync;
 
+/// A boxed one-shot task handed to a [`JoinFn`]. Deliberately **not**
+/// `'static`: the evaluator's co-scheduled tasks borrow the instruction
+/// slots and arenas of the in-flight computation, so the join function
+/// must run both closures to completion before returning (structured
+/// fork-join, never fire-and-forget).
+pub type TaskBox<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Runs two independent tasks to completion, possibly concurrently.
+/// Supplied by the host (the SparseTrain coordinator runs one of the two
+/// on its persistent thread pool); both closures MUST have returned when
+/// this function returns. A trivial conforming implementation is
+/// `|a, b| { a(); b(); }` — the evaluator's correctness never depends on
+/// actual concurrency, only on completion.
+pub type JoinFn = dyn for<'a> Fn(TaskBox<'a>, TaskBox<'a>) + Send + Sync;
+
+/// Decides whether two *ready, data-independent* instructions (by index
+/// into the computation's instruction list) should be co-scheduled. The
+/// evaluator only consults this for pairs it has already proven
+/// independent via the dependency DAG; the host gates on measured costs
+/// (e.g. "does the first op's inner parallelism under-fill the pool?").
+pub type OverlapFn = dyn Fn(&hlo::Computation, usize, usize) -> bool + Send + Sync;
+
+/// Host-supplied policy pair that turns the sequential evaluator into a
+/// dependency-scheduled one: `overlap` picks which ready instruction
+/// pairs to co-schedule, `join` runs them. Installed via
+/// [`PjRtClient::set_pipeline_planner`]; executables compiled without one
+/// run strictly sequentially (bit-identical either way — each op fully
+/// owns its output buffer and independent ops commute).
+pub struct PipelinePlanner {
+    pub join: Arc<JoinFn>,
+    pub overlap: Arc<OverlapFn>,
+}
+
 /// Stub error type.
 #[derive(Debug, Clone)]
 pub struct Error(pub String);
@@ -225,7 +258,12 @@ impl XlaComputation {
 pub struct PjRtLoadedExecutable {
     module: hlo::Module,
     op_exec: Option<Arc<OpExecutor>>,
+    pipeline: Option<Arc<PipelinePlanner>>,
     arena: Mutex<eval::Arena>,
+    /// Second arena for the co-scheduled instruction during an overlap
+    /// window (each concurrent op needs exclusive arena access; the pools
+    /// re-merge into per-executable reuse over successive calls).
+    spare: Mutex<eval::Arena>,
 }
 
 /// A device buffer handle (host memory in this offline build).
@@ -248,13 +286,26 @@ impl PjRtLoadedExecutable {
     /// poisoned the lock, we fall back to a throwaway arena rather than
     /// propagate the poison (results are identical either way).
     pub fn execute<T>(&self, inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        let lit = match self.arena.lock() {
-            Ok(mut guard) => {
-                eval::execute_with_hook_in(&self.module, inputs, self.op_exec.as_deref(), &mut guard)?
-            }
-            Err(_) => {
+        let lit = match (self.arena.lock(), self.spare.lock()) {
+            (Ok(mut guard), Ok(mut spare)) => eval::execute_pipelined_in(
+                &self.module,
+                inputs,
+                self.op_exec.as_deref(),
+                self.pipeline.as_deref(),
+                &mut guard,
+                &mut spare,
+            )?,
+            _ => {
                 let mut arena = eval::Arena::new();
-                eval::execute_with_hook_in(&self.module, inputs, self.op_exec.as_deref(), &mut arena)?
+                let mut spare = eval::Arena::new();
+                eval::execute_pipelined_in(
+                    &self.module,
+                    inputs,
+                    self.op_exec.as_deref(),
+                    self.pipeline.as_deref(),
+                    &mut arena,
+                    &mut spare,
+                )?
             }
         };
         Ok(vec![vec![PjRtBuffer { lit }]])
@@ -270,12 +321,13 @@ impl PjRtLoadedExecutable {
 pub struct PjRtClient {
     platform: String,
     op_exec: Option<Arc<OpExecutor>>,
+    pipeline: Option<Arc<PipelinePlanner>>,
 }
 
 impl PjRtClient {
     /// Create the CPU client (always succeeds offline).
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { platform: "cpu-interp".to_string(), op_exec: None })
+        Ok(PjRtClient { platform: "cpu-interp".to_string(), op_exec: None, pipeline: None })
     }
 
     pub fn platform_name(&self) -> String {
@@ -289,6 +341,15 @@ impl PjRtClient {
         self.op_exec = Some(exec);
     }
 
+    /// Install a pipeline planner. Every executable compiled *after* this
+    /// call evaluates through the dependency-scheduled executor, which
+    /// co-schedules planner-approved independent instruction pairs (see
+    /// [`PipelinePlanner`]); results stay bit-identical to the sequential
+    /// evaluator by construction.
+    pub fn set_pipeline_planner(&mut self, planner: Arc<PipelinePlanner>) {
+        self.pipeline = Some(planner);
+    }
+
     /// Parse and shape-check the HLO text, returning a runnable
     /// executable. Malformed or shape-inconsistent modules are rejected
     /// here (never a panic), so runtime callers fail loudly at load time
@@ -299,7 +360,9 @@ impl PjRtClient {
         Ok(PjRtLoadedExecutable {
             module,
             op_exec: self.op_exec.clone(),
+            pipeline: self.pipeline.clone(),
             arena: Mutex::new(eval::Arena::new()),
+            spare: Mutex::new(eval::Arena::new()),
         })
     }
 }
